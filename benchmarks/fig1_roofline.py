@@ -1,0 +1,86 @@
+"""Paper Figure 1: DRAM-read roofline from the Appendix-A formulas.
+
+Dense LLM, B=8, Q=128 query heads, K=8 KV heads, Hsz=128, F=65536, FP4,
+MemBW=8000 GB/s (the paper's stated assumptions).  Three panels:
+  (left)   KV+weight read time vs TP width           -> plateau beyond TP=K
+  (middle) read time vs context length S             -> attention dominates
+  (right)  read time vs KVP width (helix)            -> sublinear KV scaling
+"""
+from __future__ import annotations
+
+import math
+
+BYTES = 0.5           # FP4
+MEMBW = 8.0e12        # 8000 GB/s
+B, Q, K, HSZ, F = 8, 128, 8, 128, 65_536
+H = Q * HSZ
+
+
+def kv_read_us(S, tpa=1, kvp=1):
+    """Appendix A: B*2*ceil(K/TPA)*Hsz*(S/KVP)*bytes / MemBW  (per layer)."""
+    return (B * 2 * math.ceil(K / tpa) * HSZ * (S / kvp) * BYTES) / MEMBW * 1e6
+
+
+def weight_read_us(tpa=1, tpf=1):
+    """Appendix A: ((2H*Q/TPA*Hsz)+(2H*ceil(K/TPA)*Hsz)+3HF/TPF)*bytes/BW."""
+    w = ((2 * H * (Q / tpa) * HSZ)
+         + (2 * H * math.ceil(K / tpa) * HSZ)
+         + (3 * H * F / tpf)) * BYTES
+    return w / MEMBW * 1e6
+
+
+def panel_left(S=1_000_000):
+    """Read time vs TP width: KV read plateaus once TP > K."""
+    rows = []
+    for tp in (1, 2, 4, 8, 16, 32, 64):
+        rows.append({"tp": tp,
+                     "kv_read_us": kv_read_us(S, tpa=tp),
+                     "weight_read_us": weight_read_us(tpa=min(tp, K), tpf=tp)})
+    return rows
+
+
+def panel_middle(tp=8):
+    rows = []
+    for s in (65_536, 131_072, 262_144, 524_288, 1_048_576, 2_097_152,
+              4_194_304):
+        rows.append({"S": s, "kv_read_us": kv_read_us(s, tpa=tp),
+                     "weight_read_us": weight_read_us(tpa=tp, tpf=tp)})
+    return rows
+
+
+def panel_right(S=1_000_000, tpa=8):
+    rows = []
+    for kvp in (1, 2, 4, 8, 16, 32, 64):
+        n = kvp * tpa
+        rows.append({"kvp": kvp,
+                     "kv_read_us": kv_read_us(S, tpa=tpa, kvp=kvp),
+                     "weight_read_us": weight_read_us(tpa=tpa, tpf=n)})
+    return rows
+
+
+def run(log=print):
+    log("# fig1-left: read time vs TP width (S=1M) — plateau beyond TP=K=8")
+    log("tp,kv_read_us,weight_read_us")
+    for r in panel_left():
+        log(f"{r['tp']},{r['kv_read_us']:.1f},{r['weight_read_us']:.1f}")
+    log("# fig1-middle: read time vs S (TP=8)")
+    log("S,kv_read_us,weight_read_us")
+    for r in panel_middle():
+        log(f"{r['S']},{r['kv_read_us']:.1f},{r['weight_read_us']:.1f}")
+    log("# fig1-right: read time vs KVP width (S=1M, TPA=8, TPF=N)")
+    log("kvp,kv_read_us,weight_read_us")
+    for r in panel_right():
+        log(f"{r['kvp']},{r['kv_read_us']:.1f},{r['weight_read_us']:.1f}")
+
+    # the paper's two qualitative facts, asserted:
+    left = panel_left()
+    plateau = [r["kv_read_us"] for r in left if r["tp"] >= K]
+    assert max(plateau) - min(plateau) < 1e-9, "KV read must plateau past K"
+    right = panel_right()
+    assert right[-1]["kv_read_us"] * 63 < right[0]["kv_read_us"] * 1.01, \
+        "KVP must scale KV reads ~1/KVP"
+    return {"left": left, "middle": panel_middle(), "right": right}
+
+
+if __name__ == "__main__":
+    run()

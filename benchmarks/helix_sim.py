@@ -1,0 +1,395 @@
+"""GB200 NVL72 decode simulator — reproduces the paper's evaluation (§3).
+
+An analytical performance model of one decode step (one token per request,
+batch B, KV history S) for every sharding strategy in the paper's search
+space:
+
+  * TP            — Megatron tensor parallelism (KV duplication when TP>K)
+  * TP x PP       — pipeline over layers (capacity, not TTL)
+  * EP            — data-parallel attention + expert-parallel FFN (the
+                    production DeepSeek-R1 recipe)
+  * vanilla KVP   — Medha-style: KVP x TP attention, FFN tied to the TP
+                    group only, all communication exposed
+  * Helix (+HOP-B)— KVP x TPA attention -> TPF x EP FFN on the *same* N
+                    GPUs; the all-to-all overlaps attention compute
+                    batch-wise when HOP-B is on (§2.1.3)
+
+Each component is a roofline term max(bytes/membw, flops/tflops) plus
+explicit link terms for collectives; Appendix-A formulas are used verbatim
+for the KV/weight read times (fig1 reproduces the paper's Figure 1 from
+them).  All results are reported normalized to the best baseline, matching
+the paper's protocol ("All performance numbers are normalized to that of
+the baseline").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+
+# --------------------------------------------------------------- hardware
+@dataclass(frozen=True)
+class HW:
+    name: str = "GB200-NVL72-FP4"
+    flops: float = 9e15            # dense FP4 FLOP/s per GPU
+    membw: float = 8.0e12          # paper Fig1: 8000 GB/s HBM per GPU
+    link_bw: float = 0.9e12        # NVLink per-GPU unidirectional B/s
+    link_lat: float = 5e-6         # collective launch+switch latency
+    #   (calibrated so the normalized trends match the paper's Figs 5-7;
+    #    the paper's own simulator is in-house and unpublished)
+    hbm_bytes: float = 186e9       # usable HBM per GPU
+    bytes_param: float = 0.5       # FP4 weights & KV
+    max_gpus: int = 64             # paper: 1-64 GPUs within one NVL72
+
+
+GB200 = HW()
+
+
+# ----------------------------------------------------------------- models
+@dataclass(frozen=True)
+class SimModel:
+    name: str
+    layers: int
+    d_model: int
+    q_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int                     # dense FFN (or shared-expert) intermediate
+    n_experts: int = 0
+    topk: int = 0
+    expert_ff: int = 0
+    vocab: int = 128_256
+    # MLA overrides: latent KV stores ONE vector per token (factor 1, width
+    # head_dim) and attention projections are low-rank (attn_params_1e6)
+    kv_factor: int = 2            # 2 = separate K and V; 1 = shared latent
+    attn_params_m: float = 0.0    # per-layer attn params (1e6); 0 = derive
+
+    @property
+    def q_dim(self):
+        return self.q_heads * self.head_dim
+
+    def attn_params_per_layer(self, tpa: int) -> float:
+        """QKV (+out) projection params per GPU during attention."""
+        if self.attn_params_m:
+            return self.attn_params_m * 1e6 / tpa
+        h, hsz = self.d_model, self.head_dim
+        return (h * self.q_dim / tpa
+                + self.kv_factor * h * math.ceil(self.kv_heads / tpa) * hsz)
+
+    def total_params(self):
+        h = self.d_model
+        if self.attn_params_m:
+            attn = self.attn_params_m * 1e6 + self.q_dim * h
+        else:
+            attn = (h * self.q_dim
+                    + self.kv_factor * h * self.kv_heads * self.head_dim
+                    + self.q_dim * h)
+        per = attn + 3 * h * self.d_ff \
+            + self.n_experts * 3 * h * self.expert_ff
+        return self.layers * per + 2 * self.vocab * h
+
+
+# paper §3.1 evaluation models
+LLAMA_405B = SimModel("llama-405b", layers=126, d_model=16_384, q_heads=128,
+                      kv_heads=8, head_dim=128, d_ff=53_248)
+# DeepSeek-R1 with MLA at decode: a single 576-wide latent per token shared
+# by all 128 query heads (paper §3.1); low-rank q/kv projections ~187M/layer;
+# shared expert = dense d_ff 2048*9 approximates the 1 shared + routing mix.
+DEEPSEEK_R1 = SimModel("deepseek-r1", layers=61, d_model=7_168, q_heads=128,
+                       kv_heads=1, head_dim=576, d_ff=2_048,
+                       n_experts=256, topk=8, expert_ff=2_048,
+                       vocab=129_280, kv_factor=1, attn_params_m=187.0)
+
+
+# ------------------------------------------------------- appendix A terms
+def kv_read_time(m: SimModel, hw: HW, B, S, tpa, kvp):
+    """Appendix A: B x f x ceil(K/TPA) x Hsz x (S/KVP) x bytes / MemBW
+    (f = 2 for separate K/V heads, 1 for an MLA shared latent)."""
+    return (B * m.kv_factor * math.ceil(m.kv_heads / tpa) * m.head_dim
+            * (S / kvp) * hw.bytes_param) / hw.membw
+
+
+def weight_read_time(m: SimModel, hw: HW, tpa, tpf):
+    """Appendix A: ((2 H Q Hsz/TPA) + (2 H ceil(K/TPA) Hsz) + 3 H F / TPF)."""
+    h, hsz = m.d_model, m.head_dim
+    wbytes = ((2 * h * (m.q_heads / tpa) * hsz)
+              + (2 * h * math.ceil(m.kv_heads / tpa) * hsz)
+              + (3 * h * m.d_ff / tpf)) * hw.bytes_param
+    return wbytes / hw.membw
+
+
+# ---------------------------------------------------------- config space
+@dataclass(frozen=True)
+class ShardCfg:
+    strategy: str                  # tp | tp_pp | ep | kvp_medha | helix
+    tp: int = 1                    # TPA for helix/medha, plain TP otherwise
+    kvp: int = 1
+    tpf: int = 1                   # helix FFN TP width
+    ep: int = 1
+    pp: int = 1
+    hopb: bool = True
+
+    @property
+    def n_gpus(self):
+        if self.strategy == "helix":
+            return self.kvp * self.tp * self.pp
+        if self.strategy == "kvp_medha":
+            return self.kvp * self.tp * self.pp
+        if self.strategy == "ep":
+            return self.ep * self.tp * self.pp
+        return self.tp * self.pp
+
+
+def _roof(hw: HW, bytes_, flops_):
+    return max(bytes_ / hw.membw, flops_ / hw.flops)
+
+
+def _ar_time(hw: HW, bytes_, width):
+    """ring all-reduce: 2 (w-1)/w x bytes over the link + flat NVSwitch lat."""
+    if width <= 1:
+        return 0.0
+    return 2 * bytes_ * (width - 1) / width / hw.link_bw + hw.link_lat
+
+
+def _a2a_time(hw: HW, bytes_, width):
+    """NVL72 NVSwitch: single-hop all-to-all, flat latency."""
+    if width <= 1:
+        return 0.0
+    return bytes_ * (width - 1) / width / hw.link_bw + hw.link_lat
+
+
+# ------------------------------------------------------------- decode TTL
+def decode_ttl(m: SimModel, hw: HW, cfg: ShardCfg, B: int, S: int):
+    """One-token TTL (s) and per-GPU memory (bytes); math.inf if infeasible."""
+    bp = hw.bytes_param
+    h, hsz = m.d_model, m.head_dim
+    n = cfg.n_gpus
+    if n > hw.max_gpus or B < 1:
+        return math.inf, math.inf
+    layers_per_stage = m.layers / cfg.pp
+
+    # --- attention phase shards
+    if cfg.strategy in ("helix", "kvp_medha"):
+        tpa, kvp = cfg.tp, cfg.kvp
+        if tpa > m.kv_heads:            # helix caps TPA at K by design
+            return math.inf, math.inf
+    elif cfg.strategy == "ep":
+        tpa, kvp = cfg.tp, 1            # attention data-parallel over ep
+    else:
+        tpa, kvp = cfg.tp, 1
+
+    # per-request batch handled per GPU during attention:
+    if cfg.strategy == "ep":
+        b_attn = math.ceil(B / cfg.ep)  # DP attention
+    else:
+        b_attn = B                      # full batch per rank (paper §2.1.1)
+
+    # qkv projection (replicated across KVP ranks in helix/medha)
+    qkv_params = m.attn_params_per_layer(tpa)
+    t_qkv = _roof(hw, qkv_params * bp, 2 * b_attn * qkv_params)
+
+    # kv read (+ attention flops)
+    kv_heads_eff = math.ceil(m.kv_heads / tpa)
+    t_kv = (b_attn * m.kv_factor * kv_heads_eff * hsz * (S / kvp) * bp) \
+        / hw.membw
+    attn_flops = 4 * b_attn * (m.q_dim / tpa) * (S / kvp)
+    t_attn = max(t_kv, attn_flops / hw.flops)
+
+    # helix / medha all-to-all (volume independent of S, §2.1.2; partial
+    # outputs + LSE travel in bf16 regardless of the FP4 weight format)
+    t_comm_attn = 0.0
+    if cfg.strategy in ("helix", "kvp_medha") and kvp > 1:
+        t_comm_attn = _a2a_time(hw, b_attn * (h / tpa) * 2.0, kvp)
+
+    if cfg.strategy == "helix" and cfg.hopb and t_comm_attn > 0 \
+            and b_attn > 1:
+        # HOP-B (§2.1.3, Fig 3): requests pipeline — while request i's
+        # all-to-all is in flight, request i+1 computes attention.  The span
+        # is max(compute, comm) plus one exposed chunk of the other.
+        per_req_comm = t_comm_attn / b_attn
+        per_req_attn = t_attn / b_attn
+        t_attn_phase = t_qkv + max(t_attn + per_req_comm,
+                                   t_comm_attn + per_req_attn)
+    else:
+        t_attn_phase = t_qkv + t_attn + t_comm_attn
+
+    # --- post-attention projection + FFN phase
+    if cfg.strategy == "helix":
+        tpo = cfg.kvp * cfg.tp          # out-proj TP = N (§2.2)
+        tpf, ep = cfg.tpf, cfg.ep
+        b_ffn = B
+    elif cfg.strategy == "kvp_medha":
+        tpo = cfg.tp                    # FFN tied to the TP group only
+        tpf, ep = cfg.tp, 1
+        b_ffn = B
+    elif cfg.strategy == "ep":
+        tpo = cfg.tp
+        tpf, ep = cfg.tp, cfg.ep
+        b_ffn = B                       # tokens all-to-all'd to experts
+    else:
+        tpo = cfg.tp
+        tpf, ep = cfg.tp, 1
+        b_ffn = B
+
+    oproj_params = m.q_dim * h / tpo
+    t_oproj = _roof(hw, oproj_params * bp, 2 * b_ffn * oproj_params) \
+        + _ar_time(hw, b_ffn * h * bp, tpo)
+
+    # dense/shared FFN
+    ffn_params = 3 * h * m.d_ff / tpf
+    t_ffn = _roof(hw, ffn_params * bp, 2 * b_ffn * ffn_params) \
+        + _ar_time(hw, b_ffn * h * bp, tpf)
+
+    # MoE experts
+    t_moe = 0.0
+    if m.n_experts:
+        local_e = m.n_experts / ep
+        active = min(local_e, b_ffn * m.topk / 1)    # distinct experts read
+        moe_read = active * 3 * h * m.expert_ff / tpf * bp
+        moe_flops = 2 * b_ffn * m.topk * 3 * h * m.expert_ff / (tpf * ep)
+        t_moe = _roof(hw, moe_read, moe_flops)
+        if ep > 1:                                    # dispatch/return a2a
+            t_moe += 2 * _a2a_time(hw, b_ffn * h * m.topk / ep * bp, ep)
+
+    t_layer = t_attn_phase + t_oproj + t_ffn + t_moe
+    ttl = t_layer * layers_per_stage * cfg.pp        # token crosses stages
+    ttl += _roof(hw, m.vocab * h / n * bp, 2 * B * m.vocab * h / n)  # lm head
+
+    # --- memory feasibility per GPU
+    kvf = m.kv_factor
+    if cfg.strategy in ("helix", "kvp_medha"):
+        kv_bytes = B * kvf * kv_heads_eff * hsz * (S / kvp) * bp \
+            * layers_per_stage
+    elif cfg.strategy == "ep":
+        kv_bytes = math.ceil(B / cfg.ep) * kvf * kv_heads_eff * hsz * S * bp \
+            * layers_per_stage
+    else:
+        kv_bytes = B * kvf * kv_heads_eff * hsz * S * bp * layers_per_stage
+    mem = kv_bytes + m.total_params() / n * bp
+    if mem > hw.hbm_bytes:
+        return math.inf, mem
+    return ttl, mem
+
+
+# ------------------------------------------------------------ pareto sweep
+def _pow2(limit):
+    v = 1
+    while v <= limit:
+        yield v
+        v *= 2
+
+
+def sweep(m: SimModel, hw: HW, S: int, strategies, batches=None):
+    """Yield (cfg, B, ttl, tok_s_user, tok_s_gpu)."""
+    batches = batches or [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+    for strat in strategies:
+        for cfg in _configs(m, hw, strat):
+            for b in batches:
+                ttl, _ = decode_ttl(m, hw, cfg, b, S)
+                if not math.isfinite(ttl):
+                    continue
+                yield (cfg, b, ttl, 1.0 / ttl, b / ttl / cfg.n_gpus)
+
+
+def _configs(m: SimModel, hw: HW, strat: str):
+    if strat == "tp":
+        for tp in _pow2(hw.max_gpus):
+            yield ShardCfg("tp", tp=tp)
+    elif strat == "tp_pp":
+        for tp in _pow2(hw.max_gpus):
+            for pp in _pow2(hw.max_gpus // tp):
+                yield ShardCfg("tp_pp", tp=tp, pp=pp)
+    elif strat == "ep" and m.n_experts:
+        for tp in _pow2(hw.max_gpus):
+            for ep in _pow2(hw.max_gpus // tp):
+                yield ShardCfg("ep", tp=tp, ep=ep)
+    elif strat == "kvp_medha":
+        for tp in _pow2(min(m.kv_heads, hw.max_gpus)):
+            for kvp in _pow2(hw.max_gpus // tp):
+                yield ShardCfg("kvp_medha", tp=tp, kvp=kvp)
+    elif strat == "helix":
+        for tp in _pow2(min(m.kv_heads, hw.max_gpus)):
+            for kvp in _pow2(hw.max_gpus // tp):
+                n = tp * kvp
+                for ep in (_pow2(n) if m.n_experts else [1]):
+                    if n % ep:
+                        continue
+                    tpf = n // ep
+                    for hopb in (True,):
+                        yield ShardCfg("helix", tp=tp, kvp=kvp, tpf=tpf,
+                                       ep=ep, hopb=hopb)
+
+
+def pareto(points):
+    """points: iterable of (x=tok/s/user, y=tok/s/gpu, payload) — maximize."""
+    pts = sorted(points, key=lambda p: (-p[0], -p[1]))
+    front, best_y = [], -math.inf
+    for x, y, payload in pts:
+        if y > best_y:
+            front.append((x, y, payload))
+            best_y = y
+    return front
+
+
+def frontier(m: SimModel, hw: HW, S: int, strategies, hopb=True,
+             batches=None):
+    pts = []
+    for cfg, b, ttl, tsu, tsg in sweep(m, hw, S, strategies, batches):
+        if cfg.strategy == "helix" and not hopb:
+            cfg = dataclasses.replace(cfg, hopb=False)
+            ttl, _ = decode_ttl(m, hw, cfg, b, S)
+            if not math.isfinite(ttl):
+                continue
+            tsu, tsg = 1.0 / ttl, b / ttl / cfg.n_gpus
+        pts.append((tsu, tsg, (cfg, b)))
+    return pareto(pts)
+
+
+# ----------------------------------------------------------- paper claims
+BASELINES = ("tp", "tp_pp", "ep", "kvp_medha")
+
+
+def max_interactivity_gain(m: SimModel, hw: HW, S: int):
+    """Helix max tok/s/user vs best baseline (paper: 1.5x DSR1, 1.13x Llama)."""
+    base = frontier(m, hw, S, BASELINES)
+    hx = frontier(m, hw, S, ("helix",))
+    return max(x for x, _, _ in hx) / max(x for x, _, _ in base)
+
+
+def batch_gain_at_fixed_ttl(m: SimModel, hw: HW, S: int):
+    """"Up to Nx more concurrent users / higher Tokens/s/GPU under the same
+    latency budget": max over TTL budgets of the throughput ratio between the
+    Helix and best-baseline frontiers (paper: 32x DSR1, 4x Llama)."""
+    base = frontier(m, hw, S, BASELINES)
+    hx = frontier(m, hw, S, ("helix",))
+    budgets = sorted({x for x, _, _ in base})
+    best = 1.0
+    for budget in budgets:
+        best_b = max((y for x, y, _ in base if x >= budget), default=None)
+        best_h = max((y for x, y, _ in hx if x >= budget), default=None)
+        if best_b and best_h:
+            best = max(best, best_h / best_b)
+    return best
+
+
+def hopb_tsu_drop(m: SimModel, hw: HW, S: int):
+    """Tokens/s/user loss when HOP-B is turned off at the *same* operating
+    point (config, batch) along the Helix frontier (Fig 7).
+
+    Returns (max_drop, throughput_end_drop): the paper quotes the max for
+    Llama-405B ("up to 12%") and the throughput end for DeepSeek-R1 ("~1%",
+    where multi-expert GEMMs dominate and the all-to-all is amortized).
+    """
+    on = frontier(m, hw, S, ("helix",), hopb=True)
+    drops = []
+    for x_on, y_on, (cfg, b) in on:
+        ttl_off, _ = decode_ttl(m, hw, dataclasses.replace(cfg, hopb=False),
+                                b, S)
+        if math.isfinite(ttl_off):
+            drops.append((y_on, 1.0 - (1.0 / ttl_off) / x_on))
+    if not drops:
+        return 0.0, 0.0
+    max_drop = max(d for _, d in drops)
+    end_drop = max(drops, key=lambda t: t[0])[1]   # at max tok/s/gpu
+    return max_drop, end_drop

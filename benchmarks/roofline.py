@@ -1,0 +1,199 @@
+"""§Roofline: three-term analysis per (arch x shape) from dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_link_bw
+
+cost_analysis() is per-device (verified during derisk), so no ÷chips.
+MODEL_FLOPS = 6·N·D (train) or 2·N_active·D + attention/KV terms (serve);
+the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat/padding waste.
+
+Usage: python -m benchmarks.roofline [--dir runs/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.models.transformer import layer_windows
+
+# TPU v5e target (single chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Useful (algorithmic) FLOPs for one step of this cell, whole system."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b = cell.global_batch
+    n_active = cfg.active_params()
+    wins = layer_windows(cfg)
+
+    if cell.kind == "train":
+        toks = b * cell.seq_len
+        attn = 0.0
+        if cfg.has_attention:
+            for w in wins:
+                s_eff = min(cell.seq_len, int(w) or cell.seq_len)
+                attn += 2 * b * cell.seq_len * s_eff * cfg.q_dim
+        return 6 * n_active * toks + 3 * attn
+    if cell.kind == "prefill":
+        toks = b * cell.seq_len
+        attn = 0.0
+        if cfg.has_attention:
+            for w in wins:
+                s_eff = min(cell.seq_len, int(w) or cell.seq_len)
+                attn += 2 * b * cell.seq_len * s_eff * cfg.q_dim
+        return 2 * n_active * toks + attn
+    # decode: one token, KV history of seq_len
+    flops = 2 * n_active * b
+    if cfg.has_attention:
+        for w in wins:
+            s_eff = min(cell.seq_len, int(w) or cell.seq_len)
+            flops += 4 * b * s_eff * cfg.q_dim
+    if cfg.has_ssm:
+        flops += 6 * b * cfg.n_layers * cfg.ssm_heads * cfg.ssm_headdim \
+            * cfg.ssm_state
+    return flops
+
+
+def analytic_decode_bytes(arch: str, shape: str, chips: int) -> float:
+    """Steady-state HBM bytes/device for one decode step (what a fused TPU
+    backend actually moves): replicated QKV weight reads (the paper's §2.1.1
+    design), sharded wo/FFN/MoE weight reads, KV shard read+append, head.
+
+    The HLO 'bytes accessed' from the CPU-backend cost model over-counts
+    dtype converts / layout copies that TPU fuses; both are reported."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    bp = 2.0                                       # bf16
+    h = cfg.d_model
+    per_layer = 0.0
+    if cfg.has_attention:
+        per_layer += (h * cfg.q_dim + 2 * h * cfg.kv_dim) * bp  # repl. QKV
+        per_layer += cfg.q_dim * h * bp / chips                 # wo (TP=N)
+        wins = layer_windows(cfg)
+        s_eff = [min(s, int(w) or s) for w in wins]
+        kv = sum(b * 2 * cfg.n_kv_heads * cfg.hsz * se * bp / chips
+                 for se in s_eff) / cfg.n_layers
+        per_layer += kv                                         # KV shard read
+    if cfg.d_ff:
+        per_layer += 3 * h * cfg.d_ff * bp / chips              # dense TPF=N
+    if cfg.moe:
+        m = cfg.moe
+        ep = min(16, m.n_experts)
+        active = min(m.n_experts / ep, b * m.topk)
+        per_layer += active * 3 * h * m.d_ff * bp / (chips / ep)
+        per_layer += h * m.n_experts * 4 / chips                # router f32
+    if cfg.has_ssm:
+        per_layer += (h * (2 * cfg.d_inner + 2 * cfg.ssm_ngroups
+                           * cfg.ssm_state + cfg.ssm_heads)
+                      + cfg.d_inner * h) * bp / 16              # model-axis TP
+        per_layer += (b / min(b, 16)) * cfg.ssm_heads * cfg.ssm_headdim \
+            * cfg.ssm_state * 4 * 2 / 16 * min(b, 16)           # state r/w
+    total = cfg.n_layers * per_layer
+    total += h * cfg.padded_vocab * bp / (16 if cfg.tie_embeddings else chips)
+    total += b * h * bp * 4 * cfg.n_layers                      # activations
+    return total
+
+
+def analyze_record(rec: dict) -> dict:
+    cost = rec.get("cost", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll_dev = sum(rec.get("collectives", {}).values())
+    chips = CHIPS[rec["mesh"]]
+    cell = SHAPES[rec["shape"]]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    t_mem_analytic = None
+    if cell.kind == "decode":
+        t_mem_analytic = analytic_decode_bytes(
+            rec["arch"], rec["shape"], chips) / HBM_BW
+        # fused-backend estimate replaces the unfused upper bound for the
+        # dominant-term decision on decode cells
+        t_memory_eff = t_mem_analytic
+    else:
+        t_memory_eff = t_memory
+    terms = {"compute": t_compute, "memory": t_memory_eff,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / max(flops_dev * chips, 1.0)
+    # roofline fraction: useful-compute time over the bound term
+    t_useful = mf / chips / PEAK_FLOPS
+    frac = t_useful / max(t_bound, 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_analytic_s": t_mem_analytic,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_per_dev": flops_dev,
+        "useful_ratio": ratio, "roofline_fraction": frac,
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "memory":
+        return ("memory-bound: cut bytes/step — weight quantization (w8a16 "
+                "kernel), fp8/bf16 cache, or more TPF sharding of weight reads")
+    if d == "collective":
+        return ("collective-bound: shrink or overlap comm — HOP-B chunks, "
+                "smaller a2a payload dtype, reduce-scatter instead of AR")
+    return ("compute-bound: raise MXU utilization — larger effective tiles, "
+            "fewer pad-lane FLOPs (useful_ratio), fuse elementwise chains")
+
+
+def load(dir_: Path, mesh: str) -> list[dict]:
+    rows = []
+    for f in sorted(dir_.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            rows.append(analyze_record(rec))
+    return rows
+
+
+def run(dir_="runs/dryrun", mesh="16x16", log=print):
+    rows = load(Path(dir_), mesh)
+    if not rows:
+        log(f"# no dry-run artifacts under {dir_} for mesh {mesh}; "
+            f"run repro.launch.dryrun first")
+        return []
+    log("arch,shape,compute_s,memory_hlo_s,memory_analytic_s,collective_s,"
+        "dominant,useful_ratio,roofline_fraction")
+    for r in rows:
+        ma = r["t_memory_analytic_s"]
+        log(f"{r['arch']},{r['shape']},{r['t_compute_s']:.3e},"
+            f"{r['t_memory_s']:.3e},"
+            f"{'' if ma is None else format(ma, '.3e')},"
+            f"{r['t_collective_s']:.3e},"
+            f"{r['dominant']},{r['useful_ratio']:.3f},"
+            f"{r['roofline_fraction']:.3f}")
+    log("# per-cell next lever (dominant-term):")
+    seen = set()
+    for r in rows:
+        key = (r["dominant"],)
+        if key in seen:
+            continue
+        seen.add(key)
+        log(f"#   [{r['dominant']}] e.g. {r['arch']}/{r['shape']}: "
+            f"{suggestion(r)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="16x16", choices=list(CHIPS))
+    a = ap.parse_args()
+    run(a.dir, a.mesh)

@@ -1,0 +1,38 @@
+"""Benchmark orchestrator — one target per paper table/figure.
+
+  fig1   Appendix-A DRAM-read rooflines (paper Figure 1)
+  fig5   DeepSeek-R1 1M-ctx Pareto (paper Figure 5: 1.5x TTL, 32x batch)
+  fig6   Llama-405B 1M-ctx Pareto (paper Figure 6: 1.13x, 4x; + Medha)
+  fig7   HOP-B ablation (paper Figure 7: ~12% / ~1%)
+  roofline  §Roofline terms per (arch x shape) from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_roofline, fig5_dsr1, fig6_llama405b,
+                            fig7_hopb, roofline)
+
+    t0 = time.time()
+    ok = True
+    for name, mod in (("fig1", fig1_roofline), ("fig5", fig5_dsr1),
+                      ("fig6", fig6_llama405b), ("fig7", fig7_hopb)):
+        print(f"\n===== {name} =====")
+        try:
+            mod.run()
+        except AssertionError as e:
+            ok = False
+            print(f"[{name}] FAILED: {e}")
+    print("\n===== roofline (16x16, from dry-run artifacts) =====")
+    roofline.run()
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s"
+          + ("" if ok else " (WITH FAILURES)"))
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Reproduce the paper's core comparison on OUR TPU-v5e cost model:
+Helix vs pure TP vs Medha-style vanilla KVP for granite-8b decode at 32k
+and 512k context — the same three-way comparison as paper Fig 6, but on
+the hardware this framework targets (bf16, 197 TFLOP/s, 819 GB/s HBM,
+50 GB/s ICI).
+
+  PYTHONPATH=src python examples/helix_vs_tp_pareto.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
+
+from benchmarks.helix_sim import (HW, SimModel, frontier,
+                                  max_interactivity_gain)
+from repro.configs import get_config
+
+TPU_V5E_POD = HW(name="tpu-v5e-256", flops=197e12, membw=819e9,
+                 link_bw=50e9, link_lat=2e-6, hbm_bytes=16e9,
+                 bytes_param=2.0, max_gpus=256)
+
+
+def sim_model(arch: str) -> SimModel:
+    c = get_config(arch)
+    return SimModel(arch, layers=c.n_layers, d_model=c.d_model,
+                    q_heads=c.n_heads, kv_heads=c.n_kv_heads,
+                    head_dim=c.hsz, d_ff=c.d_ff, vocab=c.vocab)
+
+
+def main():
+    m = sim_model("granite-8b")
+    for s in (32_768, 524_288):
+        base = frontier(m, TPU_V5E_POD, s, ("tp", "tp_pp"))
+        medha = frontier(m, TPU_V5E_POD, s, ("kvp_medha",))
+        hx = frontier(m, TPU_V5E_POD, s, ("helix",))
+        bx = max(x for x, _, _ in base)
+        mx = max(x for x, _, _ in medha)
+        hxx = max(x for x, _, _ in hx)
+        by = max(y for _, y, _ in base)
+        hy = max(y for _, y, _ in hx)
+        print(f"S={s:>7}: max tok/s/user  tp={bx:7.1f} medha={mx:7.1f} "
+              f"helix={hxx:7.1f}  (helix/tp = {hxx/bx:.2f}x)")
+        print(f"          max tok/s/chip  tp={by:7.2f}           "
+              f"helix={hy:7.2f}  (helix/tp = {hy/by:.2f}x)")
+        assert hxx >= bx and hy >= by
+    gain = max_interactivity_gain(m, TPU_V5E_POD, 524_288)
+    print(f"granite-8b 512k-ctx interactivity gain vs best baseline: "
+          f"x{gain:.2f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests through the Helix engine:
+continuous batching, per-request lengths, round-robin KV appends.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve_demo
+
+
+def main():
+    finished = serve_demo("granite-3-2b", reduced=True, n_requests=12,
+                          prompt_len=24, max_new=12, max_batch=4)
+    assert len(finished) == 12
+    assert all(len(r.out_tokens) == 12 for r in finished)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the production train path (same code the 256-chip mesh runs): the
+deterministic pipeline, pjit'd train_step, checkpointing + watchdog.
+On CPU this takes a few minutes; loss drops from ~10.0 (ln 23k) into the
+~5s on the synthetic copy-structured stream.
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+import repro.launch.train as T
+
+
+# ~100M params: 12L x 768, GQA 12/4, tied embeddings, 24k vocab
+TINY_100M = ArchConfig(
+    name="tiny-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=3072, vocab=24_000, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="runs/tiny100m")
+    args = ap.parse_args()
+
+    print(f"params ~{TINY_100M.n_params()/1e6:.0f}M")
+
+    # route through the standard launcher with a custom config
+    orig = T.get_config
+    T.get_config = lambda name: TINY_100M
+    try:
+        _, _, losses = T.train(
+            "tiny-100m", reduced=False, steps=args.steps, batch=args.batch,
+            seq=args.seq, lr=6e-4, ckpt_dir=args.ckpt_dir, save_every=100)
+    finally:
+        T.get_config = orig
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps")
+    assert last < first - 0.5, "training failed to learn"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, MoEConfig, ShapeCell, SHAPES,
+                                cell_applicable)
+
+# the 10 assigned architectures (40 shape-cells) + the paper's own two models
+ASSIGNED = [
+    "mamba2-780m",
+    "hymba-1.5b",
+    "granite-3-2b",
+    "starcoder2-15b",
+    "gemma3-12b",
+    "granite-8b",
+    "whisper-base",
+    "granite-moe-1b-a400m",
+    "arctic-480b",
+    "phi-3-vision-4.2b",
+]
+PAPER_MODELS = ["llama-405b", "deepseek-r1"]
+
+
+def _module_name(arch: str) -> str:
+    return "repro.configs." + arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ASSIGNED + PAPER_MODELS:
+        raise KeyError(f"unknown arch {name!r}; known: {ASSIGNED + PAPER_MODELS}")
+    return importlib.import_module(_module_name(name)).CONFIG
+
+
+def list_archs(include_paper: bool = False) -> list[str]:
+    return list(ASSIGNED) + (list(PAPER_MODELS) if include_paper else [])
+
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeCell", "SHAPES", "cell_applicable",
+           "get_config", "list_archs", "ASSIGNED", "PAPER_MODELS"]

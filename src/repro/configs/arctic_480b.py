@@ -1,0 +1,19 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual FFN.
+
+35L d_model=7168 56H (GQA kv=8) expert d_ff=4864 vocab=32000.
+hf:Snowflake/snowflake-arctic-base.  Each layer runs a dense residual MLP
+(d_ff=4864) in parallel with the routed MoE.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,           # dense residual MLP (parallel with MoE)
+    vocab=32_000,
+    moe=MoEConfig(n_experts=128, topk=2, d_ff=4864),
+)

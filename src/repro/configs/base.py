@@ -1,0 +1,201 @@
+"""ArchConfig: the single source of truth for every supported architecture.
+
+Every assigned architecture (plus the paper's own Llama-405B / DeepSeek-R1
+configs used by the simulator) is expressed as one frozen ``ArchConfig``.
+The same config drives:
+
+  * param init + the reference (GSPMD/train/prefill) forward pass,
+  * the explicit-SPMD Helix decode path,
+  * the dry-run input_specs / sharding policies,
+  * the reduced smoke-test variant (``.reduced()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.utils import round_up
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    topk: int
+    d_ff: int                      # per-expert intermediate dim
+    capacity_factor: float = 1.25  # train-time capacity factor
+    decode_capacity_factor: float = 4.0
+    router_z_coef: float = 1e-3
+    aux_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | ssm | hybrid | moe | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                   # dense FFN intermediate (0 for pure-ssm)
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    act: str = "silu"           # silu (gated) | gelu (ungated)
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    softcap: float = 0.0        # final-logit softcapping (gemma-style); 0=off
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0          # dstate; 0 -> no ssm path
+    ssm_conv: int = 4
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_ngroups: int = 1
+
+    # --- local/global attention mix (gemma3) ---
+    local_window: int = 0       # sliding window for local layers; 0=all global
+    local_ratio: int = 0        # N local layers per 1 global (e.g. 5)
+
+    # --- encoder-decoder (whisper) ---
+    is_encdec: bool = False
+    enc_layers: int = 0
+    enc_seq_ratio: int = 1      # encoder frames per decoder token in shapes
+
+    # --- vlm stub frontend ---
+    vision_patches: int = 0     # patch embeds merged into prefix positions
+
+    moe: MoEConfig | None = None
+
+    # shape-cell applicability
+    supports_long_context: bool = False  # sub-quadratic decode => long_500k runs
+
+    # ------------------------------------------------------------------
+    @property
+    def hsz(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hsz
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hsz
+
+    @property
+    def padded_vocab(self) -> int:
+        # 512 = max mesh size; keeps vocab-parallel shards even everywhere
+        return round_up(self.vocab, 512)
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.ssm_state > 0 and self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        # mamba2: conv acts on (x, B, C) channels
+        return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings included once)."""
+        h, f = self.d_model, self.d_ff
+        per_layer = 0
+        if self.has_attention:
+            per_layer += h * self.q_dim + 2 * h * self.kv_dim + self.q_dim * h
+        if self.has_ssm:
+            per_layer += h * (2 * self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+                              + self.ssm_heads)
+            per_layer += self.conv_dim * self.ssm_conv
+            per_layer += self.d_inner * h + 2 * self.ssm_heads  # out_proj, A, D
+        if f:
+            mult = 3 if self.act == "silu" else 2
+            per_layer += mult * h * f
+        if self.moe:
+            m = self.moe
+            per_layer += h * m.n_experts + m.n_experts * 3 * h * m.d_ff
+        total = self.n_layers * per_layer
+        if self.is_encdec:
+            enc = self.enc_layers * (2 * (h * self.q_dim + 2 * h * self.kv_dim
+                                          + self.q_dim * h) // 2 + 2 * h * f)
+            cross = self.n_layers * (h * self.q_dim + 2 * h * self.kv_dim
+                                     + self.q_dim * h)
+            total += enc + cross
+        total += self.vocab * h * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.moe:
+            return self.n_params()
+        m = self.moe
+        dense = self.n_params() - self.n_layers * m.n_experts * 3 * self.d_model * m.d_ff
+        return dense + self.n_layers * m.topk * 3 * self.d_model * m.d_ff
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw: dict = dict(
+            name=self.name + "-reduced",
+            # one full local:global period for windowed archs (decode scans
+            # over periods), else 2 layers
+            n_layers=(self.local_ratio + 1) if self.local_ratio
+            else min(self.n_layers, 2),
+            d_model=128,
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=32 if self.has_ssm else self.ssm_headdim,
+            enc_layers=min(self.enc_layers, 2),
+            vision_patches=min(self.vision_patches, 8),
+            local_window=min(self.local_window, 32) if self.local_window else 0,
+        )
+        if self.moe:
+            # capacity_factor high enough that reduced configs never drop
+            # tokens: keeps grouped/ungrouped/decode MoE layouts bitwise
+            # comparable in equivalence tests (dropping has dedicated tests)
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 8),
+                topk=min(self.moe.topk, 2), d_ff=64, capacity_factor=8.0)
+        if self.family == "vlm":
+            kw["n_kv_heads"] = kw["n_heads"]  # MHA family preserved
+        return dataclasses.replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Input-shape cells (assignment block). decode_*/long_* lower serve_step.
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeCell("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeCell("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeCell("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) cell."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k skipped per assignment"
+    return True, ""

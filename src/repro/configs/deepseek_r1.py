@@ -1,0 +1,23 @@
+"""deepseek-r1 — the paper's MoE+MLA evaluation model (Fig 5).
+
+Modeled for the simulator with MLA treated as K=1 latent attention
+(the paper: "a single latent representation of both K and V for all 128
+query heads").  61L d_model=7168, 128 query heads, 256 experts top-8 +
+1 shared expert, expert d_ff=2048.  Simulator-only: we model MLA as GQA
+with kv=1 and head_dim=576 (512 latent + 64 rope), which matches its
+decode-time KV-cache footprint and read volume.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-r1",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=1,        # MLA latent: single shared KV representation
+    head_dim=576,        # 512 latent + 64 decoupled-rope, decode-time
+    d_ff=2048,           # shared expert (dense residual)
+    vocab=129_280,
+    moe=MoEConfig(n_experts=256, topk=8, d_ff=2048),
+)

@@ -1,0 +1,25 @@
+"""gemma3-12b [dense] — 5:1 local:global attention, 128k ctx.
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.  head_dim=256
+(gemma3 uses an explicit head_dim larger than d_model/n_heads).
+Local layers use a 1024-token sliding window; every 6th layer is global.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15_360,
+    vocab=262_144,
+    act="gelu_gated",    # geglu
+    local_window=1024,
+    local_ratio=5,       # 5 local : 1 global
+    tie_embeddings=True,
+    softcap=30.0,
+    supports_long_context=True,   # 5/6 of layers are O(window) at decode
+)

@@ -1,0 +1,19 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+
+24L d_model=1024 16H (GQA kv=8) expert d_ff=512 vocab=49155.
+hf:ibm-granite/granite-3.0-1b-a400m-base.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=0,              # FFN is fully MoE
+    vocab=49_155,
+    tie_embeddings=True,
+    moe=MoEConfig(n_experts=32, topk=8, d_ff=512),
+)

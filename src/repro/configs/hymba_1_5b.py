@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads, arXiv:2411.13676.
+
+32L d_model=1600, 25 query heads (GQA kv=5), d_ff=5504, vocab=32001,
+ssm_state=16.  Q=25/K=5 are padded to 32/8 logical heads for sharding
+(DESIGN.md §5); zero rows in the out-projection make padding exact.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,        # 1600 / 25
+    d_ff=5504,
+    vocab=32_001,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    supports_long_context=True,   # hybrid: ssm path is O(1); attn uses KVP
+)

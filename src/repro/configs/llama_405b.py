@@ -1,0 +1,18 @@
+"""llama-405b — the paper's dense GQA evaluation model (Fig 6).
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.  Used by the
+GB200 simulator benchmarks and available as a full config for the dry-run
+machinery (not part of the 40 assigned cells).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16_384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53_248,
+    vocab=128_256,
+)

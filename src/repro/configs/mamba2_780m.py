@@ -1,0 +1,26 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), arXiv:2405.21060.
+
+48L d_model=1536, attention-free, d_ff=0 (the gated MLP lives inside the
+mamba2 block's expand), vocab=50280, ssm_state=128.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=64,
+    d_ff=0,
+    vocab=50_280,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    use_rope=False,
+    tie_embeddings=True,
+    supports_long_context=True,   # O(1)-state decode
+)

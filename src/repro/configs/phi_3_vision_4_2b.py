@@ -1,0 +1,21 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP (stubbed).
+
+32L d_model=3072 32H (MHA, kv=32) d_ff=8192 vocab=32064.
+The CLIP vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings [B, P, d_model] merged into the prefix token positions.
+
+K=32 >= 16 means this arch supports the 2-D Helix mode (TPA=model, KVP=rest).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32_064,
+    vision_patches=256,
+)

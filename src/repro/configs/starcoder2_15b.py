@@ -1,0 +1,17 @@
+"""starcoder2-15b [dense] — GQA + RoPE, arXiv:2402.19173.
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24_576,
+    vocab=49_152,
+    act="gelu",          # starcoder2 uses a non-gated gelu MLP (4x)
+)

@@ -1,0 +1,23 @@
+"""whisper-base [audio] — enc-dec, arXiv:2212.04356.
+
+6L (each side) d_model=512 8H (kv=8, MHA) d_ff=2048 vocab=51865.
+Conv audio frontend is a STUB: input_specs() provides precomputed frame
+embeddings [B, S_enc, d_model]; the encoder is the transformer stack only.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51_865,
+    act="gelu",
+    use_rope=False,      # whisper: learned/sinusoidal positions
+    is_encdec=True,
+    enc_layers=6,
+    enc_seq_ratio=1,
+)

@@ -1,0 +1,102 @@
+"""Exact attention-partial combine (flash-decoding / Helix §2.1.1 math).
+
+Each KV-parallel (KVP) rank computes attention of the full query batch against
+its *local* KV shard, emitting a partial un-normalized-softmax output together
+with the per-(token, head) log-sum-exp (LSE).  The exact softmax attention over
+the union of shards is the LSE-weighted sum of the partials:
+
+    LSE    = logsumexp_r(lse_r)
+    out    = sum_r exp(lse_r - LSE) * out_r
+
+This module implements that combine in f32, with empty-shard (-inf LSE) safety,
+in three forms:
+
+  * ``combine_partials``      — stacked partials  [R, ..., Q, hsz]
+  * ``combine_two``           — binary (associative) form, for tree reduction
+  * ``combine_fragments``     — the post-all-to-all form used by Helix, where
+    the flattened head dim ``D = Q*hsz`` has been split into per-rank slices
+    that may straddle head boundaries; weights are expanded per-element via a
+    static head-index lookup so any divisible split is exact.
+
+All math is done in float32 regardless of input dtype; outputs are cast back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import NEG_INF
+
+
+def _safe_weights(lses: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Softmax over the leading (shard) axis of stacked LSEs, -inf safe.
+
+    Returns (weights [R, ...], total_lse [...]).
+    """
+    lses = lses.astype(jnp.float32)
+    m = jnp.max(lses, axis=0)
+    # If every shard is empty (all -inf), avoid NaN: weights -> 0.
+    m_safe = jnp.where(m <= NEG_INF, 0.0, m)
+    unnorm = jnp.exp(lses - m_safe)
+    denom = jnp.sum(unnorm, axis=0)
+    weights = unnorm / jnp.maximum(denom, 1e-37)
+    total = m_safe + jnp.log(jnp.maximum(denom, 1e-37))
+    total = jnp.where(m <= NEG_INF, NEG_INF, total)
+    return weights, total
+
+
+def combine_partials(outs: jax.Array, lses: jax.Array):
+    """Combine stacked partial attention outputs.
+
+    Args:
+      outs: [R, ..., Q, hsz] partial outputs (already softmax-normalized
+        *within* each shard, i.e. out_r = softmax_r(scores) @ V_r).
+      lses: [R, ..., Q] log-sum-exp of each shard's scores.
+
+    Returns:
+      (out [..., Q, hsz], lse [..., Q])
+    """
+    weights, total = _safe_weights(lses)
+    out = jnp.sum(outs.astype(jnp.float32) * weights[..., None], axis=0)
+    return out.astype(outs.dtype), total
+
+
+def combine_two(out_a, lse_a, out_b, lse_b):
+    """Binary combine; associative and commutative (up to fp rounding)."""
+    outs = jnp.stack([out_a, out_b])
+    lses = jnp.stack([lse_a, lse_b])
+    out, lse = combine_partials(outs, lses)
+    return out, lse
+
+
+def fragment_head_index(q_heads: int, hsz: int, num_slices: int) -> jnp.ndarray:
+    """Static [num_slices, D/num_slices] head index for flattened (Q*hsz) dim.
+
+    Slice s covers flat elements [s*sl, (s+1)*sl); element e belongs to head
+    e // hsz.  Used to expand per-head combine weights to per-element weights
+    when an all-to-all slices the flattened head dim.
+    """
+    d = q_heads * hsz
+    assert d % num_slices == 0, (q_heads, hsz, num_slices)
+    sl = d // num_slices
+    flat = jnp.arange(d, dtype=jnp.int32) // hsz
+    return flat.reshape(num_slices, sl)
+
+
+def combine_fragments(frags: jax.Array, lses: jax.Array, head_idx: jax.Array):
+    """Combine post-all-to-all fragments for one destination rank.
+
+    Args:
+      frags: [R, B, sl] — partial outputs for this rank's flat slice of the
+        (Q*hsz) dim, one per source KVP rank.
+      lses:  [R, B, Q] — all-gathered LSEs (full head set, tiny).
+      head_idx: [sl] int32 — head owning each flat element of this slice
+        (one row of ``fragment_head_index``).
+
+    Returns:
+      combined [B, sl] in frags.dtype.
+    """
+    weights, _ = _safe_weights(lses)            # [R, B, Q] f32
+    w_elem = weights[:, :, head_idx]            # [R, B, sl]
+    out = jnp.sum(frags.astype(jnp.float32) * w_elem, axis=0)
+    return out.astype(frags.dtype)

@@ -1,0 +1,246 @@
+"""Helix attention (§2.1): KVP×TPA sharded decode attention as a shard_map
+module, composable inside a jit/GSPMD step function.
+
+Design (DESIGN.md §2): the *only* explicit-SPMD region is the paper's
+contribution — per-rank flash-decode over the local KV shard, the single
+all-to-all over the query-head axis, and the LSE rescale-sum combine.  The
+surrounding projections / FFN / MoE run under GSPMD with phase-dependent
+sharding constraints (core/sharding.py), which is how the same device pool
+is "re-provisioned" between attention and FFN on TPU.
+
+Round-robin cache layout (§2.3): global position p lives at
+
+    owner rank r = (p // rr) % KVP
+    local slot j = ((p // rr) // KVP) * rr + p % rr
+
+i.e. global cache slot s = r * S_loc + j when the sequence dim is sharded
+contiguously over the kvp axes.  ``rr_slot_of_position`` maps p -> s for the
+GSPMD cache append; the in-shard mask inverts it (kernels/flash_decode/ref).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.combine import combine_fragments
+from repro.core.sharding import HelixConfig
+from repro.kernels.flash_decode.ref import flash_decode_ref, local_valid_len
+from repro.utils import round_up
+
+
+def helix_out_dim(q_dim: int, n_devices: int) -> int:
+    """Flattened attention-output dim after the all-to-all (padded)."""
+    return round_up(q_dim, n_devices)
+
+
+def rr_slot_of_position(pos, kvp: int, s_loc: int, rr_block: int):
+    """Global round-robin cache slot for sequence position ``pos``."""
+    blk = pos // rr_block
+    rank = blk % kvp
+    local = (blk // kvp) * rr_block + pos % rr_block
+    return rank * s_loc + local
+
+
+def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
+                  contiguous: bool, kscale=None, vscale=None):
+    """Per-rank partial attention + LSE over the local KV shard.
+
+    contiguous=True: static split (whisper cross-attn KV) — every local slot
+    s maps to global position rank*S_loc + s; otherwise round-robin (§2.3).
+    kscale/vscale [B, Kh, S_loc]: int8-cache dequant scales (§Perf knob).
+    """
+    if kscale is not None:
+        k = k.astype(jnp.float32) * kscale[..., None]
+        v = v.astype(jnp.float32) * vscale[..., None]
+    if contiguous:
+        s_loc = k.shape[2]
+        # positions rank*s_loc + j; valid iff < total_len; reuse ref via
+        # shifted length: local_valid = clip(total_len - rank*s_loc, 0, s_loc)
+        local_len = jnp.clip(total_len - rank * s_loc, 0, s_loc)
+        return flash_decode_ref(q, k, v, local_len, 0, kvp=1,
+                                rr_block=rr_block, window=0)
+    s_loc = k.shape[2]
+    if isinstance(window, int) and window > 0:
+        # §Perf (beyond-paper): sliding-window layers only need the last
+        # `window` positions.  Positions are strictly increasing in the local
+        # slot index, so the live span is the W_loc slots ending at this
+        # rank's valid length — slice them out and read O(window/KVP) bytes
+        # instead of O(S/KVP).  Requires uniform (scalar) total_len.
+        w_loc = min((window // (kvp * rr_block) + 2) * rr_block, s_loc)
+        if w_loc < s_loc and jnp.ndim(total_len) == 0:
+            j_hi = local_valid_len(total_len, rank, kvp, rr_block)
+            j_lo = jnp.clip(j_hi - w_loc, 0, s_loc - w_loc)
+            k = jax.lax.dynamic_slice_in_dim(k, j_lo, w_loc, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, j_lo, w_loc, axis=2)
+            return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
+                                    rr_block=rr_block, window=window,
+                                    slot_offset=j_lo)
+    return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
+                            rr_block=rr_block, window=window)
+
+
+def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
+                    *, window: int | jax.Array = 0, contiguous: bool = False,
+                    hopb_chunks: int = 1, kscale=None, vscale=None):
+    """Exact sharded decode attention.
+
+    Args:
+      q:            [B, Qh, hsz] global (replicated over kvp, heads over tpa).
+      kcache/vcache:[B, Kh, S_cap, hsz] global; S_cap sharded over kvp axes,
+                    heads over tpa axis (round-robin slot layout).
+      total_len:    scalar or [B] int32 — global sequence length(s).
+      window:       sliding window (0 = full); may be traced (gemma3 scan).
+      hopb_chunks:  HOP-B (§2.1.3): split the batch into this many
+                    independent chunks so XLA's latency-hiding scheduler can
+                    overlap chunk i's all-to-all with chunk i+1's attention
+                    compute (TPU-idiomatic equivalent of stream overlap).
+
+    Returns: [B, Qh*hsz] attention output, sharded over (tpa, kvp) on dim 1 —
+    exactly the TP layout the post-attention projection consumes (§2.2).
+    """
+    import math
+    b, qh, hsz = q.shape
+    kvp_axes = hx.kvp_axes
+    tpa = hx.tpa_axis
+    kvp = math.prod(mesh.shape[a] for a in kvp_axes)
+    qh_local = qh // (mesh.shape[tpa] if tpa else 1)
+    # The all-to-all splits the flattened (Qh_local*hsz) dim into KVP slices.
+    # When it does not divide (e.g. hymba q_dim=1600, N=256) we zero-pad the
+    # flat dim only — attention itself runs the canonical heads; pad elements
+    # carry clamped head indices so combine weights hit zeros (exact).  The
+    # caller pads the out-projection rows to match (helix_out_dim).
+    d_flat = qh_local * hsz
+    d_pad = round_up(d_flat, kvp)
+    if d_pad != d_flat:
+        assert tpa is None, "flat-dim padding only supported in pure-KVP mode"
+    sl = d_pad // kvp
+    flat_heads = jnp.minimum(jnp.arange(d_pad, dtype=jnp.int32) // hsz,
+                             qh_local - 1)
+    head_idx_table = flat_heads.reshape(kvp, sl)          # [KVP, sl]
+
+    def local_fn(q_l, k_l, v_l, tl, *scales):
+        rank = jax.lax.axis_index(kvp_axes)
+        ks_l, vs_l = scales if scales else (None, None)
+        out, lse = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
+                                 rr_block=hx.rr_block, window=window,
+                                 contiguous=contiguous,
+                                 kscale=ks_l, vscale=vs_l)
+        bl = out.shape[0]
+        # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
+        # independent of S.
+        flat = out.reshape(bl, d_flat)
+        if d_pad != d_flat:
+            flat = jnp.pad(flat, ((0, 0), (0, d_pad - d_flat)))
+        frags = flat.reshape(bl, kvp, sl).transpose(1, 0, 2)  # [KVP, B, sl]
+        frags = jax.lax.all_to_all(frags, kvp_axes, split_axis=0,
+                                   concat_axis=0, tiled=False)
+        lses = jax.lax.all_gather(lse, kvp_axes, axis=0, tiled=False)
+        my_slice = jax.lax.dynamic_index_in_dim(
+            head_idx_table, rank, axis=0, keepdims=False)
+        return combine_fragments(frags, lses, my_slice)   # [B, sl]
+
+    tl_spec = P() if jnp.ndim(total_len) == 0 else P(None)
+    quant = kscale is not None
+    in_specs = (P(None, tpa, None),                       # q: repl over kvp
+                P(None, tpa, kvp_axes, None),             # kcache
+                P(None, tpa, kvp_axes, None),             # vcache
+                tl_spec)
+    if quant:
+        in_specs += (P(None, tpa, kvp_axes), P(None, tpa, kvp_axes))
+    shard_fn = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=P(None, ((tpa,) if tpa else ()) + kvp_axes),
+        check_vma=False)
+
+    def call(qs, ks, vs, tl, kss, vss):
+        args = (qs, ks, vs, tl) + ((kss, vss) if quant else ())
+        return shard_fn(*args)
+
+    if hopb_chunks <= 1:
+        return call(q, kcache, vcache, total_len, kscale, vscale)
+
+    # ---- HOP-B: batch-wise communication/computation overlap (§2.1.3) ----
+    assert b % hopb_chunks == 0, (b, hopb_chunks)
+    bc = b // hopb_chunks
+    outs = []
+    for i in range(hopb_chunks):
+        csl = slice(i * bc, (i + 1) * bc)
+        tl_i = total_len if jnp.ndim(total_len) == 0 else total_len[csl]
+        outs.append(call(q[csl], kcache[csl], vcache[csl], tl_i,
+                         kscale[csl] if quant else None,
+                         vscale[csl] if quant else None))
+    return jnp.concatenate(outs, axis=0)
+
+
+def append_kv(kcache, vcache, k_new, v_new, total_len, *, kvp: int,
+              rr_block: int):
+    """Round-robin KV concatenation (§2.3), GSPMD-compatible.
+
+    kcache [B, Kh, S_cap, hsz] (S_cap = KVP * S_loc, round-robin layout);
+    k_new [B, Kh, hsz] for the token at position total_len - 1.  total_len
+    may be scalar (uniform batch: dynamic-update-slice) or [B] (continuous
+    batching: per-request scatter).
+    """
+    s_cap = kcache.shape[2]
+    s_loc = s_cap // kvp
+    pos = total_len - 1
+    slot = rr_slot_of_position(pos, kvp, s_loc, rr_block)
+    if jnp.ndim(total_len) == 0:
+        k_new = k_new[:, :, None, :].astype(kcache.dtype)
+        v_new = v_new[:, :, None, :].astype(vcache.dtype)
+        kcache = jax.lax.dynamic_update_slice(kcache, k_new, (0, 0, slot, 0))
+        vcache = jax.lax.dynamic_update_slice(vcache, v_new, (0, 0, slot, 0))
+        return kcache, vcache
+    b = kcache.shape[0]
+    rows = jnp.arange(b)
+    kcache = kcache.at[rows, :, slot, :].set(k_new.astype(kcache.dtype))
+    vcache = vcache.at[rows, :, slot, :].set(v_new.astype(vcache.dtype))
+    return kcache, vcache
+
+
+def quantize_kv_token(x):
+    """[B, Kh, hsz] -> (int8 [B, Kh, hsz], scale f32 [B, Kh]) symmetric."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def append_kv_quant(kcache, vcache, kscale, vscale, k_new, v_new, total_len,
+                    *, kvp: int, rr_block: int):
+    """int8 round-robin KV append: quantize the new token per (B, Kh) and
+    write payload + scale at its round-robin slot (§2.3 + §Perf kv8)."""
+    kq, ks = quantize_kv_token(k_new)
+    vq, vs = quantize_kv_token(v_new)
+    kcache, vcache = append_kv(kcache, vcache, kq, vq, total_len, kvp=kvp,
+                               rr_block=rr_block)
+    s_loc = kcache.shape[2] // kvp
+    slot = rr_slot_of_position(total_len - 1, kvp, s_loc, rr_block)
+    if jnp.ndim(total_len) == 0:
+        kscale = jax.lax.dynamic_update_slice(
+            kscale, ks[:, :, None].astype(kscale.dtype), (0, 0, slot))
+        vscale = jax.lax.dynamic_update_slice(
+            vscale, vs[:, :, None].astype(vscale.dtype), (0, 0, slot))
+    else:
+        rows = jnp.arange(kcache.shape[0])
+        kscale = kscale.at[rows, :, slot].set(ks.astype(kscale.dtype))
+        vscale = vscale.at[rows, :, slot].set(vs.astype(vscale.dtype))
+    return kcache, vcache, kscale, vscale
+
+
+def prefill_to_rr_layout(cache, kvp: int, rr_block: int):
+    """[B, Kh, S, hsz] contiguous-position cache -> round-robin slot layout.
+
+    S must be a multiple of kvp*rr_block.  Pure reshape/transpose: block b of
+    rr_block positions goes to rank b % kvp, local block b // kvp.
+    """
+    b, kh, s, hsz = cache.shape
+    nblk = s // rr_block
+    assert nblk % kvp == 0, (s, kvp, rr_block)
+    c = cache.reshape(b, kh, nblk // kvp, kvp, rr_block, hsz)
+    c = c.transpose(0, 1, 3, 2, 4, 5)          # [B,Kh,KVP,nloc,rr,hsz]
+    return c.reshape(b, kh, s, hsz)

@@ -1,0 +1,86 @@
+"""Distributed decode state: round-robin KV caches (§2.3), SSM states,
+whisper cross-attention KV — plus their PartitionSpecs and dry-run stand-ins.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.sharding import HelixConfig
+from repro.utils import round_up
+
+
+def cache_capacity(cfg_seq_len: int, kvp: int, rr_block: int) -> int:
+    """Smallest valid cache capacity >= seq_len (multiple of kvp*rr)."""
+    return round_up(cfg_seq_len, kvp * rr_block)
+
+
+def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
+                        kvp: int, rr_block: int = 16,
+                        dtype=jnp.bfloat16, kv_bits: int = 16) -> dict[str, Any]:
+    """ShapeDtypeStructs for every decode-state leaf (dry-run input_specs)."""
+    s: dict[str, Any] = {"total_len": jax.ShapeDtypeStruct((), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.has_attention:
+        cap = cache_capacity(seq_len, kvp, rr_block)
+        kv_dtype = jnp.int8 if kv_bits == 8 else dtype
+        kv = jax.ShapeDtypeStruct(
+            (L, batch, cfg.n_kv_heads, cap, cfg.hsz), kv_dtype)
+        s["kcache"], s["vcache"] = kv, kv
+        if kv_bits == 8:
+            sc = jax.ShapeDtypeStruct((L, batch, cfg.n_kv_heads, cap),
+                                      jnp.float32)
+            s["kscale"], s["vscale"] = sc, sc
+    if cfg.has_ssm:
+        s["ssm_conv"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.conv_dim, cfg.ssm_conv - 1), jnp.float32)
+        s["ssm_state"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            jnp.float32)
+    if cfg.is_encdec:
+        s_enc = round_up(seq_len, kvp)
+        xkv = jax.ShapeDtypeStruct(
+            (L, batch, cfg.n_kv_heads, s_enc, cfg.hsz), dtype)
+        s["xk"], s["xv"] = xkv, xkv
+        s["enc_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return s
+
+
+def decode_state_specs(cfg: ArchConfig, hx: HelixConfig,
+                       batch: int | None = None,
+                       mesh=None) -> dict[str, Any]:
+    """PartitionSpecs matching decode_state_shapes."""
+    tpa, kvp = hx.tpa_axis, hx.kvp_axes
+    s: dict[str, Any] = {"total_len": P()}
+    if cfg.has_attention:
+        s["kcache"] = s["vcache"] = P(None, None, tpa, kvp, None)
+        if hx.kv_cache_bits == 8:
+            s["kscale"] = s["vscale"] = P(None, None, tpa, kvp)
+    if cfg.has_ssm:
+        # batch over 'data' (when divisible), ssm heads/channels over 'model'
+        dsz = mesh.shape["data"] if mesh else 1
+        msz = mesh.shape["model"] if mesh else 1
+        bax = "data" if (batch is None or batch % dsz == 0) else None
+        hax = "model" if cfg.ssm_heads % msz == 0 else None
+        cax = "model" if cfg.conv_dim % msz == 0 else None
+        s["ssm_conv"] = P(None, bax, cax, None)
+        s["ssm_state"] = P(None, bax, hax, None, None)
+    if cfg.is_encdec:
+        s["xk"] = s["xv"] = P(None, None, tpa, kvp, None)
+        s["enc_len"] = P()
+    return s
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, kvp: int,
+                      rr_block: int = 16, dtype=jnp.bfloat16,
+                      total_len: int | jax.Array = 0) -> dict[str, Any]:
+    """Zero-initialised decode state (concrete arrays, small/test use)."""
+    shapes = decode_state_shapes(cfg, batch, seq_len, kvp, rr_block, dtype)
+    state = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+    tl = jnp.asarray(total_len, jnp.int32)
+    state["total_len"] = tl
+    return state

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

@@ -1,0 +1,6 @@
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import (
+    flash_decode_ref, shard_positions, local_valid_len)
+
+__all__ = ["flash_decode", "flash_decode_ref", "shard_positions",
+           "local_valid_len"]

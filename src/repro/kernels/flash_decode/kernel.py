@@ -1,0 +1,129 @@
+"""Pallas TPU flash-decode kernel (Helix attention phase hotspot).
+
+Decode-shape attention: one new query token per sequence against a (possibly
+round-robin-sharded) KV cache shard.  Emits the partial output *and* the
+log-sum-exp — the Helix combine (core/combine.py) needs both.
+
+TPU mapping
+-----------
+  grid = (B, Kh, S_cap / block_s)   — S blocks iterated innermost so the
+                                      online-softmax state lives in VMEM scratch
+  q block   (1, 1, Qp, hsz)  : the Qp = padded Q-per-KV-head group, resident
+  k/v block (1, 1, bs, hsz)  : streamed HBM->VMEM, bs a multiple of 128 (MXU)
+  scratch   acc f32 (Qp,hsz), m/l f32 (Qp,1)
+
+The two matmuls per block — (Qp,hsz)@(hsz,bs) and (Qp,bs)@(bs,hsz) — keep the
+MXU contraction dims at hsz/bs multiples of 128 (hsz=64 archs pad lanes
+internally).  VMEM footprint per step: 2*bs*hsz*2B (K,V) + Qp*hsz*4B + O(Qp),
+e.g. bs=512, hsz=128: ~288 KiB — far under the ~16 MiB/core VMEM budget, so the
+grid pipeline can double-buffer the K/V streams.
+
+Masking semantics match ref.py: round-robin positions + total_len + optional
+sliding window, all computed in-kernel from 3 prefetched scalars
+(total_len, rank, q_pos) — no per-slot position array is read from HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils import NEG_INF
+
+
+def _decode_kernel(scalars, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, kvp: int, rr_block: int, window: int,
+                   block_s: int):
+    si = pl.program_id(2)
+    total_len = scalars[0]
+    rank = scalars[1]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [Qp, hsz]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Qp, bs]
+
+    # Round-robin global positions of this block's slots (computed, not read).
+    j = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    pos = ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
+    mask = pos < total_len
+    if window > 0:
+        mask = jnp.logical_and(mask, pos >= total_len - window)
+
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # [Qp, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # exp(NEG_INF - NEG_INF)=1 is harmless (l, acc still 0); but masked lanes
+    # must not contribute when m_new == NEG_INF, so gate p by the mask.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)          # [Qp, bs]
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = jnp.maximum(l, 1e-37)
+        o_ref[0, 0] = jnp.where(l > 0, acc_ref[...] / denom, 0.0).astype(o_ref.dtype)
+        lse = jnp.where(l[:, 0] > 0, m_ref[:, 0] + jnp.log(denom[:, 0]), NEG_INF)
+        lse_ref[0, 0] = lse.astype(jnp.float32)
+
+
+def flash_decode_kernel(q, k, v, scalars, *, scale: float, kvp: int,
+                        rr_block: int, window: int, block_s: int,
+                        interpret: bool = True):
+    """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
+
+    q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; scalars: [2] int32
+    returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32)
+    """
+    b, kh, qp, hsz = q.shape
+    s_pad = k.shape[2]
+    assert s_pad % block_s == 0 and qp % 8 == 0
+
+    grid = (b, kh, s_pad // block_s)
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
+        window=window, block_s=block_s)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
+                pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((qp, hsz), jnp.float32),
+                pltpu.VMEM((qp, 1), jnp.float32),
+                pltpu.VMEM((qp, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, qp, hsz), q.dtype),
+            jax.ShapeDtypeStruct((b, kh, qp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, q, k, v)

@@ -1,0 +1,58 @@
+"""jit'd public wrapper for the flash_decode Pallas kernel.
+
+Handles layout (Q-head grouping for GQA), padding (Q-group to sublane multiple,
+S to block multiple) and un-padding, so callers use natural shapes:
+
+    out, lse = flash_decode(q, k, v, total_len, rank, kvp=..., ...)
+
+    q      [B, Qh, hsz]
+    k, v   [B, Kh, S_cap, hsz]     (Qh % Kh == 0)
+    out    [B, Qh, hsz]            lse [B, Qh] f32
+
+Padded S slots are auto-masked: the round-robin position formula is strictly
+increasing in the slot index, so any slot >= the true capacity maps to a
+position >= total_len and is masked by the in-kernel total_len check, provided
+S_cap * kvp >= total_len (always true for a correctly sized cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import round_up, pad_dim
+from repro.kernels.flash_decode.kernel import flash_decode_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kvp", "rr_block", "window", "scale", "block_s", "interpret"))
+def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
+                 window: int = 0, scale: float | None = None,
+                 block_s: int = 512, interpret: bool = True):
+    b, qh, hsz = q.shape
+    kh, s_cap = k.shape[1], k.shape[2]
+    assert qh % kh == 0, (qh, kh)
+    g = qh // kh
+    if scale is None:
+        scale = float(hsz) ** -0.5
+
+    block_s = min(block_s, round_up(s_cap, 128))
+    qp = round_up(g, 8)
+
+    qg = q.reshape(b, kh, g, hsz)
+    qg = pad_dim(qg, 2, qp)
+    kp = pad_dim(k, 2, block_s)
+    vp = pad_dim(v, 2, block_s)
+
+    scalars = jnp.stack([jnp.asarray(total_len, jnp.int32),
+                         jnp.asarray(rank, jnp.int32)])
+
+    out, lse = flash_decode_kernel(
+        qg, kp, vp, scalars, scale=scale, kvp=kvp, rr_block=rr_block,
+        window=window, block_s=block_s, interpret=interpret)
+
+    out = out[:, :, :g, :].reshape(b, qh, hsz)
+    lse = lse[:, :, :g].reshape(b, qh)
+    return out, lse

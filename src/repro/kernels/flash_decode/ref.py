@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for the flash_decode kernel.
+
+Semantics (shared with the kernel):
+
+The KV shard on KVP rank ``rank`` holds slots j = 0..S_cap-1.  With the paper's
+round-robin concatenation (§2.3, block size ``rr_block``), slot j corresponds to
+*global* sequence position
+
+    pos(j) = ((j // rr) * kvp + rank) * rr + (j % rr)
+
+A slot is valid iff pos(j) < total_len.  With a sliding window w > 0, it must
+also satisfy pos(j) >= total_len - w (the query is the token at position
+total_len - 1).  Invalid slots are masked to -inf before the softmax.
+
+Returns the softmax-normalized partial output together with the log-sum-exp of
+this shard's scores (f32), as required by the Helix combine.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import NEG_INF
+
+
+def shard_positions(s_cap: int, rank, kvp: int, rr_block: int,
+                    slot_offset=0):
+    """Global positions of the local KV slots on ``rank``.  [S_cap] int32.
+    ``slot_offset`` shifts the local slot index (windowed cache slices)."""
+    j = jnp.arange(s_cap, dtype=jnp.int32) + slot_offset
+    return ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
+
+
+def local_valid_len(total_len, rank, kvp: int, rr_block: int):
+    """Number of valid local slots on ``rank`` given global length total_len."""
+    cycle = kvp * rr_block
+    full = (total_len // cycle) * rr_block
+    rem = total_len % cycle
+    extra = jnp.clip(rem - rank * rr_block, 0, rr_block)
+    return full + extra
+
+
+def flash_decode_ref(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
+                     window: int = 0, scale: float | None = None,
+                     slot_offset=0):
+    """Oracle decode attention over one KV shard.
+
+    Args:
+      q: [B, Qh, hsz] queries for the new token.
+      k, v: [B, Kh, S_cap, hsz] local KV shard (Qh % Kh == 0).
+      total_len: scalar int — global sequence length including the new token.
+      rank: scalar int — this shard's KVP rank.
+    Returns:
+      out [B, Qh, hsz] (q.dtype), lse [B, Qh] (f32).
+    """
+    b, qh, hsz = q.shape
+    kh, s_cap = k.shape[1], k.shape[2]
+    assert qh % kh == 0
+    g = qh // kh
+    if scale is None:
+        scale = hsz ** -0.5
+
+    pos = shard_positions(s_cap, jnp.asarray(rank, jnp.int32), kvp, rr_block,
+                          slot_offset)
+    # total_len may be scalar or per-request [B]
+    tl = jnp.asarray(total_len)
+    tl_b = tl[:, None] if tl.ndim == 1 else tl
+    valid = pos[None, :] < tl_b                       # [B?, S] or [1, S]
+    w = jnp.asarray(window)
+    valid = valid & jnp.where(w > 0, pos[None, :] >= tl_b - w, True)
+
+    qf = q.astype(jnp.float32).reshape(b, kh, g, hsz)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qf * scale, kf)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF, 0.0, m)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(scores - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vf) / jnp.maximum(l, 1e-37)[..., None]
+    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-37)), NEG_INF)
+    return (out.reshape(b, qh, hsz).astype(q.dtype), lse.reshape(b, qh))

@@ -1,0 +1,4 @@
+from repro.kernels.flash_prefill.ops import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+__all__ = ["flash_prefill", "flash_prefill_ref"]

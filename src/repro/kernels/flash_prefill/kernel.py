@@ -1,0 +1,107 @@
+"""Pallas TPU flash-prefill kernel (causal/windowed full-seq attention).
+
+TPU mapping
+-----------
+  grid = (B, Kh, T/blk_q, S/blk_k)   — kv blocks innermost; online-softmax
+                                       state (m, l, acc) lives in VMEM scratch
+                                       and persists across the kv loop.
+  q block   (blk_q, G*hsz)  resident per (b, h, qi)
+  k/v block (blk_k, hsz)    streamed HBM->VMEM
+  out       written at the last kv step (full row normalized)
+
+Causal block skipping: blocks entirely above the diagonal contribute
+nothing; the kernel masks them (grid still visits them — revisited in the
+perf pass via a triangular index_map when it matters on real hw).  MXU
+contraction dims are hsz / blk_k (multiples of 128 for aligned configs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils import NEG_INF
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                    scale: float, window: int, blk_q: int, blk_k: int,
+                    g: int, hsz: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [blq, G*hsz]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [blk, hsz]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [blk, hsz]
+
+    qg = q.reshape(blk_q, g, hsz)
+    s = jax.lax.dot_general(qg.reshape(blk_q * g, hsz), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(blk_q, g, blk_k)
+
+    qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, 1), 0)
+    kpos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk_k), 2)
+    mask = kpos <= qpos
+    if window > 0:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    s2 = s.reshape(blk_q * g, blk_k)
+    mask2 = jnp.broadcast_to(mask, (blk_q, g, blk_k)).reshape(blk_q * g, blk_k)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask2, jnp.exp(s2 - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        out = (acc_ref[...] / l).reshape(blk_q, g * hsz)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_prefill_kernel(q, k, v, *, scale: float, window: int, blk_q: int,
+                         blk_k: int, interpret: bool = True):
+    """q [B, Kh, T, G*hsz]; k, v [B, Kh, S, hsz] (pre-blocked shapes).
+
+    Returns out [B, Kh, T, G*hsz] in q.dtype.
+    """
+    b, kh, t, ghsz = q.shape
+    s, hsz = k.shape[2], k.shape[3]
+    g = ghsz // hsz
+    assert t % blk_q == 0 and s % blk_k == 0
+
+    grid = (b, kh, t // blk_q, s // blk_k)
+    kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
+                               blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, ghsz), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, blk_k, hsz), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, blk_k, hsz), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, ghsz),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q * g, hsz), jnp.float32),
+            pltpu.VMEM((blk_q * g, 1), jnp.float32),
+            pltpu.VMEM((blk_q * g, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, kh, t, ghsz), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for flash_prefill: natural [B,T,Qh,hsz] layout,
+padding to block multiples, GQA head grouping."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
+from repro.utils import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_prefill(q, k, v, *, window: int = 0, scale: float | None = None,
+                  blk_q: int = 128, blk_k: int = 128, interpret: bool = True):
+    """q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> [B, T, Qh, hsz] (causal)."""
+    b, t, qh, hsz = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    assert qh % kh == 0
+    g = qh // kh
+    if scale is None:
+        scale = float(hsz) ** -0.5
+
+    blk_q = min(blk_q, round_up(t, 8))
+    blk_k = min(blk_k, round_up(s, 8))
+    t_pad, s_pad = round_up(t, blk_q), round_up(s, blk_k)
+
+    # [B,T,Kh,G,hsz] -> [B,Kh,T,G*hsz]
+    qg = q.reshape(b, t, kh, g, hsz).transpose(0, 2, 1, 3, 4).reshape(
+        b, kh, t, g * hsz)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    kg = jnp.pad(kg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    vg = jnp.pad(vg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    # pad rows beyond S are masked by causality for q<t; pad q rows produce
+    # garbage but are sliced away below.
+
+    out = flash_prefill_kernel(qg, kg, vg, scale=scale, window=window,
+                               blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+    out = out[:, :, :t].reshape(b, kh, t, g, hsz).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, t, qh, hsz)

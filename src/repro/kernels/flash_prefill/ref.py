@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash_prefill kernel: causal (optionally
+sliding-window) full-sequence attention with GQA grouping."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import NEG_INF
+
+
+def flash_prefill_ref(q, k, v, *, window: int = 0, scale: float | None = None):
+    """q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> out [B, T, Qh, hsz].
+
+    Causal: query t attends keys <= t (+ optional window of w latest).
+    """
+    b, t, qh, hsz = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = qh // kh
+    if scale is None:
+        scale = hsz ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, t, kh, g, hsz) * scale
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, qh, hsz).astype(q.dtype)

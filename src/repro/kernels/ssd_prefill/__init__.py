@@ -1,0 +1,4 @@
+from repro.kernels.ssd_prefill.ops import ssd_prefill
+from repro.kernels.ssd_prefill.ref import ssd_prefill_ref
+
+__all__ = ["ssd_prefill", "ssd_prefill_ref"]

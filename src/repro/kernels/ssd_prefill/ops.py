@@ -1,0 +1,34 @@
+"""jit'd public wrapper for ssd_prefill: natural layouts + group expansion."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_prefill.kernel import ssd_prefill_kernel
+from repro.utils import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("lc", "interpret"))
+def ssd_prefill(x, dt, a, bmat, cmat, d, *, lc: int = 64,
+                interpret: bool = True):
+    """Natural shapes (matching ssd_prefill_ref):
+
+    x [B, T, nh, hd], dt [B, T, nh], a [nh], bmat/cmat [B, T, nh, ds],
+    d [nh] -> (y [B, T, nh, hd] f32, h [B, nh, hd, ds] f32).
+    """
+    b, t, nh, hd = x.shape
+    ds = bmat.shape[-1]
+    lc = min(lc, round_up(t, 8))
+    t_pad = round_up(t, lc)
+    pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+    # pad timesteps with dt=0 => da=1, no state contribution; y rows sliced
+    xb = jnp.pad(x, pad).transpose(0, 2, 1, 3)
+    dtb = jnp.pad(dt, pad[:3]).transpose(0, 2, 1)[..., None]
+    bb = jnp.pad(bmat, pad).transpose(0, 2, 1, 3)
+    cb = jnp.pad(cmat, pad).transpose(0, 2, 1, 3)
+    y, h = ssd_prefill_kernel(
+        xb, dtb, a.astype(jnp.float32)[:, None],
+        bb, cb, d.astype(jnp.float32)[:, None], lc=lc, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)[:, :t], h

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the ssd_prefill kernel: the exact SSD recurrence
+over pre-projected inputs (post conv/act/split — the kernel covers the scan
+core, which is the compute hotspot of mamba2 prefill)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_prefill_ref(x, dt, a, bmat, cmat, d, *, h0=None):
+    """Sequential-scan oracle.
+
+    x    [B, T, nh, hd]   inputs (post conv+silu)
+    dt   [B, T, nh]       softplus'd timestep
+    a    [nh]             negative decay rate (A = -exp(A_log))
+    bmat [B, T, nh, ds]   input projection (already group-expanded)
+    cmat [B, T, nh, ds]   output projection
+    d    [nh]             skip
+    h0   [B, nh, hd, ds]  optional initial state
+
+    Returns (y [B, T, nh, hd] f32, h_final [B, nh, hd, ds] f32).
+    """
+    b, t, nh, hd = x.shape
+    ds = bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a)                                 # [B,T,nh]
+    h = jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        da_t, dt_t, x_t, b_t, c_t = inp
+        h = da_t[:, :, None, None] * h \
+            + (dt_t[:, :, None] * x_t)[..., None] * b_t[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    hf, ys = jax.lax.scan(
+        step, h,
+        (da.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+         xf.transpose(1, 0, 2, 3),
+         bmat.astype(jnp.float32).transpose(1, 0, 2, 3),
+         cmat.astype(jnp.float32).transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3) + d[None, None, :, None] * xf
+    return y, hf

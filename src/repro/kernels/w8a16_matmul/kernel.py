@@ -1,0 +1,62 @@
+"""Pallas TPU w8a16 matmul: int8 weights dequantized on-the-fly in VMEM.
+
+Beyond-paper optimization for the decode FFN weight-read bottleneck
+(§Roofline memory term): weight bytes halve vs bf16 while the MXU still
+computes in bf16/f32.  Per-output-channel scales are folded in at the end.
+
+TPU mapping
+-----------
+  grid = (M/bm, N/bn, K/bk)   — K innermost; f32 accumulator in VMEM scratch
+  x block  (bm, bk) bf16      streamed
+  w block  (bk, bn) int8      streamed (half the HBM bytes of bf16)
+  scale    (1, bn)  f32       resident per N block
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _w8a16_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bm, bn, bk):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # [bm, bk]
+    w = w_ref[...].astype(jnp.float32)              # [bk, bn] dequant int8
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+def w8a16_matmul_kernel(x, qw, scale, *, bm, bn, bk, interpret: bool = True):
+    """x [M, K]; qw [K, N] int8; scale [1, N] f32 -> [M, N] (x.dtype).
+
+    M % bm == K % bk == N % bn == 0 (ops.py pads).
+    """
+    m, k = x.shape
+    n = qw.shape[1]
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_w8a16_kernel, bm=bm, bn=bn, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, qw, scale)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for w8a16_matmul with shape padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.w8a16_matmul.kernel import w8a16_matmul_kernel
+from repro.kernels.w8a16_matmul.ref import quantize_w8  # noqa: F401
+from repro.utils import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w8a16_matmul(x, qw, scale, *, bm: int = 128, bn: int = 128, bk: int = 256,
+                 interpret: bool = True):
+    """x [M, K] bf16/f32; qw [K, N] int8; scale [N] f32 -> [M, N]."""
+    m, k = x.shape
+    n = qw.shape[1]
+    bm = min(bm, round_up(m, 8))
+    bn = min(bn, round_up(n, 128))
+    bk = min(bk, round_up(k, 128))
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    qwp = jnp.pad(qw, ((0, kp - k), (0, np_ - n)))
+    sp = jnp.pad(scale, (0, np_ - n))[None, :]
+    out = w8a16_matmul_kernel(xp, qwp, sp, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    return out[:m, :n]

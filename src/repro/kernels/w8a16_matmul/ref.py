@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for w8a16: int8-weight x bf16-activation matmul with
+per-output-channel scales (weight-only quantization)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_w8(w):
+    """f32/bf16 [K, N] -> (int8 [K, N], scale f32 [N]) per-channel symmetric."""
+    wf = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wf), axis=0) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(wf / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def w8a16_matmul_ref(x, qw, scale):
+    """x [M, K] bf16/f32; qw [K, N] int8; scale [N] f32 -> [M, N] x.dtype."""
+    y = jnp.einsum("mk,kn->mn", x.astype(jnp.float32),
+                   qw.astype(jnp.float32))
+    return (y * scale[None, :]).astype(x.dtype)

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production mesh from 512
+# placeholder CPU devices; smoke tests / benches see 1 device.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent (no mismatched
+specs, no unsupported collective, fits memory at compile time) and extracts
+the roofline raw terms:
+
+  * cost_analysis()  — per-device HLO FLOPs / bytes accessed
+  * compiled HLO     — per-collective bytes (all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute)
+  * memory_analysis()— per-device buffer sizes (where the backend supports it)
+
+Artifacts are dumped as JSON under --out (default runs/dryrun) and consumed
+by benchmarks/roofline.py (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape decode_32k [--multi-pod] [--out runs/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, cell_applicable, get_config
+from repro.core.kvcache import decode_state_shapes, decode_state_specs
+from repro.core.sharding import (default_helix_config, helix_param_specs,
+                                 to_shardings, train_param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import (build_serve_step, data_partition_specs,
+                                    data_specs, make_prefill_step,
+                                    make_train_step)
+from repro.models.transformer import init_params
+from repro.optim import AdamWConfig, adamw_init
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OPS = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+       "collective-permute")
+_LINE_RE = re.compile(
+    r"=\s*(?P<type>[^=]*?)\s+"
+    r"(?P<kind>all-reduce|all-gather|all-to-all|reduce-scatter|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str) -> dict[str, float]:
+    """Per-device collective buffer bytes by op kind, from compiled HLO.
+
+    Handles tuple-result collectives (XLA fuses several arrays into one
+    all-to-all/all-reduce: ``(bf16[..], bf16[..]) all-to-all(...)``) by
+    summing every shape in the result type.  -start ops are counted,
+    -done ops are skipped (same buffers)."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or f"{m.group('kind')}-done" in line:
+            continue
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("type")):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        out[m.group("kind")] = out.get(m.group("kind"), 0.0) + total
+    return out
+
+
+def _params_sds(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def build_cell(cfg, shape: str, mesh, optcfg=None, unroll: bool = False,
+               qkv_shard: bool = False, kv_bits: int = 16):
+    """Returns (step_fn, args_sds tuple, in_shardings tuple).
+
+    unroll=True emits layer/chunk loops inline (for cost extraction on
+    shallow variants); unroll=False keeps scans (the production graph).
+    qkv_shard / kv_bits: §Perf beyond-paper knobs (decode cells)."""
+    import dataclasses
+    cell = SHAPES[shape]
+    hx = dataclasses.replace(default_helix_config(cfg, mesh),
+                             qkv_shard=qkv_shard, kv_cache_bits=kv_bits)
+    params_sds = _params_sds(cfg)
+    p_specs_train = train_param_specs(cfg, params_sds, mesh)
+    p_specs_helix = helix_param_specs(cfg, params_sds, hx, mesh)
+    d_sds = data_specs(cfg, cell)
+    d_specs = data_partition_specs(cfg, cell, mesh)
+    chunk_q = 2048 if unroll else 512
+
+    if cell.kind == "train":
+        optcfg = optcfg or AdamWConfig(moment_dtype=jnp.bfloat16)
+        fn = make_train_step(cfg, mesh, optcfg, chunk_q=chunk_q,
+                             unroll=unroll)
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, optcfg), params_sds)
+        opt_specs = {"m": p_specs_train, "v": p_specs_train, "step": P()}
+        args = (params_sds, opt_sds, d_sds)
+        shardings = (to_shardings(mesh, p_specs_train),
+                     to_shardings(mesh, opt_specs),
+                     to_shardings(mesh, d_specs))
+    elif cell.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh, hx, chunk_q=chunk_q, unroll=unroll)
+        args = (params_sds, d_sds)
+        shardings = (to_shardings(mesh, p_specs_train),
+                     to_shardings(mesh, d_specs))
+    else:  # decode
+        fn = build_serve_step(cfg, mesh, hx, unroll=unroll)
+        st_sds = decode_state_shapes(cfg, cell.global_batch, cell.seq_len,
+                                     hx.kvp(mesh), hx.rr_block,
+                                     kv_bits=kv_bits)
+        st_specs = decode_state_specs(cfg, hx, batch=cell.global_batch,
+                                      mesh=mesh)
+        args = (params_sds, st_sds, d_sds["tokens"])
+        shardings = (to_shardings(mesh, p_specs_helix),
+                     to_shardings(mesh, st_specs),
+                     NamedSharding(mesh, P(None)))
+    return fn, args, shardings
+
+
+def _layer_period(cfg) -> int:
+    """Smallest repeating layer group (gemma3: 5 local + 1 global)."""
+    return (cfg.local_ratio + 1) if cfg.local_ratio else 1
+
+
+def _shallow(cfg, periods: int):
+    """cfg with n_layers = periods x period (enc scaled too for enc-dec)."""
+    import dataclasses
+    p = _layer_period(cfg)
+    kw = {"n_layers": periods * p}
+    if cfg.is_encdec:
+        kw["enc_layers"] = periods * p
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cost_of(cfg, shape, mesh, **knobs):
+    fn, args, shardings = build_cell(cfg, shape, mesh, unroll=True, **knobs)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    return flops, bytes_, colls
+
+
+def extract_costs(cfg, shape: str, mesh, **knobs) -> dict:
+    """Per-device FLOPs/bytes/collectives for the FULL-depth step via 2-point
+    layer extrapolation: cost_analysis counts scan bodies once, and fully
+    unrolling the production depth is intractable for the SPMD partitioner,
+    so we lower 1-period and 2-period shallow variants with all loops
+    unrolled; layers are identical within a period, making
+
+        total = c(1p) + (n_periods - 1) * (c(2p) - c(1p))
+
+    exact (embedding/head costs live in the base term)."""
+    p = _layer_period(cfg)
+    n_periods = cfg.n_layers // p
+    f1, b1, c1 = _cost_of(_shallow(cfg, 1), shape, mesh, **knobs)
+    if n_periods == 1:
+        return {"flops": f1, "bytes accessed": b1, "collectives": c1}
+    f2, b2, c2 = _cost_of(_shallow(cfg, 2), shape, mesh, **knobs)
+    k = n_periods - 1
+    colls = {key: c1.get(key, 0.0) + k * (c2.get(key, 0.0) - c1.get(key, 0.0))
+             for key in set(c1) | set(c2)}
+    return {"flops": f1 + k * (f2 - f1),
+            "bytes accessed": b1 + k * (b2 - b1),
+            "collectives": colls}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             tag: str = "", **knobs) -> dict:
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if tag:
+        rec["variant"] = tag
+        rec["knobs"] = dict(knobs)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg_full = get_config(arch)
+    # 1) production graph (scans): THE compile check + memory analysis
+    t0 = time.time()
+    fn, args, shardings = build_cell(cfg_full, shape, mesh, unroll=False,
+                                     **knobs)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not support it
+        rec["memory"] = {"error": str(e)}
+
+    # 2) cost extraction via shallow-unrolled 2-point extrapolation.
+    #    The §Roofline table is single-pod only (spec) — multi-pod cells are
+    #    a sharding/compile check, so skip the expensive extraction there.
+    t_cost = 0.0
+    if not multi_pod:
+        t0 = time.time()
+        costs = extract_costs(cfg_full, shape, mesh, **knobs)
+        t_cost = time.time() - t0
+        rec["cost"] = {"flops": costs["flops"],
+                       "bytes accessed": costs["bytes accessed"]}
+        rec["collectives"] = costs["collectives"]
+        rec["cost_method"] = ("2-point layer extrapolation over shallow "
+                              "fully-unrolled variants (scan bodies are "
+                              "counted once by cost_analysis)")
+    else:
+        rec["cost"] = {}
+        rec["collectives"] = {}
+        rec["cost_method"] = "skipped (roofline table is single-pod only)"
+    rec["timings"] = {"lower_s": round(t_lower, 2),
+                      "compile_s": round(t_compile, 2),
+                      "cost_extract_s": round(t_cost, 2)}
+    rec["status"] = "ok"
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+    fname.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--tag", default="", help="variant tag for §Perf runs")
+    ap.add_argument("--qkv-shard", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=16, choices=(8, 16))
+    args = ap.parse_args()
+    out = Path(args.out)
+    knobs = {"qkv_shard": args.qkv_shard, "kv_bits": args.kv_bits}
+
+    archs = ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch} x {shape} x {mesh_name}"
+                if args.skip_existing and \
+                        (out / f"{arch}__{shape}__{mesh_name}.json").exists():
+                    print(f"[keep] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, out, tag=args.tag,
+                                   **knobs)
+                except Exception:
+                    print(f"[FAIL] {tag}")
+                    traceback.print_exc()
+                    failures += 1
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"[skip] {tag}: {rec['reason']}")
+                else:
+                    c = rec["cost"]
+                    print(f"[ ok ] {tag}: flops/dev={c.get('flops', 0):.3e} "
+                          f"bytes/dev={c.get('bytes accessed', 0):.3e} "
+                          f"compile={rec['timings']['compile_s']}s")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Serving driver: batched decode with the Helix engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+      --requests 8 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import (build_serve_step, make_prefill_step)
+from repro.models.transformer import init_params
+from repro.serving import DecodeEngine, Request
+
+
+def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
+               max_new: int, max_batch: int = 8, mesh=None, hx=None,
+               seed: int = 0, log=print):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    if hx is None:
+        hx = HelixConfig(kvp_axes=(), tpa_axis=None)   # single-device
+    kvp = hx.kvp(mesh) if mesh else 1
+    max_seq = prompt_len + max_new + 1
+
+    if mesh is not None:
+        serve_step = build_serve_step(cfg, mesh, hx)
+        prefill_step = make_prefill_step(cfg, mesh, hx)
+    else:
+        # single-device: 1x1 trivial mesh keeps one code path
+        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
+        serve_step = build_serve_step(cfg, mesh1, hx)
+        prefill_step = make_prefill_step(cfg, mesh1, hx)
+
+    engine = DecodeEngine(cfg, params, serve_step, prefill_step,
+                          max_batch=max_batch, max_seq=max_seq, kvp=kvp,
+                          rr_block=hx.rr_block)
+    rng = np.random.default_rng(seed)
+    pending = [Request(rid=i,
+                       prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
+                       max_new_tokens=max_new)
+               for i in range(n_requests)]
+    finished: list[Request] = []
+    t0 = time.time()
+    steps = 0
+    while pending or any(engine.slots):
+        while pending and engine.add_request(pending[0]):
+            pending.pop(0)
+        finished += engine.step()
+        steps += 1
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in finished)
+    log(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.2f}s "
+        f"({toks / max(dt, 1e-9):.1f} tok/s, {steps} engine steps)")
+    return finished
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_demo(args.arch, reduced=args.reduced, n_requests=args.requests,
+               prompt_len=args.prompt_len, max_new=args.max_new,
+               max_batch=args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Attention: reference + memory-bounded chunked implementations (pure jnp).
+
+Also: the static head-layout machinery that pads/permutes GQA heads so that
+tensor-parallel sharding respects KV-group boundaries (DESIGN.md §5).
+
+Conventions
+-----------
+  q        [B, T, Qh, hsz]
+  k, v     [B, S, Kh, hsz]     with Qh % Kh == 0 (after layout)
+  output   [B, T, Qh, hsz]
+
+The train/prefill path uses ``chunked_attention`` (lax.scan over query
+chunks — memory O(B·h·cq·S) instead of O(B·h·T·S)).  The decode path lives
+in core/helix.py (sharded) and kernels/flash_decode (TPU hotspot).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.utils import NEG_INF, round_up, cdiv
+
+
+# ------------------------------------------------------------- head layout
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    """Static padded/permuted GQA head layout for width-W head sharding.
+
+    q_src[i]  — original q head feeding padded slot i (== Qh ⇒ zero pad)
+    kv_src[j] — original kv head replicated into padded slot j
+    """
+    q_heads: int
+    kv_heads: int
+    q_pad: int
+    kv_pad: int
+    q_src: tuple[int, ...]
+    kv_src: tuple[int, ...]
+
+    @property
+    def group(self) -> int:
+        return self.q_pad // self.kv_pad
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.q_pad == self.q_heads and self.kv_pad == self.kv_heads
+                and self.q_src == tuple(range(self.q_heads)))
+
+
+@functools.lru_cache(maxsize=None)
+def head_layout(q_heads: int, kv_heads: int, width: int) -> HeadLayout:
+    """Pad Kh to a multiple-or-divisor-aligned count and Qh to match, so a
+    width-way shard of the padded q-head axis never crosses a kv group."""
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    g0 = q_heads // kv_heads
+    # Kh -> smallest Kp >= Kh that is a divisor or multiple of width (dummy
+    # zero kv heads fill the gap); group g0 -> smallest gp with W | Kp*gp.
+    # Together these guarantee a width-way shard of the padded q-head axis
+    # never splits a kv group across ranks.  Dummy kv heads are attended only
+    # by pad q slots whose out-projection rows are zero => numerically exact.
+    kv_pad = kv_heads
+    while not (width % kv_pad == 0 or kv_pad % width == 0):
+        kv_pad += 1
+    gp = g0
+    while (kv_pad * gp) % width:
+        gp += 1
+    q_pad = kv_pad * gp
+    q_src, kv_src = [], []
+    for j in range(kv_pad):
+        kv_src.append(j if j < kv_heads else kv_heads)       # dummy sentinel
+        for t in range(gp):
+            real = j < kv_heads and t < g0
+            q_src.append(j * g0 + t if real else q_heads)    # pad sentinel
+    return HeadLayout(q_heads, kv_heads, q_pad, kv_pad,
+                      tuple(q_src), tuple(kv_src))
+
+
+def apply_q_layout(wq: jax.Array, layout: HeadLayout, hsz: int) -> jax.Array:
+    """[H, Qh*hsz] -> [H, Qp*hsz] padded/permuted view (zero pads)."""
+    if layout.is_identity:
+        return wq
+    h = wq.shape[0]
+    w = wq.reshape(h, layout.q_heads, hsz)
+    w = jnp.concatenate([w, jnp.zeros((h, 1, hsz), wq.dtype)], axis=1)
+    return w[:, np.array(layout.q_src)].reshape(h, layout.q_pad * hsz)
+
+
+def apply_o_layout(wo: jax.Array, layout: HeadLayout, hsz: int) -> jax.Array:
+    """[Qh*hsz, H] -> [Qp*hsz, H] (zero rows at pads — padding is exact)."""
+    if layout.is_identity:
+        return wo
+    h = wo.shape[-1]
+    w = wo.reshape(layout.q_heads, hsz, h)
+    w = jnp.concatenate([w, jnp.zeros((1, hsz, h), wo.dtype)], axis=0)
+    return w[np.array(layout.q_src)].reshape(layout.q_pad * hsz, h)
+
+
+def apply_kv_layout(wkv: jax.Array, layout: HeadLayout, hsz: int) -> jax.Array:
+    """[H, Kh*hsz] -> [H, Kp*hsz] padded view (dummy kv heads are zero)."""
+    if layout.is_identity:
+        return wkv
+    h = wkv.shape[0]
+    w = wkv.reshape(h, layout.kv_heads, hsz)
+    w = jnp.concatenate([w, jnp.zeros((h, 1, hsz), wkv.dtype)], axis=1)
+    return w[:, np.array(layout.kv_src)].reshape(h, layout.kv_pad * hsz)
+
+
+# ------------------------------------------------------------- reference
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int | jax.Array = 0):
+    """Naive full-matrix attention (small tests only)."""
+    b, t, qh, hsz = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = qh // kh
+    qf = q.astype(jnp.float32).reshape(b, t, kh, g, hsz) * (hsz ** -0.5)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, kf)
+    qpos = jnp.arange(t) + q_offset
+    kpos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    # window may be a traced per-layer scalar (gemma3 local/global scan);
+    # 0 means "no window"
+    weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), t + s + 10)
+    mask &= kpos[None, :] > qpos[:, None] - weff
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, qh, hsz).astype(q.dtype)
+
+
+# ------------------------------------------------------------- chunked
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      chunk_q: int = 512, q_offset: int | jax.Array = 0,
+                      unroll: bool = False):
+    """Memory-bounded attention: lax.scan over query chunks.
+
+    Each chunk computes its full score row (the row fits: cq × S), so no
+    online-softmax state is needed.  Used by train_step / prefill_step; the
+    TPU hotspot equivalent is kernels/flash_prefill.  ``unroll`` emits the
+    chunk loop inline — required by the dry-run because cost_analysis counts
+    a while-loop body once, not x trip-count.
+    """
+    b, t, qh, hsz = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = qh // kh
+    cq = min(chunk_q, t)
+    t_pad = round_up(t, cq)
+    if t_pad != t:
+        q = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    nchunk = t_pad // cq
+
+    qc = q.reshape(b, nchunk, cq, kh, g, hsz).transpose(1, 0, 3, 4, 2, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(s)
+
+    def one_chunk(ci, qi):
+        qf = qi.astype(jnp.float32) * (hsz ** -0.5)       # [B,Kh,G,cq,hsz]
+        scores = jnp.einsum("bkgtd,bskd->bkgts", qf, kf)  # [B,Kh,G,cq,S]
+        qpos = ci * cq + jnp.arange(cq) + q_offset
+        mask = jnp.ones((cq, s), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                         t + s + 10)
+        mask &= kpos[None, :] > qpos[:, None] - weff
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgts,bskd->bkgtd", p, vf).astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        lambda _, args: (None, one_chunk(*args)),
+        None, (jnp.arange(nchunk), qc),
+        unroll=nchunk if unroll else 1)                   # [n,B,Kh,G,cq,hsz]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, t_pad, qh, hsz)
+    return out[:, :t]
+
+
+def cross_attention(q, k, v, *, chunk_q: int = 512):
+    """Non-causal encoder-decoder cross attention (whisper)."""
+    return chunked_attention(q, k, v, causal=False, window=0, chunk_q=chunk_q)

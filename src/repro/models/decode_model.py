@@ -1,0 +1,249 @@
+"""Helix decode path: one full autoregressive step for every architecture.
+
+``build_serve_step(cfg, mesh, hx)`` returns a jit-able
+
+    serve_step(params, state, tokens) -> (next_tokens, new_state)
+
+implementing the paper's per-layer temporal pipeline:
+
+  attention phase — QKV projected per-rank (replicated batch), round-robin
+  KV append (§2.3), helix_attention (shard_map: flash-decode over the local
+  KV shard + single all-to-all over the query-head axis + LSE combine,
+  optionally HOP-B batch-chunked, §2.1.3);
+
+  FFN phase — the *same* device pool re-provisioned via GSPMD sharding
+  constraints: dense FFN with TPF = N, or MoE with EP×TPF (§2.2).
+
+Everything outside helix_attention is GSPMD (pjit constraints); that is the
+TPU-idiomatic equivalent of the paper's GPU-pool reconfiguration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.helix import append_kv, append_kv_quant, helix_attention
+from repro.core.sharding import HelixConfig
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (activation, apply_rope, rms_norm,
+                                 sinusoidal_at, softcap)
+from repro.models.moe import MoEParams, moe_ffn
+from repro.models.transformer import layer_windows
+
+
+def _constrainer(mesh: Mesh):
+    def c(x, *axes):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*axes)))
+    return c
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
+                     hopb_chunks: int = 4, return_logits: bool = False,
+                     unroll: bool = False):
+    import math
+
+    from repro.core.helix import helix_out_dim
+    from repro.core.sharding import dense_ffn_mode
+
+    kvp = hx.kvp(mesh)
+    tpa_ax = hx.tpa_axis
+    all_ax = hx.all_axes()
+    n_all = math.prod(mesh.shape[a] for a in all_ax)
+    tpf = tuple(a for a in ("pod", "model") if a in all_ax) or None
+    windows = layer_windows(cfg)
+    act = activation(cfg.act)
+    cst = _constrainer(mesh)
+    o_dim = helix_out_dim(cfg.q_dim, n_all)       # padded a2a output dim
+    ffn2d = cfg.d_ff and dense_ffn_mode(cfg, mesh, hx) == "2d"
+    dp_ish = tuple(a for a in mesh.axis_names if a != "model")
+    kv8 = hx.kv_cache_bits == 8                   # int8 KV cache (§Perf)
+
+    def out_proj(out, wo):
+        """Post-attention projection; pads wo rows when the a2a flat dim was
+        padded (exact: pad rows multiply the zero pad lanes)."""
+        if o_dim != wo.shape[0]:
+            wo = jnp.pad(wo, ((0, o_dim - wo.shape[0]), (0, 0)))
+        return cst(out @ wo, None, None)
+
+    def attn_phase(lp, h, kc, vc, ks, vs, tl_attn, win):
+        """Helix attention phase for one layer.  h [B,H] (replicated)."""
+        b = h.shape[0]
+        # qkv_shard (§Perf, beyond-paper): weights over 'model', all-gather
+        # the tiny activations — vs the paper's replicated per-rank QKV.
+        qkv_ax = "model" if hx.qkv_shard and not tpa_ax else tpa_ax
+        q = cst(cst(h @ lp["wq"], None, qkv_ax),
+                None, tpa_ax).reshape(b, cfg.n_heads, cfg.hsz)
+        kn = cst(cst(h @ lp["wk"], None, qkv_ax),
+                 None, tpa_ax).reshape(b, cfg.n_kv_heads, cfg.hsz)
+        vn = cst(cst(h @ lp["wv"], None, qkv_ax),
+                 None, tpa_ax).reshape(b, cfg.n_kv_heads, cfg.hsz)
+        if cfg.use_rope:
+            pos = (tl_attn - 1)
+            pos = pos[..., None] if jnp.ndim(pos) else pos[None]  # [B,1]/[1]
+            q = apply_rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+            kn = apply_rope(kn[:, None], pos, cfg.rope_theta)[:, 0]
+        if kv8:
+            kc, vc, ks, vs = append_kv_quant(
+                kc, vc, ks, vs, kn, vn, tl_attn, kvp=kvp,
+                rr_block=hx.rr_block)
+        else:
+            kc, vc = append_kv(kc, vc, kn, vn, tl_attn, kvp=kvp,
+                               rr_block=hx.rr_block)
+        chunks = hopb_chunks if b % hopb_chunks == 0 else 1
+        out = helix_attention(mesh, hx, q, kc, vc, tl_attn, window=win,
+                              hopb_chunks=chunks,
+                              kscale=ks if kv8 else None,
+                              vscale=vs if kv8 else None)
+        # post-attention projection: TP = N over the combined (tpa, kvp)
+        # layout; the All-Reduce the paper describes is emitted by GSPMD from
+        # wo's input-dim sharding.
+        return out_proj(out, lp["wo"]), kc, vc, ks, vs
+
+    def cross_phase(lp, h, xk, xv, s_enc):
+        b = h.shape[0]
+        q = cst(h @ lp["wq"], None, tpa_ax).reshape(b, cfg.n_heads, cfg.hsz)
+        chunks = hopb_chunks if b % hopb_chunks == 0 else 1
+        out = helix_attention(mesh, hx, q, xk, xv,
+                              jnp.asarray(s_enc, jnp.int32),
+                              contiguous=True, hopb_chunks=chunks)
+        return out_proj(out, lp["wo"])
+
+    def ssm_phase(lp, h, conv, sstate):
+        # batch over 'data' (when divisible), heads/channels over 'model'
+        # (DESIGN §4 mamba2: Helix's FFN half applies; KVP is inapplicable —
+        # no KV cache).
+        bax = "data" if h.shape[0] % mesh.shape["data"] == 0 else None
+        hax = "model" if cfg.ssm_heads % mesh.shape["model"] == 0 else None
+        cax = "model" if cfg.conv_dim % mesh.shape["model"] == 0 else None
+        y, new = ssm_lib.ssm_decode_step(
+            ssm_lib.SSMParams(**lp), cfg,
+            cst(h, bax, None),
+            ssm_lib.SSMState(cst(conv, bax, cax, None),
+                             cst(sstate, bax, hax, None, None)))
+        return cst(y, None, None), new
+
+    def ffn_phase(lp_ffn, lp_moe, h2):
+        delta = 0.0
+        if lp_ffn is not None:
+            # dense FFN: TPF = N — all devices amortize the weight read.
+            # '2d' fallback (F % N != 0): H over dp-ish axes x F over model;
+            # the contraction over the H shard emits a small all-reduce.
+            fax = ("model",) if ffn2d else all_ax
+            y = act(cst(h2 @ lp_ffn["w1"], None, fax))
+            if "w3" in lp_ffn:
+                y = y * cst(h2 @ lp_ffn["w3"], None, fax)
+            delta = cst(y @ lp_ffn["w2"], None, None)
+        if lp_moe is not None:
+            m, _aux = moe_ffn(
+                MoEParams(**lp_moe), h2, cfg.moe, activation("silu"),
+                capacity_factor=cfg.moe.decode_capacity_factor, groups=1,
+                c_disp=lambda v: cst(v, None, hx.ep_axis, None, None),
+                c_exp=lambda v: cst(v, None, hx.ep_axis, None, None))
+            delta = delta + cst(m, None, None)
+        return delta
+
+    def layer_fn(x, lp, win, kc, vc, ks, vs, conv, sstate, xk, xv, tl_attn,
+                 s_enc):
+        h = rms_norm(x, lp["ln1"])
+        new_caches: dict[str, Any] = {}
+        if cfg.has_attention and cfg.has_ssm:          # hybrid (hymba)
+            a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
+                                               tl_attn, win)
+            s_out, new_s = ssm_phase(lp["ssm"], h, conv, sstate)
+            x = x + 0.5 * (a_out + s_out)
+            new_caches.update(kcache=kc, vcache=vc, ssm_conv=new_s.conv,
+                              ssm_state=new_s.ssm)
+        elif cfg.has_attention:
+            a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
+                                               tl_attn, win)
+            x = x + a_out
+            new_caches.update(kcache=kc, vcache=vc)
+        else:                                          # pure ssm (mamba2)
+            s_out, new_s = ssm_phase(lp["ssm"], h, conv, sstate)
+            x = x + s_out
+            new_caches.update(ssm_conv=new_s.conv, ssm_state=new_s.ssm)
+        if kv8 and cfg.has_attention:
+            new_caches.update(kscale=ks, vscale=vs)
+
+        if cfg.is_encdec:
+            hxn = rms_norm(x, lp["lnx"])
+            x = x + cross_phase(lp["xattn"], hxn, xk, xv, s_enc)
+
+        if cfg.d_ff or cfg.moe:
+            h2 = rms_norm(x, lp["ln2"])
+            x = x + ffn_phase(lp.get("ffn"), lp.get("moe"), h2)
+        return x, new_caches
+
+    def serve_step(params, state, tokens):
+        """tokens [B] int32 -> (next_tokens [B], new state)."""
+        tl = state["total_len"]
+        tl_attn = tl + 1                                # includes new token
+        x = params["embed"][tokens]                     # [B, H]
+        x = cst(x, None, None)
+        if not cfg.use_rope:
+            pos = tl if jnp.ndim(tl) else tl[None]
+            pe = sinusoidal_at(pos.astype(jnp.float32), cfg.d_model)
+            x = x + pe.astype(x.dtype)
+
+        L = cfg.n_layers
+        s_enc = state.get("enc_len", 0) if cfg.is_encdec else 0
+
+        # Scan over layer *periods* (gemma3: 5 local + 1 global) so each
+        # sub-layer's sliding window is a STATIC python int — this lets the
+        # helix local attend slice O(window/KVP) cache bytes (§Perf).
+        p = (cfg.local_ratio + 1) if cfg.local_ratio else 1
+        nper = L // p
+        win_static = [int(w) for w in windows[:p]]
+
+        dummy = jnp.zeros((L, 1), jnp.int32)  # placeholder for absent leaves
+        xs = (params["layers"],
+              state.get("kcache", dummy), state.get("vcache", dummy),
+              state.get("kscale", dummy), state.get("vscale", dummy),
+              state.get("ssm_conv", dummy), state.get("ssm_state", dummy),
+              state.get("xk", dummy), state.get("xv", dummy))
+        xs = jax.tree.map(lambda a: a.reshape(nper, p, *a.shape[1:]), xs)
+
+        def body(carry, xs_p):
+            xcur = carry
+            outs = []
+            for i in range(p):
+                leaf_i = jax.tree.map(lambda a: a[i], xs_p)
+                lp, kc, vc, ks, vs, conv, sstate, xk, xv = leaf_i
+                xcur, nc = layer_fn(xcur, lp, win_static[i], kc, vc, ks, vs,
+                                    conv, sstate, xk, xv, tl_attn, s_enc)
+                outs.append(nc)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+            return xcur, stacked
+
+        x, new_caches = jax.lax.scan(body, x, xs,
+                                     unroll=nper if unroll else 1)
+        new_caches = jax.tree.map(
+            lambda a: a.reshape(L, *a.shape[2:]), new_caches)
+
+        x = rms_norm(x, params["ln_f"])
+        head = params.get("lm_head")
+        logits = x @ head if head is not None else x @ params["embed"].T
+        logits = cst(logits, None, all_ax)
+        if cfg.softcap:
+            logits = softcap(logits, cfg.softcap)
+        vmask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab,
+                          0.0, -1e30)
+        logits = logits + vmask.astype(logits.dtype)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        new_state = dict(state)
+        new_state.update(new_caches)
+        new_state["total_len"] = tl + 1
+        if cfg.is_encdec:                               # static cross KV
+            new_state["xk"], new_state["xv"] = state["xk"], state["xv"]
+        if return_logits:
+            return (next_tokens, logits), new_state
+        return next_tokens, new_state
+
+    return serve_step

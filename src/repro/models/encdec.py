@@ -1,0 +1,53 @@
+"""Whisper-style encoder (conv frontend stubbed — input_specs provides
+precomputed frame embeddings [B, S_enc, d_model])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import head_layout
+from repro.models.layers import rms_norm, sinusoidal_positions
+from repro.models.transformer import NO_POLICY
+
+
+def encode(cfg: ArchConfig, enc_params, frames, *, policy=NO_POLICY,
+           chunk_q: int = 512, tp_width: int = 1, unroll: bool = False):
+    """frames [B, S_enc, d_model] -> enc_out [B, S_enc, d_model]."""
+    from repro.models.transformer import _attn_block, _ffn_block  # cycle-free
+
+    b, s, _ = frames.shape
+    x = frames + sinusoidal_positions(s, cfg.d_model)[None].astype(frames.dtype)
+    x = policy(x, "dp", None, None)
+    layout = head_layout(cfg.n_heads, cfg.n_kv_heads, tp_width)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"])
+        a_out, _ = _attn_block(cfg, lp["attn"], h, layout=layout, window=0,
+                               policy=policy, causal=False, chunk_q=chunk_q,
+                               unroll=unroll)
+        y = carry + a_out
+        h2 = rms_norm(y, lp["ln2"])
+        y = y + _ffn_block(cfg, lp["ffn"], h2, policy)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, enc_params["layers"],
+                        unroll=cfg.enc_layers if unroll else 1)
+    return rms_norm(x, enc_params["ln_f"])
+
+
+def cross_kv(cfg: ArchConfig, layers_params, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output.
+
+    Returns (kx, vx) [L, B, S_enc, Kh, hsz] — the static "KV cache" that the
+    Helix decode path shards across KVP ranks (contiguous split, no
+    round-robin since it never grows).
+    """
+    b, s, _ = enc_out.shape
+
+    def one(lp):
+        k = (enc_out @ lp["xattn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hsz)
+        v = (enc_out @ lp["xattn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hsz)
+        return k, v
+
+    return jax.lax.map(one, layers_params)

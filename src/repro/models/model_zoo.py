@@ -1,0 +1,153 @@
+"""Public model API: step-function builders + dry-run input specs.
+
+  make_train_step(cfg, mesh, optcfg)   -> train_step(params, opt, batch)
+  make_prefill_step(cfg, mesh, hx)     -> prefill(params, batch) -> (logits,
+                                          decode-state in round-robin layout)
+  build_serve_step (re-export)         -> decode (models/decode_model.py)
+  data_specs(cfg, shape)               -> ShapeDtypeStructs for batch inputs
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core.helix import prefill_to_rr_layout
+from repro.core.kvcache import cache_capacity
+from repro.core.sharding import HelixConfig, MeshPolicy, train_roles
+from repro.models.decode_model import build_serve_step  # noqa: F401 re-export
+from repro.models.transformer import NO_POLICY, forward, init_params, lm_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.utils import round_up
+
+__all__ = ["make_train_step", "make_prefill_step", "build_serve_step",
+           "data_specs", "data_partition_specs", "init_params", "adamw_init"]
+
+
+def _dp_size(mesh: Mesh | None) -> int:
+    if mesh is None:
+        return 1
+    return math.prod(mesh.shape[a] for a in mesh.axis_names if a != "model")
+
+
+def _forward_kwargs(cfg: ArchConfig, batch: dict[str, Any], mesh, policy,
+                    moe_groups: int):
+    kw: dict[str, Any] = dict(policy=policy, moe_groups=moe_groups,
+                              tp_width=mesh.shape["model"] if mesh else 1)
+    if cfg.vision_patches:
+        kw["patch_embeds"] = batch["patch_embeds"]
+    if cfg.is_encdec:
+        kw["enc_frames"] = batch["enc_frames"]
+    return kw
+
+
+# ------------------------------------------------------------------ train
+def make_train_step(cfg: ArchConfig, mesh: Mesh | None = None,
+                    optcfg: AdamWConfig = AdamWConfig(), chunk_q: int = 512,
+                    unroll: bool = False):
+    policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
+    moe_groups = _dp_size(mesh) if cfg.moe else 1
+
+    def loss_fn(params, batch):
+        logits, extras = forward(
+            cfg, params, batch["tokens"], chunk_q=chunk_q, unroll=unroll,
+            **_forward_kwargs(cfg, batch, mesh, policy, moe_groups))
+        loss = lm_loss(cfg, logits, batch["labels"])
+        return loss + extras["aux_loss"], loss
+
+    def train_step(params, opt_state, batch):
+        (_, loss), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  optcfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------- prefill
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
+                      s_cap: int | None = None, chunk_q: int = 512,
+                      unroll: bool = False):
+    """Prefill + handoff: contiguous caches -> round-robin decode layout."""
+    policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
+    kvp = hx.kvp(mesh) if mesh else 1
+    moe_groups = _dp_size(mesh) if cfg.moe else 1
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        cap = s_cap or cache_capacity(t, kvp, hx.rr_block)
+        logits, extras = forward(
+            cfg, params, tokens, return_cache=True, chunk_q=chunk_q,
+            unroll=unroll,
+            **_forward_kwargs(cfg, batch, mesh, policy, moe_groups))
+        state: dict[str, Any] = {"total_len": jnp.asarray(t, jnp.int32)}
+        if cfg.has_attention:
+            # [L,B,T,Kp,hsz] -> canonical heads -> [L,B,Kh,T,hsz] -> rr layout
+            kc = extras["kcache"][:, :, :, :cfg.n_kv_heads].transpose(
+                0, 1, 3, 2, 4)
+            vc = extras["vcache"][:, :, :, :cfg.n_kv_heads].transpose(
+                0, 1, 3, 2, 4)
+            pad = [(0, 0)] * 5
+            pad[3] = (0, cap - t)
+            kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+            state["kcache"] = jax.vmap(
+                lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(kc)
+            state["vcache"] = jax.vmap(
+                lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(vc)
+        if cfg.has_ssm:
+            state["ssm_conv"] = extras["ssm_conv"]
+            state["ssm_state"] = extras["ssm_state"]
+        if cfg.is_encdec:
+            from repro.models.encdec import cross_kv
+            kx, vx = cross_kv(cfg, params["layers"], extras["enc_out"])
+            s_enc = kx.shape[2]
+            s_enc_pad = round_up(s_enc, kvp)
+            padx = [(0, 0)] * 5
+            padx[3] = (0, s_enc_pad - s_enc)
+            state["xk"] = jnp.pad(kx.transpose(0, 1, 3, 2, 4), padx)
+            state["xv"] = jnp.pad(vx.transpose(0, 1, 3, 2, 4), padx)
+            state["enc_len"] = jnp.asarray(s_enc, jnp.int32)
+        return logits[:, -1], state
+
+    return prefill_step
+
+
+# ------------------------------------------------------------- input data
+def data_specs(cfg: ArchConfig, cell: ShapeCell) -> dict[str, Any]:
+    """ShapeDtypeStructs for the *data* inputs of one (arch x shape) cell."""
+    b, t = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        d: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        return d
+    d = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+    if cell.kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    if cfg.vision_patches:
+        d["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        d["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, t * cfg.enc_seq_ratio, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+def data_partition_specs(cfg: ArchConfig, cell: ShapeCell,
+                         mesh: Mesh) -> dict[str, Any]:
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    if cell.kind == "decode":
+        return {"tokens": P(None)}
+    d = {"tokens": P(dp, None)}
+    if cell.kind == "train":
+        d["labels"] = P(dp, None)
+    if cfg.vision_patches:
+        d["patch_embeds"] = P(dp, None, None)
+    if cfg.is_encdec:
+        d["enc_frames"] = P(dp, None, None)
+    return d

@@ -1,0 +1,258 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Three entry points sharing one parameter set:
+
+  * ``ssd_scan_ref``   — exact sequential recurrence (oracle; lax.scan over T)
+  * ``ssd_chunked``    — the SSD block-matrix algorithm (train/prefill path;
+                         O(T·Lc) work in chunks of Lc, matmul-friendly).
+                         The TPU hotspot version is kernels/ssd_prefill.
+  * ``ssm_decode_step``— O(1)-state single-token decode update
+
+Recurrence (per head h, state n, channel p):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t
+    y_t = C_t · h_t + D * x_t
+
+with A < 0 scalar per head (mamba2), B,C shared across heads per group.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_norm, dense_init
+
+
+class SSMParams(NamedTuple):
+    w_in: jax.Array      # [H, d_in_proj]  (z, xBC, dt)
+    conv_w: jax.Array    # [conv_dim, d_conv] depthwise
+    conv_b: jax.Array    # [conv_dim]
+    A_log: jax.Array     # [nheads]
+    D: jax.Array         # [nheads]
+    dt_bias: jax.Array   # [nheads]
+    norm_w: jax.Array    # [d_inner]  gated RMSNorm before out-proj
+    w_out: jax.Array     # [d_inner, H]
+
+
+def d_in_proj(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + cfg.ssm_heads
+
+
+def init_ssm(cfg: ArchConfig, key, dtype) -> SSMParams:
+    ks = jax.random.split(key, 4)
+    h = cfg.d_model
+    nh = cfg.ssm_heads
+    return SSMParams(
+        w_in=dense_init(ks[0], (h, d_in_proj(cfg)), dtype),
+        conv_w=dense_init(ks[1], (cfg.conv_dim, cfg.ssm_conv), dtype, scale=0.5),
+        conv_b=jnp.zeros((cfg.conv_dim,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        D=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nh))).astype(jnp.float32),
+        norm_w=jnp.zeros((cfg.d_inner,), dtype),
+        w_out=dense_init(ks[2], (cfg.d_inner, h), dtype),
+    )
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, conv_dim, d_conv - 1] shift register
+    ssm: jax.Array    # [B, nheads, headdim, dstate] f32
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_dim, cfg.ssm_conv - 1), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                      jnp.float32),
+    )
+
+
+# ------------------------------------------------------------------ shared
+def _project(p: SSMParams, cfg: ArchConfig, x):
+    """x [..., H] -> (z [..., d_inner], xBC [..., conv_dim], dt [..., nh])."""
+    proj = x @ p.w_in
+    di, cd = cfg.d_inner, cfg.conv_dim
+    z, xbc, dt = jnp.split(proj, [di, di + cd], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ArchConfig, xbc):
+    di, gs = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    xs, b, c = jnp.split(xbc, [di, di + gs], axis=-1)
+    return xs, b, c
+
+
+def _dt_act(dt, dt_bias):
+    return jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+
+
+def _gate_out(p: SSMParams, y, z):
+    """Gated RMSNorm + out-projection.  y,z [..., d_inner]."""
+    g = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p.norm_w)
+    return g.astype(p.w_out.dtype) @ p.w_out
+
+
+def _conv_full(p: SSMParams, xbc):
+    """Causal depthwise conv over T.  xbc [B, T, conv_dim]."""
+    dc = p.conv_w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (dc - 1, 0), (0, 0)))
+    # depthwise: sum_k w[c,k] * x[t - (dc-1) + k, c]
+    stacked = jnp.stack([pad[:, k:k + xbc.shape[1], :] for k in range(dc)],
+                        axis=-1)                       # [B,T,conv_dim,dc]
+    out = jnp.einsum("btck,ck->btc", stacked.astype(jnp.float32),
+                     p.conv_w.astype(jnp.float32)) + p.conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+# ------------------------------------------------------------------ oracle
+def ssd_scan_ref(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None):
+    """Exact sequential recurrence.  x [B, T, H] -> (y [B, T, H], SSMState)."""
+    b, t, _ = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    if state is None:
+        state = init_ssm_state(cfg, b)
+    z, xbc_raw, dt = _project(p, cfg, x)
+
+    # conv with carried shift-register state
+    dc = cfg.ssm_conv
+    hist = jnp.concatenate([state.conv.transpose(0, 2, 1), xbc_raw], axis=1)
+    stacked = jnp.stack([hist[:, k:k + t, :] for k in range(dc)], axis=-1)
+    xbc = jnp.einsum("btck,ck->btc", stacked.astype(jnp.float32),
+                     p.conv_w.astype(jnp.float32)) + p.conv_b.astype(jnp.float32)
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    new_conv = hist[:, t:, :].transpose(0, 2, 1) if dc > 1 else state.conv
+
+    xs, bb, cc = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, t, nh, hd).astype(jnp.float32)
+    bb = bb.reshape(b, t, cfg.ssm_ngroups, ds).astype(jnp.float32)
+    cc = cc.reshape(b, t, cfg.ssm_ngroups, ds).astype(jnp.float32)
+    heads_per_group = nh // cfg.ssm_ngroups
+    bb = jnp.repeat(bb, heads_per_group, axis=2)       # [B,T,nh,ds]
+    cc = jnp.repeat(cc, heads_per_group, axis=2)
+    dtv = _dt_act(dt, p.dt_bias)                       # [B,T,nh]
+    a = -jnp.exp(p.A_log)                              # [nh]
+    da = jnp.exp(dtv * a)                              # [B,T,nh]
+
+    def step(h, inp):
+        da_t, dt_t, x_t, b_t, c_t = inp
+        h = da_t[:, :, None, None] * h + (dt_t[:, :, None] * x_t)[..., None] \
+            * b_t[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    xs_t = xs.transpose(1, 0, 2, 3)
+    bb_t = bb.transpose(1, 0, 2, 3)
+    cc_t = cc.transpose(1, 0, 2, 3)
+    da_t = da.transpose(1, 0, 2)
+    dt_t = dtv.transpose(1, 0, 2)
+    h_fin, ys = jax.lax.scan(step, state.ssm, (da_t, dt_t, xs_t, bb_t, cc_t))
+    ys = ys.transpose(1, 0, 2, 3) + p.D[None, None, :, None] * xs  # [B,T,nh,hd]
+    y = _gate_out(p, ys.reshape(b, t, cfg.d_inner).astype(x.dtype), z)
+    return y, SSMState(new_conv, h_fin)
+
+
+# ------------------------------------------------------------------ chunked
+def ssd_chunked(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None,
+                chunk: int = 64, unroll: bool = False):
+    """SSD block-matrix algorithm (Mamba2 paper §6); matmul-dominated.
+
+    Within each chunk of Lc tokens:  Y_intra = (L ∘ (C Bᵀ)) · (dt·X)  with
+    L[i,j] = exp(cum[i] - cum[j]) for i >= j; chunk states are carried by a
+    scan over T/Lc chunks for the inter-chunk contribution.
+    """
+    b, t, _ = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    if state is None:
+        state = init_ssm_state(cfg, b)
+    lc = min(chunk, t)
+    assert t % lc == 0, (t, lc)
+    nc = t // lc
+
+    z, xbc_raw, dt = _project(p, cfg, x)
+    dc = cfg.ssm_conv
+    hist = jnp.concatenate([state.conv.transpose(0, 2, 1), xbc_raw], axis=1)
+    stacked = jnp.stack([hist[:, k:k + t, :] for k in range(dc)], axis=-1)
+    xbc = jnp.einsum("btck,ck->btc", stacked.astype(jnp.float32),
+                     p.conv_w.astype(jnp.float32)) + p.conv_b.astype(jnp.float32)
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    new_conv = hist[:, t:, :].transpose(0, 2, 1) if dc > 1 else state.conv
+
+    xs, bb, cc = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, nc, lc, nh, hd).astype(jnp.float32)
+    g = cfg.ssm_ngroups
+    bb = bb.reshape(b, nc, lc, g, ds).astype(jnp.float32)
+    cc = cc.reshape(b, nc, lc, g, ds).astype(jnp.float32)
+    hpg = nh // g
+    dtv = _dt_act(dt, p.dt_bias).reshape(b, nc, lc, nh)
+    a = -jnp.exp(p.A_log)
+    dta = dtv * a                                       # log-decay per step
+    cum = jnp.cumsum(dta, axis=2)                       # [B,nc,lc,nh]
+
+    # intra-chunk: scores[i,j] = C_i·B_j * exp(cum_i - cum_j) * dt_j  (i>=j)
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cc, bb)       # [B,nc,g,lc,lc]
+    cb = jnp.repeat(cb, hpg, axis=2)                    # [B,nc,nh,lc,lc]
+    li = cum.transpose(0, 1, 3, 2)                      # [B,nc,nh,lc]
+    decay = jnp.exp(li[..., :, None] - li[..., None, :])
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    w = jnp.where(mask, cb * decay, 0.0) * dtv.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xs)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)              # [B,nc,lc,nh]
+    bb_h = jnp.repeat(bb, hpg, axis=3)                  # [B,nc,lc,nh,ds]
+    dbx = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", seg * dtv, bb_h, xs)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # [B,nc,nh] full-chunk
+
+    def carry(h, inp):
+        dbx_c, cd_c = inp                               # [B,nh,hd,ds],[B,nh]
+        h_new = cd_c[:, :, None, None] * h + dbx_c
+        return h_new, h                                 # emit state *entering*
+
+    h_fin, h_in = jax.lax.scan(
+        carry, state.ssm,
+        (dbx.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if unroll else 1)
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                # [B,nc,nh,hd,ds]
+
+    # inter-chunk: y_i += exp(cum_i) * C_i · h_in
+    cc_h = jnp.repeat(cc, hpg, axis=3)                  # [B,nc,lc,nh,ds]
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", cc_h, h_in) \
+        * jnp.exp(cum)[..., None]
+
+    ys = (y_intra + y_inter).reshape(b, t, nh, hd) \
+        + p.D[None, None, :, None] * xs.reshape(b, t, nh, hd)
+    y = _gate_out(p, ys.reshape(b, t, cfg.d_inner).astype(x.dtype), z)
+    return y, SSMState(new_conv, h_fin)
+
+
+# ------------------------------------------------------------------ decode
+def ssm_decode_step(p: SSMParams, cfg: ArchConfig, x, state: SSMState):
+    """Single-token decode.  x [B, H] -> (y [B, H], new state)."""
+    b = x.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xbc_raw, dt = _project(p, cfg, x)                # [B, ...]
+
+    hist = jnp.concatenate([state.conv, xbc_raw[:, :, None]], axis=-1)
+    xbc = jnp.einsum("bck,ck->bc", hist.astype(jnp.float32),
+                     p.conv_w.astype(jnp.float32)) + p.conv_b.astype(jnp.float32)
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    new_conv = hist[:, :, 1:]
+
+    xs, bb, cc = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, nh, hd).astype(jnp.float32)
+    g = cfg.ssm_ngroups
+    hpg = nh // g
+    bb = jnp.repeat(bb.reshape(b, g, ds), hpg, axis=1).astype(jnp.float32)
+    cc = jnp.repeat(cc.reshape(b, g, ds), hpg, axis=1).astype(jnp.float32)
+    dtv = _dt_act(dt, p.dt_bias)                        # [B,nh]
+    da = jnp.exp(dtv * (-jnp.exp(p.A_log)))             # [B,nh]
+
+    h = da[:, :, None, None] * state.ssm \
+        + (dtv[:, :, None] * xs)[..., None] * bb[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, cc) + p.D[None, :, None] * xs
+    out = _gate_out(p, y.reshape(b, cfg.d_inner).astype(x.dtype), z)
+    return out, SSMState(new_conv, h)

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, clip_by_global_norm)
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     compressed_pod_mean)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm", "int8_compress", "int8_decompress",
+           "compressed_pod_mean"]

@@ -1,0 +1,3 @@
+from repro.runtime.watchdog import StepWatchdog, RetryPolicy, run_with_retries
+
+__all__ = ["StepWatchdog", "RetryPolicy", "run_with_retries"]

@@ -1,0 +1,108 @@
+"""Fault tolerance runtime: step watchdog + retry/restart policy.
+
+At thousand-node scale the failure modes we must survive are (a) a step
+that hangs (collective deadlock after a node drop), (b) a step that dies
+(device OOM, preemption), (c) persistent stragglers.  The mechanism here:
+
+  * ``StepWatchdog`` — wraps each step with a monotonic deadline on a
+    background timer; on trip it invokes ``on_stall`` (log + best-effort
+    checkpoint + abort).  On a real pod the abort kills the hung collective
+    so the launcher can re-form the mesh without the failed pod (the elastic
+    restore path in checkpoint/manager.py — same code the elastic test
+    exercises).
+  * ``run_with_retries`` — the launcher loop: run step; on exception or
+    watchdog trip, restore from the newest committed checkpoint and resume
+    (bounded retries, exponential backoff).  Straggler mitigation: per-step
+    wall-times feed an EWMA; a step exceeding ``straggler_factor`` x EWMA is
+    *recorded* so the scheduler can migrate that pod's shard at the next
+    checkpoint boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    def __init__(self, timeout_s: float, on_stall: Callable[[], None] | None = None):
+        self.timeout_s = timeout_s
+        self.on_stall = on_stall
+        self.ewma: float | None = None
+        self.straggler_steps: list[tuple[int, float]] = []
+
+    def run(self, step_idx: int, fn: Callable[[], Any],
+            straggler_factor: float = 3.0) -> Any:
+        tripped = threading.Event()
+
+        def _trip():
+            tripped.set()
+            if self.on_stall:
+                self.on_stall()
+
+        timer = threading.Timer(self.timeout_s, _trip)
+        timer.daemon = True
+        timer.start()
+        t0 = time.monotonic()
+        try:
+            out = fn()
+        finally:
+            timer.cancel()
+        dt = time.monotonic() - t0
+        if tripped.is_set():
+            raise StepTimeout(f"step {step_idx} exceeded {self.timeout_s}s")
+        prev = self.ewma
+        self.ewma = dt if prev is None else 0.9 * prev + 0.1 * dt
+        if prev is not None and dt > straggler_factor * prev:
+            self.straggler_steps.append((step_idx, dt))
+        return out
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+
+
+def run_with_retries(step_fn: Callable[[int, Any], Any], state: Any,
+                     *, start_step: int, num_steps: int,
+                     save_fn: Callable[[int, Any], None] | None = None,
+                     restore_fn: Callable[[], tuple[int, Any]] | None = None,
+                     save_every: int = 50,
+                     watchdog: StepWatchdog | None = None,
+                     policy: RetryPolicy = RetryPolicy(),
+                     log: Callable[[str], None] = print) -> tuple[int, Any]:
+    """The launcher loop: deterministic data (pure fn of step) + committed
+    checkpoints make crash-restart exact."""
+    step = start_step
+    retries = 0
+    backoff = policy.backoff_s
+    while step < start_step + num_steps:
+        try:
+            if watchdog is not None:
+                state = watchdog.run(step, lambda: step_fn(step, state))
+            else:
+                state = step_fn(step, state)
+            step += 1
+            retries = 0
+            backoff = policy.backoff_s
+            if save_fn and step % save_every == 0:
+                save_fn(step, state)
+        except Exception as e:                       # noqa: BLE001
+            retries += 1
+            log(f"[runtime] step {step} failed ({type(e).__name__}: {e}); "
+                f"retry {retries}/{policy.max_retries}")
+            if retries > policy.max_retries:
+                raise
+            time.sleep(backoff)
+            backoff *= policy.backoff_mult
+            if restore_fn is not None:
+                step, state = restore_fn()
+                log(f"[runtime] restored from checkpoint at step {step}")
+    return step, state

@@ -1,0 +1,3 @@
+from repro.serving.engine import DecodeEngine, Request
+
+__all__ = ["DecodeEngine", "Request"]

@@ -1,0 +1,131 @@
+"""Batched decode engine: continuous batching over the Helix serve_step.
+
+Slot-based continuous batching: a fixed [max_batch] decode state holds one
+request per slot with *per-request* lengths ([B] total_len — the helix
+attention mask, rope positions and round-robin appends are all per-request).
+New requests prefill into a free slot; finished ones free theirs.  This is
+the real serving pattern (vLLM-style) on top of the paper's sharding.
+
+For multi-request prefill we process each prompt through the shared
+prefill_step and scatter its caches into the slot.  Per-slot scatter of a
+round-robin cache is a pure index update — the layouts match by
+construction (same kvp, rr_block).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.kvcache import cache_capacity, init_decode_state
+from repro.core.sharding import HelixConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
+                 prefill_step: Callable, *, max_batch: int, max_seq: int,
+                 kvp: int = 1, rr_block: int = 16, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.serve_step = jax.jit(serve_step)
+        self.prefill_step = jax.jit(prefill_step)
+        self.max_batch = max_batch
+        self.cap = cache_capacity(max_seq, kvp, rr_block)
+        self.kvp, self.rr = kvp, rr_block
+        self.state = init_decode_state(cfg, max_batch, self.cap, kvp,
+                                       rr_block, dtype=dtype)
+        # per-request lengths: [B]; empty slots keep 0
+        self.state["total_len"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.cur_tokens = jnp.zeros((max_batch,), jnp.int32)
+
+    # ------------------------------------------------------------- requests
+    def add_request(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False if engine is full."""
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return False
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
+        t = len(req.prompt)
+        for key in ("kcache", "vcache"):
+            if key in self.state:
+                # prefill cache capacity may differ; copy the common prefix
+                # of every rank's local slots (layouts match: same kvp/rr)
+                src = pstate[key][:, 0]
+                dst = self.state[key][:, slot]
+                self.state[key] = self.state[key].at[:, slot].set(
+                    _copy_rr(src, dst, self.kvp))
+        for key in ("ssm_conv", "ssm_state", "xk", "xv"):
+            if key in self.state:
+                self.state[key] = self.state[key].at[:, slot].set(
+                    pstate[key][:, 0])
+        self.state["total_len"] = self.state["total_len"].at[slot].set(t)
+        nxt = int(jnp.argmax(last_logits[0, :self.cfg.vocab]))
+        req.out_tokens.append(nxt)
+        self.cur_tokens = self.cur_tokens.at[slot].set(nxt)
+        self.slots[slot] = req
+        return True
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One decode step for every active slot; returns finished requests."""
+        if not any(self.slots):
+            return []
+        next_tokens, self.state = self.serve_step(
+            self.params, self.state, self.cur_tokens)
+        self.cur_tokens = next_tokens
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_tokens[i])
+            req.out_tokens.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens or \
+                    int(self.state["total_len"][i]) + 1 >= self.cap:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+                self.state["total_len"] = \
+                    self.state["total_len"].at[i].set(0)
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not any(self.slots):
+                return
+            self.step()
+
+
+def _copy_rr(src, dst, kvp: int):
+    """Copy a round-robin cache [L?, Kh, S_src, hsz] into capacity S_dst.
+
+    Both layouts are (rank-major, local-slot) with the same kvp/rr, so rank
+    r's local slots [0, S_src/kvp) map to dst-local slots [0, S_src/kvp).
+    """
+    s_src = src.shape[-2]
+    s_dst = dst.shape[-2]
+    if s_src == s_dst:
+        return src
+    ls, ld = s_src // kvp, s_dst // kvp
+    n = min(ls, ld)
+    srcr = src.reshape(*src.shape[:-2], kvp, ls, src.shape[-1])
+    dstr = dst.reshape(*dst.shape[:-2], kvp, ld, dst.shape[-1])
+    out = dstr.at[..., :, :n, :].set(srcr[..., :, :n, :])
+    return out.reshape(dst.shape)

@@ -1,0 +1,51 @@
+"""Small shared utilities: padding, rounding, dtype helpers."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf inside kernels (avoids NaN in exp/max)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def pad_dim(x, dim: int, multiple: int, value=0.0):
+    """Pad dimension `dim` of x up to a multiple of `multiple`."""
+    size = x.shape[dim]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[dim] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def unpad_dim(x, dim: int, size: int):
+    if x.shape[dim] == size:
+        return x
+    idx = [slice(None)] * x.ndim
+    idx[dim] = slice(0, size)
+    return x[tuple(idx)]
+
+
+def bytes_of(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"

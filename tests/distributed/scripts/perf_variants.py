@@ -1,0 +1,70 @@
+"""§Perf variant correctness: qkv_shard is EXACT; int8 KV cache is within
+quantization tolerance of the bf16-cache decode."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.kvcache import init_decode_state
+from repro.core.sharding import default_helix_config
+from repro.models.model_zoo import build_serve_step, make_prefill_step
+from repro.models.transformer import init_params
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get_config("granite-3-2b").reduced()
+hx0 = default_helix_config(cfg, mesh)
+params = init_params(cfg, jax.random.PRNGKey(0))
+B, T = 4, 24
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T + 4), 0, cfg.vocab)
+
+prefill = make_prefill_step(cfg, mesh, hx0, s_cap=128)
+with jax.set_mesh(mesh):
+    _, state0 = jax.jit(prefill)(params, {"tokens": tokens[:, :T]})
+
+
+def run_decode(hx, state, n=4):
+    serve = build_serve_step(cfg, mesh, hx, hopb_chunks=2, return_logits=True)
+    logits_all = []
+    with jax.set_mesh(mesh):
+        for i in range(n):
+            (nt, lg), state = jax.jit(serve)(params, state, tokens[:, T + i])
+            logits_all.append(lg)
+    return jnp.stack(logits_all)
+
+
+base = run_decode(hx0, dict(state0))
+
+# --- qkv_shard: exact (same math, different weight layout) ---
+hx_q = dataclasses.replace(hx0, qkv_shard=True)
+got = run_decode(hx_q, dict(state0))
+err = float(jnp.max(jnp.abs(got - base)))
+assert err < 1e-4, err
+print(f"qkv_shard exact: max |delta logits| = {err:.2e}")
+
+# --- int8 KV cache: small quantization error only ---
+hx_k = dataclasses.replace(hx0, kv_cache_bits=8)
+st8 = init_decode_state(cfg, B, 128, hx0.kvp(mesh), dtype=jnp.float32)
+# quantize the prefilled cache into the int8 state
+kf = state0["kcache"].astype(jnp.float32)
+vf = state0["vcache"].astype(jnp.float32)
+ks = jnp.maximum(jnp.max(jnp.abs(kf), -1) / 127.0, 1e-30)
+vs = jnp.maximum(jnp.max(jnp.abs(vf), -1) / 127.0, 1e-30)
+st8 = {"total_len": state0["total_len"],
+       "kcache": jnp.clip(jnp.round(kf / ks[..., None]), -127, 127
+                          ).astype(jnp.int8),
+       "vcache": jnp.clip(jnp.round(vf / vs[..., None]), -127, 127
+                          ).astype(jnp.int8),
+       "kscale": ks, "vscale": vs}
+got8 = run_decode(hx_k, st8)
+# compare top-1 choices + logit band
+agree = float(jnp.mean(jnp.argmax(got8[..., :cfg.vocab], -1)
+                       == jnp.argmax(base[..., :cfg.vocab], -1)))
+err8 = float(jnp.max(jnp.abs(got8 - base)))
+print(f"kv8: top-1 agreement {agree*100:.0f}%, max |delta logits| {err8:.3f}")
+assert agree >= 0.9 and err8 < 0.5, (agree, err8)
+print("ALL OK")

@@ -1,0 +1,54 @@
+"""Multi-device tests, run in subprocesses so the 8-fake-device XLA flag
+never leaks into the single-device test session (the dry-run spec mandates
+the flag must NOT be set globally)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPTS = Path(__file__).parent / "scripts"
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+
+def _run(script: str, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, str(SCRIPTS / script)], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if p.returncode != 0:
+        raise AssertionError(
+            f"{script} failed\nstdout:\n{p.stdout}\nstderr:\n{p.stderr}")
+    return p.stdout
+
+
+def test_helix_attention_exactness():
+    out = _run("helix_exact.py")
+    assert "ALL OK" in out
+
+
+def test_e2e_prefill_decode_equivalence():
+    out = _run("e2e_decode.py")
+    assert "ALL OK" in out
+
+
+def test_sharded_train_matches_single_device():
+    out = _run("train_parity.py")
+    assert "ALL OK" in out
+
+
+def test_compressed_pod_allreduce():
+    out = _run("pod_compression.py")
+    assert "ALL OK" in out
+
+
+def test_elastic_checkpoint_reshard():
+    out = _run("elastic_restore.py")
+    assert "ALL OK" in out
+
+
+def test_perf_variants_correct():
+    out = _run("perf_variants.py")
+    assert "ALL OK" in out

@@ -1,0 +1,127 @@
+"""flash_decode kernel vs pure-jnp oracle: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_decode import (
+    flash_decode, flash_decode_ref, local_valid_len, shard_positions)
+from repro.utils import NEG_INF
+
+
+def _mk(b, qh, kh, s, hsz, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, qh, hsz), dtype)
+    k = jax.random.normal(ks[1], (b, kh, s, hsz), dtype)
+    v = jax.random.normal(ks[2], (b, kh, s, hsz), dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # b, qh, kh, s_cap, hsz, total_len, kvp, rank, window
+    (2, 8, 8, 64, 64, 64, 1, 0, 0),            # MHA, single shard
+    (2, 32, 8, 128, 64, 100, 1, 0, 0),         # GQA 4:1, partial fill
+    (1, 16, 1, 256, 128, 250, 1, 0, 0),        # MQA/MLA-like
+    (2, 8, 2, 64, 128, 200, 4, 1, 0),          # round-robin shard, rank 1
+    (2, 8, 2, 64, 128, 200, 4, 3, 0),          # round-robin shard, last rank
+    (1, 4, 4, 128, 64, 128, 2, 0, 48),         # sliding window
+    (1, 4, 4, 128, 64, 17, 2, 1, 0),           # nearly-empty shard
+    (1, 4, 4, 128, 64, 3, 2, 1, 0),            # fully-empty shard (rank 1)
+    (3, 12, 4, 96, 64, 90, 1, 0, 0),           # non-128 S (padding path)
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_decode_matches_ref(case, dtype):
+    b, qh, kh, s, hsz, total_len, kvp, rank, window = case
+    q, k, v = _mk(b, qh, kh, s, hsz, dtype)
+    out, lse = flash_decode(q, k, v, total_len, rank, kvp=kvp, window=window,
+                            block_s=128, interpret=True)
+    ref_out, ref_lse = flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
+                                        window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32),
+                               rtol=tol, atol=tol)
+    # empty shards carry lse == NEG_INF on both sides
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_shard_is_identified():
+    q, k, v = _mk(1, 4, 4, 64, 64, jnp.float32)
+    # total_len=5 with kvp=4, rr=16: ranks 1..3 hold nothing
+    out, lse = flash_decode(q, k, v, 5, 2, kvp=4, block_s=64, interpret=True)
+    assert np.all(np.asarray(lse) == NEG_INF)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_union_of_shards_is_exact_attention():
+    """Combining all KVP shards' partials == unsharded attention (helix contract)."""
+    from repro.core.combine import combine_partials
+    b, qh, kh, hsz, kvp, rr = 2, 8, 4, 64, 4, 16
+    total_len = 230
+    s_cap_local = 64
+    rng = np.random.default_rng(0)
+    # build a GLOBAL cache, then scatter into round-robin shards
+    kg = rng.standard_normal((b, kh, kvp * s_cap_local, hsz), np.float32)
+    vg = rng.standard_normal((b, kh, kvp * s_cap_local, hsz), np.float32)
+    q = jnp.asarray(rng.standard_normal((b, qh, hsz), np.float32))
+
+    outs, lses = [], []
+    for r in range(kvp):
+        pos = np.asarray(shard_positions(s_cap_local, r, kvp, rr))
+        kl = jnp.asarray(np.where(pos[None, None, :, None] < total_len,
+                                  kg[:, :, pos, :], 0.0))
+        vl = jnp.asarray(np.where(pos[None, None, :, None] < total_len,
+                                  vg[:, :, pos, :], 0.0))
+        o, l = flash_decode(q, kl, vl, total_len, r, kvp=kvp, rr_block=rr,
+                            block_s=64, interpret=True)
+        outs.append(o)
+        lses.append(l)
+
+    combined, _ = combine_partials(jnp.stack(outs), jnp.stack(lses))
+
+    # unsharded reference: single shard holding the first total_len slots
+    ref_o, _ = flash_decode_ref(q, jnp.asarray(kg[:, :, :total_len]),
+                                jnp.asarray(vg[:, :, :total_len]),
+                                total_len, 0, kvp=1)
+    np.testing.assert_allclose(np.asarray(combined), np.asarray(ref_o),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    hsz=st.sampled_from([64, 128]),
+    s_blocks=st.integers(1, 3),
+    kvp=st.sampled_from([1, 2, 4]),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_decode_property(b, kh, g, hsz, s_blocks, kvp, frac, seed):
+    s = 64 * s_blocks
+    total_len = max(1, int(frac * s * kvp))
+    rank = seed % kvp
+    q, k, v = _mk(b, kh * g, kh, s, hsz, jnp.float32, seed=seed)
+    out, lse = flash_decode(q, k, v, total_len, rank, kvp=kvp, block_s=64,
+                            interpret=True)
+    ref_out, ref_lse = flash_decode_ref(q, k, v, total_len, rank, kvp=kvp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_local_valid_len_consistent_with_positions():
+    for total in [0, 1, 15, 16, 17, 100, 256]:
+        for kvp in [1, 2, 4]:
+            for r in range(kvp):
+                pos = np.asarray(shard_positions(512, r, kvp, 16))
+                expect = int((pos < total).sum())
+                got = int(local_valid_len(total, r, kvp, 16))
+                assert got == expect, (total, kvp, r, got, expect)

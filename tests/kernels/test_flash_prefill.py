@@ -1,0 +1,61 @@
+"""flash_prefill kernel vs pure-jnp oracle: sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+
+
+def _mk(b, t, qh, kh, hsz, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, t, qh, hsz), dtype)
+    k = jax.random.normal(ks[1], (b, t, kh, hsz), dtype)
+    v = jax.random.normal(ks[2], (b, t, kh, hsz), dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # b, t, qh, kh, hsz, window, blk
+    (2, 128, 4, 4, 64, 0, 64),      # MHA
+    (2, 128, 8, 2, 64, 0, 64),      # GQA 4:1
+    (1, 256, 4, 1, 128, 0, 128),    # MQA
+    (1, 128, 4, 2, 64, 48, 64),     # sliding window
+    (2, 96, 4, 2, 64, 0, 64),       # non-block-multiple T (padding)
+    (1, 64, 2, 2, 32, 16, 32),      # small everything + window
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_prefill_matches_ref(case, dtype):
+    b, t, qh, kh, hsz, window, blk = case
+    q, k, v = _mk(b, t, qh, kh, hsz, dtype)
+    out = flash_prefill(q, k, v, window=window, blk_q=blk, blk_k=blk,
+                        interpret=True)
+    ref = flash_prefill_ref(q, k, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    nblk=st.integers(1, 3),
+    kh=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    hsz=st.sampled_from([32, 64]),
+    window=st.sampled_from([0, 24]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_flash_prefill_property(b, nblk, kh, g, hsz, window, seed):
+    t = 32 * nblk
+    q, k, v = _mk(b, t, kh * g, kh, hsz, jnp.float32, seed)
+    out = flash_prefill(q, k, v, window=window, blk_q=32, blk_k=32,
+                        interpret=True)
+    ref = flash_prefill_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,70 @@
+"""ssd_prefill kernel vs sequential-recurrence oracle + chunk-size invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd_prefill import ssd_prefill, ssd_prefill_ref
+
+
+def _mk(b, t, nh, hd, ds, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, t, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, nh)) - 1.0)
+    a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, t, nh, ds), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[4], (b, t, nh, ds), jnp.float32) * 0.5
+    d = jnp.ones((nh,), jnp.float32)
+    return x, dt, a, bm, cm, d
+
+
+SWEEP = [
+    # b, t, nh, hd, ds, lc
+    (2, 64, 2, 32, 16, 16),
+    (1, 128, 4, 64, 32, 32),
+    (2, 48, 2, 32, 16, 16),     # t not multiple of lc (padding path)
+    (1, 256, 1, 64, 64, 64),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_ssd_prefill_matches_ref(case):
+    b, t, nh, hd, ds, lc = case
+    x, dt, a, bm, cm, d = _mk(b, t, nh, hd, ds)
+    y, h = ssd_prefill(x, dt, a, bm, cm, d, lc=lc, interpret=True)
+    y_ref, h_ref = ssd_prefill_ref(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_size_invariance():
+    x, dt, a, bm, cm, d = _mk(1, 128, 2, 32, 16, seed=3)
+    y16, h16 = ssd_prefill(x, dt, a, bm, cm, d, lc=16, interpret=True)
+    y64, h64 = ssd_prefill(x, dt, a, bm, cm, d, lc=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h64),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    nc=st.integers(1, 4),
+    nh=st.sampled_from([1, 2]),
+    hd=st.sampled_from([32]),
+    ds=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_ssd_prefill_property(b, nc, nh, hd, ds, seed):
+    t = 16 * nc
+    x, dt, a, bm, cm, d = _mk(b, t, nh, hd, ds, seed)
+    y, h = ssd_prefill(x, dt, a, bm, cm, d, lc=16, interpret=True)
+    y_ref, h_ref = ssd_prefill_ref(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=3e-4, atol=3e-4)

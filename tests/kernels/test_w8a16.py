@@ -1,0 +1,58 @@
+"""w8a16_matmul kernel vs oracle + quantization error bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.w8a16_matmul import (quantize_w8, w8a16_matmul,
+                                        w8a16_matmul_ref)
+
+
+SWEEP = [
+    # m, k, n, bm, bn, bk
+    (8, 128, 128, 8, 128, 128),
+    (16, 256, 384, 8, 128, 128),
+    (5, 100, 130, 8, 128, 128),     # unpadded odd shapes
+    (128, 512, 256, 64, 128, 256),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SWEEP)
+def test_w8a16_matches_ref(case, dtype):
+    m, k, n, bm, bn, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32)
+    qw, scale = quantize_w8(w)
+    out = w8a16_matmul(x, qw, scale, bm=bm, bn=bn, bk=bk, interpret=True)
+    ref = w8a16_matmul_ref(x, qw, scale)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+def test_quantization_error_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    qw, scale = quantize_w8(w)
+    deq = qw.astype(jnp.float32) * scale[None, :]
+    # symmetric per-channel int8: |err| <= scale/2 elementwise
+    err = np.abs(np.asarray(w - deq))
+    bound = np.asarray(scale)[None, :] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 16), k=st.sampled_from([64, 128, 200]),
+       n=st.sampled_from([64, 130]), seed=st.integers(0, 2 ** 16))
+def test_w8a16_property(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32)
+    qw, scale = quantize_w8(w)
+    out = w8a16_matmul(x, qw, scale, interpret=True)
+    ref = w8a16_matmul_ref(x, qw, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,84 @@
+"""Head-layout padding: sharded-friendly padded attention == canonical."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (apply_kv_layout, apply_o_layout,
+                                    apply_q_layout, chunked_attention,
+                                    head_layout, ref_attention)
+
+
+CASES = [
+    # (Qh, Kh, width)
+    (25, 5, 16),    # hymba: dummy kv heads + pad q slots
+    (56, 8, 16),    # arctic
+    (32, 8, 16),    # granite
+    (48, 4, 16),    # starcoder2
+    (16, 8, 16),    # gemma3 / granite-moe
+    (8, 8, 16),     # whisper MHA < width
+    (32, 32, 16),   # phi3v
+    (4, 2, 1),      # identity
+]
+
+
+@pytest.mark.parametrize("qh,kh,w", CASES)
+def test_layout_invariants(qh, kh, w):
+    lay = head_layout(qh, kh, w)
+    assert lay.q_pad % w == 0 or w == 1
+    assert lay.q_pad % lay.kv_pad == 0
+    gp = lay.q_pad // lay.kv_pad
+    # each rank's contiguous q heads never straddle a kv group
+    hpr = max(lay.q_pad // w, 1)
+    assert gp % hpr == 0 or hpr % gp == 0
+    # every real q head appears exactly once
+    real = [s for s in lay.q_src if s < qh]
+    assert sorted(real) == list(range(qh))
+    # mapping preserves kv grouping
+    g0 = qh // kh
+    for j in range(lay.kv_pad):
+        for t in range(gp):
+            s = lay.q_src[j * gp + t]
+            if s < qh:
+                assert s // g0 == lay.kv_src[j]
+
+
+@pytest.mark.parametrize("qh,kh,w", [(25, 5, 16), (56, 8, 16), (8, 8, 16)])
+def test_padded_attention_is_exact(qh, kh, w):
+    hsz, b, t = 16, 2, 24
+    lay = head_layout(qh, kh, w)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    h_dim = 32
+    wq = jax.random.normal(ks[0], (h_dim, qh * hsz)) * 0.1
+    wk = jax.random.normal(ks[1], (h_dim, kh * hsz)) * 0.1
+    wv = jax.random.normal(ks[2], (h_dim, kh * hsz)) * 0.1
+    wo = jax.random.normal(ks[3], (qh * hsz, h_dim)) * 0.1
+    x = jax.random.normal(ks[4], (b, t, h_dim))
+
+    # canonical
+    q = (x @ wq).reshape(b, t, qh, hsz)
+    k = (x @ wk).reshape(b, t, kh, hsz)
+    v = (x @ wv).reshape(b, t, kh, hsz)
+    want = ref_attention(q, k, v).reshape(b, t, qh * hsz) @ wo
+
+    # padded/permuted
+    qp = (x @ apply_q_layout(wq, lay, hsz)).reshape(b, t, lay.q_pad, hsz)
+    kp = (x @ apply_kv_layout(wk, lay, hsz)).reshape(b, t, lay.kv_pad, hsz)
+    vp = (x @ apply_kv_layout(wv, lay, hsz)).reshape(b, t, lay.kv_pad, hsz)
+    out = chunked_attention(qp, kp, vp, chunk_q=8)
+    got = out.reshape(b, t, lay.q_pad * hsz) @ apply_o_layout(wo, lay, hsz)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_matches_ref_with_window():
+    b, t, qh, kh, hsz = 2, 40, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, t, qh, hsz))
+    k = jax.random.normal(ks[1], (b, t, kh, hsz))
+    v = jax.random.normal(ks[2], (b, t, kh, hsz))
+    for w in (0, 8, 17):
+        got = chunked_attention(q, k, v, window=w, chunk_q=16)
+        want = ref_attention(q, k, v, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

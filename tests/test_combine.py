@@ -1,0 +1,106 @@
+"""Property tests for the exact LSE combine (the Helix correctness core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.combine import (combine_fragments, combine_partials,
+                                combine_two, fragment_head_index)
+from repro.utils import NEG_INF
+
+
+def _softmax_attn(scores, v):
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def _shard(scores, v, lo, hi):
+    """partial attention over key-slice [lo, hi) + lse."""
+    s = scores[..., lo:hi]
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    out = (p @ v[lo:hi]) / l[..., None]
+    return out, m + jnp.log(l)
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=st.integers(1, 6), s=st.integers(2, 64), hsz=st.sampled_from([4, 8]),
+       r=st.integers(2, 4), seed=st.integers(0, 2 ** 16))
+def test_combine_equals_unsharded_softmax(q, s, hsz, r, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.standard_normal((q, s)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((s, hsz)), jnp.float32)
+    cuts = sorted(rng.choice(np.arange(1, s), size=min(r - 1, s - 1),
+                             replace=False).tolist())
+    bounds = [0] + cuts + [s]
+    outs, lses = zip(*[_shard(scores, v, lo, hi)
+                       for lo, hi in zip(bounds[:-1], bounds[1:])])
+    got, _ = combine_partials(jnp.stack(outs), jnp.stack(lses))
+    want = _softmax_attn(scores, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_combine_permutation_invariant(seed):
+    rng = np.random.default_rng(seed)
+    outs = jnp.asarray(rng.standard_normal((4, 3, 8)), jnp.float32)
+    lses = jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)
+    a, _ = combine_partials(outs, lses)
+    perm = rng.permutation(4)
+    b, _ = combine_partials(outs[perm], lses[perm])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_combine_two_associative(seed):
+    rng = np.random.default_rng(seed)
+    o = [jnp.asarray(rng.standard_normal((2, 4)), jnp.float32)
+         for _ in range(3)]
+    l = [jnp.asarray(rng.standard_normal((2,)), jnp.float32)
+         for _ in range(3)]
+    ab, lab = combine_two(o[0], l[0], o[1], l[1])
+    left, _ = combine_two(ab, lab, o[2], l[2])
+    bc, lbc = combine_two(o[1], l[1], o[2], l[2])
+    right, _ = combine_two(o[0], l[0], bc, lbc)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_shards_are_ignored():
+    outs = jnp.stack([jnp.ones((2, 4)), jnp.full((2, 4), 7.0)])
+    lses = jnp.stack([jnp.zeros((2,)), jnp.full((2,), NEG_INF)])
+    got, lse = combine_partials(outs, lses)
+    np.testing.assert_allclose(np.asarray(got), np.ones((2, 4)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.zeros((2,)), atol=1e-6)
+
+
+def test_all_empty_is_zero_neginf():
+    outs = jnp.zeros((3, 2, 4))
+    lses = jnp.full((3, 2), NEG_INF)
+    got, lse = combine_partials(outs, lses)
+    assert np.all(np.asarray(got) == 0)
+    assert np.all(np.asarray(lse) == NEG_INF)
+
+
+def test_fragment_combine_matches_full_combine():
+    """Slicing the flattened head dim (incl. head-straddling cuts) is exact."""
+    rng = np.random.default_rng(0)
+    r, b, qh, hsz, nsl = 3, 2, 4, 8, 8        # slice = 4 elements < hsz
+    outs = jnp.asarray(rng.standard_normal((r, b, qh, hsz)), jnp.float32)
+    lses = jnp.asarray(rng.standard_normal((r, b, qh)), jnp.float32)
+    full, _ = combine_partials(outs, lses)
+    flat = outs.reshape(r, b, qh * hsz)
+    table = fragment_head_index(qh, hsz, nsl)
+    sl = qh * hsz // nsl
+    for i in range(nsl):
+        frag = combine_fragments(flat[..., i * sl:(i + 1) * sl], lses,
+                                 table[i])
+        np.testing.assert_allclose(
+            np.asarray(frag),
+            np.asarray(full.reshape(b, qh * hsz)[:, i * sl:(i + 1) * sl]),
+            rtol=1e-5, atol=1e-5)

@@ -1,0 +1,110 @@
+"""Validate the GB200 simulator against the paper's own claims (§3).
+
+These are the reproduction gates: each paper headline must hold
+qualitatively in our analytical model (exact ratios differ — the paper's
+in-house simulator is unpublished; see EXPERIMENTS.md for the deltas)."""
+import math
+
+import pytest
+
+from benchmarks.helix_sim import (BASELINES, DEEPSEEK_R1, GB200, LLAMA_405B,
+                                  ShardCfg, batch_gain_at_fixed_ttl,
+                                  decode_ttl, frontier, hopb_tsu_drop,
+                                  max_interactivity_gain)
+from benchmarks import fig1_roofline
+
+S = 1_000_000
+
+
+# ------------------------------------------------ fig 1 (appendix A)
+def test_fig1_kv_read_plateaus_beyond_k():
+    rows = fig1_roofline.panel_left()
+    at_k = [r["kv_read_us"] for r in rows if r["tp"] >= 8]
+    assert max(at_k) == pytest.approx(min(at_k))
+    below = [r["kv_read_us"] for r in rows if r["tp"] < 8]
+    assert below[0] > at_k[0] * 7.9
+
+
+def test_fig1_kv_read_scales_inverse_kvp():
+    rows = fig1_roofline.panel_right()
+    r1 = next(r for r in rows if r["kvp"] == 1)
+    r64 = next(r for r in rows if r["kvp"] == 64)
+    assert r64["kv_read_us"] == pytest.approx(r1["kv_read_us"] / 64)
+
+
+def test_fig1_attention_dominates_at_long_s():
+    rows = fig1_roofline.panel_middle()
+    longest = rows[-1]
+    assert longest["kv_read_us"] > longest["weight_read_us"]
+
+
+# ------------------------------------------------ helix mechanics
+def test_helix_caps_tpa_at_k():
+    cfg = ShardCfg("helix", tp=16, kvp=4)      # TPA 16 > K=8
+    ttl, _ = decode_ttl(LLAMA_405B, GB200, cfg, 8, S)
+    assert math.isinf(ttl)
+
+
+def test_tp_beyond_k_gains_nothing_on_attention():
+    t8, _ = decode_ttl(LLAMA_405B, GB200, ShardCfg("tp", tp=8), 1, S)
+    t64, _ = decode_ttl(LLAMA_405B, GB200, ShardCfg("tp", tp=64), 1, S)
+    # TTL still improves (FFN weight reads shrink) but attention term does
+    # not: going 8 -> 64 must be far below the 8x ideal
+    assert t8 / t64 < 3.0
+
+
+def test_helix_beats_medha_on_llama():
+    hx = frontier(LLAMA_405B, GB200, S, ("helix",))
+    md = frontier(LLAMA_405B, GB200, S, ("kvp_medha",))
+    # untying FFN width from TP<=K is worth >1.5x interactivity; medha's
+    # frontier also never exceeds helix's throughput
+    assert max(x for x, _, _ in hx) > 1.5 * max(x for x, _, _ in md)
+    assert max(y for _, y, _ in hx) > 1.1 * max(y for _, y, _ in md)
+
+
+# ------------------------------------------------ figs 5/6 headline bands
+def test_fig6_llama_interactivity_band():
+    gain = max_interactivity_gain(LLAMA_405B, GB200, S)
+    assert 1.05 <= gain <= 2.0, gain        # paper: 1.13x
+
+
+def test_fig6_llama_throughput_band():
+    gain = batch_gain_at_fixed_ttl(LLAMA_405B, GB200, S)
+    assert 3.0 <= gain <= 10.0, gain        # paper: 4x
+
+
+def test_fig5_dsr1_interactivity_band():
+    gain = max_interactivity_gain(DEEPSEEK_R1, GB200, S)
+    assert 1.3 <= gain <= 2.5, gain         # paper: up to 1.5x
+
+
+def test_fig5_dsr1_batch_band():
+    gain = batch_gain_at_fixed_ttl(DEEPSEEK_R1, GB200, S)
+    assert 8.0 <= gain <= 64.0, gain        # paper: up to 32x
+
+
+# ------------------------------------------------ fig 7 HOP-B ablation
+def test_fig7_hopb_llama():
+    mx, _ = hopb_tsu_drop(LLAMA_405B, GB200, S)
+    assert 0.05 <= mx <= 0.25, mx           # paper: up to ~12%
+
+
+def test_fig7_hopb_dsr1_small_at_throughput_end():
+    mx, end = hopb_tsu_drop(DEEPSEEK_R1, GB200, S)
+    assert end <= 0.05, end                 # paper: ~1%
+    assert end < mx
+
+
+# ------------------------------------------------ frontier sanity
+def test_pareto_is_monotone():
+    front = frontier(LLAMA_405B, GB200, S, BASELINES)
+    xs = [x for x, _, _ in front]
+    ys = [y for _, y, _ in front]
+    assert xs == sorted(xs, reverse=True)
+    assert ys == sorted(ys)
+
+
+def test_memory_feasibility_enforced():
+    # 1M-token KV for batch 1024 on one GPU cannot fit
+    ttl, mem = decode_ttl(LLAMA_405B, GB200, ShardCfg("tp", tp=1), 1024, S)
+    assert math.isinf(ttl) and mem > GB200.hbm_bytes

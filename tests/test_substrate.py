@@ -1,0 +1,167 @@
+"""Substrate tests: data determinism, checkpointing, optimizer, compression,
+watchdog/retry loop."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenPipeline
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule,
+                         int8_compress, int8_decompress)
+from repro.optim.compression import init_error_feedback
+from repro.runtime import RetryPolicy, StepWatchdog, run_with_retries
+from repro.runtime.watchdog import StepTimeout
+
+
+# ------------------------------------------------------------------- data
+def test_pipeline_is_pure_function_of_step():
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=8, seed=3)
+    a, b = TokenPipeline(cfg), TokenPipeline(cfg)
+    for step in (0, 1, 17, 999):
+        ba, bb = a.batch(step), b.batch(step)
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+        np.testing.assert_array_equal(ba["labels"], bb["labels"])
+    assert not np.array_equal(a.batch(0)["tokens"], a.batch(1)["tokens"])
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8)
+    p = TokenPipeline(cfg)
+    full = p.batch(5)["tokens"]
+    parts = [p.host_batch(5, h, 4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_labels_are_shifted_tokens():
+    p = TokenPipeline(DataConfig(vocab=64, seq_len=16, global_batch=2))
+    b = p.batch(0)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.latest_step() == 30
+    assert sorted(mgr._committed()) == [20, 30]   # keep-2 GC
+    got = mgr.restore(tree, step=20)
+    np.testing.assert_allclose(np.asarray(got["a"]),
+                               np.arange(6.0).reshape(2, 3) + 20)
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    # a torn tmp dir must not be visible as a checkpoint
+    (tmp_path / "step_000000099.tmp").mkdir()
+    assert mgr.latest_step() is None
+    mgr.save(5, {"x": jnp.zeros(3)})
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_restore_into_structure(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = {"w": jnp.full((3, 3), 2.0), "opt": {"m": jnp.zeros((3, 3))}}
+    mgr.save(1, tree)
+    out = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["w"]), 2.0 * np.ones((3, 3)))
+
+
+# -------------------------------------------------------------- optimizer
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=300, grad_clip=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0 and abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[3] < 1.0 and lrs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------ compression
+def test_int8_error_feedback_unbiased_over_steps():
+    """With EF, the accumulated applied signal tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256) * 1e-3, jnp.float32)
+    err = jnp.zeros_like(g_true)
+    applied = jnp.zeros_like(g_true)
+    for _ in range(50):
+        q, scale, err = int8_compress(g_true, err)
+        applied += int8_decompress(q, scale)
+    total_err = np.abs(np.asarray(applied - 50 * g_true)).max()
+    # EF bounds the *final* residual by one quantization step, not O(steps)
+    assert total_err <= float(scale) + 1e-7
+
+
+def test_int8_compress_roundtrip_band():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(64), jnp.float32)
+    q, scale, err = int8_compress(g, jnp.zeros_like(g))
+    deq = int8_decompress(q, scale)
+    assert np.abs(np.asarray(g - deq)).max() <= float(scale) * 0.5 + 1e-7
+    np.testing.assert_allclose(np.asarray(g - deq), np.asarray(err),
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------- runtime
+def test_watchdog_times_out():
+    wd = StepWatchdog(timeout_s=0.05)
+    with pytest.raises(StepTimeout):
+        wd.run(0, lambda: time.sleep(0.2))
+
+
+def test_watchdog_tracks_stragglers():
+    wd = StepWatchdog(timeout_s=10.0)
+    for i in range(5):
+        wd.run(i, lambda: time.sleep(0.01))
+    wd.run(5, lambda: time.sleep(0.2))        # 20x slower
+    assert wd.straggler_steps and wd.straggler_steps[0][0] == 5
+
+
+def test_run_with_retries_recovers_from_crash(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    crashes = {"left": 2}
+
+    def step_fn(step, state):
+        if step == 3 and crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise RuntimeError("injected fault")
+        return state + 1
+
+    def save_fn(step, state):
+        mgr.save(step, {"s": jnp.asarray(state)})
+
+    def restore_fn():
+        s = mgr.latest_step()
+        return s, int(mgr.restore({"s": jnp.asarray(0)})["s"])
+
+    final_step, state = run_with_retries(
+        step_fn, 0, start_step=0, num_steps=6, save_fn=save_fn,
+        restore_fn=restore_fn, save_every=2,
+        policy=RetryPolicy(max_retries=5, backoff_s=0.01), log=lambda s: None)
+    assert final_step == 6
+    assert state == 6          # exactly-once semantics via restart-from-ckpt
+    assert crashes["left"] == 0
