@@ -1,0 +1,12 @@
+# Tier-1 verify: `make test` == what CI runs (scripts/ci.sh).
+.PHONY: test test-fast bench-decode
+
+test:
+	bash scripts/ci.sh
+
+# skip the slow multi-device subprocess tests
+test-fast:
+	PYTHONPATH=src python -m pytest -q --ignore=tests/distributed
+
+bench-decode:
+	PYTHONPATH=src python benchmarks/bench_decode_kernel.py

@@ -1,0 +1,85 @@
+"""Decode-attention microbenchmark: ref (pure jnp) vs the Pallas
+flash-decode kernel, swept over KV length S.
+
+  PYTHONPATH=src python benchmarks/bench_decode_kernel.py \
+      [--backends ref pallas-interpret] [--s 4096 16384 65536] \
+      [--batch 4] [--iters 20]
+
+On CPU only `ref` and `pallas-interpret` are available; the interpreter's
+wall-clock is NOT kernel performance (it executes the kernel body step by
+step) — its purpose here is exercising the exact code path.  On a TPU host
+pass ``--backends ref pallas`` for real numbers: the kernel streams the KV
+shard HBM->VMEM once, which is the §2.1 DRAM-bound regime the paper's TTL
+model assumes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
+              iters: int, warmup: int = 3) -> float:
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, qh, hsz))
+    k = jax.random.normal(ks[1], (b, kh, s, hsz))
+    v = jax.random.normal(ks[2], (b, kh, s, hsz))
+    total_len = s  # fully-populated cache: worst-case read volume
+
+    fn = jax.jit(lambda q, k, v: decode_attention(
+        q, k, v, total_len, backend=backend)[0])
+    out = fn(q, k, v)
+    out.block_until_ready()
+    for _ in range(warmup - 1):
+        fn(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(q, k, v)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(backends=("ref", "pallas-interpret"), s_values=(1024, 4096),
+        b: int = 4, qh: int = 32, kh: int = 8, hsz: int = 128,
+        iters: int = 10):
+    dev = jax.devices()[0].platform
+    print(f"[bench_decode_kernel] device={dev} B={b} Qh={qh} Kh={kh} "
+          f"hsz={hsz} iters={iters}")
+    kv_bytes = lambda s: 2 * b * kh * s * hsz * 4   # f32 K+V read volume
+    header = f"{'S':>8s} " + "".join(f"{be:>20s}" for be in backends) \
+        + f"{'KV bytes':>12s}"
+    print(header)
+    rows = []
+    for s in s_values:
+        times = [bench_one(be, b=b, qh=qh, kh=kh, s=s, hsz=hsz, iters=iters)
+                 for be in backends]
+        row = f"{s:>8d} " + "".join(f"{t * 1e3:>17.2f} ms" for t in times) \
+            + f"{kv_bytes(s) / 2**20:>10.1f} Mi"
+        print(row)
+        rows.append((s, dict(zip(backends, times))))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", nargs="+",
+                    default=["ref", "pallas-interpret"],
+                    choices=["ref", "pallas-interpret", "pallas"])
+    ap.add_argument("--s", nargs="+", type=int, default=[1024, 4096])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--qh", type=int, default=32)
+    ap.add_argument("--kh", type=int, default=8)
+    ap.add_argument("--hsz", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+    run(backends=tuple(args.backends), s_values=tuple(args.s), b=args.batch,
+        qh=args.qh, kh=args.kh, hsz=args.hsz, iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

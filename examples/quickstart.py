@@ -13,6 +13,7 @@ from repro.configs import get_config
 from repro.core.sharding import HelixConfig, default_helix_config
 from repro.models.model_zoo import (build_serve_step, make_prefill_step)
 from repro.models.transformer import init_params
+from repro.utils import make_mesh, set_mesh
 
 
 def main():
@@ -24,8 +25,7 @@ def main():
     # 2) build a mesh + helix config.  On a pod this is
     #    make_production_mesh(); here: whatever devices exist.
     n = jax.device_count()
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n, 1), ("data", "model"))
     hx = default_helix_config(cfg, mesh)   # KVP over all axes (TPA<=K rule)
     print(f"mesh={dict(mesh.shape)} helix: kvp_axes={hx.kvp_axes} "
           f"tpa={hx.tpa_axis} kvp={hx.kvp(mesh)}")
@@ -37,7 +37,7 @@ def main():
 
     # 4) prefill a prompt -> round-robin sharded KV cache (§2.3)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         last_logits, state = prefill(params, {"tokens": prompt})
         next_tok = jnp.argmax(last_logits[:, :cfg.vocab], -1).astype(jnp.int32)
         print("prefilled 24 tokens; cache:",

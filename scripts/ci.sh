@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: install dev deps when the environment allows, then
+# run the full suite.  A missing dev dep (e.g. hypothesis in an air-gapped
+# container) must degrade to skipped property tests, never to collection
+# errors — scripts/ci.sh exists so that regression can't land silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if python -m pip install -q -r requirements-dev.txt 2>/dev/null; then
+    echo "[ci] dev deps installed"
+else
+    echo "[ci] WARNING: pip install failed (offline?); property tests will skip"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -q "$@"

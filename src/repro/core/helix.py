@@ -28,8 +28,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.combine import combine_fragments
 from repro.core.sharding import HelixConfig
+from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import flash_decode_ref, local_valid_len
-from repro.utils import round_up
+from repro.utils import round_up, shard_map
 
 
 def helix_out_dim(q_dim: int, n_devices: int) -> int:
@@ -45,42 +46,74 @@ def rr_slot_of_position(pos, kvp: int, s_loc: int, rr_block: int):
     return rank * s_loc + local
 
 
+def _window_slice(total_len, rank, s_loc, *, kvp, rr_block, window):
+    """§Perf (beyond-paper): sliding-window layers only need the last
+    ``window`` positions.  Positions are strictly increasing in the local
+    slot index, so the live span is the W_loc slots ending at this rank's
+    valid length — slice it out and read O(window/KVP) bytes instead of
+    O(S/KVP).  Returns (j_lo, w_loc) or None when the slice doesn't apply
+    (static window and scalar total_len required)."""
+    if not (isinstance(window, int) and window > 0
+            and jnp.ndim(total_len) == 0):
+        return None
+    w_loc = min((window // (kvp * rr_block) + 2) * rr_block, s_loc)
+    if w_loc >= s_loc:
+        return None
+    j_hi = local_valid_len(total_len, rank, kvp, rr_block)
+    j_lo = jnp.clip(j_hi - w_loc, 0, s_loc - w_loc)
+    return j_lo, w_loc
+
+
 def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
-                  contiguous: bool, kscale=None, vscale=None):
+                  contiguous: bool, kscale=None, vscale=None,
+                  backend: str = "ref"):
     """Per-rank partial attention + LSE over the local KV shard.
 
     contiguous=True: static split (whisper cross-attn KV) — every local slot
     s maps to global position rank*S_loc + s; otherwise round-robin (§2.3).
     kscale/vscale [B, Kh, S_loc]: int8-cache dequant scales (§Perf knob).
+    backend: "ref" (pure jnp), "pallas-interpret" or "pallas" — the Pallas
+    flash-decode kernel (kernels/flash_decode) in interpreted / compiled
+    mode.  The kernel covers every mode natively (per-request [B] lengths,
+    contiguous layout, sliding window, int8 dequant from scales), so all
+    backends are drop-in exact up to fp summation order.
     """
-    if kscale is not None:
-        k = k.astype(jnp.float32) * kscale[..., None]
-        v = v.astype(jnp.float32) * vscale[..., None]
-    if contiguous:
-        s_loc = k.shape[2]
-        # positions rank*s_loc + j; valid iff < total_len; reuse ref via
-        # shifted length: local_valid = clip(total_len - rank*s_loc, 0, s_loc)
-        local_len = jnp.clip(total_len - rank * s_loc, 0, s_loc)
-        return flash_decode_ref(q, k, v, local_len, 0, kvp=1,
-                                rr_block=rr_block, window=0)
     s_loc = k.shape[2]
-    if isinstance(window, int) and window > 0:
-        # §Perf (beyond-paper): sliding-window layers only need the last
-        # `window` positions.  Positions are strictly increasing in the local
-        # slot index, so the live span is the W_loc slots ending at this
-        # rank's valid length — slice them out and read O(window/KVP) bytes
-        # instead of O(S/KVP).  Requires uniform (scalar) total_len.
-        w_loc = min((window // (kvp * rr_block) + 2) * rr_block, s_loc)
-        if w_loc < s_loc and jnp.ndim(total_len) == 0:
-            j_hi = local_valid_len(total_len, rank, kvp, rr_block)
-            j_lo = jnp.clip(j_hi - w_loc, 0, s_loc - w_loc)
+    # Sliding-window cache-slice fast path, shared by every backend: slice
+    # the live span out of the shard and re-align positions via slot_offset.
+    slot_offset = 0
+    if not contiguous:
+        sl = _window_slice(total_len, rank, s_loc, kvp=kvp,
+                           rr_block=rr_block, window=window)
+        if sl is not None:
+            j_lo, w_loc = sl
             k = jax.lax.dynamic_slice_in_dim(k, j_lo, w_loc, axis=2)
             v = jax.lax.dynamic_slice_in_dim(v, j_lo, w_loc, axis=2)
-            return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
-                                    rr_block=rr_block, window=window,
-                                    slot_offset=j_lo)
+            if kscale is not None:
+                kscale = jax.lax.dynamic_slice_in_dim(
+                    kscale, j_lo, w_loc, axis=2)
+                vscale = jax.lax.dynamic_slice_in_dim(
+                    vscale, j_lo, w_loc, axis=2)
+            slot_offset = j_lo
+    if backend != "ref":
+        return flash_decode(q, k, v, total_len, rank, kvp=kvp,
+                            rr_block=rr_block, window=window,
+                            contiguous=contiguous, slot_offset=slot_offset,
+                            kscale=kscale, vscale=vscale,
+                            interpret=backend != "pallas")
+    # ---- pure-JAX reference path ----
+    if contiguous:
+        # positions rank*s_loc + j: with kvp=1 the round-robin formula
+        # degenerates to pos = slot_offset + j, so the contiguous layout is
+        # the ref with a rank-sized slot offset (window stays honoured).
+        return flash_decode_ref(q, k, v, total_len, 0, kvp=1,
+                                rr_block=rr_block, window=window,
+                                slot_offset=rank * s_loc,
+                                kscale=kscale, vscale=vscale)
     return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
-                            rr_block=rr_block, window=window)
+                            rr_block=rr_block, window=window,
+                            slot_offset=slot_offset,
+                            kscale=kscale, vscale=vscale)
 
 
 def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
@@ -128,7 +161,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         out, lse = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
                                  rr_block=hx.rr_block, window=window,
                                  contiguous=contiguous,
-                                 kscale=ks_l, vscale=vs_l)
+                                 kscale=ks_l, vscale=vs_l,
+                                 backend=hx.attn_backend)
         bl = out.shape[0]
         # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
         # independent of S.
@@ -151,7 +185,7 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                 tl_spec)
     if quant:
         in_specs += (P(None, tpa, kvp_axes), P(None, tpa, kvp_axes))
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         local_fn, mesh=mesh, in_specs=in_specs,
         out_specs=P(None, ((tpa,) if tpa else ()) + kvp_axes),
         check_vma=False)

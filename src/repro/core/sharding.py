@@ -53,6 +53,9 @@ def train_roles(mesh: Mesh) -> dict[str, tuple[str, ...]]:
 
 
 # ------------------------------------------------------------------ helix
+ATTN_BACKENDS = ("ref", "pallas-interpret", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class HelixConfig:
     """How the mesh axes are consumed by the Helix decode phases.
@@ -70,6 +73,14 @@ class HelixConfig:
     #   all-gather the small activations, instead of the paper's replicated
     #   per-rank QKV compute (wins when decode is weight-read bound)
     kv_cache_bits: int = 16              # 8 => int8 KV cache + f32 scales
+    attn_backend: str = "ref"            # decode-attention backend inside the
+    #   helix shard_map: "ref" (pure jnp oracle), "pallas-interpret" (the
+    #   flash-decode kernel via the Pallas interpreter — CPU-testable), or
+    #   "pallas" (compiled TPU kernel).  All three are exact up to fp
+    #   summation order; see kernels/flash_decode.
+
+    def __post_init__(self):
+        assert self.attn_backend in ATTN_BACKENDS, self.attn_backend
 
     def all_axes(self) -> tuple[str, ...]:
         return self.kvp_axes + ((self.tpa_axis,) if self.tpa_axis else ())

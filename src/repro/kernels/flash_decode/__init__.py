@@ -1,3 +1,46 @@
+"""Flash-decode: the Helix attention-phase kernel (paper §2.1 hotspot).
+
+Three interchangeable implementations of one contract:
+
+  * ``ref.flash_decode_ref``  — pure-jnp oracle (two-pass softmax)
+  * ``ops.flash_decode``      — the Pallas TPU kernel (online softmax),
+    interpreted (``interpret=True``, runs on any backend) or compiled
+
+Which one the model path uses is the ``HelixConfig.attn_backend`` knob
+(core/sharding.py): ``"ref"`` | ``"pallas-interpret"`` | ``"pallas"``,
+plumbed through models/decode_model.py::build_serve_step(attn_backend=...),
+launch/serve.py ``--attn-backend`` and serving/engine.py.  All backends are
+exact up to fp summation order; tests/kernels/test_flash_decode_parity.py
+sweeps the full mode lattice.
+
+The contract (shared by kernel and ref)
+---------------------------------------
+Inputs q [B, Qh, hsz]; k, v [B, Kh, S_cap, hsz] — one KV *shard*; outputs the
+softmax-normalized partial attention out [B, Qh, hsz] plus this shard's
+log-sum-exp [B, Qh] f32 (NEG_INF for empty shards), which the Helix combine
+(core/combine.py) needs for the exact cross-shard rescale-sum.
+
+Masking is computed in-kernel from prefetched scalars only — the kernel never
+reads a per-slot position array from HBM:
+
+  * meta [3] int32 = (rank, slot_offset, window).  Round-robin layout (§2.3):
+    slot j holds global position ((j//rr)*kvp + rank)*rr + j%rr; contiguous
+    layout (``contiguous=True``, whisper cross-attention): rank*S_cap + j.
+    ``slot_offset`` shifts j (the sliding-window cache-slice fast path);
+    ``window`` is a *runtime* scalar (<= 0 disables) so traced per-layer
+    windows work.
+  * tl [B] int32 = per-request global lengths (continuous batching); scalar
+    total_len is prefetched as a broadcast vector.  A slot is valid iff
+    pos < tl[b] (and pos >= tl[b] - window when windowed).
+  * Slots j >= the true (unpadded) capacity are masked unconditionally, so
+    S padding is exact in both layouts.
+
+int8 KV cache (§Perf kv8): pass k/v as int8 with kscale/vscale [B, Kh, S_cap]
+f32; dequant happens block-by-block in VMEM, so the f32 copy of the shard
+never materializes in HBM.
+
+Benchmark: benchmarks/bench_decode_kernel.py (ref vs kernel over S).
+"""
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import (
     flash_decode_ref, shard_positions, local_valid_len)

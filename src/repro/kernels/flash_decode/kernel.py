@@ -10,6 +10,7 @@ TPU mapping
                                       online-softmax state lives in VMEM scratch
   q block   (1, 1, Qp, hsz)  : the Qp = padded Q-per-KV-head group, resident
   k/v block (1, 1, bs, hsz)  : streamed HBM->VMEM, bs a multiple of 128 (MXU)
+  scale blk (1, 1, bs)       : int8-cache dequant scales (quant mode only)
   scratch   acc f32 (Qp,hsz), m/l f32 (Qp,1)
 
 The two matmuls per block — (Qp,hsz)@(hsz,bs) and (Qp,bs)@(bs,hsz) — keep the
@@ -18,9 +19,24 @@ internally).  VMEM footprint per step: 2*bs*hsz*2B (K,V) + Qp*hsz*4B + O(Qp),
 e.g. bs=512, hsz=128: ~288 KiB — far under the ~16 MiB/core VMEM budget, so the
 grid pipeline can double-buffer the K/V streams.
 
-Masking semantics match ref.py: round-robin positions + total_len + optional
-sliding window, all computed in-kernel from 3 prefetched scalars
-(total_len, rank, q_pos) — no per-slot position array is read from HBM.
+Masking semantics match ref.py and are computed in-kernel from prefetched
+scalars only — no per-slot position array is read from HBM:
+
+  meta [3] int32 : (rank, slot_offset, window) — slot_offset shifts the local
+                   slot index (the sliding-window cache-slice fast path);
+                   window <= 0 disables the sliding-window mask, and is a
+                   *runtime* scalar so traced per-layer windows work.
+  tl   [B] int32 : per-request global sequence lengths (continuous batching);
+                   uniform batches prefetch a broadcast scalar.
+
+Layouts: round-robin (§2.3) pos = ((j//rr)*kvp + rank)*rr + j%rr, or
+contiguous (whisper cross-attention KV split) pos = rank*S_true + j.  Slots
+j >= S_true (the unpadded local capacity) are masked unconditionally, so S
+padding is exact in both layouts.
+
+Quant mode (§Perf kv8): K/V arrive int8 with per-(B, Kh, slot) f32 scales and
+are dequantized block-by-block in VMEM — the f32 copy of the shard never
+exists in HBM.
 """
 from __future__ import annotations
 
@@ -34,13 +50,19 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.utils import NEG_INF
 
 
-def _decode_kernel(scalars, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                   acc_ref, m_ref, l_ref, *,
-                   scale: float, kvp: int, rr_block: int, window: int,
-                   block_s: int):
+def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+                   kvp: int, rr_block: int, block_s: int, s_true: int,
+                   contiguous: bool, quant: bool):
+    if quant:
+        kscale_ref, vscale_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    bi = pl.program_id(0)
     si = pl.program_id(2)
-    total_len = scalars[0]
-    rank = scalars[1]
+    rank = meta_ref[0]
+    slot_offset = meta_ref[1]
+    window = meta_ref[2]
+    total_len = tl_ref[bi]
 
     @pl.when(si == 0)
     def _init():
@@ -51,16 +73,25 @@ def _decode_kernel(scalars, q_ref, k_ref, v_ref, o_ref, lse_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [Qp, hsz]
     k = k_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
     v = v_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
+    if quant:
+        k = k * kscale_ref[0, 0][:, None]
+        v = v * vscale_ref[0, 0][:, None]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # [Qp, bs]
 
-    # Round-robin global positions of this block's slots (computed, not read).
-    j = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
-    pos = ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
-    mask = pos < total_len
-    if window > 0:
-        mask = jnp.logical_and(mask, pos >= total_len - window)
+    # Global positions of this block's slots (computed, not read).  jj is the
+    # physical (possibly padded) slot index; j the logical one after the
+    # sliding-window slice offset.
+    jj = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    j = jj + slot_offset
+    if contiguous:
+        pos = rank * s_true + j
+    else:
+        pos = ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
+    mask = jnp.logical_and(jj < s_true, pos < total_len)
+    mask = jnp.logical_and(
+        mask, jnp.where(window > 0, pos >= total_len - window, True))
 
     s = jnp.where(mask, s, NEG_INF)
 
@@ -84,33 +115,48 @@ def _decode_kernel(scalars, q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[0, 0] = lse.astype(jnp.float32)
 
 
-def flash_decode_kernel(q, k, v, scalars, *, scale: float, kvp: int,
-                        rr_block: int, window: int, block_s: int,
+def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
+                        rr_block: int, block_s: int, s_true: int,
+                        contiguous: bool = False, kscale=None, vscale=None,
                         interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
-    q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; scalars: [2] int32
-    returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32)
+    q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; meta: [3] int32
+    (rank, slot_offset, window); tl: [B] int32 per-request lengths;
+    kscale/vscale: [B, Kh, S_pad] f32 (int8-cache mode — k/v are int8).
+    s_true: unpadded local capacity (slots >= s_true are masked).
+    returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32).
     """
     b, kh, qp, hsz = q.shape
     s_pad = k.shape[2]
     assert s_pad % block_s == 0 and qp % 8 == 0
+    quant = kscale is not None
+    assert quant == (vscale is not None)
 
     grid = (b, kh, s_pad // block_s)
     kernel = functools.partial(
         _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
-        window=window, block_s=block_s)
+        block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
+    ]
+    args = (meta, tl, q, k, v)
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
+        ]
+        args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
-                pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=[
                 pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
                 pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
@@ -126,4 +172,4 @@ def flash_decode_kernel(q, k, v, scalars, *, scale: float, kvp: int,
             jax.ShapeDtypeStruct((b, kh, qp), jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, q, k, v)
+    )(*args)

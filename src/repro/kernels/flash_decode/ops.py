@@ -9,10 +9,22 @@ S to block multiple) and un-padding, so callers use natural shapes:
     k, v   [B, Kh, S_cap, hsz]     (Qh % Kh == 0)
     out    [B, Qh, hsz]            lse [B, Qh] f32
 
-Padded S slots are auto-masked: the round-robin position formula is strictly
-increasing in the slot index, so any slot >= the true capacity maps to a
-position >= total_len and is masked by the in-kernel total_len check, provided
-S_cap * kvp >= total_len (always true for a correctly sized cache).
+Covers everything core/helix.py::_local_attend needs (the kernel is the real
+Helix execution path when ``HelixConfig.attn_backend`` selects it):
+
+  * ``total_len`` — scalar or per-request [B] int32 (continuous batching);
+    prefetched as a length vector, one entry per batch row.
+  * ``contiguous`` — non-round-robin shard layout (whisper cross-attention):
+    local slot j holds global position rank*S_cap + j.
+  * ``slot_offset`` — the sliding-window cache-slice fast path: positions are
+    computed for slot j + slot_offset.
+  * ``window`` — runtime sliding-window scalar (<= 0 disables); may be a
+    traced per-layer value.
+  * ``kscale``/``vscale`` [B, Kh, S_cap] — int8 K/V cache mode: dequant
+    happens inside the kernel, block-by-block in VMEM.
+
+Padded S slots are masked in-kernel against the true capacity (prefetch-free:
+it is a static kernel parameter), so any S_cap works in both layouts.
 """
 from __future__ import annotations
 
@@ -27,10 +39,12 @@ from repro.kernels.flash_decode.kernel import flash_decode_kernel
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kvp", "rr_block", "window", "scale", "block_s", "interpret"))
+    static_argnames=("kvp", "rr_block", "scale", "block_s", "interpret",
+                     "contiguous"))
 def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
-                 window: int = 0, scale: float | None = None,
-                 block_s: int = 512, interpret: bool = True):
+                 window=0, scale: float | None = None, block_s: int = 512,
+                 interpret: bool = True, contiguous: bool = False,
+                 slot_offset=0, kscale=None, vscale=None):
     b, qh, hsz = q.shape
     kh, s_cap = k.shape[1], k.shape[2]
     assert qh % kh == 0, (qh, kh)
@@ -45,13 +59,20 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
     qg = pad_dim(qg, 2, qp)
     kp = pad_dim(k, 2, block_s)
     vp = pad_dim(v, 2, block_s)
+    if kscale is not None:
+        kscale = pad_dim(kscale.astype(jnp.float32), 2, block_s)
+        vscale = pad_dim(vscale.astype(jnp.float32), 2, block_s)
 
-    scalars = jnp.stack([jnp.asarray(total_len, jnp.int32),
-                         jnp.asarray(rank, jnp.int32)])
+    meta = jnp.stack([jnp.asarray(rank, jnp.int32),
+                      jnp.asarray(slot_offset, jnp.int32),
+                      jnp.asarray(window, jnp.int32)])
+    tl = jnp.asarray(total_len, jnp.int32).reshape(-1)     # scalar -> [1]
+    tl = jnp.broadcast_to(tl, (b,))
 
     out, lse = flash_decode_kernel(
-        qg, kp, vp, scalars, scale=scale, kvp=kvp, rr_block=rr_block,
-        window=window, block_s=block_s, interpret=interpret)
+        qg, kp, vp, meta, tl, scale=scale, kvp=kvp, rr_block=rr_block,
+        block_s=block_s, s_true=s_cap, contiguous=contiguous,
+        kscale=kscale, vscale=vscale, interpret=interpret)
 
     out = out[:, :, :g, :].reshape(b, qh, hsz)
     lse = lse[:, :, :g].reshape(b, qh)

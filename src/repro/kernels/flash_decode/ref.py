@@ -41,7 +41,7 @@ def local_valid_len(total_len, rank, kvp: int, rr_block: int):
 
 def flash_decode_ref(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
                      window: int = 0, scale: float | None = None,
-                     slot_offset=0):
+                     slot_offset=0, kscale=None, vscale=None):
     """Oracle decode attention over one KV shard.
 
     Args:
@@ -49,9 +49,14 @@ def flash_decode_ref(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 
       k, v: [B, Kh, S_cap, hsz] local KV shard (Qh % Kh == 0).
       total_len: scalar int — global sequence length including the new token.
       rank: scalar int — this shard's KVP rank.
+      kscale/vscale: [B, Kh, S_cap] int8-cache dequant scales (k/v are int8);
+        mirrors ops.flash_decode's signature.
     Returns:
       out [B, Qh, hsz] (q.dtype), lse [B, Qh] (f32).
     """
+    if kscale is not None:
+        k = k.astype(jnp.float32) * kscale[..., None]
+        v = v.astype(jnp.float32) * vscale[..., None]
     b, qh, hsz = q.shape
     kh, s_cap = k.shape[1], k.shape[2]
     assert qh % kh == 0

@@ -38,6 +38,7 @@ from repro.core.kvcache import decode_state_shapes, decode_state_specs
 from repro.core.sharding import (default_helix_config, helix_param_specs,
                                  to_shardings, train_param_specs)
 from repro.launch.mesh import make_production_mesh
+from repro.utils import set_mesh
 from repro.models.model_zoo import (build_serve_step, data_partition_specs,
                                     data_specs, make_prefill_step,
                                     make_train_step)
@@ -152,9 +153,11 @@ def _shallow(cfg, periods: int):
 
 def _cost_of(cfg, shape, mesh, **knobs):
     fn, args, shardings = build_cell(cfg, shape, mesh, unroll=True, **knobs)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older JAX: one dict per program
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bytes_ = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text())
@@ -205,7 +208,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
     t0 = time.time()
     fn, args, shardings = build_cell(cfg_full, shape, mesh, unroll=False,
                                      **knobs)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()

@@ -2,26 +2,24 @@
 
 Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS *before* first
-jax init.
+jax init.  All meshes go through ``repro.utils.make_mesh`` so the
+``axis_types`` kwarg is only passed on JAX versions that support it.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 across two pods (DCN axis)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for multi-device CPU tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def device_count_required(multi_pod: bool = False) -> int:

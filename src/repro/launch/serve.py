@@ -17,11 +17,12 @@ from repro.core.sharding import HelixConfig
 from repro.models.model_zoo import (build_serve_step, make_prefill_step)
 from repro.models.transformer import init_params
 from repro.serving import DecodeEngine, Request
+from repro.utils import make_mesh
 
 
 def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                max_new: int, max_batch: int = 8, mesh=None, hx=None,
-               seed: int = 0, log=print):
+               attn_backend: str | None = None, seed: int = 0, log=print):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -32,19 +33,20 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     max_seq = prompt_len + max_new + 1
 
     if mesh is not None:
-        serve_step = build_serve_step(cfg, mesh, hx)
+        serve_step = build_serve_step(cfg, mesh, hx,
+                                      attn_backend=attn_backend)
         prefill_step = make_prefill_step(cfg, mesh, hx)
     else:
         # single-device: 1x1 trivial mesh keeps one code path
-        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = make_mesh((1, 1), ("data", "model"))
         hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
-        serve_step = build_serve_step(cfg, mesh1, hx)
+        serve_step = build_serve_step(cfg, mesh1, hx,
+                                      attn_backend=attn_backend)
         prefill_step = make_prefill_step(cfg, mesh1, hx)
 
     engine = DecodeEngine(cfg, params, serve_step, prefill_step,
                           max_batch=max_batch, max_seq=max_seq, kvp=kvp,
-                          rr_block=hx.rr_block)
+                          hx=hx)
     rng = np.random.default_rng(seed)
     pending = [Request(rid=i,
                        prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
@@ -73,10 +75,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["ref", "pallas-interpret", "pallas"],
+                    help="decode-attention backend (default: HelixConfig's, "
+                         "i.e. 'ref'; 'pallas' needs a TPU)")
     args = ap.parse_args()
     serve_demo(args.arch, reduced=args.reduced, n_requests=args.requests,
                prompt_len=args.prompt_len, max_new=args.max_new,
-               max_batch=args.max_batch)
+               max_batch=args.max_batch, attn_backend=args.attn_backend)
 
 
 if __name__ == "__main__":

@@ -184,3 +184,31 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
 def cross_attention(q, k, v, *, chunk_q: int = 512):
     """Non-causal encoder-decoder cross attention (whisper)."""
     return chunked_attention(q, k, v, causal=False, window=0, chunk_q=chunk_q)
+
+
+# ------------------------------------------------------------- decode
+def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
+                     kvp: int = 1, rr_block: int = 16, rank=0,
+                     kscale=None, vscale=None, block_s: int = 512):
+    """Single-shard decode-shape attention with backend selection.
+
+    The unsharded sibling of core/helix.py's per-rank local attend —
+    benchmarks and single-device decode use it directly.  ``backend`` picks
+    the implementation: "ref" (pure-jnp oracle), "pallas-interpret" (the
+    flash-decode kernel through the Pallas interpreter — runs anywhere), or
+    "pallas" (compiled TPU kernel).  All are exact up to fp summation order.
+
+      q [B, Qh, hsz]; k, v [B, Kh, S, hsz]; total_len scalar or [B] int32.
+
+    Returns (out [B, Qh, hsz], lse [B, Qh] f32).
+    """
+    from repro.kernels.flash_decode.ops import flash_decode
+    from repro.kernels.flash_decode.ref import flash_decode_ref
+    if backend == "ref":
+        return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
+                                rr_block=rr_block, window=window,
+                                kscale=kscale, vscale=vscale)
+    return flash_decode(q, k, v, total_len, rank, kvp=kvp, rr_block=rr_block,
+                        window=window, block_s=block_s,
+                        kscale=kscale, vscale=vscale,
+                        interpret=backend != "pallas")

@@ -45,11 +45,17 @@ def _constrainer(mesh: Mesh):
 
 def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                      hopb_chunks: int = 4, return_logits: bool = False,
-                     unroll: bool = False):
+                     unroll: bool = False, attn_backend: str | None = None):
+    """``attn_backend`` overrides ``hx.attn_backend`` (ref | pallas-interpret
+    | pallas) — the decode-attention kernel used inside helix_attention."""
+    import dataclasses
     import math
 
     from repro.core.helix import helix_out_dim
     from repro.core.sharding import dense_ffn_mode
+
+    if attn_backend is not None and attn_backend != hx.attn_backend:
+        hx = dataclasses.replace(hx, attn_backend=attn_backend)
 
     kvp = hx.kvp(mesh)
     tpa_ax = hx.tpa_axis

@@ -128,8 +128,13 @@ def moe_ffn(params: MoEParams, x, moe: MoEConfig, act,
 
     slot_of, tok_of = jax.vmap(
         lambda ei: dispatch_plan(ei, e, cap))(eig)          # [G,tg,k],[G,E*C]
-    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, h), xg.dtype)], axis=1)
-    xe = jnp.take_along_axis(xpad, tok_of[..., None], axis=1)  # [G, E*C, H]
+    # Empty slots carry the out-of-bounds sentinel (== tg); mode="fill" zeroes
+    # them in the gather itself.  No sentinel zero-row concat: an unevenly
+    # sharded concat feeding a gather miscompiles under the SPMD partitioner
+    # of older XLA (replicated operand becomes a partial-sum — observed 2x
+    # values on a ('data', 'model') mesh with EP constraints downstream).
+    xe = jnp.take_along_axis(xg, tok_of[..., None], axis=1,
+                             mode="fill", fill_value=0)     # [G, E*C, H]
     xe = c_disp(xe.reshape(g, e, cap, h))
     xe = c_exp(xe)                                          # reshard: a2a
 
@@ -138,12 +143,11 @@ def moe_ffn(params: MoEParams, x, moe: MoEConfig, act,
     ye = jnp.einsum("gecf,efh->gech", act(h1) * h3, params.w2)
     ye = c_disp(c_exp(ye))                                  # reshard back
 
-    yflat = jnp.concatenate(
-        [ye.reshape(g, e * cap, h),
-         jnp.zeros((g, 1, h), ye.dtype)], axis=1)
     src = eig * cap + jnp.minimum(slot_of, cap - 1)
     src = jnp.where(slot_of < cap, src, e * cap)            # dropped -> zero
-    yk = jnp.take_along_axis(yflat, src.reshape(g, tg * moe.topk, 1), axis=1)
+    yk = jnp.take_along_axis(ye.reshape(g, e * cap, h),
+                             src.reshape(g, tg * moe.topk, 1), axis=1,
+                             mode="fill", fill_value=0)
     yk = yk.reshape(g, tg, moe.topk, h)
     y = jnp.sum(yk * gag[..., None].astype(ye.dtype), axis=2)
     return y.reshape(t, h), r.aux_loss

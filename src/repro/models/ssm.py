@@ -195,8 +195,13 @@ def ssd_chunked(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None,
     cb = jnp.einsum("bcign,bcjgn->bcgij", cc, bb)       # [B,nc,g,lc,lc]
     cb = jnp.repeat(cb, hpg, axis=2)                    # [B,nc,nh,lc,lc]
     li = cum.transpose(0, 1, 3, 2)                      # [B,nc,nh,lc]
-    decay = jnp.exp(li[..., :, None] - li[..., None, :])
+    # cum is non-increasing, so the causal (i >= j) exponents are <= 0; the
+    # masked upper triangle is *positive* and exp overflows to inf there,
+    # which turns the where's cotangent into 0 * inf = NaN.  Zero the
+    # exponent under the mask before exp so both passes stay finite.
+    ldiff = li[..., :, None] - li[..., None, :]
     mask = jnp.tril(jnp.ones((lc, lc), bool))
+    decay = jnp.exp(jnp.where(mask, ldiff, 0.0))
     w = jnp.where(mask, cb * decay, 0.0) * dtv.transpose(0, 1, 3, 2)[..., None, :]
     y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xs)
 

@@ -38,7 +38,14 @@ class Request:
 class DecodeEngine:
     def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
                  prefill_step: Callable, *, max_batch: int, max_seq: int,
-                 kvp: int = 1, rr_block: int = 16, dtype=jnp.float32):
+                 kvp: int = 1, rr_block: int = 16,
+                 hx: HelixConfig | None = None, dtype=jnp.float32):
+        # ``hx`` (when given) wins over the bare rr_block arg so engine and
+        # serve_step can't disagree on the round-robin block size.  kvp still
+        # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
+        # that half stays the caller's contract.
+        if hx is not None:
+            rr_block = hx.rr_block
         self.cfg = cfg
         self.params = params
         self.serve_step = jax.jit(serve_step)

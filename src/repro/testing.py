@@ -1,0 +1,39 @@
+"""Test-only helpers importable from the test suite.
+
+``optional_hypothesis()`` lets a test module use hypothesis when it is
+installed and degrade to *skipped property tests* (never collection errors)
+when it is not — the deterministic tests in the same module keep running.
+
+    from repro.testing import optional_hypothesis
+    given, settings, st = optional_hypothesis()
+
+Dev dependencies (including hypothesis) are declared in requirements-dev.txt
+/ pyproject.toml; ``make test`` installs them when the environment allows.
+"""
+from __future__ import annotations
+
+
+def optional_hypothesis():
+    """Returns (given, settings, st) — real if installed, else skip stubs.
+
+    The stubs are safe at collection time: ``st.<anything>(...)`` returns a
+    placeholder, ``@settings(...)`` is identity, and ``@given(...)`` replaces
+    the test with a pytest skip marker.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        import pytest
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*_a, **_k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*_a, **_k):
+            return lambda fn: fn
+
+        return given, settings, _Strategies()

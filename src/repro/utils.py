@@ -1,11 +1,59 @@
-"""Small shared utilities: padding, rounding, dtype helpers."""
+"""Small shared utilities: padding, rounding, dtype helpers — plus the
+JAX-version compat shims (``make_mesh`` / ``set_mesh`` / ``shard_map``) every
+entrypoint must use instead of the raw jax APIs (the installed JAX may predate
+``jax.sharding.AxisType``, ``jax.set_mesh`` and ``jax.shard_map``)."""
 from __future__ import annotations
 
+import inspect
 import math
 
+import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30  # finite stand-in for -inf inside kernels (avoids NaN in exp/max)
+
+
+# ------------------------------------------------------- jax compat shims
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis_types on JAX versions that take them.
+
+    Older JAX (< 0.6) has neither ``jax.sharding.AxisType`` nor the
+    ``axis_types=`` kwarg; every axis is implicitly Auto there, so dropping
+    the argument is semantics-preserving.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(tuple(shape))
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context manager; on older JAX the Mesh object itself
+    is the context manager with the same scoping behaviour."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across JAX versions.
+
+    New JAX spells the replication-check kwarg ``check_vma``; the
+    experimental predecessor spells it ``check_rep``.  Semantics match.
+    The promotion to ``jax.shard_map`` and the kwarg rename were separate
+    changes, so the spelling is keyed off the signature, not the location.
+    """
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    kw = ("check_vma" if "check_vma" in inspect.signature(fn).parameters
+          else "check_rep")
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check_vma})
 
 
 def cdiv(a: int, b: int) -> int:

@@ -6,9 +6,9 @@ from repro.configs import get_config
 from repro.core.sharding import HelixConfig, default_helix_config
 from repro.models.transformer import init_params, forward
 from repro.models.model_zoo import make_prefill_step, build_serve_step
+from repro.utils import make_mesh, set_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 for arch in ["granite-3-2b", "gemma3-12b", "granite-moe-1b-a400m",
              "mamba2-780m", "hymba-1.5b", "whisper-base", "phi-3-vision-4.2b"]:
@@ -29,7 +29,7 @@ for arch in ["granite-3-2b", "gemma3-12b", "granite-moe-1b-a400m",
     prefill = make_prefill_step(cfg, mesh, hx, s_cap=256)
     serve = build_serve_step(cfg, mesh, hx, hopb_chunks=2, return_logits=True)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         last_logits, state = jax.jit(prefill)(params, batch)
         (nt1, lg1), state = jax.jit(serve)(params, state, tokens[:, T])
         (nt2, lg2), state = jax.jit(serve)(params, state, tokens[:, T + 1])

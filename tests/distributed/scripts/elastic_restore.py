@@ -17,6 +17,7 @@ from repro.data import DataConfig, TokenPipeline
 from repro.models.model_zoo import make_train_step
 from repro.models.transformer import init_params
 from repro.optim import AdamWConfig, adamw_init
+from repro.utils import make_mesh, set_mesh
 
 cfg = get_config("granite-3-2b").reduced()
 optcfg = AdamWConfig(lr=1e-3, total_steps=20, warmup_steps=0)
@@ -26,7 +27,7 @@ pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
 def run_steps(mesh, params, opt, start, n):
     step = jax.jit(make_train_step(cfg, mesh, optcfg, chunk_q=32))
     losses = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for s in range(start, start + n):
             b = {k: jnp.asarray(v) for k, v in pipe.batch(s).items()}
             params, opt, m = step(params, opt, b)
@@ -34,11 +35,8 @@ def run_steps(mesh, params, opt, start, n):
     return params, opt, losses
 
 
-mesh_big = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_small = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                           devices=jax.devices()[:4])
+mesh_big = make_mesh((4, 2), ("data", "model"))
+mesh_small = make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
 
 params = init_params(cfg, jax.random.PRNGKey(0))
 opt = adamw_init(params, optcfg)

@@ -5,8 +5,9 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.sharding import HelixConfig
 from repro.core.helix import helix_attention, append_kv, rr_slot_of_position, prefill_to_rr_layout
 from repro.kernels.flash_decode.ref import flash_decode_ref, shard_positions
+from repro.utils import make_mesh, set_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"))
+mesh = make_mesh((4, 2), ("data", "model"))
 
 # ---- pure-KVP mode: KVP=8 over both axes ----
 hx = HelixConfig(kvp_axes=("data", "model"), tpa_axis=None)
@@ -22,7 +23,7 @@ vg = jnp.asarray(rng.standard_normal((B, KH, S_CAP, HSZ), np.float32))
 k_rr = prefill_to_rr_layout(kg, KVP, RR)
 v_rr = prefill_to_rr_layout(vg, KVP, RR)
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out = jax.jit(lambda q, k, v: helix_attention(mesh, hx, q, k, v, total_len))(q, k_rr, v_rr)
 ref, _ = flash_decode_ref(q, kg[:, :, :total_len], vg[:, :, :total_len], total_len, 0, kvp=1)
 ref_flat = ref.reshape(B, QH * HSZ)
@@ -30,14 +31,14 @@ np.testing.assert_allclose(np.asarray(out), np.asarray(ref_flat), rtol=2e-5, ato
 print("pure-KVP helix == unsharded ref: OK")
 
 # ---- HOP-B chunked gives identical results ----
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out2 = jax.jit(lambda q, k, v: helix_attention(mesh, hx, q, k, v, total_len, hopb_chunks=2))(q, k_rr, v_rr)
 np.testing.assert_allclose(np.asarray(out2), np.asarray(ref_flat), rtol=2e-5, atol=2e-5)
 print("HOP-B chunked == ref: OK")
 
 # ---- 2-D mode: KVP=4 (data), TPA=2 (model) ----
 hx2 = HelixConfig(kvp_axes=("data",), tpa_axis="model")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     k_rr2 = prefill_to_rr_layout(kg, 4, RR)
     v_rr2 = prefill_to_rr_layout(vg, 4, RR)
     out3 = jax.jit(lambda q, k, v: helix_attention(mesh, hx2, q, k, v, total_len))(q, k_rr2, v_rr2)
@@ -46,12 +47,39 @@ print("2-D (KVP x TPA) helix == ref: OK")
 
 # ---- per-request lengths ----
 tls = jnp.asarray([200, 37, 150, 9], jnp.int32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out4 = jax.jit(lambda q, k, v: helix_attention(mesh, hx, q, k, v, tls))(q, k_rr, v_rr)
 for i, tl in enumerate([200, 37, 150, 9]):
     r, _ = flash_decode_ref(q[i:i+1], kg[i:i+1, :, :tl], vg[i:i+1, :, :tl], tl, 0, kvp=1)
     np.testing.assert_allclose(np.asarray(out4[i]), np.asarray(r.reshape(QH*HSZ)), rtol=2e-5, atol=2e-5)
 print("per-request total_len: OK")
+
+# ---- pallas-interpret backend == ref through the all-to-all + combine ----
+import dataclasses
+hx_pl = dataclasses.replace(hx, attn_backend="pallas-interpret")
+hx2_pl = dataclasses.replace(hx2, attn_backend="pallas-interpret")
+with set_mesh(mesh):
+    pl1 = jax.jit(lambda q, k, v: helix_attention(mesh, hx_pl, q, k, v,
+                                                  total_len))(q, k_rr, v_rr)
+    pl2 = jax.jit(lambda q, k, v: helix_attention(mesh, hx_pl, q, k, v,
+                                                  tls))(q, k_rr, v_rr)
+    pl3 = jax.jit(lambda q, k, v: helix_attention(mesh, hx2_pl, q, k, v,
+                                                  total_len))(q, k_rr2, v_rr2)
+    pl4 = jax.jit(lambda q, k, v: helix_attention(mesh, hx_pl, q, k, v,
+                                                  total_len, window=64))(
+                                                      q, k_rr, v_rr)
+    rf4 = jax.jit(lambda q, k, v: helix_attention(mesh, hx, q, k, v,
+                                                  total_len, window=64))(
+                                                      q, k_rr, v_rr)
+np.testing.assert_allclose(np.asarray(pl1), np.asarray(out), rtol=2e-6,
+                           atol=2e-6)
+np.testing.assert_allclose(np.asarray(pl2), np.asarray(out4), rtol=2e-6,
+                           atol=2e-6)
+np.testing.assert_allclose(np.asarray(pl3), np.asarray(out3), rtol=2e-6,
+                           atol=2e-6)
+np.testing.assert_allclose(np.asarray(pl4), np.asarray(rf4), rtol=2e-6,
+                           atol=2e-6)
+print("pallas-interpret backend == ref (scalar, [B] tl, 2-D, windowed): OK")
 
 # ---- append_kv round-robin ----
 kc = jnp.zeros((B, KH, S_CAP, HSZ))

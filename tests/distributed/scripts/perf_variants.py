@@ -13,9 +13,9 @@ from repro.core.kvcache import init_decode_state
 from repro.core.sharding import default_helix_config
 from repro.models.model_zoo import build_serve_step, make_prefill_step
 from repro.models.transformer import init_params
+from repro.utils import make_mesh, set_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_config("granite-3-2b").reduced()
 hx0 = default_helix_config(cfg, mesh)
 params = init_params(cfg, jax.random.PRNGKey(0))
@@ -23,14 +23,14 @@ B, T = 4, 24
 tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T + 4), 0, cfg.vocab)
 
 prefill = make_prefill_step(cfg, mesh, hx0, s_cap=128)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     _, state0 = jax.jit(prefill)(params, {"tokens": tokens[:, :T]})
 
 
 def run_decode(hx, state, n=4):
     serve = build_serve_step(cfg, mesh, hx, hopb_chunks=2, return_logits=True)
     logits_all = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(n):
             (nt, lg), state = jax.jit(serve)(params, state, tokens[:, T + i])
             logits_all.append(lg)

@@ -10,9 +10,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.optim.compression import compressed_pod_mean
+from repro.utils import make_mesh, set_mesh, shard_map
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 
 rng = np.random.default_rng(0)
 # per-pod gradients [2, N]: axis 0 is the pod dim
@@ -27,11 +27,11 @@ def pod_fn(g_l, e_l):
     return mean["w"][None], new_e["w"][None]
 
 
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     pod_fn, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
     out_specs=(P("pod", None), P("pod", None)), check_vma=False))
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     mean, new_e = fn(g, e)
 
 true_mean = np.asarray(g).mean(axis=0)

@@ -9,9 +9,9 @@ from repro.configs import get_config
 from repro.models.model_zoo import make_train_step
 from repro.models.transformer import init_params
 from repro.optim import AdamWConfig, adamw_init
+from repro.utils import make_mesh, set_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 for arch in ["granite-3-2b", "granite-moe-1b-a400m", "mamba2-780m"]:
     cfg = get_config(arch).reduced()
@@ -26,7 +26,7 @@ for arch in ["granite-3-2b", "granite-moe-1b-a400m", "mamba2-780m"]:
     single = jax.jit(make_train_step(cfg, None, optcfg, chunk_q=32))
     p1, o1, m1 = single(params, opt, batch)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         sharded = jax.jit(make_train_step(cfg, mesh, optcfg, chunk_q=32))
         p2, o2, m2 = sharded(params, opt, batch)
 

@@ -1,0 +1,138 @@
+"""Exhaustive flash_decode kernel-vs-ref parity (no hypothesis needed).
+
+Parametrized over the full mode lattice the Helix attention path exercises:
+{scalar vs per-request [B] total_len} x {round-robin vs contiguous layout}
+x {window 0 / window > 0} x {fp32 vs int8 KV cache}, plus the slot_offset
+sliding-window fast path and the padded-S path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.utils import NEG_INF
+
+B, QH, KH, HSZ = 2, 8, 2, 64
+S_CAP = 64          # local shard capacity per rank
+KVP, RR = 4, 16
+
+
+def _mk(dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, QH, HSZ), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S_CAP, HSZ), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S_CAP, HSZ), dtype)
+    return q, k, v
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _ref(q, k, v, total_len, rank, *, contiguous, window, kscale=None,
+         vscale=None):
+    if contiguous:
+        # kvp=1 + slot_offset == contiguous positions rank*S + j
+        return flash_decode_ref(q, k, v, total_len, 0, kvp=1, rr_block=RR,
+                                window=window, slot_offset=rank * S_CAP,
+                                kscale=kscale, vscale=vscale)
+    return flash_decode_ref(q, k, v, total_len, rank, kvp=KVP, rr_block=RR,
+                            window=window, kscale=kscale, vscale=vscale)
+
+
+@pytest.mark.parametrize("per_request", [False, True],
+                         ids=["scalar-tl", "perreq-tl"])
+@pytest.mark.parametrize("contiguous", [False, True],
+                         ids=["roundrobin", "contiguous"])
+@pytest.mark.parametrize("window", [0, 48], ids=["full", "windowed"])
+@pytest.mark.parametrize("quant", [False, True], ids=["fp32", "int8"])
+def test_kernel_matches_ref_mode_lattice(per_request, contiguous, window,
+                                         quant):
+    q, k, v = _mk()
+    rank = 1
+    if per_request:
+        total_len = jnp.asarray([S_CAP * KVP - 7, 33], jnp.int32)
+    else:
+        total_len = S_CAP * KVP - 7
+    kw = {}
+    if quant:
+        k, ks = _quantize(k)
+        v, vs = _quantize(v)
+        kw = dict(kscale=ks, vscale=vs)
+
+    out, lse = flash_decode(q, k, v, total_len, rank,
+                            kvp=1 if contiguous else KVP, rr_block=RR,
+                            window=window, contiguous=contiguous,
+                            block_s=64, interpret=True, **kw)
+    ref_out, ref_lse = _ref(q, k, v, total_len, rank,
+                            contiguous=contiguous, window=window, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_kernel_slot_offset_matches_ref():
+    q, k, v = _mk()
+    out, lse = flash_decode(q, k, v, 200, 1, kvp=KVP, rr_block=RR, window=48,
+                            slot_offset=16, block_s=64, interpret=True)
+    ref_out, ref_lse = flash_decode_ref(q, k, v, 200, 1, kvp=KVP, rr_block=RR,
+                                        window=48, slot_offset=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_kernel_padded_s_contiguous_masks_tail():
+    """Contiguous layout + S not a block multiple: padded slots would alias
+    the next rank's positions without the in-kernel true-capacity mask."""
+    q, k, v = _mk()
+    k50, v50 = k[:, :, :50], v[:, :, :50]
+    # rank 1, contiguous: positions 50..99; total_len covers all of them, so
+    # any unmasked pad slot would contribute and break parity.
+    out, lse = flash_decode(q, k50, v50, 120, 1, kvp=1, contiguous=True,
+                            block_s=128, interpret=True)
+    ref_out, ref_lse = flash_decode_ref(q, k50, v50, 120, 0, kvp=1,
+                                        slot_offset=50)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_kernel_traced_window():
+    """window may be a traced runtime scalar (gemma3 local/global scan)."""
+    q, k, v = _mk()
+
+    @jax.jit
+    def run(w):
+        return flash_decode(q, k, v, 200, 1, kvp=KVP, rr_block=RR, window=w,
+                            block_s=64, interpret=True)
+
+    for w in (0, 48):
+        out, lse = run(jnp.asarray(w, jnp.int32))
+        ref_out, ref_lse = flash_decode_ref(q, k, v, 200, 1, kvp=KVP,
+                                            rr_block=RR, window=w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                                   rtol=2e-6, atol=2e-6)
+
+
+def test_kernel_empty_perreq_rows():
+    """Per-request lengths where one row has an empty shard."""
+    q, k, v = _mk()
+    tls = jnp.asarray([5, 200], jnp.int32)   # rank 2 holds nothing of row 0
+    out, lse = flash_decode(q, k, v, tls, 2, kvp=KVP, rr_block=RR,
+                            block_s=64, interpret=True)
+    ref_out, ref_lse = flash_decode_ref(q, k, v, tls, 2, kvp=KVP, rr_block=RR)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=2e-6, atol=2e-6)
+    assert np.all(np.asarray(lse)[0] == NEG_INF)
+    assert np.all(np.asarray(out)[0] == 0.0)

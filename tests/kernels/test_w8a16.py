@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import optional_hypothesis
+
+# degrades to skipped property tests when hypothesis is not installed
+given, settings, st = optional_hypothesis()
 
 from repro.kernels.w8a16_matmul import (quantize_w8, w8a16_matmul,
                                         w8a16_matmul_ref)

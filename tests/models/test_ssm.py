@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import optional_hypothesis
+
+# degrades to skipped property tests when hypothesis is not installed
+given, settings, st = optional_hypothesis()
 
 from repro.configs import get_config
 from repro.models.ssm import (SSMParams, init_ssm, init_ssm_state,

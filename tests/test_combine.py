@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import optional_hypothesis
+
+# degrades to skipped property tests when hypothesis is not installed
+given, settings, st = optional_hypothesis()
 
 from repro.core.combine import (combine_fragments, combine_partials,
                                 combine_two, fragment_head_index)

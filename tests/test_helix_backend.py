@@ -1,0 +1,114 @@
+"""helix_attention backend selection: pallas-interpret == ref end to end.
+
+Single-device (trivial 1x1 mesh) so it runs in the main suite; the 8-fake-
+device all-to-all parity lives in tests/distributed/scripts/helix_exact.py.
+Also covers the serve_step plumbing: build_serve_step(attn_backend=...)
+produces identical decodes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.helix import helix_attention
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import build_serve_step, make_prefill_step
+from repro.models.transformer import init_params
+from repro.utils import make_mesh
+
+
+def _mesh1():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _hx(backend):
+    return HelixConfig(kvp_axes=("data",), tpa_axis=None,
+                       attn_backend=backend)
+
+
+def _mk(b=2, qh=8, kh=2, s=64, hsz=64, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, qh, hsz)),
+            jax.random.normal(ks[1], (b, kh, s, hsz)),
+            jax.random.normal(ks[2], (b, kh, s, hsz)))
+
+
+@pytest.mark.parametrize("contiguous", [False, True],
+                         ids=["roundrobin", "contiguous"])
+@pytest.mark.parametrize("per_request", [False, True],
+                         ids=["scalar-tl", "perreq-tl"])
+def test_helix_attention_backend_parity(contiguous, per_request):
+    mesh = _mesh1()
+    q, k, v = _mk()
+    tl = jnp.asarray([60, 23], jnp.int32) if per_request else 60
+
+    def run(backend):
+        return jax.jit(lambda q, k, v: helix_attention(
+            mesh, _hx(backend), q, k, v, tl, contiguous=contiguous))(q, k, v)
+
+    ref = np.asarray(run("ref"))
+    got = np.asarray(run("pallas-interpret"))
+    np.testing.assert_allclose(got, ref, rtol=2e-6, atol=2e-6)
+
+
+def test_helix_attention_backend_parity_windowed():
+    mesh = _mesh1()
+    q, k, v = _mk(s=128)
+
+    def run(backend):
+        return jax.jit(lambda q, k, v: helix_attention(
+            mesh, _hx(backend), q, k, v, 120, window=32))(q, k, v)
+
+    np.testing.assert_allclose(np.asarray(run("pallas-interpret")),
+                               np.asarray(run("ref")), rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [0, 32], ids=["full", "windowed"])
+def test_helix_attention_backend_parity_int8(window):
+    mesh = _mesh1()
+    q, k, v = _mk(s=128)
+    scale = jnp.maximum(jnp.max(jnp.abs(k), axis=-1) / 127.0, 1e-30)
+    vscale = jnp.maximum(jnp.max(jnp.abs(v), axis=-1) / 127.0, 1e-30)
+    kq = jnp.clip(jnp.round(k / scale[..., None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(v / vscale[..., None]), -127, 127).astype(jnp.int8)
+
+    def run(backend):
+        return jax.jit(lambda q, k, v, ks, vs: helix_attention(
+            mesh, _hx(backend), q, k, v, 120, window=window,
+            kscale=ks, vscale=vs))(q, kq, vq, scale, vscale)
+
+    np.testing.assert_allclose(np.asarray(run("pallas-interpret")),
+                               np.asarray(run("ref")), rtol=2e-6, atol=2e-6)
+
+
+def test_serve_step_backend_override_matches_ref():
+    """Full serve_step with attn_backend='pallas-interpret' reproduces the
+    ref-backend decode exactly (greedy tokens and state lengths)."""
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg, mesh, hx, s_cap=64))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    _, state0 = prefill(params, {"tokens": toks})
+
+    def decode(backend, n=4):
+        serve = jax.jit(build_serve_step(cfg, mesh, hx,
+                                         attn_backend=backend))
+        state = dict(state0)
+        cur = jnp.zeros((2,), jnp.int32)
+        outs = []
+        for _ in range(n):
+            cur, state = serve(params, state, cur)
+            outs.append(np.asarray(cur))
+        return np.stack(outs)
+
+    np.testing.assert_array_equal(decode("pallas-interpret"), decode("ref"))
+
+
+def test_invalid_backend_rejected():
+    with pytest.raises(AssertionError):
+        HelixConfig(kvp_axes=("data",), attn_backend="cuda")

@@ -11,6 +11,7 @@ from repro.launch.train import train
 from repro.models.model_zoo import (build_serve_step, make_prefill_step)
 from repro.models.transformer import forward, init_params
 from repro.serving import DecodeEngine, Request
+from repro.utils import make_mesh
 
 
 def test_training_reduces_loss(tmp_path):
@@ -36,8 +37,7 @@ def test_checkpoint_restart_resumes_identically(tmp_path):
 
 
 def _mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_engine_matches_reference_greedy_decode():
