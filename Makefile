@@ -1,5 +1,5 @@
 # Tier-1 verify: `make test` == what CI runs (scripts/ci.sh).
-.PHONY: test test-fast bench-decode
+.PHONY: test test-fast bench-decode check-docs list-backends
 
 test:
 	bash scripts/ci.sh
@@ -8,5 +8,14 @@ test:
 test-fast:
 	PYTHONPATH=src python -m pytest -q --ignore=tests/distributed
 
+# decode-attention microbench (incl. fused-append sweep); writes BENCH_decode.json
 bench-decode:
 	PYTHONPATH=src python benchmarks/bench_decode_kernel.py
+
+# docs check: public-API docstrings + README CLI-flag drift
+check-docs:
+	PYTHONPATH=src python scripts/check_docs.py
+
+# per-family kernel backend availability matrix (registry smoke)
+list-backends:
+	PYTHONPATH=src python -m repro.launch.serve --list-backends

@@ -1,67 +1,134 @@
 """Decode-attention microbenchmark: ref (pure jnp) vs the Pallas
-flash-decode kernel, swept over KV length S.
+flash-decode kernel, swept over KV length S — including the fused KV-append
+epilogue vs the separate append_kv pass.
 
   PYTHONPATH=src python benchmarks/bench_decode_kernel.py \
       [--backends ref pallas-interpret] [--s 4096 16384 65536] \
-      [--batch 4] [--iters 20]
+      [--batch 4] [--iters 20] [--json BENCH_decode.json] [--no-fused]
+
+Each measured step is one *full decode attention step including the KV
+append* (that is what serve_step pays per layer): append_kv + attention for
+the unfused rows, the in-kernel append epilogue for the ``+fused`` rows.
+
+Results are also written as machine-readable JSON (default
+``BENCH_decode.json``) so the perf trajectory is tracked across PRs:
+
+  {"meta": {device, b, qh, kh, hsz, iters}, "rows":
+   [{"s": 4096, "timings_ms": {"ref": 33.2, "pallas-interpret": ...,
+                               "pallas-interpret+fused": ...}}]}
 
 On CPU only `ref` and `pallas-interpret` are available; the interpreter's
 wall-clock is NOT kernel performance (it executes the kernel body step by
 step) — its purpose here is exercising the exact code path.  On a TPU host
 pass ``--backends ref pallas`` for real numbers: the kernel streams the KV
 shard HBM->VMEM once, which is the §2.1 DRAM-bound regime the paper's TTL
-model assumes.
+model assumes, and the fused epilogue additionally drops the append pass's
+cache round-trip.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import decode_attention
+from repro.core.helix import append_kv
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 
 
-def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
-              iters: int, warmup: int = 3) -> float:
-    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+def _mk(b, qh, kh, s, hsz):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
     q = jax.random.normal(ks[0], (b, qh, hsz))
     k = jax.random.normal(ks[1], (b, kh, s, hsz))
     v = jax.random.normal(ks[2], (b, kh, s, hsz))
-    total_len = s  # fully-populated cache: worst-case read volume
+    kn = jax.random.normal(ks[3], (b, kh, hsz))
+    vn = jax.random.normal(ks[4], (b, kh, hsz))
+    return q, k, v, kn, vn
 
-    fn = jax.jit(lambda q, k, v: decode_attention(
-        q, k, v, total_len, backend=backend)[0])
-    out = fn(q, k, v)
+
+def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
+              iters: int, fused: bool = False, warmup: int = 3) -> float:
+    """Mean seconds per decode-attention step (append + attend) at KV
+    length ``s``.  ``fused=True`` uses the in-kernel append epilogue
+    (Pallas backends only)."""
+    q, k, v, kn, vn = _mk(b, qh, kh, s, hsz)
+    total_len = s  # fully-populated cache: worst-case read volume
+    interpret = backend != "pallas"
+
+    if fused:
+        assert backend != "ref"
+
+        def step(q, k, v, kn, vn):
+            out, _, kc, vc = flash_decode(q, k, v, total_len, 0, kvp=1,
+                                          k_new=kn, v_new=vn,
+                                          interpret=interpret)
+            return out, kc, vc
+    elif backend == "ref":
+        def step(q, k, v, kn, vn):
+            kc, vc = append_kv(k, v, kn, vn, total_len, kvp=1, rr_block=16)
+            out, _ = flash_decode_ref(q, kc, vc, total_len, 0, kvp=1)
+            return out, kc, vc
+    else:
+        def step(q, k, v, kn, vn):
+            kc, vc = append_kv(k, v, kn, vn, total_len, kvp=1, rr_block=16)
+            out, _ = flash_decode(q, kc, vc, total_len, 0, kvp=1,
+                                  interpret=interpret)
+            return out, kc, vc
+
+    fn = jax.jit(step)
+    out = fn(q, k, v, kn, vn)[0]
     out.block_until_ready()
     for _ in range(warmup - 1):
-        fn(q, k, v).block_until_ready()
+        fn(q, k, v, kn, vn)[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(q, k, v)
+        out = fn(q, k, v, kn, vn)[0]
     out.block_until_ready()
     return (time.perf_counter() - t0) / iters
 
 
 def run(backends=("ref", "pallas-interpret"), s_values=(1024, 4096),
         b: int = 4, qh: int = 32, kh: int = 8, hsz: int = 128,
-        iters: int = 10):
+        iters: int = 10, fused: bool = True,
+        json_path: str | None = "BENCH_decode.json"):
+    """Sweep ``backends`` (plus their fused-append variants) over KV lengths
+    ``s_values``; prints a table and writes ``json_path``.  Returns the rows
+    as ``[(s, {label: seconds})]``."""
     dev = jax.devices()[0].platform
+    variants = [(be, False) for be in backends]
+    if fused:
+        variants += [(be, True) for be in backends if be != "ref"]
+    labels = [be + ("+fused" if fz else "") for be, fz in variants]
     print(f"[bench_decode_kernel] device={dev} B={b} Qh={qh} Kh={kh} "
-          f"hsz={hsz} iters={iters}")
+          f"hsz={hsz} iters={iters} (append + attend per step)")
     kv_bytes = lambda s: 2 * b * kh * s * hsz * 4   # f32 K+V read volume
-    header = f"{'S':>8s} " + "".join(f"{be:>20s}" for be in backends) \
+    header = f"{'S':>8s} " + "".join(f"{lb:>24s}" for lb in labels) \
         + f"{'KV bytes':>12s}"
     print(header)
     rows = []
     for s in s_values:
-        times = [bench_one(be, b=b, qh=qh, kh=kh, s=s, hsz=hsz, iters=iters)
-                 for be in backends]
-        row = f"{s:>8d} " + "".join(f"{t * 1e3:>17.2f} ms" for t in times) \
+        times = {lb: bench_one(be, b=b, qh=qh, kh=kh, s=s, hsz=hsz,
+                               iters=iters, fused=fz)
+                 for lb, (be, fz) in zip(labels, variants)}
+        row = f"{s:>8d} " + "".join(f"{times[lb] * 1e3:>21.2f} ms"
+                                    for lb in labels) \
             + f"{kv_bytes(s) / 2**20:>10.1f} Mi"
         print(row)
-        rows.append((s, dict(zip(backends, times))))
+        rows.append((s, times))
+    if json_path:
+        payload = {
+            "meta": {"device": dev, "b": b, "qh": qh, "kh": kh, "hsz": hsz,
+                     "iters": iters, "unit": "ms",
+                     "step": "append_kv + decode attention"},
+            "rows": [{"s": s,
+                      "timings_ms": {lb: t * 1e3 for lb, t in times.items()}}
+                     for s, times in rows],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[bench_decode_kernel] wrote {json_path}")
     return rows
 
 
@@ -76,9 +143,14 @@ def main():
     ap.add_argument("--kh", type=int, default=8)
     ap.add_argument("--hsz", type=int, default=128)
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the fused KV-append epilogue variants")
+    ap.add_argument("--json", default="BENCH_decode.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args()
     run(backends=tuple(args.backends), s_values=tuple(args.s), b=args.batch,
-        qh=args.qh, kh=args.kh, hsz=args.hsz, iters=args.iters)
+        qh=args.qh, kh=args.kh, hsz=args.hsz, iters=args.iters,
+        fused=not args.no_fused, json_path=args.json or None)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 CI entrypoint: install dev deps when the environment allows, then
-# run the full suite.  A missing dev dep (e.g. hypothesis in an air-gapped
-# container) must degrade to skipped property tests, never to collection
-# errors — scripts/ci.sh exists so that regression can't land silently.
+# run the docs/backends smoke checks and the full suite.  A missing dev dep
+# (e.g. hypothesis in an air-gapped container) must degrade to skipped
+# property tests, never to collection errors — scripts/ci.sh exists so that
+# regression can't land silently.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +14,11 @@ else
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# docs check: public ops.py/API docstrings + README CLI-flag drift
+python scripts/check_docs.py
+
+# kernel-registry smoke: imports every family and prints the backend matrix
+python -m repro.launch.serve --list-backends
+
 python -m pytest -q "$@"

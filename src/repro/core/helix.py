@@ -64,9 +64,31 @@ def _window_slice(total_len, rank, s_loc, *, kvp, rr_block, window):
     return j_lo, w_loc
 
 
+def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
+                           quant: bool = False,
+                           contiguous: bool = False) -> bool:
+    """Static check: can this decode step run the fused KV-append epilogue?
+
+    The fused path (kernels/flash_decode append mode) writes the new token's
+    K/V row inside the kernel, eliminating the separate ``append_kv`` cache
+    round-trip.  It requires a Pallas backend with ``hx.fuse_append`` on, a
+    non-quantized round-robin cache, and must not collide with the
+    sliding-window cache-slice fast path (which attends over a *slice* of
+    the shard — an in-kernel write there would miss the real cache).  All
+    inputs are trace-time static, so the choice costs nothing at runtime.
+    """
+    if hx.attn_backend == "ref" or not hx.fuse_append:
+        return False
+    if quant or contiguous:
+        return False
+    s_loc = s_cap // kvp
+    return _window_slice(total_len, 0, s_loc, kvp=kvp, rr_block=hx.rr_block,
+                         window=window) is None
+
+
 def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                   contiguous: bool, kscale=None, vscale=None,
-                  backend: str = "ref"):
+                  backend: str = "ref", k_new=None, v_new=None):
     """Per-rank partial attention + LSE over the local KV shard.
 
     contiguous=True: static split (whisper cross-attn KV) — every local slot
@@ -77,12 +99,21 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
     mode.  The kernel covers every mode natively (per-request [B] lengths,
     contiguous layout, sliding window, int8 dequant from scales), so all
     backends are drop-in exact up to fp summation order.
+    k_new/v_new [B, Kh, hsz]: fused KV-append epilogue (Pallas backends
+    only; see ``fuse_append_applicable``) — the kernel appends the new
+    token's row to the local shard and returns
+    ``(out, lse, kcache, vcache)`` instead of ``(out, lse)``.
     """
     s_loc = k.shape[2]
+    fused = k_new is not None
+    assert not fused or backend != "ref", \
+        "fused append requires a Pallas backend"
     # Sliding-window cache-slice fast path, shared by every backend: slice
     # the live span out of the shard and re-align positions via slot_offset.
+    # Incompatible with the fused append (the kernel must write the real
+    # cache, not a slice) — fuse_append_applicable() excludes the overlap.
     slot_offset = 0
-    if not contiguous:
+    if not contiguous and not fused:
         sl = _window_slice(total_len, rank, s_loc, kvp=kvp,
                            rr_block=rr_block, window=window)
         if sl is not None:
@@ -100,6 +131,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                             rr_block=rr_block, window=window,
                             contiguous=contiguous, slot_offset=slot_offset,
                             kscale=kscale, vscale=vscale,
+                            k_new=k_new, v_new=v_new,
                             interpret=backend != "pallas")
     # ---- pure-JAX reference path ----
     if contiguous:
@@ -118,7 +150,8 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
 
 def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     *, window: int | jax.Array = 0, contiguous: bool = False,
-                    hopb_chunks: int = 1, kscale=None, vscale=None):
+                    hopb_chunks: int = 1, kscale=None, vscale=None,
+                    k_new=None, v_new=None):
     """Exact sharded decode attention.
 
     Args:
@@ -131,9 +164,17 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     independent chunks so XLA's latency-hiding scheduler can
                     overlap chunk i's all-to-all with chunk i+1's attention
                     compute (TPU-idiomatic equivalent of stream overlap).
+      k_new/v_new:  [B, Kh, hsz] — fused KV-append epilogue: the new token's
+                    K/V row is written into the cache *inside* the decode
+                    kernel (its owner rank's shard), replacing the separate
+                    ``append_kv`` pass.  Pass the pre-append caches and a
+                    ``total_len`` that already counts the new token; the
+                    caller must have checked ``fuse_append_applicable``.
 
     Returns: [B, Qh*hsz] attention output, sharded over (tpa, kvp) on dim 1 —
     exactly the TP layout the post-attention projection consumes (§2.2).
+    In fused-append mode returns ``(out, kcache, vcache)`` with the appended
+    caches (same global layout/sharding as the inputs).
     """
     import math
     b, qh, hsz = q.shape
@@ -141,6 +182,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
     tpa = hx.tpa_axis
     kvp = math.prod(mesh.shape[a] for a in kvp_axes)
     qh_local = qh // (mesh.shape[tpa] if tpa else 1)
+    fused = k_new is not None
+    assert not fused or (kscale is None and not contiguous)
     # The all-to-all splits the flattened (Qh_local*hsz) dim into KVP slices.
     # When it does not divide (e.g. hymba q_dim=1600, N=256) we zero-pad the
     # flat dim only — attention itself runs the canonical heads; pad elements
@@ -155,14 +198,20 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                              qh_local - 1)
     head_idx_table = flat_heads.reshape(kvp, sl)          # [KVP, sl]
 
-    def local_fn(q_l, k_l, v_l, tl, *scales):
+    def local_fn(q_l, k_l, v_l, tl, *extras):
         rank = jax.lax.axis_index(kvp_axes)
-        ks_l, vs_l = scales if scales else (None, None)
-        out, lse = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
-                                 rr_block=hx.rr_block, window=window,
-                                 contiguous=contiguous,
-                                 kscale=ks_l, vscale=vs_l,
-                                 backend=hx.attn_backend)
+        ks_l = vs_l = kn_l = vn_l = None
+        if kscale is not None:
+            ks_l, vs_l = extras
+        elif fused:
+            kn_l, vn_l = extras
+        res = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
+                            rr_block=hx.rr_block, window=window,
+                            contiguous=contiguous,
+                            kscale=ks_l, vscale=vs_l,
+                            backend=hx.attn_backend,
+                            k_new=kn_l, v_new=vn_l)
+        out, lse = res[0], res[1]
         bl = out.shape[0]
         # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
         # independent of S.
@@ -175,27 +224,39 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         lses = jax.lax.all_gather(lse, kvp_axes, axis=0, tiled=False)
         my_slice = jax.lax.dynamic_index_in_dim(
             head_idx_table, rank, axis=0, keepdims=False)
-        return combine_fragments(frags, lses, my_slice)   # [B, sl]
+        combined = combine_fragments(frags, lses, my_slice)   # [B, sl]
+        if fused:
+            return combined, res[2], res[3]     # + appended local KV shards
+        return combined
 
     tl_spec = P() if jnp.ndim(total_len) == 0 else P(None)
     quant = kscale is not None
+    cache_spec = P(None, tpa, kvp_axes, None)
     in_specs = (P(None, tpa, None),                       # q: repl over kvp
-                P(None, tpa, kvp_axes, None),             # kcache
-                P(None, tpa, kvp_axes, None),             # vcache
+                cache_spec,                               # kcache
+                cache_spec,                               # vcache
                 tl_spec)
     if quant:
         in_specs += (P(None, tpa, kvp_axes), P(None, tpa, kvp_axes))
+    if fused:
+        in_specs += (P(None, tpa, None), P(None, tpa, None))  # k_new, v_new
+    out_spec = P(None, ((tpa,) if tpa else ()) + kvp_axes)
     shard_fn = shard_map(
         local_fn, mesh=mesh, in_specs=in_specs,
-        out_specs=P(None, ((tpa,) if tpa else ()) + kvp_axes),
+        out_specs=(out_spec, cache_spec, cache_spec) if fused else out_spec,
         check_vma=False)
 
-    def call(qs, ks, vs, tl, kss, vss):
-        args = (qs, ks, vs, tl) + ((kss, vss) if quant else ())
+    def call(qs, ks, vs, tl, kss, vss, kns, vns):
+        args = (qs, ks, vs, tl)
+        if quant:
+            args += (kss, vss)
+        if fused:
+            args += (kns, vns)
         return shard_fn(*args)
 
     if hopb_chunks <= 1:
-        return call(q, kcache, vcache, total_len, kscale, vscale)
+        return call(q, kcache, vcache, total_len, kscale, vscale,
+                    k_new, v_new)
 
     # ---- HOP-B: batch-wise communication/computation overlap (§2.1.3) ----
     assert b % hopb_chunks == 0, (b, hopb_chunks)
@@ -206,7 +267,12 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         tl_i = total_len if jnp.ndim(total_len) == 0 else total_len[csl]
         outs.append(call(q[csl], kcache[csl], vcache[csl], tl_i,
                          kscale[csl] if quant else None,
-                         vscale[csl] if quant else None))
+                         vscale[csl] if quant else None,
+                         k_new[csl] if fused else None,
+                         v_new[csl] if fused else None))
+    if fused:
+        return tuple(jnp.concatenate([o[i] for o in outs], axis=0)
+                     for i in range(3))
     return jnp.concatenate(outs, axis=0)
 
 

@@ -53,7 +53,8 @@ def train_roles(mesh: Mesh) -> dict[str, tuple[str, ...]]:
 
 
 # ------------------------------------------------------------------ helix
-ATTN_BACKENDS = ("ref", "pallas-interpret", "pallas")
+# back-compat alias: the canonical list lives in the kernel registry
+from repro.kernels.registry import BACKENDS as ATTN_BACKENDS  # noqa: E402
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,15 @@ class HelixConfig:
     Attention phase: KV cache sharded over kvp_axes (sequence, round-robin)
     × tpa_axis (kv heads, requires TPA <= K).  FFN phase: same devices as
     TPF = everything (dense) or TPF × EP (MoE, EP = ep_axis).
+
+    Kernel backends: the four ``*_backend`` fields select, per kernel family,
+    one of ``"ref"`` | ``"pallas-interpret"`` | ``"pallas"`` from the unified
+    registry (kernels/registry.py) — ``attn_backend`` routes flash_decode
+    (the Helix decode attention inside the shard_map), ``prefill_backend``
+    routes flash_prefill (full-sequence attention in prefill/train),
+    ``ssd_backend`` routes ssd_prefill (the Mamba2 SSD scan core) and
+    ``matmul_backend`` routes w8a16_matmul.  All backends of a family are
+    exact up to fp summation order; see docs/kernels.md.
     """
     kvp_axes: tuple[str, ...]            # sequence-sharding axes
     tpa_axis: str | None = None          # head-sharding axis (None => TPA=1)
@@ -73,23 +83,42 @@ class HelixConfig:
     #   all-gather the small activations, instead of the paper's replicated
     #   per-rank QKV compute (wins when decode is weight-read bound)
     kv_cache_bits: int = 16              # 8 => int8 KV cache + f32 scales
-    attn_backend: str = "ref"            # decode-attention backend inside the
-    #   helix shard_map: "ref" (pure jnp oracle), "pallas-interpret" (the
-    #   flash-decode kernel via the Pallas interpreter — CPU-testable), or
-    #   "pallas" (compiled TPU kernel).  All three are exact up to fp
-    #   summation order; see kernels/flash_decode.
+    # --- per-family kernel backends (kernels/registry.py) ---
+    attn_backend: str = "ref"            # flash_decode (helix decode attn)
+    prefill_backend: str = "ref"         # flash_prefill (prefill/train attn)
+    ssd_backend: str = "ref"             # ssd_prefill (mamba2 SSD core)
+    matmul_backend: str = "ref"          # w8a16_matmul (int8-weight matmul)
+    fuse_append: bool = True             # fuse the rr-slot KV append into the
+    #   flash-decode kernel epilogue (saves one cache HBM round-trip per
+    #   layer per step).  Only active on the pallas backends, for fp16/32
+    #   round-robin caches without the sliding-window cache-slice fast path;
+    #   set False to force the separate append_kv pass (bit-exact either way).
 
     def __post_init__(self):
-        assert self.attn_backend in ATTN_BACKENDS, self.attn_backend
+        from repro.kernels import registry
+        for field, family in registry.FAMILY_FIELDS.items():
+            assert getattr(self, field) in registry.BACKENDS, \
+                (field, getattr(self, field), registry.BACKENDS)
+
+    def backend_for(self, family: str) -> str:
+        """Selected backend for a registry kernel family name."""
+        from repro.kernels import registry
+        for field, fam in registry.FAMILY_FIELDS.items():
+            if fam == family:
+                return getattr(self, field)
+        raise ValueError(f"unknown kernel family {family!r}")
 
     def all_axes(self) -> tuple[str, ...]:
+        """Every mesh axis the attention phase consumes (kvp then tpa)."""
         return self.kvp_axes + ((self.tpa_axis,) if self.tpa_axis else ())
 
     def kvp(self, mesh: Mesh) -> int:
+        """KV-parallel width: product of the kvp axes' sizes on ``mesh``."""
         import math
         return math.prod(mesh.shape[a] for a in self.kvp_axes)
 
     def tpa(self, mesh: Mesh) -> int:
+        """Attention tensor-parallel width (1 when ``tpa_axis`` is None)."""
         return mesh.shape[self.tpa_axis] if self.tpa_axis else 1
 
 

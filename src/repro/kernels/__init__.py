@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas TPU kernels for the paper's compute hotspots.
+
+Each subpackage is one kernel *family* — ``kernel.py`` (the Pallas kernel),
+``ops.py`` (the jit'd public wrapper handling layout/padding) and ``ref.py``
+(the pure-jnp oracle that defines the contract).  ``registry.py`` is the
+single switchboard that routes every family through the shared backend
+lattice ``ref`` | ``pallas-interpret`` | ``pallas`` — see docs/kernels.md
+for the per-family support matrix and ``HelixConfig`` (core/sharding.py)
+for how call sites select backends.
+"""
+from repro.kernels import registry  # noqa: F401
+
+__all__ = ["registry"]

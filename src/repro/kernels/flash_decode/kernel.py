@@ -37,6 +37,29 @@ padding is exact in both layouts.
 Quant mode (§Perf kv8): K/V arrive int8 with per-(B, Kh, slot) f32 scales and
 are dequantized block-by-block in VMEM — the f32 copy of the shard never
 exists in HBM.
+
+Fused KV-append epilogue (append mode)
+--------------------------------------
+The rr-slot ``append_kv`` update is fused into the kernel: the caller passes
+the *pre-append* cache plus the new token's K/V row, and the kernel
+
+  1. substitutes the new row into the streamed K/V tile in VMEM for the
+     attention compute (the HBM block containing the target slot is stale),
+  2. writes the row back to the cache through a (1, 1, 1, hsz) output window
+     whose index_map derives the target slot from the prefetched per-request
+     lengths — ``input_output_aliases`` makes these outputs *the same HBM
+     buffers* as the K/V inputs, so the rest of the cache is untouched and
+     the separate append pass (one full-cache HBM round-trip per layer per
+     decode step) disappears.
+
+The row window is re-written (idempotently) at every S-block step, so the
+kernel is correct under both write-back policies Pallas implementations use
+(every visit, or last visit only).  Non-owner ranks (round-robin: the new
+position lives on exactly one KVP rank) write back the unmodified row read
+through a matching (1, 1, 1, hsz) *input* window.  Append mode composes with
+per-request [B] lengths (each row appends at its own slot) but excludes the
+quant/contiguous/slot_offset modes — the Helix caller falls back to the
+unfused ``append_kv`` there (core/helix.py).
 """
 from __future__ import annotations
 
@@ -50,10 +73,23 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.utils import NEG_INF
 
 
+def _append_slot(total_len, kvp: int, rr_block: int, s_max: int):
+    """Local rr slot of the appended token (position total_len - 1), clamped
+    to the padded capacity.  Rank-independent (same formula on every rank);
+    ownership is a separate check."""
+    pos = total_len - 1
+    blk = pos // rr_block
+    j = (blk // kvp) * rr_block + pos % rr_block
+    return jnp.clip(j, 0, s_max - 1)
+
+
 def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
                    kvp: int, rr_block: int, block_s: int, s_true: int,
-                   contiguous: bool, quant: bool):
-    if quant:
+                   contiguous: bool, quant: bool, append: bool):
+    if append:
+        (knew_ref, vnew_ref, krow_in_ref, vrow_in_ref, o_ref, lse_ref,
+         krow_out_ref, vrow_out_ref, acc_ref, m_ref, l_ref) = rest
+    elif quant:
         kscale_ref, vscale_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     else:
         o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
@@ -70,9 +106,30 @@ def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
+    kraw = k_ref[0, 0]                                   # [bs, hsz] cache dtype
+    vraw = v_ref[0, 0]
+    if append:
+        # epilogue part 1: substitute the new token's row into the VMEM tile
+        # (the streamed HBM block is pre-append) ...
+        j_new = _append_slot(total_len, kvp, rr_block, pl.num_programs(2)
+                             * block_s)
+        owner = (((total_len - 1) // rr_block) % kvp) == rank
+        local = j_new - si * block_s
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)
+        hit = jnp.logical_and(owner, rows == local)
+        kn = knew_ref[0, 0]                              # [hsz] cache dtype
+        vn = vnew_ref[0, 0]
+        kraw = jnp.where(hit, kn[None, :], kraw)
+        vraw = jnp.where(hit, vn[None, :], vraw)
+        # ... part 2: persist the row through the aliased (1,1,1,hsz) output
+        # window (idempotent re-write each S step; non-owners restore the
+        # row they read).
+        krow_out_ref[0, 0, 0] = jnp.where(owner, kn, krow_in_ref[0, 0, 0])
+        vrow_out_ref[0, 0, 0] = jnp.where(owner, vn, vrow_in_ref[0, 0, 0])
+
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [Qp, hsz]
-    k = k_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
-    v = v_ref[0, 0].astype(jnp.float32)                  # [bs, hsz]
+    k = kraw.astype(jnp.float32)                         # [bs, hsz]
+    v = vraw.astype(jnp.float32)
     if quant:
         k = k * kscale_ref[0, 0][:, None]
         v = v * vscale_ref[0, 0][:, None]
@@ -118,25 +175,39 @@ def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
 def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
                         rr_block: int, block_s: int, s_true: int,
                         contiguous: bool = False, kscale=None, vscale=None,
-                        interpret: bool = True):
+                        k_new=None, v_new=None, interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
     q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; meta: [3] int32
     (rank, slot_offset, window); tl: [B] int32 per-request lengths;
-    kscale/vscale: [B, Kh, S_pad] f32 (int8-cache mode — k/v are int8).
+    kscale/vscale: [B, Kh, S_pad] f32 (int8-cache mode — k/v are int8);
+    k_new/v_new: [B, Kh, hsz] in cache dtype (fused-append mode — excludes
+    quant/contiguous; tl must already include the appended token).
     s_true: unpadded local capacity (slots >= s_true are masked).
-    returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32).
+    returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32), plus the
+    appended caches kc, vc [B, Kh, S_pad, hsz] (aliased with k, v) in
+    fused-append mode.
     """
     b, kh, qp, hsz = q.shape
     s_pad = k.shape[2]
     assert s_pad % block_s == 0 and qp % 8 == 0
     quant = kscale is not None
     assert quant == (vscale is not None)
+    append = k_new is not None
+    assert append == (v_new is not None)
+    assert not (append and (quant or contiguous)), \
+        "fused append excludes quant/contiguous modes"
 
     grid = (b, kh, s_pad // block_s)
     kernel = functools.partial(
         _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
-        block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant)
+        block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant,
+        append=append)
+
+    def row_idx(b, h, s, meta_ref, tl_ref):
+        # target row window of the appended token; depends on the prefetched
+        # per-request length only (rank-independent slot formula)
+        return (b, h, _append_slot(tl_ref[b], kvp, rr_block, s_pad), 0)
 
     in_specs = [
         pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
@@ -144,12 +215,40 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
     ]
     args = (meta, tl, q, k, v)
+    out_specs = [
+        pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, kh, qp, hsz), q.dtype),
+        jax.ShapeDtypeStruct((b, kh, qp), jnp.float32),
+    ]
+    aliases = {}
     if quant:
         in_specs += [
             pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
             pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
         ]
         args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
+    if append:
+        in_specs += [
+            pl.BlockSpec((1, 1, hsz), lambda b, h, s, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, hsz), lambda b, h, s, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, 1, hsz), row_idx),
+            pl.BlockSpec((1, 1, 1, hsz), row_idx),
+        ]
+        args += (k_new, v_new, k, v)
+        out_specs += [
+            pl.BlockSpec((1, 1, 1, hsz), row_idx),
+            pl.BlockSpec((1, 1, 1, hsz), row_idx),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((b, kh, s_pad, hsz), k.dtype),
+            jax.ShapeDtypeStruct((b, kh, s_pad, hsz), v.dtype),
+        ]
+        # inputs are numbered including the 2 scalar-prefetch args:
+        # meta=0, tl=1, q=2, k=3, v=4 -> outputs 2/3 are the appended caches
+        aliases = {3: 2, 4: 3}
 
     return pl.pallas_call(
         kernel,
@@ -157,19 +256,14 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=in_specs,
-            out_specs=[
-                pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
-            ],
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((qp, hsz), jnp.float32),
                 pltpu.VMEM((qp, 1), jnp.float32),
                 pltpu.VMEM((qp, 1), jnp.float32),
             ],
         ),
-        out_shape=[
-            jax.ShapeDtypeStruct((b, kh, qp, hsz), q.dtype),
-            jax.ShapeDtypeStruct((b, kh, qp), jnp.float32),
-        ],
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
     )(*args)

@@ -22,6 +22,11 @@ Helix execution path when ``HelixConfig.attn_backend`` selects it):
     traced per-layer value.
   * ``kscale``/``vscale`` [B, Kh, S_cap] — int8 K/V cache mode: dequant
     happens inside the kernel, block-by-block in VMEM.
+  * ``k_new``/``v_new`` [B, Kh, hsz] — fused KV-append epilogue: the kernel
+    writes the new token's row into the (aliased) cache and attends over it,
+    so the separate ``append_kv`` cache round-trip disappears.  Requires the
+    round-robin layout without quant/slot_offset; ``total_len`` must already
+    count the appended token.  Returns ``(out, lse, kcache, vcache)``.
 
 Padded S slots are masked in-kernel against the true capacity (prefetch-free:
 it is a static kernel parameter), so any S_cap works in both layouts.
@@ -44,13 +49,34 @@ from repro.kernels.flash_decode.kernel import flash_decode_kernel
 def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
                  window=0, scale: float | None = None, block_s: int = 512,
                  interpret: bool = True, contiguous: bool = False,
-                 slot_offset=0, kscale=None, vscale=None):
+                 slot_offset=0, kscale=None, vscale=None,
+                 k_new=None, v_new=None):
+    """Decode-shape attention over one KV shard via the Pallas kernel.
+
+    This is the flash_decode *family* entry point the kernel-backend
+    registry routes to (``HelixConfig.attn_backend``); see the module
+    docstring for the full mode lattice and ``flash_decode_ref`` for the
+    oracle that defines the semantics.
+
+    Returns ``(out [B, Qh, hsz], lse [B, Qh] f32)``, plus the appended
+    ``(kcache, vcache)`` when ``k_new``/``v_new`` engage the fused-append
+    epilogue.
+    """
     b, qh, hsz = q.shape
     kh, s_cap = k.shape[1], k.shape[2]
     assert qh % kh == 0, (qh, kh)
     g = qh // kh
     if scale is None:
         scale = float(hsz) ** -0.5
+    append = k_new is not None
+    if append:
+        assert v_new is not None and kscale is None and not contiguous
+        # slot_offset may reach here as a (weak) tracer under an outer jit;
+        # only a concrete non-zero value can be rejected eagerly.  The Helix
+        # caller guarantees the slice fast path and fusion never overlap
+        # (core/helix.fuse_append_applicable).
+        assert not (isinstance(slot_offset, int) and slot_offset != 0), \
+            "fused append excludes the sliding-window cache-slice fast path"
 
     block_s = min(block_s, round_up(s_cap, 128))
     qp = round_up(g, 8)
@@ -69,11 +95,20 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
     tl = jnp.asarray(total_len, jnp.int32).reshape(-1)     # scalar -> [1]
     tl = jnp.broadcast_to(tl, (b,))
 
-    out, lse = flash_decode_kernel(
+    kw = {}
+    if append:
+        # match the unfused append_kv dtype cast so fusion is bit-exact
+        kw = dict(k_new=k_new.astype(k.dtype), v_new=v_new.astype(v.dtype))
+
+    res = flash_decode_kernel(
         qg, kp, vp, meta, tl, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_cap, contiguous=contiguous,
-        kscale=kscale, vscale=vscale, interpret=interpret)
+        kscale=kscale, vscale=vscale, interpret=interpret, **kw)
 
+    out, lse = res[0], res[1]
     out = out[:, :, :g, :].reshape(b, qh, hsz)
     lse = lse[:, :, :g].reshape(b, qh)
+    if append:
+        kc, vc = res[2][:, :, :s_cap], res[3][:, :, :s_cap]
+        return out, lse, kc, vc
     return out, lse

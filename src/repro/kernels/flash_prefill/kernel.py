@@ -1,4 +1,4 @@
-"""Pallas TPU flash-prefill kernel (causal/windowed full-seq attention).
+"""Pallas TPU flash-prefill kernel (full-sequence attention).
 
 TPU mapping
 -----------
@@ -8,6 +8,23 @@ TPU mapping
   q block   (blk_q, G*hsz)  resident per (b, h, qi)
   k/v block (blk_k, hsz)    streamed HBM->VMEM
   out       written at the last kv step (full row normalized)
+
+Masking semantics (shared with ref.py) are computed in-kernel from prefetched
+scalars only — no per-position mask array is read from HBM:
+
+  meta [2] int32 : (q_offset, window) — q_offset shifts the query positions
+                   (prefill continuation); window <= 0 disables the sliding-
+                   window mask and is a *runtime* scalar, so traced per-layer
+                   windows (gemma3 local/global scan) work.
+  lens [B] int32 : per-request valid KV lengths (continuous-batching prefill
+                   over right-padded prompts); kv positions >= lens[b] are
+                   masked.  Uniform batches prefetch a broadcast scalar.
+
+``causal`` is a static kernel parameter: True for decoder self-attention
+(key <= query), False for encoder-decoder cross attention (whisper), where
+T != S and only the lens/capacity masks apply.  Slots >= the true (unpadded)
+S are masked unconditionally, so S padding is exact even without causality.
+Fully-masked rows (lens[b] == 0) emit zeros, not NaNs.
 
 Causal block skipping: blocks entirely above the diagonal contribute
 nothing; the kernel masks them (grid still visits them — revisited in the
@@ -26,11 +43,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.utils import NEG_INF
 
 
-def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                    scale: float, window: int, blk_q: int, blk_k: int,
-                    g: int, hsz: int):
+def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                    m_ref, l_ref, *, scale: float, causal: bool, blk_q: int,
+                    blk_k: int, g: int, hsz: int, s_true: int):
+    bi = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
+    q_offset = meta_ref[0]
+    window = meta_ref[1]
+    kv_len = len_ref[bi]
 
     @pl.when(ki == 0)
     def _init():
@@ -48,11 +69,16 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                             preferred_element_type=jnp.float32)
     s = s.reshape(blk_q, g, blk_k)
 
-    qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, 1), 0)
+    qpos = q_offset + qi * blk_q \
+        + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, 1), 0)
     kpos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk_k), 2)
-    mask = kpos <= qpos
-    if window > 0:
-        mask = jnp.logical_and(mask, kpos > qpos - window)
+    # true-capacity + per-request-length masks apply in every mode; the
+    # causal / sliding-window masks only relate q and kv positions.
+    mask = jnp.logical_and(kpos < s_true, kpos < kv_len)
+    if causal:
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    mask = jnp.logical_and(
+        mask, jnp.where(window > 0, kpos > qpos - window, True))
     s = jnp.where(mask, s, NEG_INF)
 
     s2 = s.reshape(blk_q * g, blk_k)
@@ -60,6 +86,8 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
+    # masked lanes must not contribute when a whole row is masked
+    # (m_new == NEG_INF => exp(0) == 1 would pollute l), so gate p.
     p = jnp.where(mask2, jnp.exp(s2 - m_new), 0.0)
     l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
     acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
@@ -68,16 +96,22 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == pl.num_programs(3) - 1)
     def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-37)
-        out = (acc_ref[...] / l).reshape(blk_q, g * hsz)
-        o_ref[0, 0] = out.astype(o_ref.dtype)
+        l = l_ref[...]
+        denom = jnp.maximum(l, 1e-37)
+        out = jnp.where(l > 0, acc_ref[...] / denom, 0.0)
+        o_ref[0, 0] = out.reshape(blk_q, g * hsz).astype(o_ref.dtype)
 
 
-def flash_prefill_kernel(q, k, v, *, scale: float, window: int, blk_q: int,
-                         blk_k: int, interpret: bool = True):
-    """q [B, Kh, T, G*hsz]; k, v [B, Kh, S, hsz] (pre-blocked shapes).
+def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
+                         blk_q: int, blk_k: int, s_true: int,
+                         interpret: bool = True):
+    """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
-    Returns out [B, Kh, T, G*hsz] in q.dtype.
+    q [B, Kh, T_pad, G*hsz]; k, v [B, Kh, S_pad, hsz]; meta [2] int32
+    (q_offset, window); lens [B] int32 per-request valid KV lengths;
+    s_true: unpadded S (slots >= s_true are masked).
+
+    Returns out [B, Kh, T_pad, G*hsz] in q.dtype.
     """
     b, kh, t, ghsz = q.shape
     s, hsz = k.shape[2], k.shape[3]
@@ -85,23 +119,30 @@ def flash_prefill_kernel(q, k, v, *, scale: float, window: int, blk_q: int,
     assert t % blk_q == 0 and s % blk_k == 0
 
     grid = (b, kh, t // blk_q, s // blk_k)
-    kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
-                               blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz)
+    kernel = functools.partial(_prefill_kernel, scale=scale, causal=causal,
+                               blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz,
+                               s_true=s_true)
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, blk_q, ghsz), lambda b, h, qi, ki: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, blk_k, hsz), lambda b, h, qi, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, blk_k, hsz), lambda b, h, qi, ki: (b, h, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, blk_q, ghsz),
-                               lambda b, h, qi, ki: (b, h, qi, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((blk_q * g, hsz), jnp.float32),
-            pltpu.VMEM((blk_q * g, 1), jnp.float32),
-            pltpu.VMEM((blk_q * g, 1), jnp.float32),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, blk_q, ghsz),
+                             lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, blk_k, hsz),
+                             lambda b, h, qi, ki, *_: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, blk_k, hsz),
+                             lambda b, h, qi, ki, *_: (b, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, blk_q, ghsz),
+                                   lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((blk_q * g, hsz), jnp.float32),
+                pltpu.VMEM((blk_q * g, 1), jnp.float32),
+                pltpu.VMEM((blk_q * g, 1), jnp.float32),
+            ],
+        ),
         out_shape=jax.ShapeDtypeStruct((b, kh, t, ghsz), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(meta, lens, q, k, v)

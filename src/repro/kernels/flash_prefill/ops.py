@@ -1,5 +1,5 @@
 """jit'd public wrapper for flash_prefill: natural [B,T,Qh,hsz] layout,
-padding to block multiples, GQA head grouping."""
+padding to block multiples, GQA head grouping, scalar-prefetch packing."""
 from __future__ import annotations
 
 import functools
@@ -11,11 +11,38 @@ from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
 from repro.utils import round_up
 
 
-@functools.partial(jax.jit, static_argnames=("window", "scale", "blk_q",
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "blk_q",
                                              "blk_k", "interpret"))
-def flash_prefill(q, k, v, *, window: int = 0, scale: float | None = None,
+def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
+                  seq_lens=None, scale: float | None = None,
                   blk_q: int = 128, blk_k: int = 128, interpret: bool = True):
-    """q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> [B, T, Qh, hsz] (causal)."""
+    """Full-sequence attention via the Pallas flash-prefill kernel.
+
+    The kernel-backed sibling of ``models/attention.chunked_attention`` —
+    this is the flash_prefill *family* entry point the kernel-backend
+    registry routes to (``HelixConfig.prefill_backend``).
+
+    Args:
+      q: ``[B, T, Qh, hsz]`` queries; ``Qh % Kh == 0`` (GQA grouping).
+      k, v: ``[B, S, Kh, hsz]`` keys/values.  ``S == T`` for causal
+        self-attention; any ``S`` for cross attention (``causal=False``).
+      causal: static — mask ``kpos > qpos`` (decoder self-attention).
+      window: sliding window (``<= 0`` disables).  May be a *traced* scalar
+        (per-layer local/global windows under ``lax.scan``).
+      q_offset: global position of query row 0 (prefill continuation); may
+        be traced.
+      seq_lens: optional ``[B]`` int32 per-request valid KV lengths
+        (continuous-batching prefill over right-padded prompts); kv positions
+        ``>= seq_lens[b]`` are masked.  ``None`` means all ``S`` positions
+        are live.  Rows with ``seq_lens[b] == 0`` emit zeros.
+      scale: score scale; defaults to ``hsz ** -0.5``.
+      blk_q, blk_k: kernel block sizes (static; see docs/kernels.md).
+      interpret: run the kernel through the Pallas interpreter (any JAX
+        backend) instead of compiling for TPU.
+
+    Returns:
+      ``[B, T, Qh, hsz]`` attention output in ``q.dtype``.
+    """
     b, t, qh, hsz = q.shape
     s, kh = k.shape[1], k.shape[2]
     assert qh % kh == 0
@@ -35,10 +62,18 @@ def flash_prefill(q, k, v, *, window: int = 0, scale: float | None = None,
     qg = jnp.pad(qg, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
     kg = jnp.pad(kg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
     vg = jnp.pad(vg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
-    # pad rows beyond S are masked by causality for q<t; pad q rows produce
-    # garbage but are sliced away below.
+    # kv rows beyond the true S are masked in-kernel (s_true); pad q rows
+    # produce well-defined garbage and are sliced away below.
 
-    out = flash_prefill_kernel(qg, kg, vg, scale=scale, window=window,
-                               blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+    meta = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(window, jnp.int32)])
+    if seq_lens is None:
+        lens = jnp.full((b,), s, jnp.int32)
+    else:
+        lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
+
+    out = flash_prefill_kernel(qg, kg, vg, meta, lens, scale=scale,
+                               causal=causal, blk_q=blk_q, blk_k=blk_k,
+                               s_true=s, interpret=interpret)
     out = out[:, :, :t].reshape(b, kh, t, g, hsz).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, t, qh, hsz)

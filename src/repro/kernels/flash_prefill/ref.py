@@ -1,5 +1,6 @@
-"""Pure-jnp oracle for the flash_prefill kernel: causal (optionally
-sliding-window) full-sequence attention with GQA grouping."""
+"""Pure-jnp oracle for the flash_prefill kernel: full-sequence attention with
+GQA grouping — causal or cross, optional sliding window, query-position
+offset and per-request KV lengths (the complete model-caller contract)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,10 +8,22 @@ import jax.numpy as jnp
 from repro.utils import NEG_INF
 
 
-def flash_prefill_ref(q, k, v, *, window: int = 0, scale: float | None = None):
-    """q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> out [B, T, Qh, hsz].
+def flash_prefill_ref(q, k, v, *, causal: bool = True, window=0, q_offset=0,
+                      seq_lens=None, scale: float | None = None):
+    """Oracle full-sequence attention (defines the flash_prefill contract).
 
-    Causal: query t attends keys <= t (+ optional window of w latest).
+    Args:
+      q: ``[B, T, Qh, hsz]``; k, v: ``[B, S, Kh, hsz]`` (``Qh % Kh == 0``).
+      causal: query ``t`` attends keys ``<= t`` (positions offset by
+        ``q_offset``); ``False`` = cross attention (whisper), any ``S``.
+      window: sliding window of the ``w`` latest positions (``<= 0``
+        disables; may be traced).
+      q_offset: global position of query row 0 (may be traced).
+      seq_lens: optional ``[B]`` int32 valid-KV lengths; kv positions
+        ``>= seq_lens[b]`` are masked, fully-masked rows emit zeros.
+      scale: score scale; defaults to ``hsz ** -0.5``.
+
+    Returns: ``[B, T, Qh, hsz]`` in ``q.dtype``.
     """
     b, t, qh, hsz = q.shape
     s, kh = k.shape[1], k.shape[2]
@@ -19,13 +32,23 @@ def flash_prefill_ref(q, k, v, *, window: int = 0, scale: float | None = None):
         scale = hsz ** -0.5
     qf = q.astype(jnp.float32).reshape(b, t, kh, g, hsz) * scale
     scores = jnp.einsum("btkgd,bskd->bkgts", qf, k.astype(jnp.float32))
-    qpos = jnp.arange(t)[:, None]
+    qpos = jnp.arange(t)[:, None] + jnp.asarray(q_offset)
     kpos = jnp.arange(s)[None, :]
-    mask = kpos <= qpos
-    if window:
-        mask &= kpos > qpos - window
-    scores = jnp.where(mask, scores, NEG_INF)
-    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    w = jnp.asarray(window)
+    mask = mask & jnp.where(w > 0, kpos > qpos - w, True)
+    mask = jnp.broadcast_to(mask[None], (b, t, s))
+    if seq_lens is not None:
+        lens = jnp.asarray(seq_lens, jnp.int32)
+        mask = mask & (kpos[None] < lens[:, None, None])
+    maskh = mask[:, None, None, :, :]                    # [B,1,1,T,S]
+    scores = jnp.where(maskh, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m_safe = jnp.where(m <= NEG_INF, 0.0, m)
+    p = jnp.where(maskh, jnp.exp(scores - m_safe), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgts,bskd->btkgd",
+                     p / jnp.maximum(l, 1e-37), v.astype(jnp.float32))
     return out.reshape(b, t, qh, hsz).astype(q.dtype)

@@ -23,13 +23,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
-                h_ref, *, lc: int, hd: int, ds: int):
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref, y_ref,
+                hout_ref, h_ref, *, lc: int, hd: int, ds: int):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
+        # chunk-carry state seeded from the caller's initial state (prefill
+        # continuation / engine re-prefill); zeros for a fresh sequence.
+        h_ref[...] = h0_ref[0, 0].astype(jnp.float32)
 
     x = x_ref[0, 0].astype(jnp.float32)                  # [lc, hd]
     dt = dt_ref[0, 0].astype(jnp.float32)                # [lc, 1]
@@ -71,10 +73,11 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
         hout_ref[0, 0] = h_ref[...]
 
 
-def ssd_prefill_kernel(x, dt, a, bmat, cmat, d, *, lc: int,
+def ssd_prefill_kernel(x, dt, a, bmat, cmat, d, h0, *, lc: int,
                        interpret: bool = True):
     """Pre-blocked shapes: x [B, nh, T, hd]; dt [B, nh, T, 1];
-    a, d [nh, 1] f32; bmat, cmat [B, nh, T, ds].  T % lc == 0.
+    a, d [nh, 1] f32; bmat, cmat [B, nh, T, ds]; h0 [B, nh, hd, ds] f32
+    initial state.  T % lc == 0.
 
     Returns (y [B, nh, T, hd] f32, h_final [B, nh, hd, ds] f32).
     """
@@ -93,6 +96,7 @@ def ssd_prefill_kernel(x, dt, a, bmat, cmat, d, *, lc: int,
             pl.BlockSpec((1, 1, lc, ds), lambda b, h, c: (b, h, c, 0)),
             pl.BlockSpec((1, 1, lc, ds), lambda b, h, c: (b, h, c, 0)),
             pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, lc, hd), lambda b, h, c: (b, h, c, 0)),
@@ -104,4 +108,4 @@ def ssd_prefill_kernel(x, dt, a, bmat, cmat, d, *, lc: int,
             jax.ShapeDtypeStruct((b, nh, hd, ds), jnp.float32),
         ],
         interpret=interpret,
-    )(x, dt, a, bmat, cmat, d)
+    )(x, dt, a, bmat, cmat, d, h0)

@@ -11,12 +11,28 @@ from repro.utils import round_up
 
 
 @functools.partial(jax.jit, static_argnames=("lc", "interpret"))
-def ssd_prefill(x, dt, a, bmat, cmat, d, *, lc: int = 64,
+def ssd_prefill(x, dt, a, bmat, cmat, d, *, h0=None, lc: int = 64,
                 interpret: bool = True):
-    """Natural shapes (matching ssd_prefill_ref):
+    """Mamba2 SSD prefill scan core via the Pallas kernel.
 
-    x [B, T, nh, hd], dt [B, T, nh], a [nh], bmat/cmat [B, T, nh, ds],
-    d [nh] -> (y [B, T, nh, hd] f32, h [B, nh, hd, ds] f32).
+    The kernel-backed sibling of the ``models/ssm.ssd_chunked`` scan core —
+    this is the ssd_prefill *family* entry point the kernel-backend registry
+    routes to (``HelixConfig.ssd_backend``).  Natural shapes (matching
+    ``ssd_prefill_ref``):
+
+    Args:
+      x: ``[B, T, nh, hd]`` inputs (post conv + silu).
+      dt: ``[B, T, nh]`` softplus'd timestep.
+      a: ``[nh]`` negative decay rate (``A = -exp(A_log)``).
+      bmat, cmat: ``[B, T, nh, ds]`` in/out projections (group-expanded).
+      d: ``[nh]`` skip.
+      h0: optional ``[B, nh, hd, ds]`` initial state (prefill continuation);
+        ``None`` = zeros.
+      lc: chunk length (static; MXU-friendly 64/128).
+      interpret: Pallas interpreter (any backend) vs compiled TPU kernel.
+
+    Returns:
+      ``(y [B, T, nh, hd] f32, h_final [B, nh, hd, ds] f32)``.
     """
     b, t, nh, hd = x.shape
     ds = bmat.shape[-1]
@@ -28,7 +44,10 @@ def ssd_prefill(x, dt, a, bmat, cmat, d, *, lc: int = 64,
     dtb = jnp.pad(dt, pad[:3]).transpose(0, 2, 1)[..., None]
     bb = jnp.pad(bmat, pad).transpose(0, 2, 1, 3)
     cb = jnp.pad(cmat, pad).transpose(0, 2, 1, 3)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
     y, h = ssd_prefill_kernel(
         xb, dtb, a.astype(jnp.float32)[:, None],
-        bb, cb, d.astype(jnp.float32)[:, None], lc=lc, interpret=interpret)
+        bb, cb, d.astype(jnp.float32)[:, None], h0.astype(jnp.float32),
+        lc=lc, interpret=interpret)
     return y.transpose(0, 2, 1, 3)[:, :t], h

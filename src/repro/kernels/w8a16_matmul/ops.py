@@ -14,7 +14,15 @@ from repro.utils import round_up
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def w8a16_matmul(x, qw, scale, *, bm: int = 128, bn: int = 128, bk: int = 256,
                  interpret: bool = True):
-    """x [M, K] bf16/f32; qw [K, N] int8; scale [N] f32 -> [M, N]."""
+    """int8-weight x bf16/f32-activation matmul via the Pallas kernel.
+
+    The w8a16_matmul *family* entry point the kernel-backend registry
+    routes to (``HelixConfig.matmul_backend``).  Weights are dequantized
+    tile-by-tile in VMEM (per-output-column scales); shapes are padded to
+    the block sizes and sliced back.
+
+      x [M, K] bf16/f32; qw [K, N] int8; scale [N] f32 -> out [M, N].
+    """
     m, k = x.shape
     n = qw.shape[1]
     bm = min(bm, round_up(m, 8))

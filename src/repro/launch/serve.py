@@ -2,10 +2,18 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
       --requests 8 --prompt-len 32 --max-new 16
+
+Kernel backends (kernels/registry.py) are selectable per family:
+``--attn-backend`` routes the decode attention (flash_decode),
+``--prefill-backend`` the full-sequence prefill attention (flash_prefill),
+``--ssd-backend`` the Mamba2 SSD scan core (ssd_prefill); ``--no-fuse-append``
+opts out of the fused KV-append kernel epilogue.  ``--list-backends`` prints
+the per-family availability matrix and exits (CI smoke target).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -14,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.sharding import HelixConfig
+from repro.kernels.registry import BACKENDS, backend_table
 from repro.models.model_zoo import (build_serve_step, make_prefill_step)
 from repro.models.transformer import init_params
 from repro.serving import DecodeEngine, Request
@@ -22,31 +31,48 @@ from repro.utils import make_mesh
 
 def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                max_new: int, max_batch: int = 8, mesh=None, hx=None,
-               attn_backend: str | None = None, seed: int = 0, log=print):
+               attn_backend: str | None = None,
+               prefill_backend: str | None = None,
+               ssd_backend: str | None = None,
+               fuse_append: bool | None = None,
+               seed: int = 0, log=print):
+    """Run ``n_requests`` synthetic prompts through the continuous-batching
+    engine and report throughput.  Returns the finished ``Request`` list.
+
+    The ``*_backend`` arguments override the corresponding ``hx`` fields
+    (``None`` keeps the ``HelixConfig`` defaults); see kernels/registry.py.
+    """
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     if hx is None:
-        hx = HelixConfig(kvp_axes=(), tpa_axis=None)   # single-device
+        # single-device default; on a real mesh the caller supplies hx
+        hx = HelixConfig(kvp_axes=("data",) if mesh is None else (),
+                         tpa_axis=None)
+    overrides = {k: v for k, v in [("attn_backend", attn_backend),
+                                   ("prefill_backend", prefill_backend),
+                                   ("ssd_backend", ssd_backend),
+                                   ("fuse_append", fuse_append)]
+                 if v is not None}
+    if overrides:
+        hx = dataclasses.replace(hx, **overrides)
     kvp = hx.kvp(mesh) if mesh else 1
     max_seq = prompt_len + max_new + 1
 
     if mesh is not None:
-        serve_step = build_serve_step(cfg, mesh, hx,
-                                      attn_backend=attn_backend)
+        serve_step = build_serve_step(cfg, mesh, hx)
         prefill_step = make_prefill_step(cfg, mesh, hx)
     else:
         # single-device: 1x1 trivial mesh keeps one code path
         mesh1 = make_mesh((1, 1), ("data", "model"))
-        hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
-        serve_step = build_serve_step(cfg, mesh1, hx,
-                                      attn_backend=attn_backend)
+        serve_step = build_serve_step(cfg, mesh1, hx)
         prefill_step = make_prefill_step(cfg, mesh1, hx)
 
     engine = DecodeEngine(cfg, params, serve_step, prefill_step,
                           max_batch=max_batch, max_seq=max_seq, kvp=kvp,
                           hx=hx)
+    log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
     pending = [Request(rid=i,
                        prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
@@ -69,20 +95,38 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--attn-backend", default=None,
-                    choices=["ref", "pallas-interpret", "pallas"],
-                    help="decode-attention backend (default: HelixConfig's, "
-                         "i.e. 'ref'; 'pallas' needs a TPU)")
+    ap.add_argument("--attn-backend", default=None, choices=BACKENDS,
+                    help="flash_decode backend for decode attention "
+                         "(default: HelixConfig's, i.e. 'ref'; 'pallas' "
+                         "needs a TPU)")
+    ap.add_argument("--prefill-backend", default=None, choices=BACKENDS,
+                    help="flash_prefill backend for prompt prefill")
+    ap.add_argument("--ssd-backend", default=None, choices=BACKENDS,
+                    help="ssd_prefill backend for the Mamba2 SSD scan core")
+    ap.add_argument("--no-fuse-append", action="store_true",
+                    help="disable the fused KV-append kernel epilogue "
+                         "(pallas backends append via a separate cache pass)")
+    ap.add_argument("--list-backends", action="store_true",
+                    help="print the kernel registry's per-family backend "
+                         "availability matrix and exit")
     args = ap.parse_args()
+    if args.list_backends:
+        print(backend_table())
+        return
+    if not args.arch:
+        ap.error("--arch is required (or use --list-backends)")
     serve_demo(args.arch, reduced=args.reduced, n_requests=args.requests,
                prompt_len=args.prompt_len, max_new=args.max_new,
-               max_batch=args.max_batch, attn_backend=args.attn_backend)
+               max_batch=args.max_batch, attn_backend=args.attn_backend,
+               prefill_backend=args.prefill_backend,
+               ssd_backend=args.ssd_backend,
+               fuse_append=False if args.no_fuse_append else None)
 
 
 if __name__ == "__main__":

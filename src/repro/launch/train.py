@@ -28,7 +28,23 @@ def train(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
           lr: float = 3e-4, ckpt_dir: str | None = None, save_every: int = 50,
           mesh=None, seed: int = 0, log_every: int = 10,
           step_timeout_s: float = 600.0, param_dtype=jnp.float32,
+          prefill_backend: str = "ref", ssd_backend: str = "ref",
           log=print):
+    """Train ``arch`` for ``steps`` optimizer steps; returns (params,
+    opt_state, losses).
+
+    ``prefill_backend`` / ``ssd_backend`` route the attention and SSD-scan
+    hotspots through the kernel registry (kernels/registry.py); the pallas
+    backends carry a ref-VJP backward, so they compose with value_and_grad.
+    """
+    # fail fast on unavailable kernel backends (e.g. compiled 'pallas' on a
+    # CPU host) instead of dying inside the first jit'd step's lowering
+    from repro.kernels import registry
+    for family, be in (("flash_prefill", prefill_backend),
+                       ("ssd_prefill", ssd_backend)):
+        ok, why = registry.available(family, be)
+        if not ok:
+            raise RuntimeError(f"{family} backend {be!r} unavailable: {why}")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -37,7 +53,9 @@ def train(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
                                     global_batch=batch, seed=seed))
     params = init_params(cfg, jax.random.PRNGKey(seed), dtype=param_dtype)
     opt_state = adamw_init(params, optcfg)
-    step_fn = jax.jit(make_train_step(cfg, mesh, optcfg, chunk_q=min(seq, 512)))
+    step_fn = jax.jit(make_train_step(cfg, mesh, optcfg, chunk_q=min(seq, 512),
+                                      prefill_backend=prefill_backend,
+                                      ssd_backend=ssd_backend))
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start = 0
@@ -97,10 +115,18 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
+    from repro.kernels.registry import BACKENDS
+    ap.add_argument("--prefill-backend", default="ref", choices=BACKENDS,
+                    help="flash_prefill backend for full-sequence attention "
+                         "(ref-VJP backward on the pallas backends)")
+    ap.add_argument("--ssd-backend", default="ref", choices=BACKENDS,
+                    help="ssd_prefill backend for the Mamba2 SSD scan core")
     args = ap.parse_args()
     _, _, losses = train(args.arch, reduced=args.reduced, steps=args.steps,
                          batch=args.batch, seq=args.seq, lr=args.lr,
-                         ckpt_dir=args.ckpt_dir)
+                         ckpt_dir=args.ckpt_dir,
+                         prefill_backend=args.prefill_backend,
+                         ssd_backend=args.ssd_backend)
     print(f"[train] done; first-10 mean loss {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean loss {np.mean(losses[-10:]):.4f}")
 

@@ -186,6 +186,66 @@ def cross_attention(q, k, v, *, chunk_q: int = 512):
     return chunked_attention(q, k, v, causal=False, window=0, chunk_q=chunk_q)
 
 
+# --------------------------------------------------- kernel-backed prefill
+@functools.lru_cache(maxsize=None)
+def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
+                       unroll: bool):
+    """flash_prefill with a custom VJP whose backward re-runs the jnp
+    reference (``chunked_attention``) — Pallas kernels define no transpose
+    rule, so this is what lets the pallas backends run under
+    ``value_and_grad`` (train_step).  Forward values come from the kernel;
+    gradients are the oracle's (identical up to fp summation order, since
+    the forwards agree to that order)."""
+
+    @jax.custom_vjp
+    def f(q, k, v, window, q_offset):
+        from repro.kernels.flash_prefill.ops import flash_prefill
+        return flash_prefill(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, interpret=interpret)
+
+    def fwd(q, k, v, window, q_offset):
+        return f(q, k, v, window, q_offset), (q, k, v, window, q_offset)
+
+    def bwd(res, g):
+        q, k, v, window, q_offset = res
+        _, vjp = jax.vjp(
+            lambda q, k, v: chunked_attention(
+                q, k, v, causal=causal, window=window, chunk_q=chunk_q,
+                q_offset=q_offset, unroll=unroll), q, k, v)
+        dq, dk, dv = vjp(g)
+        zero = lambda x: np.zeros(np.shape(x), jax.dtypes.float0)
+        return dq, dk, dv, zero(window), zero(q_offset)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def prefill_attention(q, k, v, *, causal: bool = True, window=0,
+                      q_offset: int | jax.Array = 0, chunk_q: int = 512,
+                      unroll: bool = False, backend: str = "ref"):
+    """Full-sequence attention with kernel-backend selection.
+
+    The prefill/train sibling of ``decode_attention``: ``backend`` routes the
+    flash_prefill family through the registry lattice — ``"ref"`` is the
+    memory-bounded ``chunked_attention`` scan, ``"pallas-interpret"`` /
+    ``"pallas"`` the flash-prefill kernel (interpreted / compiled) with a
+    ref-VJP backward so training works.  ``window`` and ``q_offset`` may be
+    traced (per-layer windows under ``lax.scan``).
+
+      q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> out [B, T, Qh, hsz].
+    """
+    if backend == "ref":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 chunk_q=chunk_q, q_offset=q_offset,
+                                 unroll=unroll)
+    from repro.kernels import registry
+    registry.validate("flash_prefill", backend)
+    fn = _kernel_prefill_fn(causal, registry.interpret_flag(backend),
+                            chunk_q, unroll)
+    return fn(q, k, v, jnp.asarray(window, jnp.int32),
+              jnp.asarray(q_offset, jnp.int32))
+
+
 # ------------------------------------------------------------- decode
 def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
                      kvp: int = 1, rr_block: int = 16, rank=0,

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.helix import append_kv, append_kv_quant, helix_attention
+from repro.core.helix import (append_kv, append_kv_quant,
+                              fuse_append_applicable, helix_attention)
 from repro.core.sharding import HelixConfig
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (activation, apply_rope, rms_norm,
@@ -45,17 +46,38 @@ def _constrainer(mesh: Mesh):
 
 def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                      hopb_chunks: int = 4, return_logits: bool = False,
-                     unroll: bool = False, attn_backend: str | None = None):
-    """``attn_backend`` overrides ``hx.attn_backend`` (ref | pallas-interpret
-    | pallas) — the decode-attention kernel used inside helix_attention."""
+                     unroll: bool = False, attn_backend: str | None = None,
+                     fuse_append: bool | None = None):
+    """Build one autoregressive Helix decode step for ``cfg`` on ``mesh``.
+
+    Returns ``serve_step(params, state, tokens) -> (next_tokens, new_state)``
+    (jit-able; ``state`` from ``make_prefill_step`` or
+    ``core/kvcache.init_decode_state``).
+
+    Args:
+      hopb_chunks: HOP-B batch chunking inside helix_attention (§2.1.3);
+        degrades to 1 automatically when the batch doesn't divide.
+      return_logits: also return the full next-token logits.
+      unroll: unroll the layer-period scan (dry-run cost analysis).
+      attn_backend: overrides ``hx.attn_backend`` (``ref`` |
+        ``pallas-interpret`` | ``pallas``) — the flash_decode kernel family
+        backend used inside helix_attention (kernels/registry.py).
+      fuse_append: overrides ``hx.fuse_append`` — fuse the rr-slot KV append
+        into the decode kernel epilogue (Pallas backends only).
+    """
     import dataclasses
     import math
 
     from repro.core.helix import helix_out_dim
     from repro.core.sharding import dense_ffn_mode
 
+    overrides = {}
     if attn_backend is not None and attn_backend != hx.attn_backend:
-        hx = dataclasses.replace(hx, attn_backend=attn_backend)
+        overrides["attn_backend"] = attn_backend
+    if fuse_append is not None and fuse_append != hx.fuse_append:
+        overrides["fuse_append"] = fuse_append
+    if overrides:
+        hx = dataclasses.replace(hx, **overrides)
 
     kvp = hx.kvp(mesh)
     tpa_ax = hx.tpa_axis
@@ -94,18 +116,29 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             pos = pos[..., None] if jnp.ndim(pos) else pos[None]  # [B,1]/[1]
             q = apply_rope(q[:, None], pos, cfg.rope_theta)[:, 0]
             kn = apply_rope(kn[:, None], pos, cfg.rope_theta)[:, 0]
-        if kv8:
-            kc, vc, ks, vs = append_kv_quant(
-                kc, vc, ks, vs, kn, vn, tl_attn, kvp=kvp,
-                rr_block=hx.rr_block)
-        else:
-            kc, vc = append_kv(kc, vc, kn, vn, tl_attn, kvp=kvp,
-                               rr_block=hx.rr_block)
         chunks = hopb_chunks if b % hopb_chunks == 0 else 1
-        out = helix_attention(mesh, hx, q, kc, vc, tl_attn, window=win,
-                              hopb_chunks=chunks,
-                              kscale=ks if kv8 else None,
-                              vscale=vs if kv8 else None)
+        # Fused KV-append epilogue (§Perf, roadmap): on the Pallas backends
+        # the decode kernel writes kn/vn into the cache itself, skipping the
+        # separate append pass (one cache HBM round-trip per layer per
+        # step).  Static decision — falls back to append_kv for int8
+        # caches and windowed layers on the cache-slice fast path.
+        if fuse_append_applicable(hx, kvp, win, tl_attn, kc.shape[2],
+                                  quant=kv8):
+            out, kc, vc = helix_attention(
+                mesh, hx, q, kc, vc, tl_attn, window=win,
+                hopb_chunks=chunks, k_new=kn, v_new=vn)
+        else:
+            if kv8:
+                kc, vc, ks, vs = append_kv_quant(
+                    kc, vc, ks, vs, kn, vn, tl_attn, kvp=kvp,
+                    rr_block=hx.rr_block)
+            else:
+                kc, vc = append_kv(kc, vc, kn, vn, tl_attn, kvp=kvp,
+                                   rr_block=hx.rr_block)
+            out = helix_attention(mesh, hx, q, kc, vc, tl_attn, window=win,
+                                  hopb_chunks=chunks,
+                                  kscale=ks if kv8 else None,
+                                  vscale=vs if kv8 else None)
         # post-attention projection: TP = N over the combined (tpa, kvp)
         # layout; the All-Reduce the paper describes is emitted by GSPMD from
         # wo's input-dim sharding.

@@ -17,6 +17,7 @@ with A < 0 scalar per head (mamba2), B,C shared across heads per group.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -154,14 +155,49 @@ def ssd_scan_ref(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None
     return y, SSMState(new_conv, h_fin)
 
 
+# ------------------------------------------------- kernel-backed scan core
+@functools.lru_cache(maxsize=None)
+def _kernel_ssd_core(lc: int, interpret: bool):
+    """ssd_prefill kernel with a custom VJP whose backward re-runs the jnp
+    sequential-scan oracle — Pallas kernels define no transpose rule, so this
+    is what lets the pallas ssd backends run under ``value_and_grad``."""
+    from repro.kernels.ssd_prefill.ops import ssd_prefill
+    from repro.kernels.ssd_prefill.ref import ssd_prefill_ref
+
+    @jax.custom_vjp
+    def f(x, dt, a, bm, cm, d, h0):
+        return ssd_prefill(x, dt, a, bm, cm, d, h0=h0, lc=lc,
+                           interpret=interpret)
+
+    def fwd(x, dt, a, bm, cm, d, h0):
+        return f(x, dt, a, bm, cm, d, h0), (x, dt, a, bm, cm, d, h0)
+
+    def bwd(res, g):
+        primals = res
+        _, vjp = jax.vjp(lambda *args: ssd_prefill_ref(*args[:6], h0=args[6]),
+                         *primals)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 # ------------------------------------------------------------------ chunked
 def ssd_chunked(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None,
-                chunk: int = 64, unroll: bool = False):
+                chunk: int = 64, unroll: bool = False, backend: str = "ref"):
     """SSD block-matrix algorithm (Mamba2 paper §6); matmul-dominated.
 
     Within each chunk of Lc tokens:  Y_intra = (L ∘ (C Bᵀ)) · (dt·X)  with
     L[i,j] = exp(cum[i] - cum[j]) for i >= j; chunk states are carried by a
     scan over T/Lc chunks for the inter-chunk contribution.
+
+    ``backend`` routes the scan *core* (everything between the input split
+    and the gated out-projection) through the ssd_prefill kernel family:
+    ``"ref"`` keeps the inline jnp block-matrix math; ``"pallas-interpret"``
+    / ``"pallas"`` call kernels/ssd_prefill (interpreted / compiled) with a
+    ref-VJP backward so training works.  The projection, causal conv and
+    gated out-projection stay jnp either way (they are GSPMD-sharded
+    matmuls, not scan work).
     """
     b, t, _ = x.shape
     nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
@@ -181,14 +217,31 @@ def ssd_chunked(p: SSMParams, cfg: ArchConfig, x, state: SSMState | None = None,
     new_conv = hist[:, t:, :].transpose(0, 2, 1) if dc > 1 else state.conv
 
     xs, bb, cc = _split_xbc(cfg, xbc)
-    xs = xs.reshape(b, nc, lc, nh, hd).astype(jnp.float32)
     g = cfg.ssm_ngroups
+    hpg_flat = nh // g
+    a_neg = -jnp.exp(p.A_log)
+
+    if backend != "ref":
+        from repro.kernels import registry
+        registry.validate("ssd_prefill", backend)
+        xs_f = xs.reshape(b, t, nh, hd).astype(jnp.float32)
+        bb_f = jnp.repeat(bb.reshape(b, t, g, ds), hpg_flat,
+                          axis=2).astype(jnp.float32)
+        cc_f = jnp.repeat(cc.reshape(b, t, g, ds), hpg_flat,
+                          axis=2).astype(jnp.float32)
+        dtv_f = _dt_act(dt, p.dt_bias)                     # [B,T,nh]
+        core = _kernel_ssd_core(lc, registry.interpret_flag(backend))
+        ys, h_fin = core(xs_f, dtv_f, a_neg, bb_f, cc_f,
+                         p.D.astype(jnp.float32), state.ssm)
+        y = _gate_out(p, ys.reshape(b, t, cfg.d_inner).astype(x.dtype), z)
+        return y, SSMState(new_conv, h_fin)
+
+    xs = xs.reshape(b, nc, lc, nh, hd).astype(jnp.float32)
     bb = bb.reshape(b, nc, lc, g, ds).astype(jnp.float32)
     cc = cc.reshape(b, nc, lc, g, ds).astype(jnp.float32)
     hpg = nh // g
     dtv = _dt_act(dt, p.dt_bias).reshape(b, nc, lc, nh)
-    a = -jnp.exp(p.A_log)
-    dta = dtv * a                                       # log-decay per step
+    dta = dtv * a_neg                                   # log-decay per step
     cum = jnp.cumsum(dta, axis=2)                       # [B,nc,lc,nh]
 
     # intra-chunk: scores[i,j] = C_i·B_j * exp(cum_i - cum_j) * dt_j  (i>=j)

@@ -27,7 +27,7 @@ from repro.configs.base import ArchConfig
 from repro.models import ssm as ssm_lib
 from repro.models.attention import (HeadLayout, apply_kv_layout, apply_o_layout,
                                     apply_q_layout, chunked_attention,
-                                    head_layout)
+                                    head_layout, prefill_attention)
 from repro.models.layers import (activation, apply_rope, dense_init, embed_init,
                                  rms_norm, sinusoidal_positions, softcap)
 from repro.models.moe import MoEParams, init_moe, moe_ffn
@@ -115,8 +115,11 @@ def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
 # =============================================================== layer fwd
 def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
                 policy, causal=True, kv_override=None, q_offset=0,
-                chunk_q=512, unroll=False):
-    """Projection + (optionally cross-) attention + out-proj.  h [B,T,H]."""
+                chunk_q=512, unroll=False, attn_backend="ref"):
+    """Projection + (optionally cross-) attention + out-proj.  h [B,T,H].
+
+    ``attn_backend`` routes the attention core through the flash_prefill
+    kernel family (models/attention.prefill_attention)."""
     b, t, _ = h.shape
     hsz = cfg.hsz
     wq = apply_q_layout(ap["wq"], layout, hsz)
@@ -133,9 +136,9 @@ def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
             k = apply_rope(k, pos[None, :], cfg.rope_theta)
     else:
         k, v = kv_override                     # cross-attn: precomputed enc KV
-    out = chunked_attention(q, k, v, causal=causal, window=window,
+    out = prefill_attention(q, k, v, causal=causal, window=window,
                             chunk_q=chunk_q, q_offset=q_offset,
-                            unroll=unroll)
+                            unroll=unroll, backend=attn_backend)
     out = out.reshape(b, t, layout.q_pad * hsz)
     proj = policy(out, "dp", None, "tp") @ wo
     return policy(proj, "dp", None, None), (k, v)
@@ -152,8 +155,12 @@ def _ffn_block(cfg: ArchConfig, fp, h, policy):
 
 
 def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
-                  enc_out=None, moe_groups=1, chunk_q=512, unroll=False):
-    """One decoder layer.  Returns (x, (kcache, vcache, ssm_state, aux))."""
+                  enc_out=None, moe_groups=1, chunk_q=512, unroll=False,
+                  attn_backend="ref", ssd_backend="ref"):
+    """One decoder layer.  Returns (x, (kcache, vcache, ssm_state, aux)).
+
+    ``attn_backend`` / ``ssd_backend`` select the flash_prefill and
+    ssd_prefill kernel backends (kernels/registry.py)."""
     b, t, _ = x.shape
     h = rms_norm(x, lp["ln1"])
     cache_kv = (jnp.zeros((b, t, 0, cfg.hsz), x.dtype),) * 2
@@ -161,18 +168,22 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
     if cfg.has_attention and cfg.has_ssm:                       # hybrid
         a_out, cache_kv = _attn_block(cfg, lp["attn"], h, layout=layout,
                                       window=window, policy=policy,
-                                      chunk_q=chunk_q, unroll=unroll)
+                                      chunk_q=chunk_q, unroll=unroll,
+                                      attn_backend=attn_backend)
         s_out, ssm_state = ssm_lib.ssd_chunked(
-            ssm_lib.SSMParams(**lp["ssm"]), cfg, h, unroll=unroll)
+            ssm_lib.SSMParams(**lp["ssm"]), cfg, h, unroll=unroll,
+            backend=ssd_backend)
         x = x + 0.5 * (a_out + s_out)
     elif cfg.has_attention:
         a_out, cache_kv = _attn_block(cfg, lp["attn"], h, layout=layout,
                                       window=window, policy=policy,
-                                      chunk_q=chunk_q, unroll=unroll)
+                                      chunk_q=chunk_q, unroll=unroll,
+                                      attn_backend=attn_backend)
         x = x + a_out
     else:                                                        # pure ssm
         s_out, ssm_state = ssm_lib.ssd_chunked(
-            ssm_lib.SSMParams(**lp["ssm"]), cfg, h, unroll=unroll)
+            ssm_lib.SSMParams(**lp["ssm"]), cfg, h, unroll=unroll,
+            backend=ssd_backend)
         x = x + s_out
 
     if enc_out is not None:                                      # cross-attn
@@ -185,7 +196,7 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
         x_out, _ = _attn_block(cfg, lp["xattn"], hx, layout=xl, window=0,
                                policy=policy, causal=False,
                                kv_override=(kx, vx), chunk_q=chunk_q,
-                               unroll=unroll)
+                               unroll=unroll, attn_backend=attn_backend)
         x = x + x_out
 
     aux = jnp.zeros((), jnp.float32)
@@ -220,11 +231,16 @@ def layer_windows(cfg: ArchConfig) -> np.ndarray:
 def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
             patch_embeds=None, enc_frames=None, return_cache: bool = False,
             moe_groups: int = 1, chunk_q: int = 512, tp_width: int = 1,
-            remat: bool = True, unroll: bool = False):
+            remat: bool = True, unroll: bool = False,
+            prefill_backend: str = "ref", ssd_backend: str = "ref"):
     """Full-sequence forward.  tokens [B, T] int32 -> (logits, extras).
 
     extras = {"aux_loss": scalar, "kcache"/"vcache": [L,B,T,Kh_p,hsz],
               "ssm_conv"/"ssm_state": [L,...]} (caches when return_cache).
+
+    ``prefill_backend`` / ``ssd_backend`` route the attention and SSD-scan
+    hotspots through the kernel registry (ref | pallas-interpret | pallas);
+    the pallas backends use a ref-VJP backward, so gradients flow (train).
     """
     b, t = tokens.shape
     x = params["embed"][tokens]                                 # [B,T,H]
@@ -239,7 +255,8 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
     if cfg.is_encdec:
         from repro.models.encdec import encode                  # lazy: cycle
         enc_out = encode(cfg, params["enc"], enc_frames, policy=policy,
-                         chunk_q=chunk_q, unroll=unroll)
+                         chunk_q=chunk_q, unroll=unroll,
+                         attn_backend=prefill_backend)
         x = x + sinusoidal_positions(t, cfg.d_model)[None].astype(x.dtype)
 
     layout = (head_layout(cfg.n_heads, cfg.n_kv_heads, tp_width)
@@ -251,7 +268,8 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
         y, (kc, vc, sst, aux) = decoder_layer(
             cfg, lp, carry, layout=layout, window=win, policy=policy,
             enc_out=enc_out, moe_groups=moe_groups, chunk_q=chunk_q,
-            unroll=unroll)
+            unroll=unroll, attn_backend=prefill_backend,
+            ssd_backend=ssd_backend)
         outs = (kc, vc, sst, aux) if return_cache else \
             (None, None, None, aux)
         return y, outs

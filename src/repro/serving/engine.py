@@ -36,6 +36,16 @@ class Request:
 
 
 class DecodeEngine:
+    """Slot-based continuous-batching decode engine over a Helix serve_step.
+
+    Holds a fixed ``[max_batch]`` decode state with per-request lengths;
+    ``add_request`` prefills a prompt into a free slot (scattering its
+    caches — layouts match by construction), ``step`` advances every active
+    slot one token and retires finished requests.  ``hx`` (when given)
+    pins the round-robin block size and is validated against the kernel
+    registry so unavailable backends fail fast.
+    """
+
     def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
                  prefill_step: Callable, *, max_batch: int, max_seq: int,
                  kvp: int = 1, rr_block: int = 16,
@@ -46,6 +56,16 @@ class DecodeEngine:
         # that half stays the caller's contract.
         if hx is not None:
             rr_block = hx.rr_block
+            # fail fast on unavailable kernel backends (e.g. 'pallas'
+            # requested on a CPU host) instead of erroring steps later
+            # inside the first jit'd prefill
+            from repro.kernels import registry
+            for field, family in registry.FAMILY_FIELDS.items():
+                ok, why = registry.available(family, getattr(hx, field))
+                if not ok:
+                    raise RuntimeError(
+                        f"{field}={getattr(hx, field)!r} unavailable: {why}")
+        self.hx = hx
         self.cfg = cfg
         self.params = params
         self.serve_step = jax.jit(serve_step)
@@ -114,10 +134,21 @@ class DecodeEngine:
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Step until every slot drains (or ``max_steps`` elapses)."""
         for _ in range(max_steps):
             if not any(self.slots):
                 return
             self.step()
+
+    def describe_backends(self) -> str:
+        """One-line per-family kernel-backend summary (serve logging)."""
+        if self.hx is None:
+            return "ref (no HelixConfig)"
+        from repro.kernels import registry
+        parts = [f"{family}={getattr(self.hx, field)}"
+                 for field, family in registry.FAMILY_FIELDS.items()]
+        parts.append(f"fuse_append={self.hx.fuse_append}")
+        return " ".join(parts)
 
 
 def _copy_rr(src, dst, kvp: int):

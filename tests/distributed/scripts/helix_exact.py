@@ -81,6 +81,23 @@ np.testing.assert_allclose(np.asarray(pl4), np.asarray(rf4), rtol=2e-6,
                            atol=2e-6)
 print("pallas-interpret backend == ref (scalar, [B] tl, 2-D, windowed): OK")
 
+# ---- fused KV-append epilogue == unfused through the 8-way shard_map ----
+kn = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))
+vn = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))
+for tl_new in (total_len + 1, jnp.asarray([201, 38, 151, 10], jnp.int32)):
+    kc_u, vc_u = append_kv(k_rr, v_rr, kn, vn, tl_new, kvp=KVP, rr_block=RR)
+    with set_mesh(mesh):
+        out_u = jax.jit(lambda q, k, v: helix_attention(
+            mesh, hx_pl, q, k, v, tl_new))(q, kc_u, vc_u)
+        out_f, kc_f, vc_f = jax.jit(
+            lambda q, k, v, kn, vn: helix_attention(
+                mesh, hx_pl, q, k, v, tl_new, k_new=kn, v_new=vn))(
+                    q, k_rr, v_rr, kn, vn)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+    np.testing.assert_array_equal(np.asarray(kc_f), np.asarray(kc_u))
+    np.testing.assert_array_equal(np.asarray(vc_f), np.asarray(vc_u))
+print("fused KV-append epilogue == unfused (KVP=8, scalar + [B] tl): OK")
+
 # ---- append_kv round-robin ----
 kc = jnp.zeros((B, KH, S_CAP, HSZ))
 vc = jnp.zeros((B, KH, S_CAP, HSZ))

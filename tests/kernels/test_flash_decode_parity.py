@@ -123,6 +123,98 @@ def test_kernel_traced_window():
                                    rtol=2e-6, atol=2e-6)
 
 
+# ---------------------------------------------------- fused KV-append mode
+def _append_unfused(k, v, k_new, v_new, tls, rank):
+    """Oracle append: write the new row on its owner rank's local slot."""
+    kc = np.asarray(k).copy()
+    vc = np.asarray(v).copy()
+    tlb = np.broadcast_to(np.asarray(tls, np.int32).reshape(-1), (B,))
+    for b in range(B):
+        pos = int(tlb[b]) - 1
+        blk = pos // RR
+        if blk % KVP == rank:
+            j = (blk // KVP) * RR + pos % RR
+            if j < kc.shape[2]:
+                kc[b, :, j] = np.asarray(k_new)[b]
+                vc[b, :, j] = np.asarray(v_new)[b]
+    return kc, vc
+
+
+@pytest.mark.parametrize("per_request", [False, True],
+                         ids=["scalar-tl", "perreq-tl"])
+@pytest.mark.parametrize("window", [0, 48], ids=["full", "windowed"])
+def test_fused_append_bit_exact(per_request, window):
+    """Fused-append kernel == unfused (append outside, then attend):
+    outputs, LSEs and the appended caches are all bit-identical, on every
+    rank (owners write, non-owners restore)."""
+    q, k, v = _mk()
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    k_new = jax.random.normal(ks[0], (B, KH, HSZ))
+    v_new = jax.random.normal(ks[1], (B, KH, HSZ))
+    if per_request:
+        total_len = jnp.asarray([S_CAP * KVP - 7, 33], jnp.int32)
+    else:
+        total_len = S_CAP * KVP - 7
+    for rank in range(KVP):
+        kc_ref, vc_ref = _append_unfused(k, v, k_new, v_new, total_len, rank)
+        out_u, lse_u = flash_decode(q, jnp.asarray(kc_ref),
+                                    jnp.asarray(vc_ref), total_len, rank,
+                                    kvp=KVP, rr_block=RR, window=window,
+                                    block_s=64, interpret=True)
+        out_f, lse_f, kc_f, vc_f = flash_decode(
+            q, k, v, total_len, rank, kvp=KVP, rr_block=RR, window=window,
+            block_s=64, interpret=True, k_new=k_new, v_new=v_new)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+        np.testing.assert_array_equal(np.asarray(lse_f), np.asarray(lse_u))
+        np.testing.assert_array_equal(np.asarray(kc_f), kc_ref)
+        np.testing.assert_array_equal(np.asarray(vc_f), vc_ref)
+
+
+def test_fused_append_padded_s():
+    """Fused append with S not a block multiple: the padded copy is sliced
+    back to the true capacity and stays bit-exact with the unfused path."""
+    q, k, v = _mk()
+    k48, v48 = k[:, :, :48], v[:, :, :48]
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    k_new = jax.random.normal(ks[0], (B, KH, HSZ))
+    v_new = jax.random.normal(ks[1], (B, KH, HSZ))
+    tls = jnp.asarray([100, 5], jnp.int32)
+    for rank in range(KVP):
+        kc_ref, vc_ref = _append_unfused(k48, v48, k_new, v_new, tls, rank)
+        out_u, _ = flash_decode(q, jnp.asarray(kc_ref), jnp.asarray(vc_ref),
+                                tls, rank, kvp=KVP, rr_block=RR, block_s=32,
+                                interpret=True)
+        out_f, _, kc_f, vc_f = flash_decode(
+            q, k48, v48, tls, rank, kvp=KVP, rr_block=RR, block_s=32,
+            interpret=True, k_new=k_new, v_new=v_new)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+        np.testing.assert_array_equal(np.asarray(kc_f), kc_ref)
+        np.testing.assert_array_equal(np.asarray(vc_f), vc_ref)
+
+
+def test_fused_append_attends_new_token():
+    """The appended token actually participates: with total_len pointing at
+    a previously-zero slot, fused attention != attention over the stale
+    cache, and == ref attention over the appended cache."""
+    q, k, v = _mk()
+    tl = 177                      # owner rank = ((176 // 16) % 4) = 3
+    rank = 3
+    kn = jnp.ones((B, KH, HSZ)) * 0.5
+    vn = jnp.ones((B, KH, HSZ)) * -0.25
+    out_f, lse_f, kc_f, vc_f = flash_decode(
+        q, k, v, tl, rank, kvp=KVP, rr_block=RR, block_s=64, interpret=True,
+        k_new=kn, v_new=vn)
+    stale, _ = flash_decode(q, k, v, tl, rank, kvp=KVP, rr_block=RR,
+                            block_s=64, interpret=True)
+    assert not np.allclose(np.asarray(out_f), np.asarray(stale))
+    ref_out, ref_lse = flash_decode_ref(q, kc_f, vc_f, tl, rank, kvp=KVP,
+                                        rr_block=RR)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(ref_out),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(lse_f), np.asarray(ref_lse),
+                               rtol=2e-6, atol=2e-6)
+
+
 def test_kernel_empty_perreq_rows():
     """Per-request lengths where one row has an empty shard."""
     q, k, v = _mk()

@@ -112,3 +112,84 @@ def test_serve_step_backend_override_matches_ref():
 def test_invalid_backend_rejected():
     with pytest.raises(AssertionError):
         HelixConfig(kvp_axes=("data",), attn_backend="cuda")
+    with pytest.raises(AssertionError):
+        HelixConfig(kvp_axes=("data",), prefill_backend="triton")
+    with pytest.raises(AssertionError):
+        HelixConfig(kvp_axes=("data",), ssd_backend="cuda")
+
+
+# ------------------------------------------------------- fused KV append
+def test_helix_attention_fused_append_bit_exact():
+    """helix_attention(k_new=...) == append_kv then helix_attention, bit for
+    bit (output and caches), for scalar and per-request lengths and under
+    HOP-B chunking."""
+    from repro.core.helix import append_kv
+    mesh = _mesh1()
+    hx = _hx("pallas-interpret")
+    q, k, v = _mk()
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    kn = jax.random.normal(ks[0], (2, 2, 64))
+    vn = jax.random.normal(ks[1], (2, 2, 64))
+
+    for tl, chunks in [(60, 1), (jnp.asarray([60, 23], jnp.int32), 1),
+                       (60, 2)]:
+        kc_u, vc_u = append_kv(k, v, kn, vn, tl, kvp=1, rr_block=hx.rr_block)
+        out_u = jax.jit(lambda q, k, v: helix_attention(
+            mesh, hx, q, k, v, tl, hopb_chunks=chunks))(q, kc_u, vc_u)
+        out_f, kc_f, vc_f = jax.jit(lambda q, k, v, kn, vn: helix_attention(
+            mesh, hx, q, k, v, tl, hopb_chunks=chunks, k_new=kn,
+            v_new=vn))(q, k, v, kn, vn)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+        np.testing.assert_array_equal(np.asarray(kc_f), np.asarray(kc_u))
+        np.testing.assert_array_equal(np.asarray(vc_f), np.asarray(vc_u))
+
+
+def test_fuse_append_applicable_gating():
+    """Static fusion eligibility: on for plain pallas decode, off for ref /
+    opt-out / quant / contiguous / the windowed cache-slice fast path."""
+    from repro.core.helix import fuse_append_applicable
+    import dataclasses
+    hx = _hx("pallas-interpret")
+    assert fuse_append_applicable(hx, 4, 0, 100, 256)
+    assert not fuse_append_applicable(_hx("ref"), 4, 0, 100, 256)
+    assert not fuse_append_applicable(
+        dataclasses.replace(hx, fuse_append=False), 4, 0, 100, 256)
+    assert not fuse_append_applicable(hx, 4, 0, 100, 256, quant=True)
+    assert not fuse_append_applicable(hx, 4, 0, 100, 256, contiguous=True)
+    # static window small enough to engage the cache-slice fast path
+    assert not fuse_append_applicable(hx, 4, 32, 1000, 1024)
+    # traced/per-request total_len: slice path can't engage -> fusible
+    assert fuse_append_applicable(hx, 4, 32, jnp.zeros((2,), jnp.int32), 1024)
+
+
+def test_serve_step_fused_append_matches_unfused():
+    """Full serve_step: fused-append decode == unfused decode == ref decode
+    (greedy tokens identical; caches bit-exact between fused and unfused)."""
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg, mesh, hx, s_cap=64))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    _, state0 = prefill(params, {"tokens": toks})
+
+    def decode(backend, fuse, n=3):
+        serve = jax.jit(build_serve_step(cfg, mesh, hx, attn_backend=backend,
+                                         fuse_append=fuse))
+        state = dict(state0)
+        cur = jnp.zeros((2,), jnp.int32)
+        outs = []
+        for _ in range(n):
+            cur, state = serve(params, state, cur)
+            outs.append(np.asarray(cur))
+        return np.stack(outs), state
+
+    t_ref, _ = decode("ref", None)
+    t_unf, s_unf = decode("pallas-interpret", False)
+    t_fus, s_fus = decode("pallas-interpret", True)
+    np.testing.assert_array_equal(t_unf, t_ref)
+    np.testing.assert_array_equal(t_fus, t_unf)
+    np.testing.assert_array_equal(np.asarray(s_fus["kcache"]),
+                                  np.asarray(s_unf["kcache"]))
+    np.testing.assert_array_equal(np.asarray(s_fus["vcache"]),
+                                  np.asarray(s_unf["vcache"]))

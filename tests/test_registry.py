@@ -1,0 +1,101 @@
+"""Kernel-backend registry: routing, validation, availability, the
+HelixConfig per-family fields and the engine/CLI surfaces built on top."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import registry
+from repro.core.sharding import HelixConfig
+
+
+def test_families_and_fields_agree():
+    assert set(registry.FAMILY_FIELDS.values()) == set(registry.FAMILIES)
+    hx = HelixConfig(kvp_axes=("data",))
+    for field, family in registry.FAMILY_FIELDS.items():
+        assert hasattr(hx, field)
+        assert hx.backend_for(family) == getattr(hx, field)
+
+
+def test_validate_rejects_unknown():
+    with pytest.raises(ValueError):
+        registry.validate("flash_decode", "cuda")
+    with pytest.raises(ValueError):
+        registry.validate("nope", "ref")
+    with pytest.raises(ValueError):
+        HelixConfig(kvp_axes=("data",)).backend_for("nope")
+
+
+def test_resolve_routes_to_ref_and_kernel():
+    from repro.kernels.flash_decode.ops import flash_decode
+    from repro.kernels.flash_decode.ref import flash_decode_ref
+    assert registry.resolve("flash_decode", "ref") is flash_decode_ref
+    assert registry.resolve("flash_decode", "pallas-interpret") is flash_decode
+    for family in registry.FAMILIES:
+        for backend in registry.BACKENDS:
+            assert callable(registry.resolve(family, backend))
+
+
+def test_interpret_flag():
+    assert registry.interpret_flag("pallas-interpret") is True
+    assert registry.interpret_flag("pallas") is False
+    assert registry.uses_kernel("pallas")
+    assert not registry.uses_kernel("ref")
+
+
+def test_availability_matches_platform():
+    on_tpu = jax.devices()[0].platform == "tpu"
+    for family in registry.FAMILIES:
+        assert registry.available(family, "ref")[0]
+        assert registry.available(family, "pallas-interpret")[0]
+        assert registry.available(family, "pallas")[0] == on_tpu
+
+
+def test_backend_table_lists_every_family():
+    table = registry.backend_table()
+    for family in registry.FAMILIES:
+        assert family in table
+    for backend in registry.BACKENDS:
+        assert backend in table
+
+
+def test_engine_rejects_unavailable_backend():
+    """DecodeEngine fails fast when a requested backend can't run here
+    (compiled 'pallas' on a CPU host)."""
+    if jax.devices()[0].platform == "tpu":
+        pytest.skip("compiled pallas is available on TPU")
+    from repro.configs import get_config
+    from repro.serving import DecodeEngine
+    cfg = get_config("granite-3-2b").reduced()
+    hx = HelixConfig(kvp_axes=("data",), attn_backend="pallas")
+    with pytest.raises(RuntimeError, match="attn_backend"):
+        DecodeEngine(cfg, {}, lambda *a: None, lambda *a: None,
+                     max_batch=1, max_seq=32, hx=hx)
+
+
+def test_engine_describe_backends():
+    from repro.configs import get_config
+    from repro.serving import DecodeEngine
+    cfg = get_config("granite-3-2b").reduced()
+    hx = HelixConfig(kvp_axes=("data",), attn_backend="pallas-interpret",
+                     fuse_append=False)
+    eng = DecodeEngine(cfg, {}, lambda *a: None, lambda *a: None,
+                       max_batch=1, max_seq=32, hx=hx)
+    desc = eng.describe_backends()
+    assert "flash_decode=pallas-interpret" in desc
+    assert "fuse_append=False" in desc
+
+
+def test_list_backends_cli():
+    """launch/serve.py --list-backends prints the matrix and exits cleanly
+    (the scripts/ci.sh smoke target)."""
+    import subprocess, sys, os, pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--list-backends"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "flash_decode" in out.stdout and "ssd_prefill" in out.stdout
