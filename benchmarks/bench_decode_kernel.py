@@ -1,29 +1,37 @@
 """Decode-attention microbenchmark: ref (pure jnp) vs the Pallas
-flash-decode kernel, swept over KV length S — including the fused KV-append
-epilogue vs the separate append_kv pass.
+flash-decode kernel, swept over KV capacity S and cache fill — including
+the fused KV-append epilogue vs the separate append_kv pass, and the
+block-accounting numbers for length-aware pruning.
 
   PYTHONPATH=src python benchmarks/bench_decode_kernel.py \
       [--backends ref pallas-interpret] [--s 4096 16384 65536] \
-      [--batch 4] [--iters 20] [--json BENCH_decode.json] [--no-fused]
+      [--fill 1.0 0.25] [--batch 4] [--iters 20] \
+      [--json BENCH_decode.json] [--no-fused] [--no-prune]
 
 Each measured step is one *full decode attention step including the KV
 append* (that is what serve_step pays per layer): append_kv + attention for
 the unfused rows, the in-kernel append epilogue for the ``+fused`` rows.
+``--fill`` sweeps the cache occupancy (total_len = fill * S): at fill < 1 a
+slot-provisioned engine pays for dead capacity unless the kernel prunes it.
 
 Results are also written as machine-readable JSON (default
 ``BENCH_decode.json``) so the perf trajectory is tracked across PRs:
 
   {"meta": {device, b, qh, kh, hsz, iters}, "rows":
-   [{"s": 4096, "timings_ms": {"ref": 33.2, "pallas-interpret": ...,
-                               "pallas-interpret+fused": ...}}]}
+   [{"s": 4096, "fill": 0.25, "total_len": 1024,
+     "timings_ms": {"ref": ..., "pallas-interpret+fused": ...},
+     "accounting": {"pruned": {blocks_visited, bytes_read, ...},
+                    "dense":  {...}}}]}
 
+The ``accounting`` block comes from ``flash_decode_accounting`` (the
+registry's accounting layer): it replays the kernel's pruning index_map and
+reports the K/V blocks/bytes the kernel actually streams from HBM — the
+number that matters on TPU, where decode TTL is DRAM-bound (PAPER.md §1).
 On CPU only `ref` and `pallas-interpret` are available; the interpreter's
 wall-clock is NOT kernel performance (it executes the kernel body step by
-step) — its purpose here is exercising the exact code path.  On a TPU host
-pass ``--backends ref pallas`` for real numbers: the kernel streams the KV
-shard HBM->VMEM once, which is the §2.1 DRAM-bound regime the paper's TTL
-model assumes, and the fused epilogue additionally drops the append pass's
-cache round-trip.
+step, and it also cannot elide the pruned blocks' DMAs — only the compiled
+``pallas`` backend realizes the bytes_read reduction as time).  On a TPU
+host pass ``--backends ref pallas`` for real numbers.
 """
 from __future__ import annotations
 
@@ -35,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.helix import append_kv
-from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.kernels.flash_decode import (flash_decode, flash_decode_ref,
+                                        flash_decode_accounting)
 
 
 def _mk(b, qh, kh, s, hsz):
@@ -49,12 +58,13 @@ def _mk(b, qh, kh, s, hsz):
 
 
 def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
-              iters: int, fused: bool = False, warmup: int = 3) -> float:
+              iters: int, total_len: int | None = None, fused: bool = False,
+              prune: bool = True, warmup: int = 3) -> float:
     """Mean seconds per decode-attention step (append + attend) at KV
-    length ``s``.  ``fused=True`` uses the in-kernel append epilogue
-    (Pallas backends only)."""
+    capacity ``s`` filled to ``total_len`` (default: full).  ``fused=True``
+    uses the in-kernel append epilogue (Pallas backends only)."""
     q, k, v, kn, vn = _mk(b, qh, kh, s, hsz)
-    total_len = s  # fully-populated cache: worst-case read volume
+    total_len = s if total_len is None else total_len
     interpret = backend != "pallas"
 
     if fused:
@@ -62,7 +72,7 @@ def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
 
         def step(q, k, v, kn, vn):
             out, _, kc, vc = flash_decode(q, k, v, total_len, 0, kvp=1,
-                                          k_new=kn, v_new=vn,
+                                          k_new=kn, v_new=vn, prune=prune,
                                           interpret=interpret)
             return out, kc, vc
     elif backend == "ref":
@@ -73,7 +83,7 @@ def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
     else:
         def step(q, k, v, kn, vn):
             kc, vc = append_kv(k, v, kn, vn, total_len, kvp=1, rr_block=16)
-            out, _ = flash_decode(q, kc, vc, total_len, 0, kvp=1,
+            out, _ = flash_decode(q, kc, vc, total_len, 0, kvp=1, prune=prune,
                                   interpret=interpret)
             return out, kc, vc
 
@@ -89,42 +99,63 @@ def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
     return (time.perf_counter() - t0) / iters
 
 
+def _accounting(b, qh, kh, s, hsz, total_len):
+    """Pruned vs dense K/V block accounting for one bench config.  Only
+    shapes/dtypes are consumed, so ShapeDtypeStructs avoid materializing
+    the (potentially multi-GiB) K/V tensors a second time."""
+    q = jax.ShapeDtypeStruct((b, qh, hsz), jnp.float32)
+    k = v = jax.ShapeDtypeStruct((b, kh, s, hsz), jnp.float32)
+    out = {}
+    for label, prune in (("pruned", True), ("dense", False)):
+        out[label] = flash_decode_accounting(q, k, v, total_len, 0, kvp=1,
+                                             prune=prune)
+    return out
+
+
 def run(backends=("ref", "pallas-interpret"), s_values=(1024, 4096),
-        b: int = 4, qh: int = 32, kh: int = 8, hsz: int = 128,
-        iters: int = 10, fused: bool = True,
-        json_path: str | None = "BENCH_decode.json"):
-    """Sweep ``backends`` (plus their fused-append variants) over KV lengths
-    ``s_values``; prints a table and writes ``json_path``.  Returns the rows
-    as ``[(s, {label: seconds})]``."""
+        fills=(1.0, 0.25), b: int = 4, qh: int = 32, kh: int = 8,
+        hsz: int = 128, iters: int = 10, fused: bool = True,
+        prune: bool = True, json_path: str | None = "BENCH_decode.json"):
+    """Sweep ``backends`` (plus their fused-append variants) over KV
+    capacities ``s_values`` x cache fills ``fills``; prints a table, records
+    block/bytes accounting, and writes ``json_path``.  Returns the rows as
+    ``[(s, fill, total_len, {label: seconds}, accounting)]``."""
     dev = jax.devices()[0].platform
     variants = [(be, False) for be in backends]
     if fused:
         variants += [(be, True) for be in backends if be != "ref"]
     labels = [be + ("+fused" if fz else "") for be, fz in variants]
     print(f"[bench_decode_kernel] device={dev} B={b} Qh={qh} Kh={kh} "
-          f"hsz={hsz} iters={iters} (append + attend per step)")
-    kv_bytes = lambda s: 2 * b * kh * s * hsz * 4   # f32 K+V read volume
-    header = f"{'S':>8s} " + "".join(f"{lb:>24s}" for lb in labels) \
-        + f"{'KV bytes':>12s}"
+          f"hsz={hsz} iters={iters} prune={prune} "
+          f"(append + attend per step)")
+    header = f"{'S':>8s} {'fill':>5s} " \
+        + "".join(f"{lb:>24s}" for lb in labels) \
+        + f"{'KV read (pruned/dense)':>26s}"
     print(header)
     rows = []
     for s in s_values:
-        times = {lb: bench_one(be, b=b, qh=qh, kh=kh, s=s, hsz=hsz,
-                               iters=iters, fused=fz)
-                 for lb, (be, fz) in zip(labels, variants)}
-        row = f"{s:>8d} " + "".join(f"{times[lb] * 1e3:>21.2f} ms"
-                                    for lb in labels) \
-            + f"{kv_bytes(s) / 2**20:>10.1f} Mi"
-        print(row)
-        rows.append((s, times))
+        for fill in fills:
+            total_len = max(int(s * fill), 1)
+            times = {lb: bench_one(be, b=b, qh=qh, kh=kh, s=s, hsz=hsz,
+                                   iters=iters, total_len=total_len,
+                                   fused=fz, prune=prune)
+                     for lb, (be, fz) in zip(labels, variants)}
+            acc = _accounting(b, qh, kh, s, hsz, total_len)
+            row = f"{s:>8d} {fill:>5.2f} " \
+                + "".join(f"{times[lb] * 1e3:>21.2f} ms" for lb in labels) \
+                + (f"{acc['pruned']['bytes_read'] / 2**20:>12.1f}"
+                   f" /{acc['dense']['bytes_total'] / 2**20:>9.1f} Mi")
+            print(row)
+            rows.append((s, fill, total_len, times, acc))
     if json_path:
         payload = {
             "meta": {"device": dev, "b": b, "qh": qh, "kh": kh, "hsz": hsz,
-                     "iters": iters, "unit": "ms",
+                     "iters": iters, "unit": "ms", "prune": prune,
                      "step": "append_kv + decode attention"},
-            "rows": [{"s": s,
-                      "timings_ms": {lb: t * 1e3 for lb, t in times.items()}}
-                     for s, times in rows],
+            "rows": [{"s": s, "fill": fill, "total_len": total_len,
+                      "timings_ms": {lb: t * 1e3 for lb, t in times.items()},
+                      "accounting": acc}
+                     for s, fill, total_len, times, acc in rows],
         }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
@@ -138,6 +169,8 @@ def main():
                     default=["ref", "pallas-interpret"],
                     choices=["ref", "pallas-interpret", "pallas"])
     ap.add_argument("--s", nargs="+", type=int, default=[1024, 4096])
+    ap.add_argument("--fill", nargs="+", type=float, default=[1.0, 0.25],
+                    help="cache occupancy fractions (total_len = fill * S)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--qh", type=int, default=32)
     ap.add_argument("--kh", type=int, default=8)
@@ -145,12 +178,15 @@ def main():
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--no-fused", action="store_true",
                     help="skip the fused KV-append epilogue variants")
+    ap.add_argument("--no-prune", action="store_true",
+                    help="run the Pallas kernel without block pruning")
     ap.add_argument("--json", default="BENCH_decode.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
-    run(backends=tuple(args.backends), s_values=tuple(args.s), b=args.batch,
-        qh=args.qh, kh=args.kh, hsz=args.hsz, iters=args.iters,
-        fused=not args.no_fused, json_path=args.json or None)
+    run(backends=tuple(args.backends), s_values=tuple(args.s),
+        fills=tuple(args.fill), b=args.batch, qh=args.qh, kh=args.kh,
+        hsz=args.hsz, iters=args.iters, fused=not args.no_fused,
+        prune=not args.no_prune, json_path=args.json or None)
 
 
 if __name__ == "__main__":

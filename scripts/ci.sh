@@ -21,4 +21,8 @@ python scripts/check_docs.py
 # kernel-registry smoke: imports every family and prints the backend matrix
 python -m repro.launch.serve --list-backends
 
+# block-pruning smoke: pruning shrinks visited K/V blocks at short lengths
+# (and to the causal triangle in prefill) while outputs stay bit-exact
+python scripts/prune_smoke.py
+
 python -m pytest -q "$@"

@@ -70,17 +70,24 @@ def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
     """Static check: can this decode step run the fused KV-append epilogue?
 
     The fused path (kernels/flash_decode append mode) writes the new token's
-    K/V row inside the kernel, eliminating the separate ``append_kv`` cache
-    round-trip.  It requires a Pallas backend with ``hx.fuse_append`` on, a
-    non-quantized round-robin cache, and must not collide with the
-    sliding-window cache-slice fast path (which attends over a *slice* of
-    the shard — an in-kernel write there would miss the real cache).  All
-    inputs are trace-time static, so the choice costs nothing at runtime.
+    K/V row inside the kernel — quantizing it in-kernel for int8 caches —
+    eliminating the separate ``append_kv``/``append_kv_quant`` cache
+    round-trip.  It requires a Pallas backend with ``hx.fuse_append`` on and
+    a round-robin cache, and must not collide with the sliding-window
+    cache-slice fast path (which attends over a *slice* of the shard — an
+    in-kernel write there would miss the real cache).  With
+    ``hx.prune_blocks`` (the default) that conflict cannot arise: in-kernel
+    block pruning subsumes the slice fast path, so windowed layers fuse
+    too.  All inputs are trace-time static, so the choice costs nothing at
+    runtime.
     """
     if hx.attn_backend == "ref" or not hx.fuse_append:
         return False
-    if quant or contiguous:
+    if contiguous:
         return False
+    del quant  # int8 caches fuse too (in-kernel quantization)
+    if hx.prune_blocks:
+        return True
     s_loc = s_cap // kvp
     return _window_slice(total_len, 0, s_loc, kvp=kvp, rr_block=hx.rr_block,
                          window=window) is None
@@ -88,7 +95,8 @@ def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
 
 def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                   contiguous: bool, kscale=None, vscale=None,
-                  backend: str = "ref", k_new=None, v_new=None):
+                  backend: str = "ref", k_new=None, v_new=None,
+                  prune: bool = True):
     """Per-rank partial attention + LSE over the local KV shard.
 
     contiguous=True: static split (whisper cross-attn KV) — every local slot
@@ -99,21 +107,27 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
     mode.  The kernel covers every mode natively (per-request [B] lengths,
     contiguous layout, sliding window, int8 dequant from scales), so all
     backends are drop-in exact up to fp summation order.
+    prune: in-kernel block pruning (Pallas backends) — HBM reads scale with
+    the valid length / window, not the slot capacity, which subsumes the
+    caller-side cache-slice fast path below.
     k_new/v_new [B, Kh, hsz]: fused KV-append epilogue (Pallas backends
     only; see ``fuse_append_applicable``) — the kernel appends the new
     token's row to the local shard and returns
-    ``(out, lse, kcache, vcache)`` instead of ``(out, lse)``.
+    ``(out, lse, kcache, vcache)`` (+ the updated scales for int8 caches)
+    instead of ``(out, lse)``.
     """
     s_loc = k.shape[2]
     fused = k_new is not None
     assert not fused or backend != "ref", \
         "fused append requires a Pallas backend"
-    # Sliding-window cache-slice fast path, shared by every backend: slice
-    # the live span out of the shard and re-align positions via slot_offset.
-    # Incompatible with the fused append (the kernel must write the real
-    # cache, not a slice) — fuse_append_applicable() excludes the overlap.
+    # Sliding-window cache-slice fast path: slice the live span out of the
+    # shard and re-align positions via slot_offset.  Only worth it where the
+    # kernel can't prune for itself — the ref backend, or a Pallas backend
+    # with pruning disabled.  Incompatible with the fused append (the kernel
+    # must write the real cache, not a slice) —
+    # fuse_append_applicable() excludes the overlap.
     slot_offset = 0
-    if not contiguous and not fused:
+    if not contiguous and not fused and (backend == "ref" or not prune):
         sl = _window_slice(total_len, rank, s_loc, kvp=kvp,
                            rr_block=rr_block, window=window)
         if sl is not None:
@@ -131,7 +145,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                             rr_block=rr_block, window=window,
                             contiguous=contiguous, slot_offset=slot_offset,
                             kscale=kscale, vscale=vscale,
-                            k_new=k_new, v_new=v_new,
+                            k_new=k_new, v_new=v_new, prune=prune,
                             interpret=backend != "pallas")
     # ---- pure-JAX reference path ----
     if contiguous:
@@ -167,14 +181,17 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
       k_new/v_new:  [B, Kh, hsz] — fused KV-append epilogue: the new token's
                     K/V row is written into the cache *inside* the decode
                     kernel (its owner rank's shard), replacing the separate
-                    ``append_kv`` pass.  Pass the pre-append caches and a
-                    ``total_len`` that already counts the new token; the
-                    caller must have checked ``fuse_append_applicable``.
+                    ``append_kv`` pass.  With an int8 cache (kscale/vscale
+                    given) the kernel quantizes the row in-kernel and also
+                    returns the updated scales.  Pass the pre-append caches
+                    and a ``total_len`` that already counts the new token;
+                    the caller must have checked ``fuse_append_applicable``.
 
     Returns: [B, Qh*hsz] attention output, sharded over (tpa, kvp) on dim 1 —
     exactly the TP layout the post-attention projection consumes (§2.2).
     In fused-append mode returns ``(out, kcache, vcache)`` with the appended
-    caches (same global layout/sharding as the inputs).
+    caches (same global layout/sharding as the inputs), plus
+    ``(kscale, vscale)`` for int8 caches.
     """
     import math
     b, qh, hsz = q.shape
@@ -183,7 +200,7 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
     kvp = math.prod(mesh.shape[a] for a in kvp_axes)
     qh_local = qh // (mesh.shape[tpa] if tpa else 1)
     fused = k_new is not None
-    assert not fused or (kscale is None and not contiguous)
+    assert not fused or not contiguous
     # The all-to-all splits the flattened (Qh_local*hsz) dim into KVP slices.
     # When it does not divide (e.g. hymba q_dim=1600, N=256) we zero-pad the
     # flat dim only — attention itself runs the canonical heads; pad elements
@@ -202,15 +219,16 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         rank = jax.lax.axis_index(kvp_axes)
         ks_l = vs_l = kn_l = vn_l = None
         if kscale is not None:
-            ks_l, vs_l = extras
-        elif fused:
+            ks_l, vs_l, extras = extras[0], extras[1], extras[2:]
+        if fused:
             kn_l, vn_l = extras
         res = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
                             rr_block=hx.rr_block, window=window,
                             contiguous=contiguous,
                             kscale=ks_l, vscale=vs_l,
                             backend=hx.attn_backend,
-                            k_new=kn_l, v_new=vn_l)
+                            k_new=kn_l, v_new=vn_l,
+                            prune=hx.prune_blocks)
         out, lse = res[0], res[1]
         bl = out.shape[0]
         # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
@@ -226,7 +244,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
             head_idx_table, rank, axis=0, keepdims=False)
         combined = combine_fragments(frags, lses, my_slice)   # [B, sl]
         if fused:
-            return combined, res[2], res[3]     # + appended local KV shards
+            # + appended local KV shards (and updated scales for int8)
+            return (combined,) + tuple(res[2:])
         return combined
 
     tl_spec = P() if jnp.ndim(total_len) == 0 else P(None)
@@ -241,10 +260,16 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
     if fused:
         in_specs += (P(None, tpa, None), P(None, tpa, None))  # k_new, v_new
     out_spec = P(None, ((tpa,) if tpa else ()) + kvp_axes)
+    scale_spec = P(None, tpa, kvp_axes)
+    if fused:
+        out_specs = (out_spec, cache_spec, cache_spec)
+        if quant:
+            out_specs += (scale_spec, scale_spec)
+    else:
+        out_specs = out_spec
     shard_fn = shard_map(
         local_fn, mesh=mesh, in_specs=in_specs,
-        out_specs=(out_spec, cache_spec, cache_spec) if fused else out_spec,
-        check_vma=False)
+        out_specs=out_specs, check_vma=False)
 
     def call(qs, ks, vs, tl, kss, vss, kns, vns):
         args = (qs, ks, vs, tl)
@@ -272,7 +297,7 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                          v_new[csl] if fused else None))
     if fused:
         return tuple(jnp.concatenate([o[i] for o in outs], axis=0)
-                     for i in range(3))
+                     for i in range(len(outs[0])))
     return jnp.concatenate(outs, axis=0)
 
 

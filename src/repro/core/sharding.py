@@ -90,9 +90,23 @@ class HelixConfig:
     matmul_backend: str = "ref"          # w8a16_matmul (int8-weight matmul)
     fuse_append: bool = True             # fuse the rr-slot KV append into the
     #   flash-decode kernel epilogue (saves one cache HBM round-trip per
-    #   layer per step).  Only active on the pallas backends, for fp16/32
-    #   round-robin caches without the sliding-window cache-slice fast path;
+    #   layer per step).  Only active on the pallas backends, for round-robin
+    #   caches (fp and int8 — the kernel quantizes the new token in-kernel);
     #   set False to force the separate append_kv pass (bit-exact either way).
+    prune_blocks: bool = True            # length/causality-aware block
+    #   pruning in the Pallas attention kernels: invalid K/V blocks are
+    #   *skipped* (index_map clamp elides their DMAs), not masked, so
+    #   per-request HBM reads scale with the true sequence length (and the
+    #   window on sliding-window layers) instead of the slot capacity.
+    #   Bit-exact either way; False restores the dense sweep (and, on the
+    #   Pallas backends, re-enables the caller-side windowed cache-slice
+    #   fast path the pruning subsumes).
+    lm_head_w8: bool = False             # quantize the lm_head weights to
+    #   int8 (per-column symmetric) on the decode path and run the logits
+    #   matmul through the w8a16_matmul family (``matmul_backend`` picks the
+    #   oracle or the Pallas kernel).  Changes numerics (weight-only
+    #   quantization); all matmul_backend choices agree on the same
+    #   quantized weights up to fp summation order.
 
     def __post_init__(self):
         from repro.kernels import registry

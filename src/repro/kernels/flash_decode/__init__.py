@@ -41,9 +41,11 @@ never materializes in HBM.
 
 Benchmark: benchmarks/bench_decode_kernel.py (ref vs kernel over S).
 """
-from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ops import (flash_decode,
+                                            flash_decode_accounting)
+from repro.kernels.flash_decode.kernel import prune_block_range
 from repro.kernels.flash_decode.ref import (
     flash_decode_ref, shard_positions, local_valid_len)
 
-__all__ = ["flash_decode", "flash_decode_ref", "shard_positions",
-           "local_valid_len"]
+__all__ = ["flash_decode", "flash_decode_accounting", "flash_decode_ref",
+           "prune_block_range", "shard_positions", "local_valid_len"]

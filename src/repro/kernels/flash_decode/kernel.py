@@ -34,6 +34,28 @@ contiguous (whisper cross-attention KV split) pos = rank*S_true + j.  Slots
 j >= S_true (the unpadded local capacity) are masked unconditionally, so S
 padding is exact in both layouts.
 
+Block pruning (``prune=True``, the default)
+-------------------------------------------
+Positions are strictly increasing in the local slot index in *both* layouts,
+so the valid slots of a request form one contiguous span ``[jj_lo, jj_hi)``
+(``jj_lo > 0`` only with a sliding window).  Instead of sweeping the full
+padded capacity and masking dead blocks, the kernel
+
+  1. clamps the K/V (and scale) ``index_map`` to that span — grid step ``s``
+     streams physical block ``min(lo + s, hi - 1)``, so every pruned step
+     references the block of the previous step and Pallas TPU elides the
+     HBM->VMEM DMA entirely;
+  2. skips the compute body of pruned steps with ``pl.when``.
+
+Per-step HBM traffic drops from O(S_cap) to O(valid_len) per request —
+O(window) for sliding-window layers, which subsumes the caller-side
+dynamic-slice fast path (``slot_offset``) and composes with every other mode
+(per-request lengths, contiguous layout, quant, fused append).  Pruned and
+unpruned results are bit-identical: a fully-masked block contributes the
+identity online-softmax update.  ``prune_block_range`` is the single source
+of truth for the span; the block-accounting layer (ops.py) replays it to
+report blocks/bytes actually streamed.
+
 Quant mode (§Perf kv8): K/V arrive int8 with per-(B, Kh, slot) f32 scales and
 are dequantized block-by-block in VMEM — the f32 copy of the shard never
 exists in HBM.
@@ -58,8 +80,16 @@ kernel is correct under both write-back policies Pallas implementations use
 position lives on exactly one KVP rank) write back the unmodified row read
 through a matching (1, 1, 1, hsz) *input* window.  Append mode composes with
 per-request [B] lengths (each row appends at its own slot) but excludes the
-quant/contiguous/slot_offset modes — the Helix caller falls back to the
+contiguous layout (static cross-attention KV is never appended) and the
+``slot_offset`` cache-slice path — the Helix caller falls back to the
 unfused ``append_kv`` there (core/helix.py).
+
+int8 append (append + quant): the new token's row arrives *unquantized*
+(f32); the kernel quantizes it in VMEM with the same per-(B, Kh) symmetric
+formula as ``core/helix.quantize_kv_token`` (scale = max|x|/127, round,
+clip) and persists payload + scale through aliased (1, 1, 1, hsz) / (1, 1, 1)
+row windows, so the fused path is bit-exact with ``append_kv_quant`` followed
+by the attention pass.
 """
 from __future__ import annotations
 
@@ -71,6 +101,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.utils import NEG_INF
+from repro.kernels.flash_decode.ref import local_valid_len
+from repro.kernels.pruning import phys_block as _phys_block
 
 
 def _append_slot(total_len, kvp: int, rr_block: int, s_max: int):
@@ -83,10 +115,68 @@ def _append_slot(total_len, kvp: int, rr_block: int, s_max: int):
     return jnp.clip(j, 0, s_max - 1)
 
 
+def _quantize_row(x):
+    """In-kernel mirror of ``core/helix.quantize_kv_token`` for one [hsz]
+    f32 row: (int8-valued f32 payload, f32 scale).  Must stay formula-exact
+    with the host-side version so fused int8 append is bit-identical."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q, scale
+
+
+def valid_slot_span(total_len, rank, slot_offset, window, *, kvp: int,
+                    rr_block: int, s_true: int, contiguous: bool):
+    """``[jj_lo, jj_hi)`` — the physical-slot span that can hold unmasked
+    slots for one request.
+
+    Positions are strictly increasing in the local slot index in both
+    layouts, so ``pos < total_len`` bounds a prefix and (with a window)
+    ``pos >= total_len - window`` bounds a suffix; their intersection is one
+    contiguous span.  All arguments may be traced scalars (this runs inside
+    Pallas ``index_map``s against prefetched scalars).
+    """
+    total_len = jnp.maximum(jnp.asarray(total_len, jnp.int32), 0)
+    window = jnp.asarray(window, jnp.int32)
+    if contiguous:
+        j_hi = total_len - rank * s_true
+        j_lo = total_len - window - rank * s_true
+    else:
+        j_hi = local_valid_len(total_len, rank, kvp, rr_block)
+        j_lo = local_valid_len(jnp.maximum(total_len - window, 0), rank, kvp,
+                               rr_block)
+    jj_hi = jnp.clip(j_hi - slot_offset, 0, s_true)
+    jj_lo = jnp.where(window > 0, jnp.clip(j_lo - slot_offset, 0, s_true), 0)
+    return jj_lo, jj_hi
+
+
+def prune_block_range(total_len, rank, slot_offset, window, *, kvp: int,
+                      rr_block: int, block_s: int, s_true: int,
+                      contiguous: bool = False):
+    """(first_block, n_valid_blocks) of the S-block span a request can touch.
+
+    The single source of truth for decode block pruning: the kernel's K/V
+    ``index_map``s clamp to this range (so pruned grid steps re-reference the
+    previous block and the DMA is elided), the kernel body skips compute
+    outside it, and ``ops.flash_decode_accounting`` replays it to count the
+    blocks/bytes actually streamed.
+    """
+    jj_lo, jj_hi = valid_slot_span(total_len, rank, slot_offset, window,
+                                   kvp=kvp, rr_block=rr_block, s_true=s_true,
+                                   contiguous=contiguous)
+    lo = jj_lo // block_s
+    hi = (jj_hi + block_s - 1) // block_s
+    return lo, jnp.maximum(hi - lo, 0)
+
+
 def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
                    kvp: int, rr_block: int, block_s: int, s_true: int,
-                   contiguous: bool, quant: bool, append: bool):
-    if append:
+                   contiguous: bool, quant: bool, append: bool, prune: bool):
+    if append and quant:
+        (kscale_ref, vscale_ref, knew_ref, vnew_ref,
+         krow_in_ref, vrow_in_ref, ksrow_in_ref, vsrow_in_ref,
+         o_ref, lse_ref, krow_out_ref, vrow_out_ref,
+         ksrow_out_ref, vsrow_out_ref, acc_ref, m_ref, l_ref) = rest
+    elif append:
         (knew_ref, vnew_ref, krow_in_ref, vrow_in_ref, o_ref, lse_ref,
          krow_out_ref, vrow_out_ref, acc_ref, m_ref, l_ref) = rest
     elif quant:
@@ -95,6 +185,7 @@ def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
         o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     bi = pl.program_id(0)
     si = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
     rank = meta_ref[0]
     slot_offset = meta_ref[1]
     window = meta_ref[2]
@@ -106,64 +197,99 @@ def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    kraw = k_ref[0, 0]                                   # [bs, hsz] cache dtype
-    vraw = v_ref[0, 0]
-    if append:
-        # epilogue part 1: substitute the new token's row into the VMEM tile
-        # (the streamed HBM block is pre-append) ...
-        j_new = _append_slot(total_len, kvp, rr_block, pl.num_programs(2)
-                             * block_s)
-        owner = (((total_len - 1) // rr_block) % kvp) == rank
-        local = j_new - si * block_s
-        rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)
-        hit = jnp.logical_and(owner, rows == local)
-        kn = knew_ref[0, 0]                              # [hsz] cache dtype
-        vn = vnew_ref[0, 0]
-        kraw = jnp.where(hit, kn[None, :], kraw)
-        vraw = jnp.where(hit, vn[None, :], vraw)
-        # ... part 2: persist the row through the aliased (1,1,1,hsz) output
-        # window (idempotent re-write each S step; non-owners restore the
-        # row they read).
-        krow_out_ref[0, 0, 0] = jnp.where(owner, kn, krow_in_ref[0, 0, 0])
-        vrow_out_ref[0, 0, 0] = jnp.where(owner, vn, vrow_in_ref[0, 0, 0])
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # [Qp, hsz]
-    k = kraw.astype(jnp.float32)                         # [bs, hsz]
-    v = vraw.astype(jnp.float32)
-    if quant:
-        k = k * kscale_ref[0, 0][:, None]
-        v = v * vscale_ref[0, 0][:, None]
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [Qp, bs]
-
-    # Global positions of this block's slots (computed, not read).  jj is the
-    # physical (possibly padded) slot index; j the logical one after the
-    # sliding-window slice offset.
-    jj = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
-    j = jj + slot_offset
-    if contiguous:
-        pos = rank * s_true + j
+    if prune:
+        lo_blk, nb = prune_block_range(
+            total_len, rank, slot_offset, window, kvp=kvp, rr_block=rr_block,
+            block_s=block_s, s_true=s_true, contiguous=contiguous)
+        phys = _phys_block(si, lo_blk, nb, n_blocks)
+        active = si < nb
     else:
-        pos = ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
-    mask = jnp.logical_and(jj < s_true, pos < total_len)
-    mask = jnp.logical_and(
-        mask, jnp.where(window > 0, pos >= total_len - window, True))
+        phys, active = si, None
 
-    s = jnp.where(mask, s, NEG_INF)
+    if append:
+        # epilogue: derive the new token's slot/ownership, quantize in quant
+        # mode, and persist the row through the aliased (1,1,1,hsz) output
+        # windows (idempotent re-write each S step — correct under both
+        # write-back policies; non-owners restore the row they read).
+        j_new = _append_slot(total_len, kvp, rr_block, n_blocks * block_s)
+        owner = (((total_len - 1) // rr_block) % kvp) == rank
+        kn = knew_ref[0, 0]                              # [hsz]
+        vn = vnew_ref[0, 0]
+        if quant:
+            kn, ks_new = _quantize_row(kn)               # int8-valued f32
+            vn, vs_new = _quantize_row(vn)
+            ksrow_out_ref[0, 0, 0] = jnp.where(owner, ks_new,
+                                               ksrow_in_ref[0, 0, 0])
+            vsrow_out_ref[0, 0, 0] = jnp.where(owner, vs_new,
+                                               vsrow_in_ref[0, 0, 0])
+        krow_out_ref[0, 0, 0] = jnp.where(
+            owner, kn.astype(krow_out_ref.dtype), krow_in_ref[0, 0, 0])
+        vrow_out_ref[0, 0, 0] = jnp.where(
+            owner, vn.astype(vrow_out_ref.dtype), vrow_in_ref[0, 0, 0])
 
-    m_prev = m_ref[...]                                   # [Qp, 1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    # exp(NEG_INF - NEG_INF)=1 is harmless (l, acc still 0); but masked lanes
-    # must not contribute when m_new == NEG_INF, so gate p by the mask.
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)          # [Qp, bs]
-    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    def _compute():
+        kraw = k_ref[0, 0]                               # [bs, hsz] cache dt
+        vraw = v_ref[0, 0]
+        if quant:
+            kscale = kscale_ref[0, 0]                    # [bs] f32
+            vscale = vscale_ref[0, 0]
+        if append:
+            # substitute the new token's row into the VMEM tile (the
+            # streamed HBM block is pre-append); in quant mode the
+            # quantized payload + scale are substituted so fusion stays
+            # bit-exact with append-then-attend.
+            local = j_new - phys * block_s
+            rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)
+            hit = jnp.logical_and(owner, rows == local)
+            kraw = jnp.where(hit, kn[None, :].astype(kraw.dtype), kraw)
+            vraw = jnp.where(hit, vn[None, :].astype(vraw.dtype), vraw)
+            if quant:
+                kscale = jnp.where(hit[:, 0], ks_new, kscale)
+                vscale = jnp.where(hit[:, 0], vs_new, vscale)
 
-    @pl.when(si == pl.num_programs(2) - 1)
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [Qp, hsz]
+        k = kraw.astype(jnp.float32)                     # [bs, hsz]
+        v = vraw.astype(jnp.float32)
+        if quant:
+            k = k * kscale[:, None]
+            v = v * vscale[:, None]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [Qp,bs]
+
+        # Global positions of this block's slots (computed, not read).  jj is
+        # the physical (possibly padded) slot index; j the logical one after
+        # the sliding-window slice offset.
+        jj = phys * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_s), 1)
+        j = jj + slot_offset
+        if contiguous:
+            pos = rank * s_true + j
+        else:
+            pos = ((j // rr_block) * kvp + rank) * rr_block + (j % rr_block)
+        mask = jnp.logical_and(jj < s_true, pos < total_len)
+        mask = jnp.logical_and(
+            mask, jnp.where(window > 0, pos >= total_len - window, True))
+
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [Qp, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # exp(NEG_INF - NEG_INF)=1 is harmless (l, acc still 0); but masked
+        # lanes must not contribute when m_new == NEG_INF, so gate p.
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)      # [Qp, bs]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if prune:
+        pl.when(active)(_compute)
+    else:
+        _compute()
+
+    @pl.when(si == n_blocks - 1)
     def _finalize():
         l = l_ref[...]
         denom = jnp.maximum(l, 1e-37)
@@ -175,18 +301,23 @@ def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
 def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
                         rr_block: int, block_s: int, s_true: int,
                         contiguous: bool = False, kscale=None, vscale=None,
-                        k_new=None, v_new=None, interpret: bool = True):
+                        k_new=None, v_new=None, prune: bool = True,
+                        interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
     q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; meta: [3] int32
     (rank, slot_offset, window); tl: [B] int32 per-request lengths;
     kscale/vscale: [B, Kh, S_pad] f32 (int8-cache mode — k/v are int8);
-    k_new/v_new: [B, Kh, hsz] in cache dtype (fused-append mode — excludes
-    quant/contiguous; tl must already include the appended token).
+    k_new/v_new: [B, Kh, hsz] — fused-append mode (excludes contiguous; tl
+    must already include the appended token).  fp caches take k_new in the
+    cache dtype; int8 caches take the *unquantized* f32 row and quantize it
+    in-kernel (payload + per-(B,Kh) scale written through aliased windows).
     s_true: unpadded local capacity (slots >= s_true are masked).
+    prune: skip fully-invalid S blocks (index_map clamp + pl.when) instead
+    of masking them — bit-exact either way.
     returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32), plus the
-    appended caches kc, vc [B, Kh, S_pad, hsz] (aliased with k, v) in
-    fused-append mode.
+    appended caches kc, vc [B, Kh, S_pad, hsz] (aliased with k, v) and, in
+    int8 append mode, the updated kscale, vscale [B, Kh, S_pad].
     """
     b, kh, qp, hsz = q.shape
     s_pad = k.shape[2]
@@ -195,24 +326,42 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     assert quant == (vscale is not None)
     append = k_new is not None
     assert append == (v_new is not None)
-    assert not (append and (quant or contiguous)), \
-        "fused append excludes quant/contiguous modes"
+    assert not (append and contiguous), \
+        "fused append excludes the contiguous layout"
+    n_blocks = s_pad // block_s
 
-    grid = (b, kh, s_pad // block_s)
+    grid = (b, kh, n_blocks)
     kernel = functools.partial(
         _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant,
-        append=append)
+        append=append, prune=prune)
+
+    def kv_idx(b, h, s, meta_ref, tl_ref):
+        # pruned steps re-reference the previous step's block: the DMA is
+        # elided, so HBM reads scale with the valid length, not capacity
+        if not prune:
+            return (b, h, s, 0)
+        lo, nb = prune_block_range(
+            tl_ref[b], meta_ref[0], meta_ref[1], meta_ref[2], kvp=kvp,
+            rr_block=rr_block, block_s=block_s, s_true=s_true,
+            contiguous=contiguous)
+        return (b, h, _phys_block(s, lo, nb, n_blocks), 0)
+
+    def scale_idx(b, h, s, meta_ref, tl_ref):
+        return kv_idx(b, h, s, meta_ref, tl_ref)[:3]
 
     def row_idx(b, h, s, meta_ref, tl_ref):
         # target row window of the appended token; depends on the prefetched
         # per-request length only (rank-independent slot formula)
         return (b, h, _append_slot(tl_ref[b], kvp, rr_block, s_pad), 0)
 
+    def srow_idx(b, h, s, meta_ref, tl_ref):
+        return row_idx(b, h, s, meta_ref, tl_ref)[:3]
+
     in_specs = [
         pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
-        pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
-        pl.BlockSpec((1, 1, block_s, hsz), lambda b, h, s, *_: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
+        pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
     ]
     args = (meta, tl, q, k, v)
     out_specs = [
@@ -226,8 +375,8 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     aliases = {}
     if quant:
         in_specs += [
-            pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
-            pl.BlockSpec((1, 1, block_s), lambda b, h, s, *_: (b, h, s)),
+            pl.BlockSpec((1, 1, block_s), scale_idx),
+            pl.BlockSpec((1, 1, block_s), scale_idx),
         ]
         args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
     if append:
@@ -249,6 +398,25 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         # inputs are numbered including the 2 scalar-prefetch args:
         # meta=0, tl=1, q=2, k=3, v=4 -> outputs 2/3 are the appended caches
         aliases = {3: 2, 4: 3}
+        if quant:
+            in_specs += [
+                pl.BlockSpec((1, 1, 1), srow_idx),
+                pl.BlockSpec((1, 1, 1), srow_idx),
+            ]
+            args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
+            out_specs += [
+                pl.BlockSpec((1, 1, 1), srow_idx),
+                pl.BlockSpec((1, 1, 1), srow_idx),
+            ]
+            out_shape += [
+                jax.ShapeDtypeStruct((b, kh, s_pad), jnp.float32),
+                jax.ShapeDtypeStruct((b, kh, s_pad), jnp.float32),
+            ]
+            # with quant the inputs are meta=0, tl=1, q=2, k=3, v=4,
+            # kscale=5, vscale=6, knew=7, vnew=8, then the row windows;
+            # the scale outputs (4/5) alias the full scale inputs, the
+            # cache outputs (2/3) the full K/V inputs
+            aliases = {3: 2, 4: 3, 5: 4, 6: 5}
 
     return pl.pallas_call(
         kernel,

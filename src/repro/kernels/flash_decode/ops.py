@@ -25,8 +25,16 @@ Helix execution path when ``HelixConfig.attn_backend`` selects it):
   * ``k_new``/``v_new`` [B, Kh, hsz] — fused KV-append epilogue: the kernel
     writes the new token's row into the (aliased) cache and attends over it,
     so the separate ``append_kv`` cache round-trip disappears.  Requires the
-    round-robin layout without quant/slot_offset; ``total_len`` must already
-    count the appended token.  Returns ``(out, lse, kcache, vcache)``.
+    round-robin layout without slot_offset; ``total_len`` must already count
+    the appended token.  Returns ``(out, lse, kcache, vcache)``; with an
+    int8 cache (``kscale``/``vscale`` given) the raw rows are quantized
+    in-kernel and ``(out, lse, kcache, vcache, kscale, vscale)`` comes back.
+  * ``prune`` — block pruning (default on): fully-invalid S blocks are
+    *skipped*, not masked — the K/V index_maps clamp to the valid span so
+    Pallas elides the pruned blocks' DMAs, and ``pl.when`` skips their
+    compute.  Bit-exact vs ``prune=False``; per-request HBM traffic becomes
+    O(valid_len) instead of O(S_cap).  ``flash_decode_accounting`` reports
+    the resulting blocks/bytes per call.
 
 Padded S slots are masked in-kernel against the true capacity (prefetch-free:
 it is a static kernel parameter), so any S_cap works in both layouts.
@@ -37,20 +45,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils import round_up, pad_dim
-from repro.kernels.flash_decode.kernel import flash_decode_kernel
+from repro.kernels.flash_decode.kernel import (flash_decode_kernel,
+                                               prune_block_range)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kvp", "rr_block", "scale", "block_s", "interpret",
-                     "contiguous"))
+                     "contiguous", "prune"))
 def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
                  window=0, scale: float | None = None, block_s: int = 512,
                  interpret: bool = True, contiguous: bool = False,
                  slot_offset=0, kscale=None, vscale=None,
-                 k_new=None, v_new=None):
+                 k_new=None, v_new=None, prune: bool = True):
     """Decode-shape attention over one KV shard via the Pallas kernel.
 
     This is the flash_decode *family* entry point the kernel-backend
@@ -60,7 +70,7 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
 
     Returns ``(out [B, Qh, hsz], lse [B, Qh] f32)``, plus the appended
     ``(kcache, vcache)`` when ``k_new``/``v_new`` engage the fused-append
-    epilogue.
+    epilogue (and the updated ``(kscale, vscale)`` for int8 caches).
     """
     b, qh, hsz = q.shape
     kh, s_cap = k.shape[1], k.shape[2]
@@ -68,9 +78,10 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
     g = qh // kh
     if scale is None:
         scale = float(hsz) ** -0.5
+    quant = kscale is not None
     append = k_new is not None
     if append:
-        assert v_new is not None and kscale is None and not contiguous
+        assert v_new is not None and not contiguous
         # slot_offset may reach here as a (weak) tracer under an outer jit;
         # only a concrete non-zero value can be rejected eagerly.  The Helix
         # caller guarantees the slice fast path and fusion never overlap
@@ -97,18 +108,84 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
 
     kw = {}
     if append:
-        # match the unfused append_kv dtype cast so fusion is bit-exact
-        kw = dict(k_new=k_new.astype(k.dtype), v_new=v_new.astype(v.dtype))
+        if quant:
+            # the kernel quantizes the raw rows itself (payload + scale)
+            kw = dict(k_new=k_new.astype(jnp.float32),
+                      v_new=v_new.astype(jnp.float32))
+        else:
+            # match the unfused append_kv dtype cast so fusion is bit-exact
+            kw = dict(k_new=k_new.astype(k.dtype), v_new=v_new.astype(v.dtype))
 
     res = flash_decode_kernel(
         qg, kp, vp, meta, tl, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_cap, contiguous=contiguous,
-        kscale=kscale, vscale=vscale, interpret=interpret, **kw)
+        kscale=kscale, vscale=vscale, prune=prune, interpret=interpret, **kw)
 
     out, lse = res[0], res[1]
     out = out[:, :, :g, :].reshape(b, qh, hsz)
     lse = lse[:, :, :g].reshape(b, qh)
     if append:
         kc, vc = res[2][:, :, :s_cap], res[3][:, :, :s_cap]
+        if quant:
+            return out, lse, kc, vc, res[4][:, :, :s_cap], res[5][:, :, :s_cap]
         return out, lse, kc, vc
     return out, lse
+
+
+def flash_decode_accounting(q, k, v, total_len, rank, *, kvp: int = 1,
+                            rr_block: int = 16, window=0,
+                            block_s: int = 512, contiguous: bool = False,
+                            slot_offset=0, prune: bool = True,
+                            kscale=None, vscale=None, **_ignored):
+    """Blocks/bytes the matching ``flash_decode`` call streams from HBM.
+
+    Replays the kernel's pruning ``index_map`` (``prune_block_range`` — the
+    same function the kernel clamps its K/V DMAs with) over the grid and
+    counts *distinct* block fetches: consecutive grid steps that reference
+    the same block are one DMA on TPU, which is exactly how pruning turns
+    masked blocks into elided reads.  ``prune=False`` reproduces the dense
+    sweep (every block of every (b, h) pair).
+
+    Pure host-side arithmetic — no kernel launch, any argument set accepted
+    by ``flash_decode`` works (extra kwargs are ignored), and ``q``/``k``/
+    ``v`` may be ``jax.ShapeDtypeStruct``s (only shapes/dtypes are read).
+    Returns a dict:
+
+      ``blocks_visited`` / ``blocks_total`` — distinct K/V block DMAs vs the
+      dense sweep, summed over the (B, Kh, S-blocks) grid;
+      ``bytes_read`` / ``bytes_total`` — the corresponding K+V HBM bytes
+      (+ dequant-scale bytes in int8 mode);
+      ``block_s``, ``n_blocks`` — resolved kernel blocking.
+    """
+    b, kh = k.shape[0], k.shape[1]
+    s_cap, hsz = k.shape[2], k.shape[3]
+    block_s = min(block_s, round_up(s_cap, 128))
+    s_pad = round_up(s_cap, block_s)
+    n_blocks = s_pad // block_s
+
+    tl = np.broadcast_to(np.asarray(total_len, np.int32).reshape(-1), (b,))
+    if prune:
+        _, nb = prune_block_range(
+            jnp.asarray(tl), jnp.asarray(rank, jnp.int32),
+            jnp.asarray(slot_offset, jnp.int32), jnp.asarray(window, jnp.int32),
+            kvp=kvp, rr_block=rr_block, block_s=block_s, s_true=s_cap,
+            contiguous=contiguous)
+        # a fully-pruned request still references one (clamped) block: the
+        # grid's first step fetches it before pl.when skips the compute
+        per_req = np.maximum(np.asarray(nb), 1)
+    else:
+        per_req = np.full((b,), n_blocks)
+    blocks_visited = int(kh * per_req.sum())
+    blocks_total = b * kh * n_blocks
+    el = jnp.dtype(k.dtype).itemsize
+    blk_bytes = 2 * block_s * hsz * el                    # K + V payload
+    if kscale is not None:
+        blk_bytes += 2 * block_s * 4                      # f32 dequant scales
+    return {
+        "blocks_visited": blocks_visited,
+        "blocks_total": blocks_total,
+        "bytes_read": blocks_visited * blk_bytes,
+        "bytes_total": blocks_total * blk_bytes,
+        "block_s": block_s,
+        "n_blocks": n_blocks,
+    }

@@ -1,4 +1,7 @@
-from repro.kernels.flash_prefill.ops import flash_prefill
+from repro.kernels.flash_prefill.ops import (flash_prefill,
+                                             flash_prefill_accounting)
+from repro.kernels.flash_prefill.kernel import prefill_block_range
 from repro.kernels.flash_prefill.ref import flash_prefill_ref
 
-__all__ = ["flash_prefill", "flash_prefill_ref"]
+__all__ = ["flash_prefill", "flash_prefill_accounting", "flash_prefill_ref",
+           "prefill_block_range"]

@@ -26,10 +26,21 @@ T != S and only the lens/capacity masks apply.  Slots >= the true (unpadded)
 S are masked unconditionally, so S padding is exact even without causality.
 Fully-masked rows (lens[b] == 0) emit zeros, not NaNs.
 
-Causal block skipping: blocks entirely above the diagonal contribute
-nothing; the kernel masks them (grid still visits them — revisited in the
-perf pass via a triangular index_map when it matters on real hw).  MXU
-contraction dims are hsz / blk_k (multiples of 128 for aligned configs).
+Causal/window block skipping (``prune=True``, the default)
+----------------------------------------------------------
+For one query block the contributing kv positions form a contiguous span:
+``kpos < min(s_true, lens[b])`` and, causally, ``kpos <= qpos_max``; with a
+sliding window additionally ``kpos > qpos_min - window``.  The kernel clamps
+the K/V ``index_map`` to that span — grid step ``ki`` streams physical block
+``min(lo + ki, hi - 1)``, so every skipped step re-references the previous
+block and Pallas TPU elides the HBM->VMEM DMA — and skips the compute body
+with ``pl.when``.  For causal T = S this drops the visited rectangle to its
+lower triangle (~(n+1)/2n of the full sweep); a window caps it at
+O(window/blk_k) blocks per query row.  Bit-exact vs the masked sweep (a
+fully-masked block contributes the identity online-softmax update).
+``prefill_block_range`` is the single source of truth; the accounting layer
+(ops.py) replays it to report visited blocks/bytes.  MXU contraction dims
+are hsz / blk_k (multiples of 128 for aligned configs).
 """
 from __future__ import annotations
 
@@ -41,14 +52,40 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.utils import NEG_INF
+from repro.kernels.pruning import phys_block as _phys_block
+
+
+def prefill_block_range(qi, kv_len, q_offset, window, *, causal: bool,
+                        blk_q: int, blk_k: int, s_true: int):
+    """(first_kv_block, n_valid_kv_blocks) for query block ``qi``.
+
+    The single source of truth for prefill block skipping: the kernel's K/V
+    ``index_map``s clamp to this range and its body skips compute outside
+    it; ``ops.flash_prefill_accounting`` replays it to count streamed
+    blocks.  ``qi``/``kv_len``/``q_offset``/``window`` may be traced scalars
+    (grid index + scalar-prefetch values).
+    """
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    hi_slot = jnp.minimum(s_true, kv_len)
+    if causal:
+        # a kv slot is causally reachable iff kpos <= the block's last qpos
+        hi_slot = jnp.minimum(hi_slot, q_offset + (qi + 1) * blk_q)
+    lo_slot = jnp.where(
+        window > 0,
+        jnp.clip(q_offset + qi * blk_q - window + 1, 0, s_true), 0)
+    lo = lo_slot // blk_k
+    hi = (hi_slot + blk_k - 1) // blk_k
+    return lo, jnp.maximum(hi - lo, 0)
 
 
 def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
                     m_ref, l_ref, *, scale: float, causal: bool, blk_q: int,
-                    blk_k: int, g: int, hsz: int, s_true: int):
+                    blk_k: int, g: int, hsz: int, s_true: int, prune: bool):
     bi = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
+    n_kblocks = pl.num_programs(3)
     q_offset = meta_ref[0]
     window = meta_ref[1]
     kv_len = len_ref[bi]
@@ -59,42 +96,59 @@ def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # [blq, G*hsz]
-    k = k_ref[0, 0].astype(jnp.float32)                  # [blk, hsz]
-    v = v_ref[0, 0].astype(jnp.float32)                  # [blk, hsz]
+    if prune:
+        lo_blk, nb = prefill_block_range(qi, kv_len, q_offset, window,
+                                         causal=causal, blk_q=blk_q,
+                                         blk_k=blk_k, s_true=s_true)
+        phys = _phys_block(ki, lo_blk, nb, n_kblocks)
+        active = ki < nb
+    else:
+        phys, active = ki, None
 
-    qg = q.reshape(blk_q, g, hsz)
-    s = jax.lax.dot_general(qg.reshape(blk_q * g, hsz), k,
-                            (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s.reshape(blk_q, g, blk_k)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [blq, G*hsz]
+        k = k_ref[0, 0].astype(jnp.float32)              # [blk, hsz]
+        v = v_ref[0, 0].astype(jnp.float32)              # [blk, hsz]
 
-    qpos = q_offset + qi * blk_q \
-        + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, 1), 0)
-    kpos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk_k), 2)
-    # true-capacity + per-request-length masks apply in every mode; the
-    # causal / sliding-window masks only relate q and kv positions.
-    mask = jnp.logical_and(kpos < s_true, kpos < kv_len)
-    if causal:
-        mask = jnp.logical_and(mask, kpos <= qpos)
-    mask = jnp.logical_and(
-        mask, jnp.where(window > 0, kpos > qpos - window, True))
-    s = jnp.where(mask, s, NEG_INF)
+        qg = q.reshape(blk_q, g, hsz)
+        s = jax.lax.dot_general(qg.reshape(blk_q * g, hsz), k,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s.reshape(blk_q, g, blk_k)
 
-    s2 = s.reshape(blk_q * g, blk_k)
-    mask2 = jnp.broadcast_to(mask, (blk_q, g, blk_k)).reshape(blk_q * g, blk_k)
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    # masked lanes must not contribute when a whole row is masked
-    # (m_new == NEG_INF => exp(0) == 1 would pollute l), so gate p.
-    p = jnp.where(mask2, jnp.exp(s2 - m_new), 0.0)
-    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        qpos = q_offset + qi * blk_q \
+            + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, 1), 0)
+        kpos = phys * blk_k \
+            + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk_k), 2)
+        # true-capacity + per-request-length masks apply in every mode; the
+        # causal / sliding-window masks only relate q and kv positions.
+        mask = jnp.logical_and(kpos < s_true, kpos < kv_len)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        mask = jnp.logical_and(
+            mask, jnp.where(window > 0, kpos > qpos - window, True))
+        s = jnp.where(mask, s, NEG_INF)
 
-    @pl.when(ki == pl.num_programs(3) - 1)
+        s2 = s.reshape(blk_q * g, blk_k)
+        mask2 = jnp.broadcast_to(mask, (blk_q, g, blk_k)).reshape(
+            blk_q * g, blk_k)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # masked lanes must not contribute when a whole row is masked
+        # (m_new == NEG_INF => exp(0) == 1 would pollute l), so gate p.
+        p = jnp.where(mask2, jnp.exp(s2 - m_new), 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if prune:
+        pl.when(active)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kblocks - 1)
     def _finalize():
         l = l_ref[...]
         denom = jnp.maximum(l, 1e-37)
@@ -104,12 +158,13 @@ def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
 
 def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
                          blk_q: int, blk_k: int, s_true: int,
-                         interpret: bool = True):
+                         prune: bool = True, interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
     q [B, Kh, T_pad, G*hsz]; k, v [B, Kh, S_pad, hsz]; meta [2] int32
     (q_offset, window); lens [B] int32 per-request valid KV lengths;
-    s_true: unpadded S (slots >= s_true are masked).
+    s_true: unpadded S (slots >= s_true are masked); prune: skip (don't
+    mask) kv blocks that are causally/window/length-dead (bit-exact).
 
     Returns out [B, Kh, T_pad, G*hsz] in q.dtype.
     """
@@ -117,11 +172,21 @@ def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
     s, hsz = k.shape[2], k.shape[3]
     g = ghsz // hsz
     assert t % blk_q == 0 and s % blk_k == 0
+    n_kblocks = s // blk_k
 
-    grid = (b, kh, t // blk_q, s // blk_k)
+    grid = (b, kh, t // blk_q, n_kblocks)
     kernel = functools.partial(_prefill_kernel, scale=scale, causal=causal,
                                blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz,
-                               s_true=s_true)
+                               s_true=s_true, prune=prune)
+
+    def kv_idx(b, h, qi, ki, meta_ref, len_ref):
+        if not prune:
+            return (b, h, ki, 0)
+        lo, nb = prefill_block_range(qi, len_ref[b], meta_ref[0], meta_ref[1],
+                                     causal=causal, blk_q=blk_q, blk_k=blk_k,
+                                     s_true=s_true)
+        return (b, h, _phys_block(ki, lo, nb, n_kblocks), 0)
+
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -130,10 +195,8 @@ def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
             in_specs=[
                 pl.BlockSpec((1, 1, blk_q, ghsz),
                              lambda b, h, qi, ki, *_: (b, h, qi, 0)),
-                pl.BlockSpec((1, 1, blk_k, hsz),
-                             lambda b, h, qi, ki, *_: (b, h, ki, 0)),
-                pl.BlockSpec((1, 1, blk_k, hsz),
-                             lambda b, h, qi, ki, *_: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, blk_k, hsz), kv_idx),
+                pl.BlockSpec((1, 1, blk_k, hsz), kv_idx),
             ],
             out_specs=pl.BlockSpec((1, 1, blk_q, ghsz),
                                    lambda b, h, qi, ki, *_: (b, h, qi, 0)),

@@ -1,21 +1,26 @@
 """jit'd public wrapper for flash_prefill: natural [B,T,Qh,hsz] layout,
-padding to block multiples, GQA head grouping, scalar-prefetch packing."""
+padding to block multiples, GQA head grouping, scalar-prefetch packing —
+plus the block-accounting layer that reports how many kv blocks the
+causal/window skip (``prune``) actually streams."""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
+from repro.kernels.flash_prefill.kernel import (flash_prefill_kernel,
+                                                prefill_block_range)
 from repro.utils import round_up
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "blk_q",
-                                             "blk_k", "interpret"))
+                                             "blk_k", "prune", "interpret"))
 def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
                   seq_lens=None, scale: float | None = None,
-                  blk_q: int = 128, blk_k: int = 128, interpret: bool = True):
+                  blk_q: int = 128, blk_k: int = 128, prune: bool = True,
+                  interpret: bool = True):
     """Full-sequence attention via the Pallas flash-prefill kernel.
 
     The kernel-backed sibling of ``models/attention.chunked_attention`` —
@@ -37,6 +42,10 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
         are live.  Rows with ``seq_lens[b] == 0`` emit zeros.
       scale: score scale; defaults to ``hsz ** -0.5``.
       blk_q, blk_k: kernel block sizes (static; see docs/kernels.md).
+      prune: skip kv blocks that are causally/window/length-dead instead of
+        masking them (index_map clamp + ``pl.when``; bit-exact either way).
+        Causal T = S sweeps ~the lower triangle of the (T/blk_q, S/blk_k)
+        rectangle; ``flash_prefill_accounting`` reports the exact counts.
       interpret: run the kernel through the Pallas interpreter (any JAX
         backend) instead of compiling for TPU.
 
@@ -74,6 +83,58 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
 
     out = flash_prefill_kernel(qg, kg, vg, meta, lens, scale=scale,
                                causal=causal, blk_q=blk_q, blk_k=blk_k,
-                               s_true=s, interpret=interpret)
+                               s_true=s, prune=prune, interpret=interpret)
     out = out[:, :, :t].reshape(b, kh, t, g, hsz).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, t, qh, hsz)
+
+
+def flash_prefill_accounting(q, k, v, *, causal: bool = True, window=0,
+                             q_offset=0, seq_lens=None, blk_q: int = 128,
+                             blk_k: int = 128, prune: bool = True,
+                             **_ignored):
+    """KV blocks/bytes the matching ``flash_prefill`` call streams from HBM.
+
+    Replays the kernel's skip range (``prefill_block_range`` — the same
+    function its K/V ``index_map``s clamp with) over the (B, Kh, T-blocks,
+    S-blocks) grid and counts distinct block fetches (consecutive steps on
+    the same block are one DMA).  Pure host-side arithmetic; accepts any
+    ``flash_prefill`` argument set (extra kwargs are ignored).
+
+    Returns ``{"blocks_visited", "blocks_total", "bytes_read",
+    "bytes_total", "blk_q", "blk_k", "n_qblocks", "n_kblocks"}``.
+    """
+    b, t, _, hsz = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    blk_q = min(blk_q, round_up(t, 8))
+    blk_k = min(blk_k, round_up(s, 8))
+    n_q = round_up(t, blk_q) // blk_q
+    n_k = round_up(s, blk_k) // blk_k
+
+    lens = np.broadcast_to(
+        np.full((b,), s, np.int32) if seq_lens is None
+        else np.asarray(seq_lens, np.int32).reshape(-1), (b,))
+    if prune:
+        # prefill_block_range is elementwise jnp: one vectorized call over
+        # the [b, n_q] grid instead of b*n_q eager dispatch loops
+        _, nb = prefill_block_range(
+            jnp.arange(n_q, dtype=jnp.int32)[None, :],
+            jnp.asarray(lens)[:, None], jnp.asarray(q_offset, jnp.int32),
+            jnp.asarray(window, jnp.int32), causal=causal,
+            blk_q=blk_q, blk_k=blk_k, s_true=s)
+        # a fully-skipped row still fetches one (clamped) block
+        visited = int(np.maximum(np.asarray(nb), 1).sum())
+    else:
+        visited = b * n_q * n_k
+    blocks_visited = kh * visited
+    blocks_total = b * kh * n_q * n_k
+    blk_bytes = 2 * blk_k * hsz * jnp.dtype(k.dtype).itemsize   # K + V
+    return {
+        "blocks_visited": blocks_visited,
+        "blocks_total": blocks_total,
+        "bytes_read": blocks_visited * blk_bytes,
+        "bytes_total": blocks_total * blk_bytes,
+        "blk_q": blk_q,
+        "blk_k": blk_k,
+        "n_qblocks": n_q,
+        "n_kblocks": n_k,
+    }

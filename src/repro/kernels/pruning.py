@@ -1,0 +1,22 @@
+"""Shared block-pruning helper for the Pallas attention kernels.
+
+Both flash_decode and flash_prefill prune by clamping their K/V
+``index_map``s to a per-request/per-row valid block span ``[lo, lo + nb)``
+(see ``flash_decode.kernel.prune_block_range`` /
+``flash_prefill.kernel.prefill_block_range``).  The clamp rule lives here
+once because the DMA-elision correctness depends on it: a pruned grid step
+must reference the *same* physical block as the previous step, so Pallas
+TPU skips the HBM->VMEM copy instead of re-fetching a dead block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phys_block(step, lo, nb, n_blocks: int):
+    """Physical block streamed at grid step ``step``: ``lo + step`` while
+    inside the valid span, then clamped to the span's last block (same
+    block as the previous step => the copy is elided).  ``lo``/``nb`` may
+    be traced scalars; always in ``[0, n_blocks)`` even for empty spans."""
+    last = jnp.maximum(lo + nb - 1, lo)
+    return jnp.clip(jnp.minimum(lo + step, last), 0, n_blocks - 1)

@@ -62,12 +62,19 @@ class KernelFamily:
     cycles).  ``grad`` records how gradients flow through the Pallas path:
     ``"ref-vjp"`` = custom_vjp whose backward re-runs the oracle;
     ``"none"`` = forward-only (decode has no backward pass).
+
+    ``accounting`` (optional) names the family's block/bytes accounting
+    function — host-side arithmetic that replays the kernel's pruning
+    ``index_map`` and reports the HBM blocks/bytes a call streams
+    (benchmarks and the CI pruning smoke consume it via
+    ``registry.accounting``).
     """
     name: str
     ref: str                  # "module:function" of the pure-jnp oracle
     kernel: str               # "module:function" of the Pallas op wrapper
     used_by: str              # call-site summary for the backend table
     grad: str = "none"        # "none" | "ref-vjp"
+    accounting: str | None = None   # "module:function" block accounting
 
     def _load(self, spec: str) -> Callable:
         import importlib
@@ -93,14 +100,18 @@ FAMILIES: dict[str, KernelFamily] = {
             ref="repro.kernels.flash_decode.ref:flash_decode_ref",
             kernel="repro.kernels.flash_decode.ops:flash_decode",
             used_by="Helix decode attention (core/helix._local_attend)",
-            grad="none"),
+            grad="none",
+            accounting="repro.kernels.flash_decode.ops:"
+                       "flash_decode_accounting"),
         KernelFamily(
             name="flash_prefill",
             ref="repro.kernels.flash_prefill.ref:flash_prefill_ref",
             kernel="repro.kernels.flash_prefill.ops:flash_prefill",
             used_by="prefill/train attention (models/attention."
                     "prefill_attention)",
-            grad="ref-vjp"),
+            grad="ref-vjp",
+            accounting="repro.kernels.flash_prefill.ops:"
+                       "flash_prefill_accounting"),
         KernelFamily(
             name="ssd_prefill",
             ref="repro.kernels.ssd_prefill.ref:ssd_prefill_ref",
@@ -111,7 +122,8 @@ FAMILIES: dict[str, KernelFamily] = {
             name="w8a16_matmul",
             ref="repro.kernels.w8a16_matmul.ref:w8a16_matmul_ref",
             kernel="repro.kernels.w8a16_matmul.ops:w8a16_matmul",
-            used_by="int8-weight matmul (weight-quantized serving, benches)",
+            used_by="int8-weight lm_head matmul (decode_model, "
+                    "HelixConfig.lm_head_w8)",
             grad="none"),
     )
 }
@@ -134,6 +146,21 @@ def resolve(family: str, backend: str) -> Callable:
         raise ValueError(f"unknown kernel family {family!r}; "
                          f"registered: {sorted(FAMILIES)}")
     return FAMILIES[family].resolve(backend)
+
+
+def accounting(family: str) -> Callable:
+    """The family's block/bytes accounting function (see ``KernelFamily``).
+
+    Raises ``ValueError`` for unknown families and families without an
+    accounting layer (only the pruning attention kernels carry one).
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; "
+                         f"registered: {sorted(FAMILIES)}")
+    fam = FAMILIES[family]
+    if fam.accounting is None:
+        raise ValueError(f"kernel family {family!r} has no accounting layer")
+    return fam._load(fam.accounting)
 
 
 def interpret_flag(backend: str) -> bool:

@@ -6,9 +6,12 @@
 Kernel backends (kernels/registry.py) are selectable per family:
 ``--attn-backend`` routes the decode attention (flash_decode),
 ``--prefill-backend`` the full-sequence prefill attention (flash_prefill),
-``--ssd-backend`` the Mamba2 SSD scan core (ssd_prefill); ``--no-fuse-append``
-opts out of the fused KV-append kernel epilogue.  ``--list-backends`` prints
-the per-family availability matrix and exits (CI smoke target).
+``--ssd-backend`` the Mamba2 SSD scan core (ssd_prefill),
+``--matmul-backend`` the w8a16 int8-weight matmul (with ``--lm-head-w8``
+quantizing the lm_head onto it); ``--no-fuse-append`` opts out of the fused
+KV-append kernel epilogue and ``--no-prune-blocks`` of the length/causality-
+aware K/V block pruning (both bit-exact).  ``--list-backends`` prints the
+per-family availability matrix and exits (CI smoke target).
 """
 from __future__ import annotations
 
@@ -34,7 +37,10 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                attn_backend: str | None = None,
                prefill_backend: str | None = None,
                ssd_backend: str | None = None,
+               matmul_backend: str | None = None,
                fuse_append: bool | None = None,
+               prune_blocks: bool | None = None,
+               lm_head_w8: bool | None = None,
                seed: int = 0, log=print):
     """Run ``n_requests`` synthetic prompts through the continuous-batching
     engine and report throughput.  Returns the finished ``Request`` list.
@@ -53,7 +59,10 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     overrides = {k: v for k, v in [("attn_backend", attn_backend),
                                    ("prefill_backend", prefill_backend),
                                    ("ssd_backend", ssd_backend),
-                                   ("fuse_append", fuse_append)]
+                                   ("matmul_backend", matmul_backend),
+                                   ("fuse_append", fuse_append),
+                                   ("prune_blocks", prune_blocks),
+                                   ("lm_head_w8", lm_head_w8)]
                  if v is not None}
     if overrides:
         hx = dataclasses.replace(hx, **overrides)
@@ -109,9 +118,19 @@ def main():
                     help="flash_prefill backend for prompt prefill")
     ap.add_argument("--ssd-backend", default=None, choices=BACKENDS,
                     help="ssd_prefill backend for the Mamba2 SSD scan core")
+    ap.add_argument("--matmul-backend", default=None, choices=BACKENDS,
+                    help="w8a16_matmul backend for the quantized lm_head "
+                         "matmul (only used with --lm-head-w8)")
+    ap.add_argument("--lm-head-w8", action="store_true",
+                    help="int8-quantize the lm_head weights and route the "
+                         "logits matmul through the w8a16_matmul family")
     ap.add_argument("--no-fuse-append", action="store_true",
                     help="disable the fused KV-append kernel epilogue "
                          "(pallas backends append via a separate cache pass)")
+    ap.add_argument("--no-prune-blocks", action="store_true",
+                    help="disable length/causality-aware K/V block pruning "
+                         "in the Pallas attention kernels (dense masked "
+                         "sweep; bit-exact either way)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the kernel registry's per-family backend "
                          "availability matrix and exit")
@@ -126,7 +145,10 @@ def main():
                max_batch=args.max_batch, attn_backend=args.attn_backend,
                prefill_backend=args.prefill_backend,
                ssd_backend=args.ssd_backend,
-               fuse_append=False if args.no_fuse_append else None)
+               matmul_backend=args.matmul_backend,
+               fuse_append=False if args.no_fuse_append else None,
+               prune_blocks=False if args.no_prune_blocks else None,
+               lm_head_w8=True if args.lm_head_w8 else None)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ def train(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
           mesh=None, seed: int = 0, log_every: int = 10,
           step_timeout_s: float = 600.0, param_dtype=jnp.float32,
           prefill_backend: str = "ref", ssd_backend: str = "ref",
-          log=print):
+          prune_blocks: bool = True, log=print):
     """Train ``arch`` for ``steps`` optimizer steps; returns (params,
     opt_state, losses).
 
@@ -55,7 +55,8 @@ def train(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
     opt_state = adamw_init(params, optcfg)
     step_fn = jax.jit(make_train_step(cfg, mesh, optcfg, chunk_q=min(seq, 512),
                                       prefill_backend=prefill_backend,
-                                      ssd_backend=ssd_backend))
+                                      ssd_backend=ssd_backend,
+                                      prune_blocks=prune_blocks))
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start = 0
@@ -121,12 +122,16 @@ def main():
                          "(ref-VJP backward on the pallas backends)")
     ap.add_argument("--ssd-backend", default="ref", choices=BACKENDS,
                     help="ssd_prefill backend for the Mamba2 SSD scan core")
+    ap.add_argument("--no-prune-blocks", action="store_true",
+                    help="disable flash_prefill's causal/window block skip "
+                         "(dense masked sweep; bit-exact either way)")
     args = ap.parse_args()
     _, _, losses = train(args.arch, reduced=args.reduced, steps=args.steps,
                          batch=args.batch, seq=args.seq, lr=args.lr,
                          ckpt_dir=args.ckpt_dir,
                          prefill_backend=args.prefill_backend,
-                         ssd_backend=args.ssd_backend)
+                         ssd_backend=args.ssd_backend,
+                         prune_blocks=not args.no_prune_blocks)
     print(f"[train] done; first-10 mean loss {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean loss {np.mean(losses[-10:]):.4f}")
 

@@ -189,7 +189,7 @@ def cross_attention(q, k, v, *, chunk_q: int = 512):
 # --------------------------------------------------- kernel-backed prefill
 @functools.lru_cache(maxsize=None)
 def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
-                       unroll: bool):
+                       unroll: bool, prune: bool):
     """flash_prefill with a custom VJP whose backward re-runs the jnp
     reference (``chunked_attention``) — Pallas kernels define no transpose
     rule, so this is what lets the pallas backends run under
@@ -201,7 +201,8 @@ def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
     def f(q, k, v, window, q_offset):
         from repro.kernels.flash_prefill.ops import flash_prefill
         return flash_prefill(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, interpret=interpret)
+                             q_offset=q_offset, prune=prune,
+                             interpret=interpret)
 
     def fwd(q, k, v, window, q_offset):
         return f(q, k, v, window, q_offset), (q, k, v, window, q_offset)
@@ -222,7 +223,8 @@ def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
 
 def prefill_attention(q, k, v, *, causal: bool = True, window=0,
                       q_offset: int | jax.Array = 0, chunk_q: int = 512,
-                      unroll: bool = False, backend: str = "ref"):
+                      unroll: bool = False, backend: str = "ref",
+                      prune: bool = True):
     """Full-sequence attention with kernel-backend selection.
 
     The prefill/train sibling of ``decode_attention``: ``backend`` routes the
@@ -230,7 +232,9 @@ def prefill_attention(q, k, v, *, causal: bool = True, window=0,
     memory-bounded ``chunked_attention`` scan, ``"pallas-interpret"`` /
     ``"pallas"`` the flash-prefill kernel (interpreted / compiled) with a
     ref-VJP backward so training works.  ``window`` and ``q_offset`` may be
-    traced (per-layer windows under ``lax.scan``).
+    traced (per-layer windows under ``lax.scan``).  ``prune`` (kernel
+    backends): skip causally/window-dead kv blocks instead of masking them
+    (bit-exact; see docs/kernels.md "Block pruning").
 
       q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> out [B, T, Qh, hsz].
     """
@@ -241,7 +245,7 @@ def prefill_attention(q, k, v, *, causal: bool = True, window=0,
     from repro.kernels import registry
     registry.validate("flash_prefill", backend)
     fn = _kernel_prefill_fn(causal, registry.interpret_flag(backend),
-                            chunk_q, unroll)
+                            chunk_q, unroll, prune)
     return fn(q, k, v, jnp.asarray(window, jnp.int32),
               jnp.asarray(q_offset, jnp.int32))
 
@@ -249,7 +253,8 @@ def prefill_attention(q, k, v, *, causal: bool = True, window=0,
 # ------------------------------------------------------------- decode
 def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
                      kvp: int = 1, rr_block: int = 16, rank=0,
-                     kscale=None, vscale=None, block_s: int = 512):
+                     kscale=None, vscale=None, block_s: int = 512,
+                     prune: bool = True):
     """Single-shard decode-shape attention with backend selection.
 
     The unsharded sibling of core/helix.py's per-rank local attend —
@@ -270,5 +275,5 @@ def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
                                 kscale=kscale, vscale=vscale)
     return flash_decode(q, k, v, total_len, rank, kvp=kvp, rr_block=rr_block,
                         window=window, block_s=block_s,
-                        kscale=kscale, vscale=vscale,
+                        kscale=kscale, vscale=vscale, prune=prune,
                         interpret=backend != "pallas")

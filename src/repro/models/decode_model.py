@@ -37,6 +37,23 @@ from repro.models.moe import MoEParams, moe_ffn
 from repro.models.transformer import layer_windows
 
 
+def quantize_lm_head(params):
+    """Pre-quantize the lm_head (or tied-embedding) weights for the
+    ``HelixConfig.lm_head_w8`` decode path: returns a copy of ``params``
+    with ``lm_head_q8`` (int8 [H, V]) and ``lm_head_scale`` (f32 [V])
+    added, so ``serve_step`` skips the per-step re-quantization.  Done once
+    by the serving engine; decoding with unaugmented params still works
+    (the step falls back to quantizing in-jit)."""
+    from repro.kernels.w8a16_matmul.ref import quantize_w8
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    qw, scale = quantize_w8(head)
+    out = dict(params)
+    out["lm_head_q8"], out["lm_head_scale"] = qw, scale
+    return out
+
+
 def _constrainer(mesh: Mesh):
     def c(x, *axes):
         return jax.lax.with_sharding_constraint(
@@ -47,7 +64,10 @@ def _constrainer(mesh: Mesh):
 def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                      hopb_chunks: int = 4, return_logits: bool = False,
                      unroll: bool = False, attn_backend: str | None = None,
-                     fuse_append: bool | None = None):
+                     fuse_append: bool | None = None,
+                     prune_blocks: bool | None = None,
+                     matmul_backend: str | None = None,
+                     lm_head_w8: bool | None = None):
     """Build one autoregressive Helix decode step for ``cfg`` on ``mesh``.
 
     Returns ``serve_step(params, state, tokens) -> (next_tokens, new_state)``
@@ -64,6 +84,12 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         backend used inside helix_attention (kernels/registry.py).
       fuse_append: overrides ``hx.fuse_append`` — fuse the rr-slot KV append
         into the decode kernel epilogue (Pallas backends only).
+      prune_blocks: overrides ``hx.prune_blocks`` — length/causality-aware
+        K/V block pruning inside the Pallas decode kernel (bit-exact).
+      matmul_backend: overrides ``hx.matmul_backend`` — the w8a16_matmul
+        family backend for the quantized lm_head matmul.
+      lm_head_w8: overrides ``hx.lm_head_w8`` — int8-quantize the lm_head
+        weights and route the logits matmul through w8a16_matmul.
     """
     import dataclasses
     import math
@@ -72,10 +98,13 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
     from repro.core.sharding import dense_ffn_mode
 
     overrides = {}
-    if attn_backend is not None and attn_backend != hx.attn_backend:
-        overrides["attn_backend"] = attn_backend
-    if fuse_append is not None and fuse_append != hx.fuse_append:
-        overrides["fuse_append"] = fuse_append
+    for field, val in (("attn_backend", attn_backend),
+                       ("fuse_append", fuse_append),
+                       ("prune_blocks", prune_blocks),
+                       ("matmul_backend", matmul_backend),
+                       ("lm_head_w8", lm_head_w8)):
+        if val is not None and val != getattr(hx, field):
+            overrides[field] = val
     if overrides:
         hx = dataclasses.replace(hx, **overrides)
 
@@ -91,6 +120,29 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
     ffn2d = cfg.d_ff and dense_ffn_mode(cfg, mesh, hx) == "2d"
     dp_ish = tuple(a for a in mesh.axis_names if a != "model")
     kv8 = hx.kv_cache_bits == 8                   # int8 KV cache (§Perf)
+
+    def head_matmul(x, head, params):
+        """Logits matmul; ``hx.lm_head_w8`` routes it through the
+        w8a16_matmul kernel family (the registry's end-to-end consumer):
+        per-column int8 weight quantization, backend per
+        ``hx.matmul_backend``.  Weight-only quantization — activations stay
+        fp, so this changes numerics (unlike the exact kernel knobs).
+        Pre-quantized weights (``lm_head_q8``/``lm_head_scale`` in params —
+        ``quantize_lm_head``, done once by the serving engine) are used when
+        present; otherwise the head is quantized in-step, which re-runs the
+        O(d_model * vocab) quantization every token."""
+        if not hx.lm_head_w8:
+            return x @ head
+        from repro.kernels import registry
+        from repro.kernels.w8a16_matmul.ref import quantize_w8
+        qw, scale = params.get("lm_head_q8"), params.get("lm_head_scale")
+        if qw is None:
+            qw, scale = quantize_w8(head)
+        fn = registry.resolve("w8a16_matmul", hx.matmul_backend)
+        if registry.uses_kernel(hx.matmul_backend):
+            return fn(x, qw, scale,
+                      interpret=registry.interpret_flag(hx.matmul_backend))
+        return fn(x, qw, scale)
 
     def out_proj(out, wo):
         """Post-attention projection; pads wo rows when the a2a flat dim was
@@ -120,13 +172,20 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         # Fused KV-append epilogue (§Perf, roadmap): on the Pallas backends
         # the decode kernel writes kn/vn into the cache itself, skipping the
         # separate append pass (one cache HBM round-trip per layer per
-        # step).  Static decision — falls back to append_kv for int8
-        # caches and windowed layers on the cache-slice fast path.
+        # step).  Static decision; int8 caches quantize the new token
+        # in-kernel, and with block pruning on there is no cache-slice
+        # conflict left to fall back over.
         if fuse_append_applicable(hx, kvp, win, tl_attn, kc.shape[2],
                                   quant=kv8):
-            out, kc, vc = helix_attention(
-                mesh, hx, q, kc, vc, tl_attn, window=win,
-                hopb_chunks=chunks, k_new=kn, v_new=vn)
+            if kv8:
+                out, kc, vc, ks, vs = helix_attention(
+                    mesh, hx, q, kc, vc, tl_attn, window=win,
+                    hopb_chunks=chunks, kscale=ks, vscale=vs,
+                    k_new=kn, v_new=vn)
+            else:
+                out, kc, vc = helix_attention(
+                    mesh, hx, q, kc, vc, tl_attn, window=win,
+                    hopb_chunks=chunks, k_new=kn, v_new=vn)
         else:
             if kv8:
                 kc, vc, ks, vs = append_kv_quant(
@@ -267,7 +326,9 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
 
         x = rms_norm(x, params["ln_f"])
         head = params.get("lm_head")
-        logits = x @ head if head is not None else x @ params["embed"].T
+        if head is None:
+            head = params["embed"].T
+        logits = head_matmul(x, head, params)
         logits = cst(logits, None, all_ax)
         if cfg.softcap:
             logits = softcap(logits, cfg.softcap)

@@ -13,11 +13,12 @@ from repro.models.transformer import NO_POLICY
 
 def encode(cfg: ArchConfig, enc_params, frames, *, policy=NO_POLICY,
            chunk_q: int = 512, tp_width: int = 1, unroll: bool = False,
-           attn_backend: str = "ref"):
+           attn_backend: str = "ref", prune: bool = True):
     """frames [B, S_enc, d_model] -> enc_out [B, S_enc, d_model].
 
     ``attn_backend`` routes the bidirectional encoder attention through the
-    flash_prefill kernel family (non-causal mode)."""
+    flash_prefill kernel family (non-causal mode); ``prune`` its
+    block-skipping knob."""
     from repro.models.transformer import _attn_block, _ffn_block  # cycle-free
 
     b, s, _ = frames.shape
@@ -29,7 +30,8 @@ def encode(cfg: ArchConfig, enc_params, frames, *, policy=NO_POLICY,
         h = rms_norm(carry, lp["ln1"])
         a_out, _ = _attn_block(cfg, lp["attn"], h, layout=layout, window=0,
                                policy=policy, causal=False, chunk_q=chunk_q,
-                               unroll=unroll, attn_backend=attn_backend)
+                               unroll=unroll, attn_backend=attn_backend,
+                               prune=prune)
         y = carry + a_out
         h2 = rms_norm(y, lp["ln2"])
         y = y + _ffn_block(cfg, lp["ffn"], h2, policy)

@@ -49,13 +49,14 @@ def _forward_kwargs(cfg: ArchConfig, batch: dict[str, Any], mesh, policy,
 def make_train_step(cfg: ArchConfig, mesh: Mesh | None = None,
                     optcfg: AdamWConfig = AdamWConfig(), chunk_q: int = 512,
                     unroll: bool = False, prefill_backend: str = "ref",
-                    ssd_backend: str = "ref"):
+                    ssd_backend: str = "ref", prune_blocks: bool = True):
     """Build ``train_step(params, opt_state, batch)`` for one architecture.
 
     ``prefill_backend`` / ``ssd_backend`` route the full-sequence attention
     and SSD-scan hotspots through the kernel registry (kernels/registry.py);
     the pallas backends carry a ref-VJP backward, so the same knob works
-    under ``value_and_grad``.
+    under ``value_and_grad``.  ``prune_blocks`` is flash_prefill's
+    causal/window block skip (kernel backends; bit-exact on/off).
     """
     policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
     moe_groups = _dp_size(mesh) if cfg.moe else 1
@@ -64,6 +65,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh | None = None,
         logits, extras = forward(
             cfg, params, batch["tokens"], chunk_q=chunk_q, unroll=unroll,
             prefill_backend=prefill_backend, ssd_backend=ssd_backend,
+            prune_blocks=prune_blocks,
             **_forward_kwargs(cfg, batch, mesh, policy, moe_groups))
         loss = lm_loss(cfg, logits, batch["labels"])
         return loss + extras["aux_loss"], loss
@@ -86,8 +88,9 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
     """Prefill + handoff: contiguous caches -> round-robin decode layout.
 
     Kernel backends come from ``hx``: ``hx.prefill_backend`` routes the
-    full-sequence attention (flash_prefill family) and ``hx.ssd_backend``
-    the Mamba2 SSD scan core (ssd_prefill family).
+    full-sequence attention (flash_prefill family), ``hx.ssd_backend``
+    the Mamba2 SSD scan core (ssd_prefill family) and ``hx.prune_blocks``
+    flash_prefill's causal/window block skip.
     """
     policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
     kvp = hx.kvp(mesh) if mesh else 1
@@ -100,7 +103,7 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
         logits, extras = forward(
             cfg, params, tokens, return_cache=True, chunk_q=chunk_q,
             unroll=unroll, prefill_backend=hx.prefill_backend,
-            ssd_backend=hx.ssd_backend,
+            ssd_backend=hx.ssd_backend, prune_blocks=hx.prune_blocks,
             **_forward_kwargs(cfg, batch, mesh, policy, moe_groups))
         state: dict[str, Any] = {"total_len": jnp.asarray(t, jnp.int32)}
         if cfg.has_attention:

@@ -115,11 +115,12 @@ def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
 # =============================================================== layer fwd
 def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
                 policy, causal=True, kv_override=None, q_offset=0,
-                chunk_q=512, unroll=False, attn_backend="ref"):
+                chunk_q=512, unroll=False, attn_backend="ref", prune=True):
     """Projection + (optionally cross-) attention + out-proj.  h [B,T,H].
 
     ``attn_backend`` routes the attention core through the flash_prefill
-    kernel family (models/attention.prefill_attention)."""
+    kernel family (models/attention.prefill_attention); ``prune`` is its
+    causal/window block-skipping knob (kernel backends, bit-exact)."""
     b, t, _ = h.shape
     hsz = cfg.hsz
     wq = apply_q_layout(ap["wq"], layout, hsz)
@@ -138,7 +139,7 @@ def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
         k, v = kv_override                     # cross-attn: precomputed enc KV
     out = prefill_attention(q, k, v, causal=causal, window=window,
                             chunk_q=chunk_q, q_offset=q_offset,
-                            unroll=unroll, backend=attn_backend)
+                            unroll=unroll, backend=attn_backend, prune=prune)
     out = out.reshape(b, t, layout.q_pad * hsz)
     proj = policy(out, "dp", None, "tp") @ wo
     return policy(proj, "dp", None, None), (k, v)
@@ -156,11 +157,12 @@ def _ffn_block(cfg: ArchConfig, fp, h, policy):
 
 def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
                   enc_out=None, moe_groups=1, chunk_q=512, unroll=False,
-                  attn_backend="ref", ssd_backend="ref"):
+                  attn_backend="ref", ssd_backend="ref", prune=True):
     """One decoder layer.  Returns (x, (kcache, vcache, ssm_state, aux)).
 
     ``attn_backend`` / ``ssd_backend`` select the flash_prefill and
-    ssd_prefill kernel backends (kernels/registry.py)."""
+    ssd_prefill kernel backends (kernels/registry.py); ``prune`` the
+    flash_prefill block-skipping knob."""
     b, t, _ = x.shape
     h = rms_norm(x, lp["ln1"])
     cache_kv = (jnp.zeros((b, t, 0, cfg.hsz), x.dtype),) * 2
@@ -169,7 +171,7 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
         a_out, cache_kv = _attn_block(cfg, lp["attn"], h, layout=layout,
                                       window=window, policy=policy,
                                       chunk_q=chunk_q, unroll=unroll,
-                                      attn_backend=attn_backend)
+                                      attn_backend=attn_backend, prune=prune)
         s_out, ssm_state = ssm_lib.ssd_chunked(
             ssm_lib.SSMParams(**lp["ssm"]), cfg, h, unroll=unroll,
             backend=ssd_backend)
@@ -178,7 +180,7 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
         a_out, cache_kv = _attn_block(cfg, lp["attn"], h, layout=layout,
                                       window=window, policy=policy,
                                       chunk_q=chunk_q, unroll=unroll,
-                                      attn_backend=attn_backend)
+                                      attn_backend=attn_backend, prune=prune)
         x = x + a_out
     else:                                                        # pure ssm
         s_out, ssm_state = ssm_lib.ssd_chunked(
@@ -196,7 +198,8 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
         x_out, _ = _attn_block(cfg, lp["xattn"], hx, layout=xl, window=0,
                                policy=policy, causal=False,
                                kv_override=(kx, vx), chunk_q=chunk_q,
-                               unroll=unroll, attn_backend=attn_backend)
+                               unroll=unroll, attn_backend=attn_backend,
+                               prune=prune)
         x = x + x_out
 
     aux = jnp.zeros((), jnp.float32)
@@ -232,7 +235,8 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
             patch_embeds=None, enc_frames=None, return_cache: bool = False,
             moe_groups: int = 1, chunk_q: int = 512, tp_width: int = 1,
             remat: bool = True, unroll: bool = False,
-            prefill_backend: str = "ref", ssd_backend: str = "ref"):
+            prefill_backend: str = "ref", ssd_backend: str = "ref",
+            prune_blocks: bool = True):
     """Full-sequence forward.  tokens [B, T] int32 -> (logits, extras).
 
     extras = {"aux_loss": scalar, "kcache"/"vcache": [L,B,T,Kh_p,hsz],
@@ -241,6 +245,8 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
     ``prefill_backend`` / ``ssd_backend`` route the attention and SSD-scan
     hotspots through the kernel registry (ref | pallas-interpret | pallas);
     the pallas backends use a ref-VJP backward, so gradients flow (train).
+    ``prune_blocks`` is flash_prefill's causal/window block-skipping knob
+    (kernel backends only; bit-exact on/off).
     """
     b, t = tokens.shape
     x = params["embed"][tokens]                                 # [B,T,H]
@@ -256,7 +262,7 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
         from repro.models.encdec import encode                  # lazy: cycle
         enc_out = encode(cfg, params["enc"], enc_frames, policy=policy,
                          chunk_q=chunk_q, unroll=unroll,
-                         attn_backend=prefill_backend)
+                         attn_backend=prefill_backend, prune=prune_blocks)
         x = x + sinusoidal_positions(t, cfg.d_model)[None].astype(x.dtype)
 
     layout = (head_layout(cfg.n_heads, cfg.n_kv_heads, tp_width)
@@ -269,7 +275,7 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
             cfg, lp, carry, layout=layout, window=win, policy=policy,
             enc_out=enc_out, moe_groups=moe_groups, chunk_q=chunk_q,
             unroll=unroll, attn_backend=prefill_backend,
-            ssd_backend=ssd_backend)
+            ssd_backend=ssd_backend, prune=prune_blocks)
         outs = (kc, vc, sst, aux) if return_cache else \
             (None, None, None, aux)
         return y, outs

@@ -67,6 +67,11 @@ class DecodeEngine:
                         f"{field}={getattr(hx, field)!r} unavailable: {why}")
         self.hx = hx
         self.cfg = cfg
+        if hx is not None and hx.lm_head_w8:
+            # quantize the lm_head once up front; otherwise serve_step
+            # re-quantizes the whole [H, V] matrix every decode step
+            from repro.models.decode_model import quantize_lm_head
+            params = quantize_lm_head(params)
         self.params = params
         self.serve_step = jax.jit(serve_step)
         self.prefill_step = jax.jit(prefill_step)
@@ -117,15 +122,19 @@ class DecodeEngine:
         next_tokens, self.state = self.serve_step(
             self.params, self.state, self.cur_tokens)
         self.cur_tokens = next_tokens
+        # one batched device->host transfer per step (per-slot int() calls
+        # would each block on the device queue — B syncs instead of 1)
+        toks_np = np.asarray(next_tokens)
+        lens_np = np.asarray(self.state["total_len"])
         finished = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(next_tokens[i])
+            tok = int(toks_np[i])
             req.out_tokens.append(tok)
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens or \
-                    int(self.state["total_len"][i]) + 1 >= self.cap:
+                    int(lens_np[i]) + 1 >= self.cap:
                 req.done = True
                 finished.append(req)
                 self.slots[i] = None
@@ -148,6 +157,9 @@ class DecodeEngine:
         parts = [f"{family}={getattr(self.hx, field)}"
                  for field, family in registry.FAMILY_FIELDS.items()]
         parts.append(f"fuse_append={self.hx.fuse_append}")
+        parts.append(f"prune_blocks={self.hx.prune_blocks}")
+        if self.hx.lm_head_w8:
+            parts.append("lm_head_w8=True")
         return " ".join(parts)
 
 

@@ -81,6 +81,17 @@ np.testing.assert_allclose(np.asarray(pl4), np.asarray(rf4), rtol=2e-6,
                            atol=2e-6)
 print("pallas-interpret backend == ref (scalar, [B] tl, 2-D, windowed): OK")
 
+# ---- block pruning == dense masked sweep through the 8-way shard_map ----
+hx_nopr = dataclasses.replace(hx_pl, prune_blocks=False)
+with set_mesh(mesh):
+    for tl_case, win in ((total_len, 0), (total_len, 64), (tls, 64)):
+        pr = jax.jit(lambda q, k, v: helix_attention(
+            mesh, hx_pl, q, k, v, tl_case, window=win))(q, k_rr, v_rr)
+        de = jax.jit(lambda q, k, v: helix_attention(
+            mesh, hx_nopr, q, k, v, tl_case, window=win))(q, k_rr, v_rr)
+        np.testing.assert_array_equal(np.asarray(pr), np.asarray(de))
+print("block pruning == dense (KVP=8, scalar + [B] tl, windowed): OK")
+
 # ---- fused KV-append epilogue == unfused through the 8-way shard_map ----
 kn = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))
 vn = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))

@@ -1,0 +1,188 @@
+"""Block-accounting layer: visited-block counts match the analytic formula.
+
+The accounting functions replay the same ``prune_block_range`` /
+``prefill_block_range`` the kernels' index_maps clamp with; these tests pin
+them against *independent* brute-force oracles (enumerating valid slots via
+``shard_positions`` / the mask definition) and against the ISSUE's bounds:
+decode visits <= ceil(local_valid_len / block_s) + 1 blocks per (b, h),
+causal prefill visits the lower triangle of the (T/blk_q, S/blk_k) grid.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax
+
+from repro.kernels import registry
+from repro.kernels.flash_decode import (flash_decode_accounting,
+                                        local_valid_len, shard_positions)
+from repro.kernels.flash_prefill import flash_prefill_accounting
+from repro.utils import cdiv
+
+B, QH, KH, HSZ = 2, 8, 2, 64
+S_CAP, KVP, RR = 64, 4, 16
+
+
+def _mk(s=S_CAP):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    return (jax.random.normal(ks[0], (B, QH, HSZ)),
+            jax.random.normal(ks[1], (B, KH, s, HSZ)),
+            jax.random.normal(ks[2], (B, KH, s, HSZ)))
+
+
+def _decode_oracle_blocks(tl_b, rank, *, window, block_s, s_cap,
+                          slot_offset=0):
+    """Brute force: blocks containing at least one unmasked slot (>= 1 — a
+    fully-pruned request still fetches one clamped block)."""
+    total = 0
+    for tl in tl_b:
+        pos = np.asarray(shard_positions(s_cap, rank, KVP, RR, slot_offset))
+        valid = pos < tl
+        if window > 0:
+            valid &= pos >= tl - window
+        blocks = {j // block_s for j in np.nonzero(valid)[0]}
+        total += max(len(blocks), 1)
+    return total * KH
+
+
+@pytest.mark.parametrize("window", [0, 48], ids=["full", "windowed"])
+@pytest.mark.parametrize("tl", [7, 100, S_CAP * KVP - 7,
+                                np.asarray([200, 33], np.int32)],
+                         ids=["tiny", "short", "full", "perreq"])
+@pytest.mark.parametrize("block_s", [16, 32])
+def test_decode_accounting_matches_bruteforce(window, tl, block_s):
+    q, k, v = _mk()
+    for rank in range(KVP):
+        acc = flash_decode_accounting(q, k, v, tl, rank, kvp=KVP,
+                                      rr_block=RR, window=window,
+                                      block_s=block_s, prune=True)
+        tl_b = np.broadcast_to(np.asarray(tl, np.int32).reshape(-1), (B,))
+        expect = _decode_oracle_blocks(tl_b, rank, window=window,
+                                       block_s=block_s, s_cap=S_CAP)
+        assert acc["blocks_visited"] == expect, (rank, acc, expect)
+        # the ISSUE bound: <= ceil(local_valid_len / block_s) + 1 per (b, h)
+        for b in range(B):
+            valid = int(local_valid_len(jnp.asarray(int(tl_b[b])), rank,
+                                        KVP, RR))
+            assert cdiv(min(valid, S_CAP), block_s) + 1 >= \
+                _decode_oracle_blocks([tl_b[b]], rank, window=window,
+                                      block_s=block_s, s_cap=S_CAP) // KH
+        dense = flash_decode_accounting(q, k, v, tl, rank, kvp=KVP,
+                                        rr_block=RR, window=window,
+                                        block_s=block_s, prune=False)
+        assert dense["blocks_visited"] == dense["blocks_total"]
+        assert acc["blocks_visited"] <= dense["blocks_total"]
+        assert acc["bytes_read"] == acc["blocks_visited"] * \
+            2 * acc["block_s"] * HSZ * 4
+
+
+def test_decode_accounting_window_caps_blocks():
+    """Sliding window: visited blocks stay O(window / block_s) however long
+    the sequence grows (the paper's sliding-window read bound)."""
+    q, k, v = _mk()
+    window, block_s = 32, 16
+    w_blocks_max = cdiv(window // KVP, block_s) + 2      # span + 2 edges
+    for tl in (64, 128, 240):
+        acc = flash_decode_accounting(q, k, v, tl, 0, kvp=KVP, rr_block=RR,
+                                      window=window, block_s=block_s)
+        assert acc["blocks_visited"] <= B * KH * w_blocks_max, (tl, acc)
+
+
+def test_decode_accounting_contiguous_and_slot_offset():
+    q, k, v = _mk()
+    acc = flash_decode_accounting(q, k, v, 80, 1, kvp=1, contiguous=True,
+                                  block_s=16, prune=True)
+    # rank 1 holds positions 64..127 -> 80 valid = 16 slots = 1 block
+    assert acc["blocks_visited"] == B * KH * 1
+    acc0 = flash_decode_accounting(q, k, v, 40, 0, kvp=1, contiguous=True,
+                                   block_s=16, prune=True)
+    assert acc0["blocks_visited"] == B * KH * cdiv(40, 16)
+    # slot_offset shifts the span like the kernel's positions do
+    accs = flash_decode_accounting(q, k, v, 200, 1, kvp=KVP, rr_block=RR,
+                                   window=48, slot_offset=16, block_s=16)
+    assert accs["blocks_visited"] <= B * KH * 3
+
+
+def _prefill_oracle_blocks(t, s, lens, *, causal, window, q_offset, blk_q,
+                           blk_k):
+    """Brute force from the mask definition over the padded grid."""
+    from repro.utils import round_up
+    n_q = round_up(t, blk_q) // blk_q
+    n_k = round_up(s, blk_k) // blk_k
+    total = 0
+    for kv_len in lens:
+        for qi in range(n_q):
+            qpos = q_offset + qi * blk_q + np.arange(blk_q)
+            blocks = set()
+            for ki in range(n_k):
+                kpos = ki * blk_k + np.arange(blk_k)
+                m = (kpos[None, :] < min(s, kv_len)) & np.ones(
+                    (blk_q, 1), bool)
+                if causal:
+                    m &= kpos[None, :] <= qpos[:, None]
+                if window > 0:
+                    m &= kpos[None, :] > qpos[:, None] - window
+                if m.any():
+                    blocks.add(ki)
+            total += max(len(blocks), 1)
+    return total * KH
+
+
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "cross"])
+@pytest.mark.parametrize("window", [0, 20], ids=["full", "windowed"])
+@pytest.mark.parametrize("q_offset", [0, 13], ids=["off0", "off13"])
+@pytest.mark.parametrize("lens", [None, np.asarray([48, 19], np.int32),
+                                  np.asarray([0, 48], np.int32)],
+                         ids=["uniform", "perreq", "empty-row"])
+def test_prefill_accounting_matches_bruteforce(causal, window, q_offset,
+                                               lens):
+    t = s = 48
+    blk = 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, t, QH, HSZ))
+    k = jax.random.normal(ks[1], (B, s, KH, HSZ))
+    v = jax.random.normal(ks[2], (B, s, KH, HSZ))
+    acc = flash_prefill_accounting(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, seq_lens=lens,
+                                   blk_q=blk, blk_k=blk, prune=True)
+    lens_b = np.broadcast_to(
+        np.full((B,), s, np.int32) if lens is None
+        else np.asarray(lens).reshape(-1), (B,))
+    expect = _prefill_oracle_blocks(t, s, lens_b, causal=causal,
+                                    window=window, q_offset=q_offset,
+                                    blk_q=blk, blk_k=blk)
+    assert acc["blocks_visited"] == expect, (acc, expect)
+    dense = flash_prefill_accounting(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, seq_lens=lens,
+                                     blk_q=blk, blk_k=blk, prune=False)
+    assert dense["blocks_visited"] == dense["blocks_total"]
+
+
+def test_prefill_causal_triangle_formula():
+    """Causal T=S, uniform lens: visited == n(n+1)/2 kv blocks per (b, h)
+    q-row sweep — the lower triangle, ~55% of the rectangle for deep
+    grids."""
+    t = s = 160
+    blk = 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, t, 4, 32))
+    k = jax.random.normal(ks[1], (1, s, 2, 32))
+    v = jax.random.normal(ks[2], (1, s, 2, 32))
+    acc = flash_prefill_accounting(q, k, v, causal=True, blk_q=blk,
+                                   blk_k=blk, prune=True)
+    n = acc["n_qblocks"]
+    assert acc["blocks_visited"] == 2 * n * (n + 1) // 2   # kh=2
+    frac = acc["blocks_visited"] / acc["blocks_total"]
+    assert frac == pytest.approx((n + 1) / (2 * n))
+    assert frac <= 0.56
+
+
+def test_registry_accounting_surface():
+    """registry.accounting resolves the attention families and rejects the
+    families without an accounting layer."""
+    assert registry.accounting("flash_decode") is flash_decode_accounting
+    assert registry.accounting("flash_prefill") is flash_prefill_accounting
+    with pytest.raises(ValueError):
+        registry.accounting("ssd_prefill")
+    with pytest.raises(ValueError):
+        registry.accounting("nope")

@@ -2,8 +2,9 @@
 
 Parametrized over the full mode lattice the Helix attention path exercises:
 {scalar vs per-request [B] total_len} x {round-robin vs contiguous layout}
-x {window 0 / window > 0} x {fp32 vs int8 KV cache}, plus the slot_offset
-sliding-window fast path and the padded-S path.
+x {window 0 / window > 0} x {fp32 vs int8 KV cache} x {block pruning on /
+off — bit-exact}, plus the slot_offset sliding-window fast path, the
+padded-S path and the fused KV-append epilogue (fp and int8).
 """
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,19 @@ def test_kernel_matches_ref_mode_lattice(per_request, contiguous, window,
                                rtol=2e-6, atol=2e-6)
     np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
                                rtol=2e-6, atol=2e-6)
+    # block pruning must be bit-exact across the whole lattice (the default
+    # call above prunes; the dense masked sweep is the oracle's oracle).
+    # block_s=16 (< the 64 above) forces multi-block pruning decisions.
+    out_p, lse_p = flash_decode(q, k, v, total_len, rank,
+                                kvp=1 if contiguous else KVP, rr_block=RR,
+                                window=window, contiguous=contiguous,
+                                block_s=16, interpret=True, prune=True, **kw)
+    out_d, lse_d = flash_decode(q, k, v, total_len, rank,
+                                kvp=1 if contiguous else KVP, rr_block=RR,
+                                window=window, contiguous=contiguous,
+                                block_s=16, interpret=True, prune=False, **kw)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
+    np.testing.assert_array_equal(np.asarray(lse_p), np.asarray(lse_d))
 
 
 def test_kernel_slot_offset_matches_ref():
@@ -168,6 +182,56 @@ def test_fused_append_bit_exact(per_request, window):
         np.testing.assert_array_equal(np.asarray(lse_f), np.asarray(lse_u))
         np.testing.assert_array_equal(np.asarray(kc_f), kc_ref)
         np.testing.assert_array_equal(np.asarray(vc_f), vc_ref)
+
+
+@pytest.mark.parametrize("per_request", [False, True],
+                         ids=["scalar-tl", "perreq-tl"])
+@pytest.mark.parametrize("window", [0, 48], ids=["full", "windowed"])
+def test_fused_append_int8_bit_exact(per_request, window):
+    """int8 fused append: the kernel quantizes the raw new-token row
+    in-VMEM (same formula as quantize_kv_token) and persists payload +
+    scale — bit-identical with host-side quantize + append + attend, on
+    every rank."""
+    from repro.core.helix import quantize_kv_token
+    q, k, v = _mk()
+    kq, kscale = _quantize(k)
+    vq, vscale = _quantize(v)
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    k_new = jax.random.normal(ks[0], (B, KH, HSZ))
+    v_new = jax.random.normal(ks[1], (B, KH, HSZ))
+    if per_request:
+        total_len = jnp.asarray([S_CAP * KVP - 7, 33], jnp.int32)
+    else:
+        total_len = S_CAP * KVP - 7
+    knq, kns = quantize_kv_token(k_new)
+    vnq, vns = quantize_kv_token(v_new)
+    tlb = np.broadcast_to(np.asarray(total_len, np.int32).reshape(-1), (B,))
+    for rank in range(KVP):
+        kc_ref, vc_ref = _append_unfused(kq, vq, knq, vnq, total_len, rank)
+        ks_ref = np.asarray(kscale).copy()
+        vs_ref = np.asarray(vscale).copy()
+        for b in range(B):
+            pos = int(tlb[b]) - 1
+            blk = pos // RR
+            if blk % KVP == rank:
+                j = (blk // KVP) * RR + pos % RR
+                if j < ks_ref.shape[2]:
+                    ks_ref[b, :, j] = np.asarray(kns)[b]
+                    vs_ref[b, :, j] = np.asarray(vns)[b]
+        out_u, lse_u = flash_decode(
+            q, jnp.asarray(kc_ref), jnp.asarray(vc_ref), total_len, rank,
+            kvp=KVP, rr_block=RR, window=window, block_s=64, interpret=True,
+            kscale=jnp.asarray(ks_ref), vscale=jnp.asarray(vs_ref))
+        out_f, lse_f, kc_f, vc_f, ks_f, vs_f = flash_decode(
+            q, kq, vq, total_len, rank, kvp=KVP, rr_block=RR, window=window,
+            block_s=64, interpret=True, kscale=kscale, vscale=vscale,
+            k_new=k_new, v_new=v_new)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+        np.testing.assert_array_equal(np.asarray(lse_f), np.asarray(lse_u))
+        np.testing.assert_array_equal(np.asarray(kc_f), kc_ref)
+        np.testing.assert_array_equal(np.asarray(vc_f), vc_ref)
+        np.testing.assert_array_equal(np.asarray(ks_f), ks_ref)
+        np.testing.assert_array_equal(np.asarray(vs_f), vs_ref)
 
 
 def test_fused_append_padded_s():

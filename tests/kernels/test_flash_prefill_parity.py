@@ -4,8 +4,8 @@ test_flash_decode_parity.py's mode-lattice style).
 Parametrized over the full contract the model callers (prefill_attention /
 _attn_block) exercise: {causal self-attn vs cross (T != S)} x {window 0 /
 static > 0 / traced} x {q_offset 0 / > 0} x {uniform vs per-request [B]
-seq_lens}, plus fully-masked rows and the ref-VJP gradient path used by
-train_step.
+seq_lens} x {block skipping on / off — bit-exact}, plus fully-masked rows
+and the ref-VJP gradient path used by train_step.
 """
 import jax
 import jax.numpy as jnp
@@ -47,6 +47,15 @@ def test_kernel_matches_ref_mode_lattice(causal, window, q_offset,
     ref = flash_prefill_ref(q, k, v, causal=causal, window=window,
                             q_offset=q_offset, seq_lens=lens)
     _cmp(out, ref)
+    # causal/window block skipping must be bit-exact with the dense masked
+    # sweep across the whole lattice (blk 8 forces multi-block decisions)
+    out_p = flash_prefill(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, seq_lens=lens,
+                          blk_q=8, blk_k=8, prune=True, interpret=True)
+    out_d = flash_prefill(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, seq_lens=lens,
+                          blk_q=8, blk_k=8, prune=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
 
 
 def test_kernel_cross_attention_t_neq_s():

@@ -145,8 +145,11 @@ def test_helix_attention_fused_append_bit_exact():
 
 
 def test_fuse_append_applicable_gating():
-    """Static fusion eligibility: on for plain pallas decode, off for ref /
-    opt-out / quant / contiguous / the windowed cache-slice fast path."""
+    """Static fusion eligibility: on for pallas decode (incl. quant — the
+    kernel quantizes in-kernel — and windowed layers, since block pruning
+    subsumes the cache-slice fast path), off for ref / opt-out /
+    contiguous, and off for the windowed slice path when pruning is
+    disabled."""
     from repro.core.helix import fuse_append_applicable
     import dataclasses
     hx = _hx("pallas-interpret")
@@ -154,12 +157,69 @@ def test_fuse_append_applicable_gating():
     assert not fuse_append_applicable(_hx("ref"), 4, 0, 100, 256)
     assert not fuse_append_applicable(
         dataclasses.replace(hx, fuse_append=False), 4, 0, 100, 256)
-    assert not fuse_append_applicable(hx, 4, 0, 100, 256, quant=True)
+    assert fuse_append_applicable(hx, 4, 0, 100, 256, quant=True)
     assert not fuse_append_applicable(hx, 4, 0, 100, 256, contiguous=True)
-    # static window small enough to engage the cache-slice fast path
-    assert not fuse_append_applicable(hx, 4, 32, 1000, 1024)
+    # windowed layers fuse when pruning handles the window in-kernel ...
+    assert fuse_append_applicable(hx, 4, 32, 1000, 1024)
+    # ... but with pruning off the cache-slice fast path re-engages and the
+    # static-window scalar-length case must fall back to unfused append
+    hx_np = dataclasses.replace(hx, prune_blocks=False)
+    assert not fuse_append_applicable(hx_np, 4, 32, 1000, 1024)
     # traced/per-request total_len: slice path can't engage -> fusible
-    assert fuse_append_applicable(hx, 4, 32, jnp.zeros((2,), jnp.int32), 1024)
+    assert fuse_append_applicable(hx_np, 4, 32,
+                                  jnp.zeros((2,), jnp.int32), 1024)
+
+
+@pytest.mark.parametrize("window", [0, 32], ids=["full", "windowed"])
+def test_helix_attention_prune_parity(window):
+    """helix_attention with block pruning on == off == ref, for scalar and
+    per-request lengths (pruned/unpruned kernel outputs are bit-exact)."""
+    mesh = _mesh1()
+    q, k, v = _mk(s=128)
+    for tl in (120, jnp.asarray([120, 37], jnp.int32)):
+        def run(hx):
+            return jax.jit(lambda q, k, v: helix_attention(
+                mesh, hx, q, k, v, tl, window=window))(q, k, v)
+
+        hx_p = _hx("pallas-interpret")
+        hx_np = dataclasses.replace(hx_p, prune_blocks=False,
+                                    fuse_append=False)
+        out_p = np.asarray(run(hx_p))
+        out_ref = np.asarray(run(_hx("ref")))
+        np.testing.assert_allclose(out_p, out_ref, rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(run(hx_np)), out_ref,
+                                   rtol=2e-6, atol=2e-6)
+
+
+def test_helix_attention_fused_append_int8():
+    """helix_attention int8 fused append == append_kv_quant then attend,
+    bit for bit (output, caches and scales), incl. windowed layers."""
+    from repro.core.helix import append_kv_quant
+    mesh = _mesh1()
+    hx = _hx("pallas-interpret")
+    q, k, v = _mk()
+    scale = jnp.maximum(jnp.max(jnp.abs(k), axis=-1) / 127.0, 1e-30)
+    vscale = jnp.maximum(jnp.max(jnp.abs(v), axis=-1) / 127.0, 1e-30)
+    kq = jnp.clip(jnp.round(k / scale[..., None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(v / vscale[..., None]), -127, 127).astype(jnp.int8)
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    kn = jax.random.normal(ks[0], (2, 2, 64))
+    vn = jax.random.normal(ks[1], (2, 2, 64))
+    for tl, win in [(60, 0), (jnp.asarray([60, 23], jnp.int32), 0), (60, 32)]:
+        kc_u, vc_u, ks_u, vs_u = append_kv_quant(
+            kq, vq, scale, vscale, kn, vn, tl, kvp=1, rr_block=hx.rr_block)
+        out_u = jax.jit(lambda *a: helix_attention(
+            mesh, hx, *a[:3], tl, window=win, kscale=a[3], vscale=a[4]))(
+                q, kc_u, vc_u, ks_u, vs_u)
+        out_f, kc_f, vc_f, ks_f, vs_f = jax.jit(
+            lambda *a: helix_attention(
+                mesh, hx, *a[:3], tl, window=win, kscale=a[3], vscale=a[4],
+                k_new=a[5], v_new=a[6]))(q, kq, vq, scale, vscale, kn, vn)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+        np.testing.assert_array_equal(np.asarray(kc_f), np.asarray(kc_u))
+        np.testing.assert_array_equal(np.asarray(vc_f), np.asarray(vc_u))
+        np.testing.assert_array_equal(np.asarray(ks_f), np.asarray(ks_u))
+        np.testing.assert_array_equal(np.asarray(vs_f), np.asarray(vs_u))
 
 
 def test_serve_step_fused_append_matches_unfused():
@@ -193,3 +253,127 @@ def test_serve_step_fused_append_matches_unfused():
                                   np.asarray(s_unf["kcache"]))
     np.testing.assert_array_equal(np.asarray(s_fus["vcache"]),
                                   np.asarray(s_unf["vcache"]))
+
+
+# --------------------------------------------------------- block pruning
+def _prefill_state(cfg, mesh, hx, s_cap=64, t=12):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg, mesh, hx, s_cap=s_cap))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, t), 0, cfg.vocab)
+    _, state0 = prefill(params, {"tokens": toks})
+    return params, state0
+
+
+def _decode_n(cfg, mesh, hx, params, state0, n=3, **kw):
+    serve = jax.jit(build_serve_step(cfg, mesh, hx, **kw))
+    state = dict(state0)
+    cur = jnp.zeros((2,), jnp.int32)
+    outs = []
+    for _ in range(n):
+        cur, state = serve(params, state, cur)
+        outs.append(np.asarray(cur))
+    return np.stack(outs), state
+
+
+def test_prefill_prune_knob_plumbed(monkeypatch):
+    """hx.prune_blocks reaches flash_prefill through the prefill step (the
+    dense-sweep opt-out must hold for prefill too, not just decode).
+    Outputs are bit-exact either way, so a spy checks the plumbing."""
+    import repro.models.transformer as tr
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    seen = []
+    orig = tr.prefill_attention
+
+    def spy(*a, **kw):
+        seen.append(kw.get("prune"))
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(tr, "prefill_attention", spy)
+    for prune in (False, True):
+        seen.clear()
+        hx = HelixConfig(kvp_axes=("data",), tpa_axis=None,
+                         prefill_backend="pallas-interpret",
+                         prune_blocks=prune)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prefill = make_prefill_step(cfg, mesh, hx, s_cap=64)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                  cfg.vocab)
+        prefill(params, {"tokens": toks})
+        assert seen and all(p is prune for p in seen), (prune, seen)
+
+
+def test_serve_step_prune_parity():
+    """Full serve_step: block pruning on == off == ref (greedy tokens
+    identical, pruned/unpruned caches bit-exact)."""
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
+    params, state0 = _prefill_state(cfg, mesh, hx)
+    t_ref, _ = _decode_n(cfg, mesh, hx, params, state0, attn_backend="ref")
+    t_p, s_p = _decode_n(cfg, mesh, hx, params, state0,
+                         attn_backend="pallas-interpret", prune_blocks=True)
+    t_d, s_d = _decode_n(cfg, mesh, hx, params, state0,
+                         attn_backend="pallas-interpret", prune_blocks=False)
+    np.testing.assert_array_equal(t_p, t_ref)
+    np.testing.assert_array_equal(t_d, t_ref)
+    np.testing.assert_array_equal(np.asarray(s_p["kcache"]),
+                                  np.asarray(s_d["kcache"]))
+    np.testing.assert_array_equal(np.asarray(s_p["vcache"]),
+                                  np.asarray(s_d["vcache"]))
+
+
+def test_serve_step_fused_append_int8_matches_unfused():
+    """Full serve_step with an int8 KV cache: the fused in-kernel
+    quantize-and-append decode == the unfused append_kv_quant path, bit for
+    bit (tokens, int8 caches and scales)."""
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None, kv_cache_bits=8,
+                     attn_backend="pallas-interpret")
+    params, state0 = _prefill_state(cfg, mesh, hx)
+    kf = state0["kcache"].astype(jnp.float32)
+    vf = state0["vcache"].astype(jnp.float32)
+    ks = jnp.maximum(jnp.max(jnp.abs(kf), -1) / 127.0, 1e-30)
+    vs = jnp.maximum(jnp.max(jnp.abs(vf), -1) / 127.0, 1e-30)
+    st8 = dict(state0)
+    st8["kcache"] = jnp.clip(jnp.round(kf / ks[..., None]), -127,
+                             127).astype(jnp.int8)
+    st8["vcache"] = jnp.clip(jnp.round(vf / vs[..., None]), -127,
+                             127).astype(jnp.int8)
+    st8["kscale"], st8["vscale"] = ks, vs
+
+    t_fus, s_fus = _decode_n(cfg, mesh, hx, params, st8, fuse_append=True)
+    t_unf, s_unf = _decode_n(cfg, mesh, hx, params, st8, fuse_append=False)
+    np.testing.assert_array_equal(t_fus, t_unf)
+    for key in ("kcache", "vcache", "kscale", "vscale"):
+        np.testing.assert_array_equal(np.asarray(s_fus[key]),
+                                      np.asarray(s_unf[key]))
+
+
+# ------------------------------------------------------- w8a16 lm_head
+def test_serve_step_lm_head_w8_consumer():
+    """lm_head_w8 routes the logits matmul through the w8a16_matmul family:
+    ref and pallas-interpret matmul backends agree on the same quantized
+    weights (greedy tokens identical), and the quantized logits stay close
+    to the fp path."""
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = _mesh1()
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None)
+    params, state0 = _prefill_state(cfg, mesh, hx)
+
+    def logits_once(**kw):
+        serve = jax.jit(build_serve_step(cfg, mesh, hx, return_logits=True,
+                                         **kw))
+        (nt, lg), _ = serve(params, dict(state0), jnp.zeros((2,), jnp.int32))
+        return np.asarray(nt), np.asarray(lg)
+
+    t_fp, lg_fp = logits_once()
+    t_r, lg_r = logits_once(lm_head_w8=True, matmul_backend="ref")
+    t_k, lg_k = logits_once(lm_head_w8=True,
+                            matmul_backend="pallas-interpret")
+    np.testing.assert_array_equal(t_r, t_k)
+    np.testing.assert_allclose(lg_k, lg_r, rtol=2e-5, atol=2e-5)
+    # weight-only quantization: small perturbation of the fp logits
+    band = np.max(np.abs(lg_fp)) * 0.1 + 1e-3
+    assert np.max(np.abs(lg_r - lg_fp)) < band
