@@ -1,5 +1,5 @@
 # Tier-1 verify: `make test` == what CI runs (scripts/ci.sh).
-.PHONY: test test-fast bench-decode check-docs list-backends
+.PHONY: test test-fast bench-decode bench-serving check-docs list-backends
 
 test:
 	bash scripts/ci.sh
@@ -11,6 +11,11 @@ test-fast:
 # decode-attention microbench (incl. fused-append sweep); writes BENCH_decode.json
 bench-decode:
 	PYTHONPATH=src python benchmarks/bench_decode_kernel.py
+
+# serving load sweep (Poisson traffic x chunk_tokens); writes BENCH_serving.json
+bench-serving:
+	PYTHONPATH=src python benchmarks/bench_serving.py
+	python scripts/check_bench_schema.py BENCH_serving.json
 
 # docs check: public-API docstrings + README CLI-flag drift
 check-docs:

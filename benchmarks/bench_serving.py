@@ -1,0 +1,120 @@
+"""Serving load sweep: TTFT / TTL / throughput per (load, chunk_tokens).
+
+  PYTHONPATH=src python benchmarks/bench_serving.py \
+      [--arch granite-3-2b] [--loads 0.25 1.0] [--chunks 0 8 32] \
+      [--requests 16] [--prompt-len 48] [--max-new 8] \
+      [--json BENCH_serving.json] [--smoke]
+
+Replays a synthetic Poisson arrival process (``load`` = mean requests per
+engine step) through the scheduler-driven continuous-batching engine
+(serving/engine.py) once per (load, chunk_tokens) cell and records the
+per-request latency summary — the numbers the paper is about: TTL (decode
+token-to-token gap) must hold steady while prompts prefill concurrently.
+``chunk_tokens = 0`` is the monolithic one-shot prefill baseline: every
+in-flight decode stream stalls for the whole prompt, which shows up
+directly in ``ttl_p95``.  Chunked rows bound that stall at one chunk.
+
+Results land in machine-readable JSON (default ``BENCH_serving.json``;
+schema asserted by ``scripts/check_bench_schema.py`` in CI so rows can't
+silently drift):
+
+  {"meta": {arch, device, requests, prompt_len, max_new, max_batch},
+   "rows": [{"load": 1.0, "chunk_tokens": 8, "sched_policy": "fcfs",
+             "ttft_p50_s": ..., "ttft_p95_s": ..., "ttl_p50_s": ...,
+             "ttl_p95_s": ..., "queue_wait_p50_s": ...,
+             "throughput_tok_s": ..., "n_finished": ..., "steps": ...}]}
+
+On CPU the absolute times are dominated by XLA dispatch, not kernel work —
+the *relative* one-shot-vs-chunked TTL spread is the signal tracked across
+PRs; rerun on TPU for real latencies.  ``--smoke`` runs one tiny cell per
+chunk setting (CI: proves the harness + schema end to end).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.launch.serve import serve_demo
+
+ROW_SCHEMA = {
+    "load": float, "chunk_tokens": int, "sched_policy": str,
+    "ttft_p50_s": float, "ttft_p95_s": float,
+    "ttl_p50_s": float, "ttl_p95_s": float,
+    "queue_wait_p50_s": float, "throughput_tok_s": float,
+    "n_finished": int, "n_tokens": int,
+}
+
+
+def bench_cell(arch: str, *, load: float, chunk_tokens: int,
+               sched_policy: str, requests: int, prompt_len: int,
+               max_new: int, max_batch: int, seed: int = 0) -> dict:
+    """One (load, chunk_tokens) sweep cell -> a ROW_SCHEMA row."""
+    finished, summary = serve_demo(
+        arch, reduced=True, n_requests=requests, prompt_len=prompt_len,
+        max_new=max_new, max_batch=max_batch, chunk_tokens=chunk_tokens,
+        sched_policy=sched_policy, traffic="poisson", arrival_rate=load,
+        seed=seed, log=lambda s: None)
+    return {
+        "load": float(load),
+        "chunk_tokens": int(chunk_tokens),
+        "sched_policy": sched_policy,
+        "ttft_p50_s": summary["ttft_s"]["p50"],
+        "ttft_p95_s": summary["ttft_s"]["p95"],
+        "ttl_p50_s": summary["ttl_s"]["p50"],
+        "ttl_p95_s": summary["ttl_s"]["p95"],
+        "queue_wait_p50_s": summary["queue_wait_s"]["p50"],
+        "throughput_tok_s": summary["throughput_tok_s"],
+        "n_finished": summary["n_finished"],
+        "n_tokens": summary["n_tokens"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--loads", type=float, nargs="+", default=[0.25, 1.0])
+    ap.add_argument("--chunks", type=int, nargs="+", default=[0, 8, 32],
+                    help="chunk_tokens settings (0 = one-shot prefill)")
+    ap.add_argument("--sched-policy", default="fcfs")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI cell: one load, 4 requests, short prompts")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.loads, args.chunks = [1.0], [0, 4]
+        args.requests, args.prompt_len, args.max_new = 4, 12, 4
+        args.max_batch = 2
+
+    rows = []
+    for load in args.loads:
+        for chunk in args.chunks:
+            row = bench_cell(args.arch, load=load, chunk_tokens=chunk,
+                             sched_policy=args.sched_policy,
+                             requests=args.requests,
+                             prompt_len=args.prompt_len,
+                             max_new=args.max_new, max_batch=args.max_batch)
+            rows.append(row)
+            print(f"load={load:<5} chunk={chunk:<4} "
+                  f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
+                  f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
+                  f"tput={row['throughput_tok_s']:7.1f} tok/s")
+
+    out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
+                    "requests": args.requests, "prompt_len": args.prompt_len,
+                    "max_new": args.max_new, "max_batch": args.max_batch,
+                    "smoke": bool(args.smoke)},
+           "rows": rows}
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[bench_serving] wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,8 @@ from repro.launch.serve import serve_demo
 
 
 def main():
-    finished = serve_demo("granite-3-2b", reduced=True, n_requests=12,
-                          prompt_len=24, max_new=12, max_batch=4)
+    finished, _ = serve_demo("granite-3-2b", reduced=True, n_requests=12,
+                             prompt_len=24, max_new=12, max_batch=4)
     assert len(finished) == 12
     assert all(len(r.out_tokens) == 12 for r in finished)
     print("OK")

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""CI schema check for the machine-readable benchmark JSONs.
+
+Asserts ``BENCH_serving.json`` (benchmarks/bench_serving.py) carries every
+field downstream tooling keys on, with the right types and sane values —
+so a refactor of the bench or the metrics summary can't silently drop a
+column and erase the perf trajectory across PRs.
+
+Run directly:  python scripts/check_bench_schema.py [BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+META_KEYS = {"arch", "device", "requests", "prompt_len", "max_new",
+             "max_batch"}
+
+
+def check(path: pathlib.Path) -> list[str]:
+    from benchmarks.bench_serving import ROW_SCHEMA  # single source of truth
+    errors: list[str] = []
+    data = json.loads(path.read_text())
+    missing_meta = META_KEYS - set(data.get("meta", {}))
+    if missing_meta:
+        errors.append(f"meta missing keys: {sorted(missing_meta)}")
+    rows = data.get("rows", [])
+    if not rows:
+        errors.append("no rows")
+    for i, row in enumerate(rows):
+        for key, typ in ROW_SCHEMA.items():
+            if key not in row:
+                errors.append(f"row {i}: missing {key!r}")
+            elif not isinstance(row[key], (typ, int) if typ is float else typ):
+                errors.append(f"row {i}: {key!r} is {type(row[key]).__name__},"
+                              f" want {typ.__name__}")
+        if row.get("n_finished", 0) <= 0:
+            errors.append(f"row {i}: n_finished must be positive "
+                          "(engine drained nothing?)")
+        for key in ("ttft_p50_s", "ttl_p50_s", "throughput_tok_s"):
+            if not row.get(key, 0) > 0:
+                errors.append(f"row {i}: {key} must be > 0, got {row.get(key)}")
+    return errors
+
+
+def main() -> int:
+    path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                        else ROOT / "BENCH_serving.json")
+    sys.path.insert(0, str(ROOT))          # import benchmarks.* from root
+    if not path.exists():
+        print(f"[check_bench_schema] {path} missing "
+              "(run benchmarks/bench_serving.py first)")
+        return 1
+    errors = check(path)
+    if errors:
+        print(f"[check_bench_schema] FAILED for {path}:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"[check_bench_schema] OK ({path})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

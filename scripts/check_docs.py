@@ -59,9 +59,17 @@ def check_docstrings() -> None:
         ("repro.models.decode_model", "build_serve_step"),
         ("repro.models.model_zoo", "make_train_step"),
         ("repro.models.model_zoo", "make_prefill_step"),
+        ("repro.models.model_zoo", "make_chunk_prefill_step"),
+        ("repro.models.model_zoo", "init_prefill_buffers"),
+        ("repro.models.model_zoo", "finalize_chunked_prefill"),
+        ("repro.models.decode_model", "prepare_decode_params"),
         ("repro.models.attention", "prefill_attention"),
         ("repro.models.attention", "decode_attention"),
         ("repro.serving.engine", "DecodeEngine"),
+        ("repro.serving.scheduler", "Scheduler"),
+        ("repro.serving.scheduler", "Request"),
+        ("repro.serving.metrics", "EngineMetrics"),
+        ("repro.core.kvcache", "quantize_decode_state"),
         ("repro.kernels.registry", "KernelFamily"),
         ("repro.kernels.registry", "backend_table"),
     ]
@@ -84,6 +92,7 @@ CLI_SOURCES = {
     "repro.launch.serve": ROOT / "src/repro/launch/serve.py",
     "repro.launch.train": ROOT / "src/repro/launch/train.py",
     "bench_decode_kernel.py": ROOT / "benchmarks/bench_decode_kernel.py",
+    "bench_serving.py": ROOT / "benchmarks/bench_serving.py",
 }
 FLAG_RE = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)[\"']")
 

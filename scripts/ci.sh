@@ -25,4 +25,11 @@ python -m repro.launch.serve --list-backends
 # (and to the causal triangle in prefill) while outputs stay bit-exact
 python scripts/prune_smoke.py
 
+# serving smoke: scheduler-driven engine with chunked prefill under synthetic
+# Poisson traffic; writes BENCH_serving.json whose schema is then asserted
+# (perf rows can't silently drift)
+python benchmarks/bench_serving.py --smoke
+python scripts/check_bench_schema.py BENCH_serving.json
+
+# full suite (tests/serving + tests/kernels + tests/models + distributed ...)
 python -m pytest -q "$@"

@@ -77,10 +77,35 @@ def decode_state_specs(cfg: ArchConfig, hx: HelixConfig,
 
 def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, kvp: int,
                       rr_block: int = 16, dtype=jnp.bfloat16,
-                      total_len: int | jax.Array = 0) -> dict[str, Any]:
-    """Zero-initialised decode state (concrete arrays, small/test use)."""
-    shapes = decode_state_shapes(cfg, batch, seq_len, kvp, rr_block, dtype)
+                      total_len: int | jax.Array = 0,
+                      kv_bits: int = 16) -> dict[str, Any]:
+    """Zero-initialised decode state (concrete arrays, small/test use).
+
+    ``kv_bits=8`` allocates int8 K/V payloads plus per-slot f32 scale
+    planes (``kscale``/``vscale``)."""
+    shapes = decode_state_shapes(cfg, batch, seq_len, kvp, rr_block, dtype,
+                                 kv_bits=kv_bits)
     state = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
     tl = jnp.asarray(total_len, jnp.int32)
     state["total_len"] = tl
     return state
+
+
+def quantize_decode_state(state: dict[str, Any]) -> dict[str, Any]:
+    """fp round-robin K/V caches -> int8 payloads + per-slot f32 scales.
+
+    Per-(…, slot) symmetric quantization over the ``hsz`` axis with the
+    same formula as ``core/helix.quantize_kv_token`` (the decode-step
+    append), so a prefilled-then-quantized cache and a cache grown token by
+    token agree on shared slots.  Zero (unfilled) slots quantize to zero
+    payloads with the epsilon scale.  Returns a copy of ``state`` with
+    ``kcache``/``vcache`` replaced and ``kscale``/``vscale`` added; other
+    leaves pass through."""
+    out = dict(state)
+    for key, skey in (("kcache", "kscale"), ("vcache", "vscale")):
+        c = state[key].astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(c), axis=-1) / 127.0, 1e-30)
+        out[key] = jnp.clip(jnp.round(c / scale[..., None]),
+                            -127, 127).astype(jnp.int8)
+        out[skey] = scale
+    return out

@@ -1,7 +1,7 @@
 """Serving driver: batched decode with the Helix engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
-      --requests 8 --prompt-len 32 --max-new 16
+      --requests 8 --prompt-len 32 --max-new 16 --chunk-tokens 8
 
 Kernel backends (kernels/registry.py) are selectable per family:
 ``--attn-backend`` routes the decode attention (flash_decode),
@@ -12,11 +12,19 @@ quantizing the lm_head onto it); ``--no-fuse-append`` opts out of the fused
 KV-append kernel epilogue and ``--no-prune-blocks`` of the length/causality-
 aware K/V block pruning (both bit-exact).  ``--list-backends`` prints the
 per-family availability matrix and exits (CI smoke target).
+
+Serving scheduler (docs/serving.md): ``--chunk-tokens N`` prefills prompts
+in N-token slices interleaved with decode steps (0 = monolithic one-shot
+prefill), ``--sched-policy`` picks the admission order (fcfs | sjf), and
+``--traffic poisson --arrival-rate R`` replays a synthetic Poisson arrival
+process (R requests per engine step on average) instead of submitting
+everything up front; ``--metrics`` prints the TTFT/TTL/queue-wait summary.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import numpy as np
@@ -26,10 +34,21 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.sharding import HelixConfig
 from repro.kernels.registry import BACKENDS, backend_table
-from repro.models.model_zoo import (build_serve_step, make_prefill_step)
+from repro.models.model_zoo import (build_serve_step, chunked_prefill_supported,
+                                    make_chunk_prefill_step, make_prefill_step)
 from repro.models.transformer import init_params
 from repro.serving import DecodeEngine, Request
+from repro.serving.scheduler import POLICIES
 from repro.utils import make_mesh
+
+
+def poisson_arrival_steps(n: int, rate: float, seed: int = 0) -> list[int]:
+    """Synthetic Poisson traffic: the engine step at which each of ``n``
+    requests arrives, with exponential inter-arrival gaps of mean
+    ``1/rate`` steps (``rate`` = average arrivals per engine step)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
 def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
@@ -41,12 +60,18 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                fuse_append: bool | None = None,
                prune_blocks: bool | None = None,
                lm_head_w8: bool | None = None,
+               chunk_tokens: int = 0, sched_policy: str = "fcfs",
+               traffic: str = "batch", arrival_rate: float = 0.5,
                seed: int = 0, log=print):
     """Run ``n_requests`` synthetic prompts through the continuous-batching
-    engine and report throughput.  Returns the finished ``Request`` list.
+    engine and report throughput.  Returns (finished ``Request`` list,
+    metrics summary dict).
 
     The ``*_backend`` arguments override the corresponding ``hx`` fields
     (``None`` keeps the ``HelixConfig`` defaults); see kernels/registry.py.
+    ``chunk_tokens`` > 0 enables chunked prefill (scheduler path);
+    ``traffic="poisson"`` staggers submissions over engine steps with
+    ``arrival_rate`` requests/step on average.
     """
     cfg = get_config(arch)
     if reduced:
@@ -69,37 +94,46 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     kvp = hx.kvp(mesh) if mesh else 1
     max_seq = prompt_len + max_new + 1
 
-    if mesh is not None:
-        serve_step = build_serve_step(cfg, mesh, hx)
-        prefill_step = make_prefill_step(cfg, mesh, hx)
-    else:
+    if mesh is None:
         # single-device: 1x1 trivial mesh keeps one code path
-        mesh1 = make_mesh((1, 1), ("data", "model"))
-        serve_step = build_serve_step(cfg, mesh1, hx)
-        prefill_step = make_prefill_step(cfg, mesh1, hx)
+        mesh = make_mesh((1, 1), ("data", "model"))
+    serve_step = build_serve_step(cfg, mesh, hx)
+    prefill_step = make_prefill_step(cfg, mesh, hx)
+    chunked = chunk_tokens > 0 and chunked_prefill_supported(cfg)
+    chunk_step = make_chunk_prefill_step(cfg, mesh, hx) if chunked else None
+    if chunk_tokens > 0 and not chunked:
+        log(f"[serve] {cfg.name}: chunked prefill unsupported for this "
+            "family; falling back to one-shot prefill")
 
     engine = DecodeEngine(cfg, params, serve_step, prefill_step,
                           max_batch=max_batch, max_seq=max_seq, kvp=kvp,
-                          hx=hx)
+                          hx=hx, chunk_tokens=chunk_tokens if chunked else None,
+                          chunk_prefill_step=chunk_step,
+                          tp_width=mesh.shape["model"],
+                          sched_policy=sched_policy)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
     pending = [Request(rid=i,
                        prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
                        max_new_tokens=max_new)
                for i in range(n_requests)]
+    arrivals = ([0] * n_requests if traffic == "batch"
+                else poisson_arrival_steps(n_requests, arrival_rate, seed))
     finished: list[Request] = []
     t0 = time.time()
     steps = 0
-    while pending or any(engine.slots):
-        while pending and engine.add_request(pending[0]):
-            pending.pop(0)
+    while pending or engine.pending():
+        while pending and arrivals[0] <= steps:
+            engine.submit(pending.pop(0))
+            arrivals.pop(0)
         finished += engine.step()
         steps += 1
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in finished)
+    summary = engine.metrics.summary()
     log(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.2f}s "
         f"({toks / max(dt, 1e-9):.1f} tok/s, {steps} engine steps)")
-    return finished
+    return finished, summary
 
 
 def main():
@@ -110,6 +144,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill prompts in this many tokens per engine "
+                         "step, interleaved with decode (0 = one-shot "
+                         "prefill; bit-exact either way)")
+    ap.add_argument("--sched-policy", default="fcfs", choices=POLICIES,
+                    help="admission order: fcfs (arrival) or sjf (shortest "
+                         "remaining prefill first)")
+    ap.add_argument("--traffic", default="batch",
+                    choices=("batch", "poisson"),
+                    help="batch: submit all requests up front; poisson: "
+                         "synthetic arrival process over engine steps")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="poisson traffic: mean requests per engine step")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the TTFT/TTL/queue-wait summary JSON")
     ap.add_argument("--attn-backend", default=None, choices=BACKENDS,
                     help="flash_decode backend for decode attention "
                          "(default: HelixConfig's, i.e. 'ref'; 'pallas' "
@@ -140,15 +189,20 @@ def main():
         return
     if not args.arch:
         ap.error("--arch is required (or use --list-backends)")
-    serve_demo(args.arch, reduced=args.reduced, n_requests=args.requests,
-               prompt_len=args.prompt_len, max_new=args.max_new,
-               max_batch=args.max_batch, attn_backend=args.attn_backend,
-               prefill_backend=args.prefill_backend,
-               ssd_backend=args.ssd_backend,
-               matmul_backend=args.matmul_backend,
-               fuse_append=False if args.no_fuse_append else None,
-               prune_blocks=False if args.no_prune_blocks else None,
-               lm_head_w8=True if args.lm_head_w8 else None)
+    _, summary = serve_demo(
+        args.arch, reduced=args.reduced, n_requests=args.requests,
+        prompt_len=args.prompt_len, max_new=args.max_new,
+        max_batch=args.max_batch, attn_backend=args.attn_backend,
+        prefill_backend=args.prefill_backend,
+        ssd_backend=args.ssd_backend,
+        matmul_backend=args.matmul_backend,
+        fuse_append=False if args.no_fuse_append else None,
+        prune_blocks=False if args.no_prune_blocks else None,
+        lm_head_w8=True if args.lm_head_w8 else None,
+        chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
+        traffic=args.traffic, arrival_rate=args.arrival_rate)
+    if args.metrics:
+        print(json.dumps(summary, indent=2, default=float))
 
 
 if __name__ == "__main__":

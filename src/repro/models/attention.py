@@ -136,14 +136,19 @@ def ref_attention(q, k, v, *, causal: bool = True, window: int = 0,
 # ------------------------------------------------------------- chunked
 def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
                       chunk_q: int = 512, q_offset: int | jax.Array = 0,
-                      unroll: bool = False):
+                      unroll: bool = False, seq_lens=None):
     """Memory-bounded attention: lax.scan over query chunks.
 
     Each chunk computes its full score row (the row fits: cq × S), so no
     online-softmax state is needed.  Used by train_step / prefill_step; the
     TPU hotspot equivalent is kernels/flash_prefill.  ``unroll`` emits the
     chunk loop inline — required by the dry-run because cost_analysis counts
-    a while-loop body once, not x trip-count.
+    a while-loop body once, not x trip-count.  ``seq_lens`` ([B] int32,
+    optional) masks kv positions ``>= seq_lens[b]`` per request — the ref
+    side of flash_prefill's ragged continuous-batching contract.  For causal
+    self-attention over right-padded prompts the extra mask only affects pad
+    *query* rows (valid rows never see later positions), so passing it keeps
+    the valid rows bit-identical.
     """
     b, t, qh, hsz = q.shape
     s, kh = k.shape[1], k.shape[2]
@@ -169,8 +174,16 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
         weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
                          t + s + 10)
         mask &= kpos[None, :] > qpos[:, None] - weff
+        if seq_lens is not None:
+            lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
+            mask = mask[None] & (kpos[None, None, :] < lens[:, None, None])
+            mask = mask[:, None, None]                    # [B,1,1,cq,S]
         scores = jnp.where(mask, scores, NEG_INF)
         p = jax.nn.softmax(scores, axis=-1)
+        # fully-masked rows (seq_lens[b] == 0) produce uniform p over -inf
+        # scores; zero them so dead rows emit zeros, matching the kernel
+        if seq_lens is not None:
+            p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
         return jnp.einsum("bkgts,bskd->bkgtd", p, vf).astype(q.dtype)
 
     _, outs = jax.lax.scan(
@@ -189,33 +202,37 @@ def cross_attention(q, k, v, *, chunk_q: int = 512):
 # --------------------------------------------------- kernel-backed prefill
 @functools.lru_cache(maxsize=None)
 def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
-                       unroll: bool, prune: bool):
+                       unroll: bool, prune: bool, ragged: bool):
     """flash_prefill with a custom VJP whose backward re-runs the jnp
     reference (``chunked_attention``) — Pallas kernels define no transpose
     rule, so this is what lets the pallas backends run under
     ``value_and_grad`` (train_step).  Forward values come from the kernel;
     gradients are the oracle's (identical up to fp summation order, since
-    the forwards agree to that order)."""
+    the forwards agree to that order).  ``ragged`` statically selects the
+    per-request ``seq_lens`` variant (continuous-batching prefill)."""
 
     @jax.custom_vjp
-    def f(q, k, v, window, q_offset):
+    def f(q, k, v, window, q_offset, seq_lens):
         from repro.kernels.flash_prefill.ops import flash_prefill
         return flash_prefill(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, prune=prune,
-                             interpret=interpret)
+                             q_offset=q_offset,
+                             seq_lens=seq_lens if ragged else None,
+                             prune=prune, interpret=interpret)
 
-    def fwd(q, k, v, window, q_offset):
-        return f(q, k, v, window, q_offset), (q, k, v, window, q_offset)
+    def fwd(q, k, v, window, q_offset, seq_lens):
+        return (f(q, k, v, window, q_offset, seq_lens),
+                (q, k, v, window, q_offset, seq_lens))
 
     def bwd(res, g):
-        q, k, v, window, q_offset = res
+        q, k, v, window, q_offset, seq_lens = res
         _, vjp = jax.vjp(
             lambda q, k, v: chunked_attention(
                 q, k, v, causal=causal, window=window, chunk_q=chunk_q,
-                q_offset=q_offset, unroll=unroll), q, k, v)
+                q_offset=q_offset, unroll=unroll,
+                seq_lens=seq_lens if ragged else None), q, k, v)
         dq, dk, dv = vjp(g)
         zero = lambda x: np.zeros(np.shape(x), jax.dtypes.float0)
-        return dq, dk, dv, zero(window), zero(q_offset)
+        return dq, dk, dv, zero(window), zero(q_offset), zero(seq_lens)
 
     f.defvjp(fwd, bwd)
     return f
@@ -224,7 +241,7 @@ def _kernel_prefill_fn(causal: bool, interpret: bool, chunk_q: int,
 def prefill_attention(q, k, v, *, causal: bool = True, window=0,
                       q_offset: int | jax.Array = 0, chunk_q: int = 512,
                       unroll: bool = False, backend: str = "ref",
-                      prune: bool = True):
+                      prune: bool = True, seq_lens=None):
     """Full-sequence attention with kernel-backend selection.
 
     The prefill/train sibling of ``decode_attention``: ``backend`` routes the
@@ -232,22 +249,29 @@ def prefill_attention(q, k, v, *, causal: bool = True, window=0,
     memory-bounded ``chunked_attention`` scan, ``"pallas-interpret"`` /
     ``"pallas"`` the flash-prefill kernel (interpreted / compiled) with a
     ref-VJP backward so training works.  ``window`` and ``q_offset`` may be
-    traced (per-layer windows under ``lax.scan``).  ``prune`` (kernel
-    backends): skip causally/window-dead kv blocks instead of masking them
-    (bit-exact; see docs/kernels.md "Block pruning").
+    traced (per-layer windows under ``lax.scan``; ``q_offset`` is also how a
+    chunked-prefill slice attends to its already-cached prefix — see
+    docs/serving.md).  ``prune`` (kernel backends): skip causally/window-dead
+    kv blocks instead of masking them (bit-exact; see docs/kernels.md "Block
+    pruning").  ``seq_lens`` ([B] int32, optional) masks kv positions
+    ``>= seq_lens[b]`` per request (ragged continuous-batching prefill),
+    uniformly across backends.
 
       q [B, T, Qh, hsz]; k, v [B, S, Kh, hsz] -> out [B, T, Qh, hsz].
     """
     if backend == "ref":
         return chunked_attention(q, k, v, causal=causal, window=window,
                                  chunk_q=chunk_q, q_offset=q_offset,
-                                 unroll=unroll)
+                                 unroll=unroll, seq_lens=seq_lens)
     from repro.kernels import registry
     registry.validate("flash_prefill", backend)
+    ragged = seq_lens is not None
     fn = _kernel_prefill_fn(causal, registry.interpret_flag(backend),
-                            chunk_q, unroll, prune)
+                            chunk_q, unroll, prune, ragged)
+    lens = (jnp.asarray(seq_lens, jnp.int32) if ragged
+            else jnp.zeros((), jnp.int32))
     return fn(q, k, v, jnp.asarray(window, jnp.int32),
-              jnp.asarray(q_offset, jnp.int32))
+              jnp.asarray(q_offset, jnp.int32), lens)
 
 
 # ------------------------------------------------------------- decode

@@ -54,6 +54,19 @@ def quantize_lm_head(params):
     return out
 
 
+def prepare_decode_params(params, hx: HelixConfig | None):
+    """One-time decode-param preparation every ``serve_step`` caller should
+    run before stepping: with ``hx.lm_head_w8`` it pre-quantizes the lm_head
+    (``quantize_lm_head``) so the step doesn't re-quantize the ``[H, V]``
+    matrix every token; otherwise it is the identity.  Idempotent — params
+    already carrying ``lm_head_q8`` pass through untouched — so the serving
+    engine, the launch/serve one-shot path and the benchmarks can all call
+    it unconditionally."""
+    if hx is not None and hx.lm_head_w8 and "lm_head_q8" not in params:
+        return quantize_lm_head(params)
+    return params
+
+
 def _constrainer(mesh: Mesh):
     def c(x, *axes):
         return jax.lax.with_sharding_constraint(

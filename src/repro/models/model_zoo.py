@@ -20,11 +20,14 @@ from repro.core.helix import prefill_to_rr_layout
 from repro.core.kvcache import cache_capacity
 from repro.core.sharding import HelixConfig, MeshPolicy, train_roles
 from repro.models.decode_model import build_serve_step  # noqa: F401 re-export
-from repro.models.transformer import NO_POLICY, forward, init_params, lm_loss
+from repro.models.transformer import (NO_POLICY, chunked_prefill_supported,
+                                      forward, init_params, lm_loss)
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.utils import round_up
 
 __all__ = ["make_train_step", "make_prefill_step", "build_serve_step",
+           "make_chunk_prefill_step", "init_prefill_buffers",
+           "finalize_chunked_prefill", "chunked_prefill_supported",
            "data_specs", "data_partition_specs", "init_params", "adamw_init"]
 
 
@@ -82,6 +85,27 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh | None = None,
 
 
 # ---------------------------------------------------------------- prefill
+def prefill_cache_to_rr(cfg: ArchConfig, hx: HelixConfig, kc_raw, vc_raw,
+                        t: int, cap: int, kvp: int):
+    """Prefill-layout K/V caches -> round-robin decode layout.
+
+    ``kc_raw``/``vc_raw`` are ``[L, B, T', Kp, hsz]`` (``forward``'s
+    ``return_cache`` extras — possibly padded query rows / padded GQA heads;
+    only the first ``t`` rows and ``cfg.n_kv_heads`` heads are live).
+    Returns ``(kcache, vcache)`` as ``[L, B, Kh, cap, hsz]`` in the
+    round-robin slot layout (core/helix.prefill_to_rr_layout).  Shared by
+    the one-shot ``make_prefill_step`` handoff and the chunked-prefill
+    finalize so the two paths cannot drift."""
+    kc = kc_raw[:, :, :t, :cfg.n_kv_heads].transpose(0, 1, 3, 2, 4)
+    vc = vc_raw[:, :, :t, :cfg.n_kv_heads].transpose(0, 1, 3, 2, 4)
+    pad = [(0, 0)] * 5
+    pad[3] = (0, cap - t)
+    kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+    kcache = jax.vmap(lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(kc)
+    vcache = jax.vmap(lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(vc)
+    return kcache, vcache
+
+
 def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
                       s_cap: int | None = None, chunk_q: int = 512,
                       unroll: bool = False):
@@ -107,18 +131,8 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
             **_forward_kwargs(cfg, batch, mesh, policy, moe_groups))
         state: dict[str, Any] = {"total_len": jnp.asarray(t, jnp.int32)}
         if cfg.has_attention:
-            # [L,B,T,Kp,hsz] -> canonical heads -> [L,B,Kh,T,hsz] -> rr layout
-            kc = extras["kcache"][:, :, :, :cfg.n_kv_heads].transpose(
-                0, 1, 3, 2, 4)
-            vc = extras["vcache"][:, :, :, :cfg.n_kv_heads].transpose(
-                0, 1, 3, 2, 4)
-            pad = [(0, 0)] * 5
-            pad[3] = (0, cap - t)
-            kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
-            state["kcache"] = jax.vmap(
-                lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(kc)
-            state["vcache"] = jax.vmap(
-                lambda c: prefill_to_rr_layout(c, kvp, hx.rr_block))(vc)
+            state["kcache"], state["vcache"] = prefill_cache_to_rr(
+                cfg, hx, extras["kcache"], extras["vcache"], t, cap, kvp)
         if cfg.has_ssm:
             state["ssm_conv"] = extras["ssm_conv"]
             state["ssm_state"] = extras["ssm_state"]
@@ -135,6 +149,72 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None, hx: HelixConfig,
         return logits[:, -1], state
 
     return prefill_step
+
+
+# ------------------------------------------------------- chunked prefill
+def init_prefill_buffers(cfg: ArchConfig, batch: int, t: int, *,
+                         tp_width: int = 1,
+                         dtype=jnp.float32) -> dict[str, Any]:
+    """Zero K/V carry buffers for a chunked prefill of length ``t``.
+
+    Returns {"kcache"/"vcache": [L, batch, t, Kp, hsz]} in ``forward``'s
+    prefill cache layout (Kp = the GQA head layout's padded kv head count
+    for ``tp_width``, the mesh's 'model' axis size).  ``t`` must equal the
+    one-shot prefill length for the chunked run to be bit-exact
+    (docs/serving.md)."""
+    from repro.models.attention import head_layout
+    kp = head_layout(cfg.n_heads, cfg.n_kv_heads, tp_width).kv_pad
+    shape = (cfg.n_layers, batch, t, kp, cfg.hsz)
+    return {"kcache": jnp.zeros(shape, dtype), "vcache": jnp.zeros(shape, dtype)}
+
+
+def make_chunk_prefill_step(cfg: ArchConfig, mesh: Mesh | None,
+                            hx: HelixConfig, chunk_q: int = 512,
+                            unroll: bool = False):
+    """Build the prefix-aware chunked-prefill step (docs/serving.md).
+
+    Returns ``chunk_step(params, tokens, buffers, q_offset) ->
+    (next_tokens, new_buffers)``: ``tokens`` is the ``[B, C]`` chunk at
+    global positions ``[q_offset, q_offset + C)``, ``buffers`` the carry
+    dict from ``init_prefill_buffers`` with ``[0, q_offset)`` already
+    filled, and ``next_tokens`` the ``[B, C]`` greedy next token after each
+    chunk position (row ``t - 1 - q_offset`` of the final chunk is the
+    request's first generated token, bit-identical to the one-shot
+    ``prefill_step`` argmax).  Jit-able; ``q_offset`` may be traced so every
+    chunk of a prefill shares one trace.  Only
+    ``chunked_prefill_supported`` archs are accepted."""
+    assert chunked_prefill_supported(cfg), \
+        f"chunked prefill unsupported for {cfg.name} ({cfg.family})"
+    policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
+
+    def chunk_step(params, tokens, buffers, q_offset):
+        logits, extras = forward(
+            cfg, params, tokens, return_cache=True, chunk_q=chunk_q,
+            unroll=unroll, prefill_backend=hx.prefill_backend,
+            ssd_backend=hx.ssd_backend, prune_blocks=hx.prune_blocks,
+            prefix_state=buffers, q_offset=q_offset, policy=policy,
+            tp_width=mesh.shape["model"] if mesh else 1)
+        next_tokens = jnp.argmax(logits[:, :, :cfg.vocab],
+                                 axis=-1).astype(jnp.int32)
+        return next_tokens, {"kcache": extras["kcache"],
+                             "vcache": extras["vcache"]}
+
+    return chunk_step
+
+
+def finalize_chunked_prefill(cfg: ArchConfig, hx: HelixConfig, buffers,
+                             t: int, s_cap: int | None = None,
+                             kvp: int = 1) -> dict[str, Any]:
+    """Fully-filled chunked-prefill buffers -> round-robin decode state.
+
+    The exact handoff ``make_prefill_step`` performs (shared
+    ``prefill_cache_to_rr``), so a chunked prefill's final decode state is
+    bit-identical to the one-shot path's."""
+    cap = s_cap or cache_capacity(t, kvp, hx.rr_block)
+    kcache, vcache = prefill_cache_to_rr(
+        cfg, hx, buffers["kcache"], buffers["vcache"], t, cap, kvp)
+    return {"total_len": jnp.asarray(t, jnp.int32),
+            "kcache": kcache, "vcache": vcache}
 
 
 # ------------------------------------------------------------- input data

@@ -115,12 +115,23 @@ def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
 # =============================================================== layer fwd
 def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
                 policy, causal=True, kv_override=None, q_offset=0,
-                chunk_q=512, unroll=False, attn_backend="ref", prune=True):
+                chunk_q=512, unroll=False, attn_backend="ref", prune=True,
+                kv_buffer=None, seq_lens=None):
     """Projection + (optionally cross-) attention + out-proj.  h [B,T,H].
 
     ``attn_backend`` routes the attention core through the flash_prefill
     kernel family (models/attention.prefill_attention); ``prune`` is its
-    causal/window block-skipping knob (kernel backends, bit-exact)."""
+    causal/window block-skipping knob (kernel backends, bit-exact).
+
+    ``kv_buffer`` (chunked prefill, docs/serving.md): a pair of
+    ``[B, S_buf, Kp, hsz]`` carry buffers holding the K/V of the already-
+    prefilled prefix ``[0, q_offset)``.  The chunk's freshly projected K/V
+    rows are written at ``[q_offset, q_offset + T)`` and attention runs over
+    the *whole* buffer — causal masking hides the yet-unfilled tail, so with
+    ``S_buf`` equal to the one-shot sequence length the chunk is bit-exact
+    with the one-shot prefill.  The updated buffers are returned as the
+    cache pair.  ``seq_lens`` masks kv positions per request (ragged
+    packing)."""
     b, t, _ = h.shape
     hsz = cfg.hsz
     wq = apply_q_layout(ap["wq"], layout, hsz)
@@ -135,11 +146,20 @@ def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
             pos = jnp.arange(t) + q_offset
             q = apply_rope(q, pos[None, :], cfg.rope_theta)
             k = apply_rope(k, pos[None, :], cfg.rope_theta)
+        if kv_buffer is not None:
+            kbuf, vbuf = kv_buffer
+            off = jnp.asarray(q_offset, jnp.int32)
+            kbuf = jax.lax.dynamic_update_slice(
+                kbuf, k.astype(kbuf.dtype), (0, off, 0, 0))
+            vbuf = jax.lax.dynamic_update_slice(
+                vbuf, v.astype(vbuf.dtype), (0, off, 0, 0))
+            k, v = kbuf, vbuf
     else:
         k, v = kv_override                     # cross-attn: precomputed enc KV
     out = prefill_attention(q, k, v, causal=causal, window=window,
                             chunk_q=chunk_q, q_offset=q_offset,
-                            unroll=unroll, backend=attn_backend, prune=prune)
+                            unroll=unroll, backend=attn_backend, prune=prune,
+                            seq_lens=seq_lens)
     out = out.reshape(b, t, layout.q_pad * hsz)
     proj = policy(out, "dp", None, "tp") @ wo
     return policy(proj, "dp", None, None), (k, v)
@@ -157,12 +177,16 @@ def _ffn_block(cfg: ArchConfig, fp, h, policy):
 
 def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
                   enc_out=None, moe_groups=1, chunk_q=512, unroll=False,
-                  attn_backend="ref", ssd_backend="ref", prune=True):
+                  attn_backend="ref", ssd_backend="ref", prune=True,
+                  kv_buffer=None, q_offset=0, seq_lens=None):
     """One decoder layer.  Returns (x, (kcache, vcache, ssm_state, aux)).
 
     ``attn_backend`` / ``ssd_backend`` select the flash_prefill and
     ssd_prefill kernel backends (kernels/registry.py); ``prune`` the
-    flash_prefill block-skipping knob."""
+    flash_prefill block-skipping knob.  ``kv_buffer`` / ``q_offset`` /
+    ``seq_lens`` are the chunked-prefill carry contract (see
+    ``_attn_block``): when given, the returned kcache/vcache are the
+    *updated full-prefix buffers* instead of the chunk's own rows."""
     b, t, _ = x.shape
     h = rms_norm(x, lp["ln1"])
     cache_kv = (jnp.zeros((b, t, 0, cfg.hsz), x.dtype),) * 2
@@ -180,7 +204,9 @@ def decoder_layer(cfg: ArchConfig, lp, x, *, layout, window, policy,
         a_out, cache_kv = _attn_block(cfg, lp["attn"], h, layout=layout,
                                       window=window, policy=policy,
                                       chunk_q=chunk_q, unroll=unroll,
-                                      attn_backend=attn_backend, prune=prune)
+                                      attn_backend=attn_backend, prune=prune,
+                                      kv_buffer=kv_buffer, q_offset=q_offset,
+                                      seq_lens=seq_lens)
         x = x + a_out
     else:                                                        # pure ssm
         s_out, ssm_state = ssm_lib.ssd_chunked(
@@ -231,12 +257,25 @@ def layer_windows(cfg: ArchConfig) -> np.ndarray:
 
 
 # =============================================================== full fwd
+def chunked_prefill_supported(cfg: ArchConfig) -> bool:
+    """Whether ``cfg`` can prefill in prefix-attending chunks *bit-exactly*.
+
+    Requires every cross-position interaction to be causal attention: pure
+    SSM / hybrid scans and MoE capacity routing mix information across the
+    whole sequence in chunk-boundary-dependent fp orders, and enc-dec /
+    vision prefixes need the full prompt up front.  The serving engine falls
+    back to one-shot prefill for unsupported archs."""
+    return (cfg.has_attention and not cfg.has_ssm and not cfg.is_encdec
+            and cfg.moe is None and not cfg.vision_patches)
+
+
 def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
             patch_embeds=None, enc_frames=None, return_cache: bool = False,
             moe_groups: int = 1, chunk_q: int = 512, tp_width: int = 1,
             remat: bool = True, unroll: bool = False,
             prefill_backend: str = "ref", ssd_backend: str = "ref",
-            prune_blocks: bool = True):
+            prune_blocks: bool = True, prefix_state=None, q_offset=0,
+            seq_lens=None):
     """Full-sequence forward.  tokens [B, T] int32 -> (logits, extras).
 
     extras = {"aux_loss": scalar, "kcache"/"vcache": [L,B,T,Kh_p,hsz],
@@ -247,15 +286,32 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
     the pallas backends use a ref-VJP backward, so gradients flow (train).
     ``prune_blocks`` is flash_prefill's causal/window block-skipping knob
     (kernel backends only; bit-exact on/off).
+
+    Chunked prefill (``chunked_prefill_supported`` archs only, see
+    docs/serving.md): ``prefix_state`` = {"kcache"/"vcache":
+    [L, B, S_buf, Kp, hsz]} carry buffers whose rows ``[0, q_offset)`` hold
+    the already-prefilled prefix; ``tokens`` is then the ``[B, T]`` chunk at
+    global positions ``[q_offset, q_offset + T)``.  The chunk's K/V rows are
+    written into the buffers and attention runs over the whole buffer
+    (causal masking hides the unfilled tail), so extras' kcache/vcache are
+    the *updated full buffers* — bit-exact with the one-shot prefill when
+    ``S_buf`` equals the one-shot sequence length.  ``seq_lens`` masks kv
+    positions per request (ragged packing).
     """
     b, t = tokens.shape
+    if prefix_state is not None:
+        assert chunked_prefill_supported(cfg), \
+            f"chunked prefill unsupported for {cfg.name} ({cfg.family})"
+        assert return_cache, "chunked prefill needs return_cache=True"
     x = params["embed"][tokens]                                 # [B,T,H]
     x = policy(x, "dp", None, None)
     if patch_embeds is not None:                                # vlm stub
         p = patch_embeds.shape[1]
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, p:]], axis=1)
     if not cfg.use_rope and not cfg.is_encdec:
-        x = x + sinusoidal_positions(t, cfg.d_model)[None].astype(x.dtype)
+        from repro.models.layers import sinusoidal_at
+        pos = (jnp.arange(t) + q_offset).astype(jnp.float32)
+        x = x + sinusoidal_at(pos, cfg.d_model)[None].astype(x.dtype)
 
     enc_out = None
     if cfg.is_encdec:
@@ -270,19 +326,22 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
     windows = jnp.asarray(layer_windows(cfg))
 
     def body(carry, xs):
-        lp, win = xs
+        lp, win, buf = xs
         y, (kc, vc, sst, aux) = decoder_layer(
             cfg, lp, carry, layout=layout, window=win, policy=policy,
             enc_out=enc_out, moe_groups=moe_groups, chunk_q=chunk_q,
             unroll=unroll, attn_backend=prefill_backend,
-            ssd_backend=ssd_backend, prune=prune_blocks)
+            ssd_backend=ssd_backend, prune=prune_blocks,
+            kv_buffer=buf, q_offset=q_offset, seq_lens=seq_lens)
         outs = (kc, vc, sst, aux) if return_cache else \
             (None, None, None, aux)
         return y, outs
 
+    bufs = (None if prefix_state is None
+            else (prefix_state["kcache"], prefix_state["vcache"]))
     body_fn = jax.checkpoint(body) if remat else body
     x, (kc, vc, sst, aux) = jax.lax.scan(
-        body_fn, x, (params["layers"], windows),
+        body_fn, x, (params["layers"], windows, bufs),
         unroll=cfg.n_layers if unroll else 1)
 
     x = rms_norm(x, params["ln_f"])

@@ -1,3 +1,7 @@
 from repro.serving.engine import DecodeEngine, Request
+from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
+                                     Scheduler)
 
-__all__ = ["DecodeEngine", "Request"]
+__all__ = ["DecodeEngine", "Request", "Scheduler", "EngineMetrics",
+           "RequestMetrics", "QUEUED", "PREFILL", "DECODE", "DONE"]

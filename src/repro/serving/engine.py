@@ -1,19 +1,33 @@
-"""Batched decode engine: continuous batching over the Helix serve_step.
+"""Scheduler-driven continuous-batching engine over the Helix serve_step.
 
-Slot-based continuous batching: a fixed [max_batch] decode state holds one
-request per slot with *per-request* lengths ([B] total_len — the helix
-attention mask, rope positions and round-robin appends are all per-request).
-New requests prefill into a free slot; finished ones free theirs.  This is
-the real serving pattern (vLLM-style) on top of the paper's sharding.
+Slot-based continuous batching with **chunked prefill**: a fixed
+``[max_batch]`` decode state holds one request per slot with *per-request*
+lengths ([B] total_len — the helix attention mask, rope positions and
+round-robin appends are all per-request).  Admission runs through a
+``Scheduler`` (serving/scheduler.py: FCFS/SJF + cache-pressure gating);
+pending prompts prefill in ``chunk_tokens``-sized slices interleaved with
+decode steps, so a multi-million-token prompt no longer stalls every
+in-flight decode stream — the TTL blowup Helix exists to avoid (PAPER.md
+§1).  Per-request lifecycle metrics (queue wait, TTFT, per-step TTL) are
+collected in ``EngineMetrics``.
 
-For multi-request prefill we process each prompt through the shared
-prefill_step and scatter its caches into the slot.  Per-slot scatter of a
-round-robin cache is a pure index update — the layouts match by
-construction (same kvp, rr_block).
+One engine ``step()`` is bounded work:
+
+  1. admission      — move queued requests into free slots (Scheduler);
+  2. prefill chunk  — ONE ``chunk_tokens``-sized slice for one group of
+                      same-progress prefills (batched chunk packing);
+  3. decode step    — one token for every decoding slot, retiring finished
+                      requests (EOS / max-tokens / capacity).
+
+Chunked prefill is bit-exact with the one-shot path: each chunk attends to
+the already-cached prefix through flash_prefill's runtime ``q_offset``
+contract over a carry buffer sized to the request's full prompt, and the
+finalize handoff shares ``make_prefill_step``'s cache->round-robin
+conversion (models/model_zoo.py).  See docs/serving.md for the dataflow.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from typing import Any, Callable
 
 import numpy as np
@@ -21,35 +35,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.kvcache import cache_capacity, init_decode_state
+from repro.core.kvcache import (cache_capacity, init_decode_state,
+                                quantize_decode_state)
 from repro.core.sharding import HelixConfig
+from repro.serving.metrics import EngineMetrics
+from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
+                                     Request, Scheduler)
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int = 32
-    eos_id: int | None = None
-    out_tokens: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["DecodeEngine", "Request"]
 
 
 class DecodeEngine:
-    """Slot-based continuous-batching decode engine over a Helix serve_step.
+    """Scheduler-driven continuous-batching decode engine (see module doc).
 
-    Holds a fixed ``[max_batch]`` decode state with per-request lengths;
-    ``add_request`` prefills a prompt into a free slot (scattering its
-    caches — layouts match by construction), ``step`` advances every active
-    slot one token and retires finished requests.  ``hx`` (when given)
-    pins the round-robin block size and is validated against the kernel
-    registry so unavailable backends fail fast.
+    Two admission APIs:
+
+      * ``submit(req)`` + ``step()`` — the scheduler path: queued
+        admission, chunked prefill (when ``chunk_tokens`` is set and the
+        arch supports it), metrics.  ``step()`` returns the requests
+        retired that step.
+      * ``add_request(req)`` — legacy immediate one-shot prefill into a
+        free slot (returns False when full); still the fast path for
+        latency-insensitive bulk decoding.
+
+    ``hx`` (when given) pins the round-robin block size, pre-quantizes the
+    lm_head (``prepare_decode_params``), switches the cache to int8 when
+    ``hx.kv_cache_bits == 8``, and is validated against the kernel registry
+    so unavailable backends fail fast.  ``chunk_prefill_step`` comes from
+    ``make_chunk_prefill_step`` (required when ``chunk_tokens`` is set) and
+    ``tp_width`` must match its mesh's 'model' axis size (it shapes the
+    carry buffers' padded GQA head count); ``clock`` is the metrics clock
+    (injectable for deterministic tests).
     """
 
     def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
                  prefill_step: Callable, *, max_batch: int, max_seq: int,
                  kvp: int = 1, rr_block: int = 16,
-                 hx: HelixConfig | None = None, dtype=jnp.float32):
+                 hx: HelixConfig | None = None, dtype=jnp.float32,
+                 chunk_tokens: int | None = None,
+                 chunk_prefill_step: Callable | None = None,
+                 tp_width: int = 1,
+                 sched_policy: str = "fcfs", clock=time.monotonic):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -67,85 +93,107 @@ class DecodeEngine:
                         f"{field}={getattr(hx, field)!r} unavailable: {why}")
         self.hx = hx
         self.cfg = cfg
-        if hx is not None and hx.lm_head_w8:
-            # quantize the lm_head once up front; otherwise serve_step
-            # re-quantizes the whole [H, V] matrix every decode step
-            from repro.models.decode_model import quantize_lm_head
-            params = quantize_lm_head(params)
-        self.params = params
+        # quantize the lm_head once up front; otherwise serve_step
+        # re-quantizes the whole [H, V] matrix every decode step
+        from repro.models.decode_model import prepare_decode_params
+        self.params = prepare_decode_params(params, hx)
         self.serve_step = jax.jit(serve_step)
         self.prefill_step = jax.jit(prefill_step)
         self.max_batch = max_batch
         self.cap = cache_capacity(max_seq, kvp, rr_block)
         self.kvp, self.rr = kvp, rr_block
+        self.kv8 = hx is not None and hx.kv_cache_bits == 8
         self.state = init_decode_state(cfg, max_batch, self.cap, kvp,
-                                       rr_block, dtype=dtype)
+                                       rr_block, dtype=dtype,
+                                       kv_bits=8 if self.kv8 else 16)
         # per-request lengths: [B]; empty slots keep 0
         self.state["total_len"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: list[Request | None] = [None] * max_batch
         self.cur_tokens = jnp.zeros((max_batch,), jnp.int32)
 
+        from repro.models.model_zoo import chunked_prefill_supported
+        self.chunk_tokens = (chunk_tokens or None) \
+            if chunked_prefill_supported(cfg) else None
+        if self.chunk_tokens and chunk_prefill_step is None:
+            raise ValueError("chunk_tokens set but no chunk_prefill_step "
+                             "(build one with make_chunk_prefill_step)")
+        self.chunk_step = (jax.jit(chunk_prefill_step)
+                           if chunk_prefill_step is not None else None)
+        self.tp_width = tp_width
+        self.sched = Scheduler(max_batch=max_batch, cap=self.cap,
+                               policy=sched_policy)
+        self.metrics = EngineMetrics(clock=clock)
+        self._admission_retired: list[Request] = []
+
     # ------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        """Queue ``req`` for scheduled admission (the chunked-prefill
+        path); ``step()`` admits it when a slot frees up."""
+        self.metrics.on_submit(req.rid)
+        self.sched.submit(req)
+
+    def pending(self) -> bool:
+        """True while any request is queued, prefilling or decoding — or
+        retired at admission but not yet reported by ``step()``."""
+        return (bool(self.sched.queue) or any(self.slots)
+                or bool(self._admission_retired))
+
     def add_request(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot; False if engine is full."""
-        try:
-            slot = self.slots.index(None)
-        except ValueError:
+        """Legacy immediate admission: one-shot prefill ``req`` into a free
+        slot right now; False if the engine is full (no queueing).  A
+        request whose prompt can never fit the slot capacity is accepted
+        (True) but retired immediately with ``finish_reason="rejected"``
+        and reported by the next ``step()``."""
+        if req.rid not in self.metrics.requests:
+            self.metrics.on_submit(req.rid)
+        slot = self.sched.assign_direct(req)
+        if slot is None:
+            if self.sched.rejected and self.sched.rejected[-1] is req:
+                self.sched.rejected.pop()
+                self.metrics.on_finish(req.rid, "rejected")
+                self._admission_retired.append(req)
+                return True
             return False
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
-        t = len(req.prompt)
-        for key in ("kcache", "vcache"):
-            if key in self.state:
-                # prefill cache capacity may differ; copy the common prefix
-                # of every rank's local slots (layouts match: same kvp/rr)
-                src = pstate[key][:, 0]
-                dst = self.state[key][:, slot]
-                self.state[key] = self.state[key].at[:, slot].set(
-                    _copy_rr(src, dst, self.kvp))
-        for key in ("ssm_conv", "ssm_state", "xk", "xv"):
-            if key in self.state:
-                self.state[key] = self.state[key].at[:, slot].set(
-                    pstate[key][:, 0])
-        self.state["total_len"] = self.state["total_len"].at[slot].set(t)
-        nxt = int(jnp.argmax(last_logits[0, :self.cfg.vocab]))
-        req.out_tokens.append(nxt)
-        self.cur_tokens = self.cur_tokens.at[slot].set(nxt)
+        self.metrics.on_admit(req.rid)
         self.slots[slot] = req
+        # a first token that already retires (eos / max_new=1 / capacity)
+        # is reported by the next step() call
+        self._admission_retired += self._oneshot_prefill(req, slot)
         return True
+
+    def preempt(self, rid: int) -> bool:
+        """Release ``rid``'s slot mid-flight and requeue it at the queue
+        front.  The resumed request re-prefills its prompt plus everything
+        generated so far, so greedy decoding continues with identical
+        output tokens.  Returns False when ``rid`` holds no slot."""
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                req.buffers = None
+                req.prefill_pos = 0
+                req.prefill_tokens = None
+                self.slots[slot] = None
+                self.state["total_len"] = \
+                    self.state["total_len"].at[slot].set(0)
+                self.sched.preempt(slot, req)
+                self.metrics.on_preempt(rid)
+                return True
+        return False
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:
-        """One decode step for every active slot; returns finished requests."""
-        if not any(self.slots):
-            return []
-        next_tokens, self.state = self.serve_step(
-            self.params, self.state, self.cur_tokens)
-        self.cur_tokens = next_tokens
-        # one batched device->host transfer per step (per-slot int() calls
-        # would each block on the device queue — B syncs instead of 1)
-        toks_np = np.asarray(next_tokens)
-        lens_np = np.asarray(self.state["total_len"])
-        finished = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tok = int(toks_np[i])
-            req.out_tokens.append(tok)
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if hit_eos or len(req.out_tokens) >= req.max_new_tokens or \
-                    int(lens_np[i]) + 1 >= self.cap:
-                req.done = True
-                finished.append(req)
-                self.slots[i] = None
-                self.state["total_len"] = \
-                    self.state["total_len"].at[i].set(0)
+        """One bounded engine iteration: admission, at most one prefill
+        chunk, one decode step for every decoding slot.  Returns the
+        requests retired this step."""
+        finished = self._admission_retired + self._admit()
+        self._admission_retired = []
+        finished += self._prefill_chunk()
+        finished += self._decode_step()
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
-        """Step until every slot drains (or ``max_steps`` elapses)."""
+        """Step until queue and slots drain (or ``max_steps`` elapses)."""
         for _ in range(max_steps):
-            if not any(self.slots):
+            if not self.pending():
                 return
             self.step()
 
@@ -160,7 +208,191 @@ class DecodeEngine:
         parts.append(f"prune_blocks={self.hx.prune_blocks}")
         if self.hx.lm_head_w8:
             parts.append("lm_head_w8=True")
+        if self.chunk_tokens:
+            parts.append(f"chunk_tokens={self.chunk_tokens}")
         return " ".join(parts)
+
+    # -------------------------------------------------------------- phases
+    def _admit(self) -> list[Request]:
+        retired = []
+        for req, slot in self.sched.admit():
+            self.metrics.on_admit(req.rid)
+            self.slots[slot] = req
+            toks = req.resume_tokens()
+            if self.chunk_tokens and self.chunk_step is not None:
+                from repro.models.model_zoo import init_prefill_buffers
+                req.prefill_tokens = toks
+                req.prefill_pos = 0
+                req.buffers = init_prefill_buffers(
+                    self.cfg, 1, len(toks), tp_width=self.tp_width)
+            else:
+                retired += self._oneshot_prefill(req, slot)
+        # cache-pressure rejections retire without ever holding a slot
+        while self.sched.rejected:
+            req = self.sched.rejected.pop()
+            self.metrics.on_finish(req.rid, "rejected")
+            retired.append(req)
+        return retired
+
+    def _prefill_chunk(self) -> list[Request]:
+        """Advance ONE packed group of same-progress prefills by one chunk.
+
+        Groups share (offset, total length) so the packed call is bit-exact
+        with per-request calls (batch rows are independent); the group
+        containing the oldest prefilling request goes first."""
+        pre = [(slot, r) for slot, r in enumerate(self.slots)
+               if r is not None and r.state == PREFILL
+               and r.prefill_tokens is not None]
+        if not pre:
+            return []
+        # oldest admission first (admit_seq), NOT lowest slot index — a
+        # freed low slot must not let fresh admissions starve an in-flight
+        # prefill parked in a higher slot
+        first = min(pre, key=lambda sr: sr[1].admit_seq)[1]
+        key = (first.prefill_pos, len(first.prefill_tokens))
+        group = [(s, r) for s, r in pre
+                 if (r.prefill_pos, len(r.prefill_tokens)) == key]
+        pos, t = key
+        c = min(self.chunk_tokens, t - pos)
+        tokens = jnp.asarray(
+            np.stack([r.prefill_tokens[pos:pos + c] for _, r in group]),
+            jnp.int32)
+        bufs = jax.tree.map(lambda *a: jnp.concatenate(a, axis=1),
+                            *[r.buffers for _, r in group])
+        next_toks, bufs = self.chunk_step(self.params, tokens, bufs,
+                                          jnp.asarray(pos, jnp.int32))
+        done = pos + c >= t
+        finished = []
+        toks_np = np.asarray(next_toks) if done else None
+        for i, (slot, req) in enumerate(group):
+            req.buffers = jax.tree.map(lambda a: a[:, i:i + 1], bufs)
+            req.prefill_pos = pos + c
+            if done:
+                finished += self._finish_prefill(req, slot,
+                                                 int(toks_np[i, c - 1]))
+        return finished
+
+    def _finish_prefill(self, req: Request, slot: int,
+                        first_token: int) -> list[Request]:
+        """Chunked prefill complete: hand the carry buffers off to the
+        decode slot and commit the first generated token."""
+        from repro.models.model_zoo import finalize_chunked_prefill
+        t = len(req.prefill_tokens)
+        hx = self.hx if self.hx is not None else _default_hx(self.rr)
+        pstate = finalize_chunked_prefill(self.cfg, hx, req.buffers, t,
+                                          kvp=self.kvp)
+        req.buffers = None
+        req.prefill_tokens = None
+        self._scatter_state(pstate, slot, t)
+        return self._commit_first_token(req, slot, first_token)
+
+    def _oneshot_prefill(self, req: Request, slot: int) -> list[Request]:
+        toks_list = req.resume_tokens()
+        toks = jnp.asarray(toks_list, jnp.int32)[None, :]
+        last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
+        self._scatter_state(pstate, slot, len(toks_list))
+        nxt = int(jnp.argmax(last_logits[0, :self.cfg.vocab]))
+        return self._commit_first_token(req, slot, nxt)
+
+    def _commit_first_token(self, req: Request, slot: int,
+                            token: int) -> list[Request]:
+        req.out_tokens.append(token)
+        self.cur_tokens = self.cur_tokens.at[slot].set(token)
+        req.state = DECODE
+        self.metrics.on_token(req.rid)
+        # the prefill token itself may already retire the request
+        if (req.eos_id is not None and token == req.eos_id):
+            return [self._retire(req, slot, "eos")]
+        if len(req.out_tokens) >= req.max_new_tokens:
+            return [self._retire(req, slot, "max_tokens")]
+        if self.sched.at_capacity(slot):
+            return [self._retire(req, slot, "capacity")]
+        return []
+
+    def _scatter_state(self, pstate: dict[str, Any], slot: int,
+                       t: int) -> None:
+        """Scatter a single-request prefill state into ``slot`` (copying
+        the common round-robin prefix of every rank's local slots; int8
+        engines quantize the fp prefill cache per slot row —
+        ``quantize_decode_state`` — matching the decode append formula)."""
+        if self.kv8 and "kcache" in pstate:
+            fp_slot = {}
+            for key in ("kcache", "vcache"):
+                dst = jnp.zeros(
+                    self.state[key].shape[:1] + (1,)
+                    + self.state[key].shape[2:], jnp.float32)
+                src = pstate[key][:, 0].astype(jnp.float32)
+                fp_slot[key] = dst.at[:, 0].set(
+                    _copy_rr(src, dst[:, 0], self.kvp))
+            q = quantize_decode_state(fp_slot)
+            for key in ("kcache", "vcache", "kscale", "vscale"):
+                self.state[key] = self.state[key].at[:, slot].set(q[key][:, 0])
+        else:
+            for key in ("kcache", "vcache"):
+                if key in self.state and key in pstate:
+                    # prefill cache capacity may differ; copy the common
+                    # prefix of every rank's local slots (layouts match:
+                    # same kvp/rr)
+                    src = pstate[key][:, 0]
+                    dst = self.state[key][:, slot]
+                    self.state[key] = self.state[key].at[:, slot].set(
+                        _copy_rr(src, dst, self.kvp))
+        for key in ("ssm_conv", "ssm_state", "xk", "xv"):
+            if key in self.state and key in pstate:
+                self.state[key] = self.state[key].at[:, slot].set(
+                    pstate[key][:, 0])
+        self.state["total_len"] = self.state["total_len"].at[slot].set(t)
+
+    def _decode_step(self) -> list[Request]:
+        """One decode step for every DECODE slot; returns retirements."""
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and r.state == DECODE]
+        if not active:
+            return []
+        next_tokens, self.state = self.serve_step(
+            self.params, self.state, self.cur_tokens)
+        self.cur_tokens = next_tokens
+        # serve_step advances total_len for every row; pin non-decoding
+        # slots back to 0.  (Not the prefilling request's committed length:
+        # its K/V still lives in the carry buffers, so a non-zero length
+        # would make every decode step stream that many garbage cache
+        # blocks for the slot.  Length 0 keeps the dead row O(1) and the
+        # finalize scatter installs the real total_len.)
+        idle = [i for i in range(self.max_batch) if i not in active]
+        if idle:
+            self.state["total_len"] = \
+                self.state["total_len"].at[jnp.asarray(idle)].set(0)
+        # one batched device->host transfer per step (per-slot int() calls
+        # would each block on the device queue — B syncs instead of 1)
+        toks_np = np.asarray(next_tokens)
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks_np[i])
+            req.out_tokens.append(tok)
+            self.sched.on_token(i)
+            self.metrics.on_token(req.rid)
+            if req.eos_id is not None and tok == req.eos_id:
+                finished.append(self._retire(req, i, "eos"))
+            elif len(req.out_tokens) >= req.max_new_tokens:
+                finished.append(self._retire(req, i, "max_tokens"))
+            elif self.sched.at_capacity(i):
+                finished.append(self._retire(req, i, "capacity"))
+        return finished
+
+    def _retire(self, req: Request, slot: int, reason: str) -> Request:
+        req.done = True
+        req.state = DONE
+        req.finish_reason = reason
+        self.slots[slot] = None
+        self.sched.release(slot)
+        self.state["total_len"] = self.state["total_len"].at[slot].set(0)
+        self.metrics.on_finish(req.rid, reason)
+        return req
+
+
+def _default_hx(rr_block: int) -> HelixConfig:
+    return HelixConfig(kvp_axes=(), tpa_axis=None, rr_block=rr_block)
 
 
 def _copy_rr(src, dst, kvp: int):

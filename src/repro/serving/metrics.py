@@ -1,0 +1,119 @@
+"""Per-request lifecycle metrics for the serving engine.
+
+Tracks, per request: queue wait (submit -> admission), TTFT (submit ->
+first generated token, i.e. end of prefill) and the per-step TTL samples
+(gap between consecutive generated tokens — the latency the paper holds
+steady while batch size grows, PAPER.md §1).  ``summary()`` aggregates
+p50/p95/mean across finished requests plus engine throughput.
+
+The clock is injectable (any monotonic ``() -> float`` in seconds) so
+tests can drive it deterministically; the default is
+``time.monotonic``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Raw per-request timeline (seconds, engine clock)."""
+    rid: int
+    submit_t: float
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    last_token_t: float | None = None
+    finish_t: float | None = None
+    finish_reason: str | None = None
+    n_tokens: int = 0
+    n_preempts: int = 0
+    ttl_samples: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Seconds from submission to (first) slot admission."""
+        return None if self.admit_t is None else self.admit_t - self.submit_t
+
+    @property
+    def ttft(self) -> float | None:
+        """Seconds from submission to the first generated token."""
+        return (None if self.first_token_t is None
+                else self.first_token_t - self.submit_t)
+
+
+def _pct(vals, q) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+def _stats(vals) -> dict[str, float]:
+    if not vals:
+        return {"p50": 0.0, "p95": 0.0, "mean": 0.0, "n": 0}
+    return {"p50": _pct(vals, 50), "p95": _pct(vals, 95),
+            "mean": float(np.mean(vals)), "n": len(vals)}
+
+
+class EngineMetrics:
+    """Lifecycle-event collector the engine drives; pure host python."""
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.requests: dict[int, RequestMetrics] = {}
+        self.start_t = clock()
+
+    # ------------------------------------------------------------ events
+    def on_submit(self, rid: int) -> None:
+        """Request entered the engine (queue or direct admission)."""
+        self.requests[rid] = RequestMetrics(rid=rid, submit_t=self.clock())
+
+    def on_admit(self, rid: int) -> None:
+        """Request placed into a slot (first admission only counts for
+        queue-wait; re-admissions after preemption keep the original)."""
+        m = self.requests[rid]
+        if m.admit_t is None:
+            m.admit_t = self.clock()
+
+    def on_token(self, rid: int) -> None:
+        """One token generated: records TTFT on the first, a TTL sample
+        on each subsequent one."""
+        m = self.requests[rid]
+        now = self.clock()
+        if m.first_token_t is None:
+            m.first_token_t = now
+        else:
+            m.ttl_samples.append(now - m.last_token_t)
+        m.last_token_t = now
+        m.n_tokens += 1
+
+    def on_preempt(self, rid: int) -> None:
+        """Request was preempted (slot released, requeued)."""
+        self.requests[rid].n_preempts += 1
+
+    def on_finish(self, rid: int, reason: str) -> None:
+        """Request retired (eos | max_tokens | capacity | rejected)."""
+        m = self.requests[rid]
+        m.finish_t = self.clock()
+        m.finish_reason = reason
+
+    # ----------------------------------------------------------- summary
+    def summary(self) -> dict:
+        """Aggregate p50/p95/mean of TTFT / TTL / queue wait (seconds)
+        over finished requests, plus token throughput since construction."""
+        fin = [m for m in self.requests.values() if m.finish_t is not None]
+        ttls = [s for m in fin for s in m.ttl_samples]
+        toks = sum(m.n_tokens for m in fin)
+        dt = max(self.clock() - self.start_t, 1e-9)
+        return {
+            "n_finished": len(fin),
+            "n_tokens": toks,
+            "throughput_tok_s": toks / dt,
+            "ttft_s": _stats([m.ttft for m in fin if m.ttft is not None]),
+            "ttl_s": _stats(ttls),
+            "queue_wait_s": _stats([m.queue_wait for m in fin
+                                    if m.queue_wait is not None]),
+            "preempts": sum(m.n_preempts for m in fin),
+            "finish_reasons": {r: sum(1 for m in fin if m.finish_reason == r)
+                               for r in {m.finish_reason for m in fin}},
+        }

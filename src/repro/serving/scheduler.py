@@ -1,0 +1,216 @@
+"""Admission scheduling for the continuous-batching engine (pure python).
+
+The ``Scheduler`` owns everything the engine must *decide* (who runs where,
+and when) without touching device state: the admission queue, the slot
+table, per-slot committed cache lengths, and the cache-pressure gate.  It is
+deliberately jax-free so its invariants can be property-tested exhaustively
+(tests/serving/test_scheduler_props.py) with simulated request streams —
+the ``DecodeEngine`` mirrors its decisions onto the device arrays.
+
+Request lifecycle (docs/serving.md):
+
+    QUEUED --admit--> PREFILL --last chunk--> DECODE --retire--> DONE
+       ^                  |                      |
+       +----preempt-------+----------preempt-----+
+
+Policies: ``"fcfs"`` (arrival order) and ``"sjf"`` (shortest remaining
+prefill first — cheap requests jump the queue, bounding their TTFT under
+load).  Both apply the cache-pressure gate: a request whose prefill alone
+cannot fit the per-slot cache capacity is rejected up front instead of
+being admitted and immediately capacity-retired.  Preempted requests
+re-enter at the front of the queue so they resume promptly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+# lifecycle states (plain strings so they serialize/log cleanly)
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+DONE = "done"
+
+POLICIES = ("fcfs", "sjf")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is the token list to prefill; the engine appends generated
+    tokens to ``out_tokens`` and sets ``done``/``finish_reason`` on
+    retirement (``"eos"`` | ``"max_tokens"`` | ``"capacity"`` |
+    ``"rejected"``).  ``state`` tracks the scheduler lifecycle."""
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    state: str = QUEUED
+    finish_reason: str | None = None
+    preempted: bool = False                   # awaiting resume (front of queue)
+    admit_seq: int = -1                       # admission order stamp
+    # --- chunked-prefill bookkeeping (engine-internal) ---
+    prefill_tokens: list[int] | None = None   # prompt (+ generated on resume)
+    prefill_pos: int = 0                      # next chunk offset
+    buffers: Any = None                       # K/V carry buffers (device)
+
+    def resume_tokens(self) -> list[int]:
+        """Tokens to (re-)prefill: the prompt plus anything already
+        generated (preempted requests recompute their full context)."""
+        return list(self.prompt) + list(self.out_tokens)
+
+
+class Scheduler:
+    """FCFS/SJF admission queue + slot table with cache-pressure gating.
+
+    ``cap`` is the per-slot KV capacity; a slot's committed length may
+    never reach it (the engine retires the request one token earlier —
+    ``at_capacity``).  All methods are O(queue) python; the engine calls
+    ``admit()`` once per step and mirrors the returned placements."""
+
+    def __init__(self, max_batch: int, cap: int, policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown sched policy {policy!r}; "
+                             f"choose from {POLICIES}")
+        self.policy = policy
+        self.cap = cap
+        self.max_batch = max_batch
+        self.queue: list[Request] = []
+        self.slot_rids: list[int | None] = [None] * max_batch
+        self.slot_len: list[int] = [0] * max_batch
+        self.rejected: list[Request] = []
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------- queue
+    def submit(self, req: Request, front: bool = False) -> None:
+        """Enqueue ``req`` (``front=True`` = preemption resume priority)."""
+        req.state = QUEUED
+        if front:
+            self.queue.insert(0, req)
+        else:
+            self.queue.append(req)
+
+    def _pick(self) -> Request:
+        # preempted requests resume first under EVERY policy — their
+        # already-spent prefill/decode work must not be stranded behind a
+        # stream of fresh short arrivals (they sit at the queue front)
+        for r in self.queue:
+            if r.preempted:
+                return r
+        if self.policy == "sjf":
+            # min() is stable: earliest-queued wins among equal lengths
+            return min(self.queue, key=lambda r: len(r.resume_tokens()))
+        return self.queue[0]
+
+    def _stamp(self, req: Request) -> None:
+        # first admission only: a preempted request keeps its original
+        # stamp, so it also keeps its seniority in the engine's
+        # oldest-first prefill-chunk scheduling when it resumes
+        if req.admit_seq < 0:
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+        req.preempted = False
+
+    def free_slot(self) -> int | None:
+        """Lowest free slot index, or None when the batch is full."""
+        try:
+            return self.slot_rids.index(None)
+        except ValueError:
+            return None
+
+    def fits(self, req: Request) -> bool:
+        """Cache-pressure gate: can ``req``'s prefill leave room for at
+        least one generated token in the per-slot capacity?"""
+        return len(req.resume_tokens()) + 1 <= self.cap
+
+    def reject(self, req: Request) -> None:
+        """Retire ``req`` unplaced with ``finish_reason="rejected"``."""
+        req.state = DONE
+        req.done = True
+        req.finish_reason = "rejected"
+        self.rejected.append(req)
+
+    # --------------------------------------------------------- admission
+    def admit(self) -> list[tuple[Request, int]]:
+        """Admit queued requests into free slots per policy.
+
+        Returns the ``(request, slot)`` placements made this call.  The
+        cache-pressure gate rejects requests whose prefill can never fit
+        ``cap`` (they land in ``self.rejected`` with state DONE /
+        ``finish_reason="rejected"`` and are NOT placed)."""
+        placed: list[tuple[Request, int]] = []
+        while self.queue:
+            slot = self.free_slot()
+            if slot is None:
+                break
+            req = self._pick()
+            self.queue.remove(req)
+            if not self.fits(req):            # can't even hold one new token
+                self.reject(req)
+                continue
+            need = len(req.resume_tokens())
+            req.state = PREFILL
+            self._stamp(req)
+            self.slot_rids[slot] = req.rid
+            self.slot_len[slot] = need
+            placed.append((req, slot))
+        return placed
+
+    def assign_direct(self, req: Request) -> int | None:
+        """Bypass the queue: place ``req`` into a free slot now (the
+        engine's legacy one-shot ``add_request`` path).  Returns the slot,
+        or None when full — or when the cache-pressure gate rejects the
+        request (``req.finish_reason == "rejected"``; same behavior as the
+        ``admit()`` path, and it keeps ``slot_len < cap`` invariant-true)."""
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        if not self.fits(req):
+            self.reject(req)
+            return None
+        req.state = PREFILL
+        self._stamp(req)
+        self.slot_rids[slot] = req.rid
+        self.slot_len[slot] = len(req.resume_tokens())
+        return slot
+
+    # ----------------------------------------------------------- running
+    def on_token(self, slot: int) -> None:
+        """Record one generated token committed to ``slot``'s cache."""
+        self.slot_len[slot] += 1
+
+    def at_capacity(self, slot: int) -> bool:
+        """True when ``slot`` cannot hold another token (retire now)."""
+        return self.slot_len[slot] + 1 >= self.cap
+
+    def release(self, slot: int) -> None:
+        """Free ``slot`` (request retired or preempted)."""
+        self.slot_rids[slot] = None
+        self.slot_len[slot] = 0
+
+    def preempt(self, slot: int, req: Request) -> None:
+        """Release ``slot`` and requeue ``req`` at the front; ``_pick``
+        resumes preempted requests before anything else under every
+        policy."""
+        assert self.slot_rids[slot] == req.rid, (slot, req.rid)
+        self.release(slot)
+        req.preempted = True
+        self.submit(req, front=True)
+
+    # -------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Assert the scheduling invariants the property suite pins:
+        no rid in two slots, queue and slots disjoint, committed lengths
+        within capacity."""
+        live = [r for r in self.slot_rids if r is not None]
+        assert len(live) == len(set(live)), f"slot double-assignment: {live}"
+        qrids = [r.rid for r in self.queue]
+        assert len(qrids) == len(set(qrids)), f"queue duplicates: {qrids}"
+        assert not set(qrids) & set(live), "request both queued and placed"
+        for s, (rid, ln) in enumerate(zip(self.slot_rids, self.slot_len)):
+            if rid is not None:
+                assert 0 < ln < self.cap, \
+                    f"slot {s} length {ln} violates capacity {self.cap}"

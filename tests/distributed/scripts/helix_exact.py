@@ -109,6 +109,49 @@ for tl_new in (total_len + 1, jnp.asarray([201, 38, 151, 10], jnp.int32)):
     np.testing.assert_array_equal(np.asarray(vc_f), np.asarray(vc_u))
 print("fused KV-append epilogue == unfused (KVP=8, scalar + [B] tl): OK")
 
+# ---- chunked prefill == one-shot prefill through the KVP=8 shard_map ----
+from repro.configs import get_config
+from repro.models.model_zoo import (build_serve_step, finalize_chunked_prefill,
+                                    init_prefill_buffers,
+                                    make_chunk_prefill_step, make_prefill_step)
+from repro.models.transformer import init_params
+
+cfg = get_config("granite-3-2b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+hx_m = HelixConfig(kvp_axes=("data", "model"), tpa_axis=None)
+T, CAP = 40, 128                       # cache_capacity(40, kvp=8, rr=16)
+toks = jax.random.randint(jax.random.PRNGKey(2), (1, T), 0, cfg.vocab)
+with set_mesh(mesh):
+    prefill = jax.jit(make_prefill_step(cfg, mesh, hx_m, s_cap=CAP))
+    last_logits, st1 = prefill(params, {"tokens": toks})
+    tok1 = int(jnp.argmax(last_logits[0, :cfg.vocab]))
+    chunk_step = jax.jit(make_chunk_prefill_step(cfg, mesh, hx_m))
+    for chunk in (17, T):
+        bufs = init_prefill_buffers(cfg, 1, T, tp_width=mesh.shape["model"])
+        pos = 0
+        while pos < T:
+            c = min(chunk, T - pos)
+            nt, bufs = chunk_step(params, toks[:, pos:pos + c], bufs,
+                                  jnp.asarray(pos, jnp.int32))
+            pos += c
+        st2 = finalize_chunked_prefill(cfg, hx_m, bufs, T, s_cap=CAP, kvp=8)
+        assert int(nt[0, -1]) == tok1, (chunk, int(nt[0, -1]), tok1)
+        np.testing.assert_array_equal(np.asarray(st2["kcache"]),
+                                      np.asarray(st1["kcache"]))
+        np.testing.assert_array_equal(np.asarray(st2["vcache"]),
+                                      np.asarray(st1["vcache"]))
+        # decode continuation agrees step for step (tokens + caches)
+        serve = jax.jit(build_serve_step(cfg, mesh, hx_m))
+        cur1 = cur2 = jnp.full((1,), tok1, jnp.int32)
+        s1, s2 = dict(st1), dict(st2)
+        for _ in range(2):
+            cur1, s1 = serve(params, s1, cur1)
+            cur2, s2 = serve(params, s2, cur2)
+            assert int(cur1[0]) == int(cur2[0])
+        np.testing.assert_array_equal(np.asarray(s2["kcache"]),
+                                      np.asarray(s1["kcache"]))
+print("chunked prefill == one-shot (KVP=8 shard_map, chunk 17/T): OK")
+
 # ---- append_kv round-robin ----
 kc = jnp.zeros((B, KH, S_CAP, HSZ))
 vc = jnp.zeros((B, KH, S_CAP, HSZ))

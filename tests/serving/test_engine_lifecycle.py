@@ -1,0 +1,373 @@
+"""Serving-engine lifecycle: scheduled admission -> chunked prefill ->
+decode -> retirement (EOS / max-tokens / capacity), slot reuse, preemption
+resume, decode liveness under concurrent prefill, and the lm_head
+quantize-once hoist."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import (build_serve_step, make_chunk_prefill_step,
+                                    make_prefill_step)
+from repro.models.transformer import init_params
+from repro.serving import DECODE, PREFILL, DecodeEngine, Request
+from repro.utils import make_mesh
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(lm_head_w8: bool = False):
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    hx = HelixConfig(kvp_axes=("data",), tpa_axis=None,
+                     lm_head_w8=lm_head_w8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, hx, params
+
+
+def _engine(max_batch=2, max_seq=64, chunk_tokens=5, lm_head_w8=False,
+            **kw):
+    cfg, mesh, hx, params = _setup(lm_head_w8)
+    return DecodeEngine(
+        cfg, params, build_serve_step(cfg, mesh, hx),
+        make_prefill_step(cfg, mesh, hx),
+        max_batch=max_batch, max_seq=max_seq, kvp=1, hx=hx,
+        chunk_tokens=chunk_tokens,
+        chunk_prefill_step=(make_chunk_prefill_step(cfg, mesh, hx)
+                            if chunk_tokens else None), **kw)
+
+
+def _prompts(ns, seed=0):
+    cfg, *_ = _setup()
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, n).tolist() for n in ns]
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_chunked_engine_matches_oneshot_engine():
+    """The scheduler path with chunked prefill emits exactly the tokens the
+    one-shot engine does, for every request."""
+    prompts = _prompts((12, 12, 19, 7))
+
+    def run(chunk_tokens):
+        eng = _engine(chunk_tokens=chunk_tokens)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion()
+        assert not eng.pending()
+        return [r.out_tokens for r in reqs]
+
+    assert run(None) == run(5) == run(1)
+
+
+def test_lifecycle_states_and_slot_reuse():
+    """5 requests through 2 slots: every request walks QUEUED -> PREFILL ->
+    DECODE -> done, slots are reused after retirement, and the scheduler
+    invariants hold at every step."""
+    eng = _engine(chunk_tokens=4)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=3)
+            for i, p in enumerate(_prompts((9, 9, 9, 14, 6)))]
+    for r in reqs:
+        eng.submit(r)
+    seen_states = {r.rid: set() for r in reqs}
+    for _ in range(200):
+        if not eng.pending():
+            break
+        eng.step()
+        eng.sched.check_invariants()
+        for r in reqs:
+            seen_states[r.rid].add(r.state)
+    assert not eng.pending()
+    assert all(r.done and r.finish_reason == "max_tokens" for r in reqs)
+    assert all(len(r.out_tokens) == 3 for r in reqs)
+    # with 2 slots and 5 requests, slots were necessarily reused; every
+    # prompt here spans >= 2 chunks, so PREFILL is observable at a step
+    # boundary for each request
+    for r in reqs:
+        assert {PREFILL, DECODE} <= seen_states[r.rid], \
+            (r.rid, seen_states[r.rid])
+    assert eng.slots == [None, None]
+    assert eng.sched.slot_rids == [None, None]
+
+
+def test_eos_retirement():
+    """A request retires the step its greedy stream emits eos_id (and the
+    tokens match the unconstrained run up to that point)."""
+    prompt = _prompts((10,))[0]
+    eng = _engine()
+    free = Request(rid=0, prompt=list(prompt), max_new_tokens=8)
+    eng.submit(free)
+    eng.run_to_completion()
+    assert len(free.out_tokens) == 8
+    eos = free.out_tokens[3]                  # a token the stream emits
+    cut = free.out_tokens.index(eos) + 1      # first occurrence stops it
+    eng2 = _engine()
+    stopped = Request(rid=0, prompt=list(prompt), max_new_tokens=8,
+                      eos_id=eos)
+    eng2.submit(stopped)
+    eng2.run_to_completion()
+    assert stopped.finish_reason == "eos"
+    assert stopped.out_tokens == free.out_tokens[:cut]
+
+
+def test_capacity_retirement_and_rejection():
+    """Capacity: a request whose cache slot fills retires with reason
+    "capacity" after exactly cap - prompt_len tokens; one whose prompt
+    alone can't fit is rejected without ever taking a slot."""
+    eng = _engine(max_seq=16, chunk_tokens=5)      # cap = 16
+    prompt = _prompts((12,))[0]
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=50)
+    eng.submit(req)
+    eng.run_to_completion()
+    assert req.finish_reason == "capacity"
+    assert len(req.out_tokens) == 16 - 12
+    huge = Request(rid=1, prompt=_prompts((40,), seed=1)[0],
+                   max_new_tokens=4)
+    eng.submit(huge)
+    out = eng.step()
+    assert huge in out and huge.finish_reason == "rejected"
+    assert huge.out_tokens == [] and eng.slots == [None, None]
+
+
+def test_max_new_one_retires_at_first_token_and_is_reported():
+    """A max_new=1 request retires on its prefill token (not one step
+    later) and is still reported in a step()'s finished list — through
+    both the scheduler path and the legacy add_request path."""
+    prompt = _prompts((8,))[0]
+    for use_submit in (True, False):
+        eng = _engine()
+        req = Request(rid=0, prompt=list(prompt), max_new_tokens=1)
+        if use_submit:
+            eng.submit(req)
+        else:
+            assert eng.add_request(req)
+        finished = []
+        for _ in range(30):
+            finished += eng.step()
+            if not eng.pending():
+                break
+        assert finished == [req] and not eng.pending()
+        assert len(req.out_tokens) == 1
+        assert req.finish_reason == "max_tokens"
+
+
+def test_decode_never_skips_a_step_during_chunked_prefill():
+    """While a long prompt prefills chunk by chunk, an in-flight decode
+    stream gains exactly one token per engine step — the monolithic-prefill
+    stall this PR exists to remove."""
+    eng = _engine(max_batch=2, max_seq=128, chunk_tokens=3)
+    fast = Request(rid=0, prompt=_prompts((6,))[0], max_new_tokens=30)
+    eng.submit(fast)
+    while fast.state != DECODE:                    # finish its prefill
+        eng.step()
+    long_req = Request(rid=1, prompt=_prompts((60, ), seed=2)[0],
+                       max_new_tokens=4)
+    eng.submit(long_req)
+    n_chunk_steps = 0
+    while long_req.state != DECODE:
+        before = len(fast.out_tokens)
+        eng.step()
+        n_chunk_steps += 1
+        assert len(fast.out_tokens) == before + 1, \
+            "decode stream skipped a step during chunked prefill"
+    assert n_chunk_steps >= 60 // 3                # really was chunked
+    eng.run_to_completion()
+    assert long_req.done
+
+
+def test_oneshot_engine_stalls_decode_monolithically():
+    """Contrast case: with chunk_tokens=None the long prompt prefills in
+    one engine step (the decode stream sees it as a single stall) — pinning
+    that the chunked path above is actually doing something different."""
+    eng = _engine(max_batch=2, max_seq=128, chunk_tokens=None)
+    fast = Request(rid=0, prompt=_prompts((6,))[0], max_new_tokens=20)
+    eng.submit(fast)
+    while fast.state != DECODE:
+        eng.step()
+    long_req = Request(rid=1, prompt=_prompts((60,), seed=2)[0],
+                       max_new_tokens=4)
+    eng.submit(long_req)
+    eng.step()
+    assert long_req.state == DECODE                # admitted + fully prefilled
+
+
+def test_inflight_prefill_not_starved_by_fresh_admissions():
+    """Chunk scheduling is oldest-admission-first: when a lower slot frees
+    and a fresh request is admitted into it, the older in-flight prefill in
+    the higher slot keeps advancing (and finishes) first."""
+    eng = _engine(max_batch=2, max_seq=64, chunk_tokens=3)
+    quick = Request(rid=0, prompt=_prompts((4,))[0], max_new_tokens=1)
+    older = Request(rid=1, prompt=_prompts((30,), seed=3)[0],
+                    max_new_tokens=2)
+    # different length than `older` so the two can't pack into one group
+    newer = Request(rid=2, prompt=_prompts((24,), seed=4)[0],
+                    max_new_tokens=2)
+    eng.submit(quick)
+    eng.submit(older)
+    eng.submit(newer)                 # queued: both slots taken
+    for _ in range(100):
+        eng.step()
+        if quick.done and newer.state == PREFILL:
+            break
+    assert quick.done and newer.state == PREFILL   # newer took slot 0
+    assert older.state == PREFILL and older.prefill_pos > 0
+    while older.state == PREFILL:
+        eng.step()
+    # the fresh admission never advanced while the older prefill ran
+    assert newer.prefill_pos == 0
+    eng.run_to_completion()
+    assert older.done and newer.done
+
+
+# ---------------------------------------------------------------- preempt
+@pytest.mark.parametrize("when", ["decode", "prefill"])
+def test_preempt_resume_identical_tokens(when):
+    """A preempted request — mid-decode or mid-prefill — resumes (after its
+    slot was reused by another request) with exactly the tokens of an
+    uninterrupted run."""
+    prompts = _prompts((11, 8))
+
+    def run(preempt: bool):
+        eng = _engine(max_batch=1, max_seq=64, chunk_tokens=4)
+        a = Request(rid=0, prompt=list(prompts[0]), max_new_tokens=6)
+        b = Request(rid=1, prompt=list(prompts[1]), max_new_tokens=3)
+        eng.submit(a)
+        if preempt:
+            if when == "decode":
+                while not (a.state == DECODE and len(a.out_tokens) >= 2):
+                    eng.step()
+            else:
+                while not (a.state == PREFILL and 0 < a.prefill_pos
+                           < len(prompts[0])):
+                    eng.step()
+            assert eng.preempt(0)
+            eng.submit(b)            # a resumes first (preempted priority),
+            eng.run_to_completion()  # then b reuses the same slot
+            assert b.done
+        else:
+            eng.run_to_completion()
+        return a.out_tokens
+
+    assert run(True) == run(False)
+    # metrics recorded the preemption
+    eng = _engine(max_batch=1, max_seq=64, chunk_tokens=4)
+    a = Request(rid=0, prompt=list(prompts[0]), max_new_tokens=4)
+    eng.submit(a)
+    eng.step(), eng.step()
+    eng.preempt(0)
+    eng.run_to_completion()
+    assert eng.metrics.requests[0].n_preempts == 1
+
+
+def test_double_preempt_resume_in_swapped_slots():
+    """Two requests preempted mid-decode resume in each other's slots (the
+    first-resumed takes the lowest free slot): slot reuse across preempted
+    state must not leak stale cache/cur_tokens — both token streams match
+    uninterrupted runs."""
+    prompts = _prompts((11, 9))
+
+    def run(preempt: bool):
+        eng = _engine(max_batch=2, max_seq=64, chunk_tokens=4)
+        a = Request(rid=0, prompt=list(prompts[0]), max_new_tokens=6)
+        c = Request(rid=1, prompt=list(prompts[1]), max_new_tokens=6)
+        eng.submit(a)
+        eng.submit(c)
+        if preempt:
+            while not (a.state == DECODE and c.state == DECODE
+                       and len(a.out_tokens) >= 2):
+                eng.step()
+            assert eng.preempt(a.rid) and eng.preempt(c.rid)
+            eng.run_to_completion()
+            # c resumed first (front of queue) into the lowest free slot —
+            # when that was a's old slot, the slots really swapped
+            assert eng.metrics.requests[c.rid].n_preempts == 1
+        eng.run_to_completion()
+        return a.out_tokens, c.out_tokens
+
+    assert run(True) == run(False)
+
+
+def test_add_request_rejects_oversized_prompt():
+    """Legacy path applies the same cache-pressure gate as the scheduler:
+    an impossible prompt is accepted-but-rejected (reported by the next
+    step) instead of being placed with slot_len >= cap."""
+    eng = _engine(max_seq=16, chunk_tokens=None)       # cap = 16
+    huge = Request(rid=0, prompt=_prompts((20,))[0], max_new_tokens=4)
+    assert eng.add_request(huge)
+    eng.sched.check_invariants()
+    assert huge.finish_reason == "rejected" and eng.slots == [None, None]
+    assert eng.step() == [huge] and not eng.pending()
+    # a fitting request still goes straight in
+    ok = Request(rid=1, prompt=_prompts((8,))[0], max_new_tokens=2)
+    assert eng.add_request(ok)
+    eng.run_to_completion()
+    assert ok.done and ok.finish_reason == "max_tokens"
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_lifecycle_with_fake_clock():
+    """Queue wait / TTFT / TTL come out of the injected clock: with a
+    clock that ticks 1s per reading, every sample is a positive integer
+    and TTFT > queue wait for a queued request."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    eng = _engine(max_batch=1, chunk_tokens=4, clock=clock)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=3)
+            for i, p in enumerate(_prompts((9, 9)))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    s = eng.metrics.summary()
+    assert s["n_finished"] == 2
+    assert s["n_tokens"] == 6
+    assert s["ttl_s"]["n"] == 4                    # 2 reqs x (3 - 1) tokens
+    m1 = eng.metrics.requests[1]                   # waited for slot 0
+    assert m1.queue_wait > 0 and m1.ttft > m1.queue_wait
+    assert s["finish_reasons"] == {"max_tokens": 2}
+
+
+# ---------------------------------------------------------- quantize hoist
+def test_lm_head_quantize_hoisted_once(monkeypatch):
+    """ROADMAP fix: with ``lm_head_w8`` the [H, V] lm_head is quantized
+    exactly once per engine/params lifetime (``prepare_decode_params``),
+    not once per step trace — and bare serve_step callers with unprepared
+    params still fall back to in-step quantization."""
+    import repro.kernels.w8a16_matmul.ref as w8ref
+    from repro.models.decode_model import prepare_decode_params
+    calls = []
+    orig = w8ref.quantize_w8
+    monkeypatch.setattr(w8ref, "quantize_w8",
+                        lambda w: (calls.append(1), orig(w))[1])
+
+    cfg, mesh, hx, params = _setup(lm_head_w8=True)
+    prepared = prepare_decode_params(params, hx)
+    assert len(calls) == 1
+    assert prepare_decode_params(prepared, hx) is prepared   # idempotent
+    assert len(calls) == 1
+
+    # engine path: N steps, still exactly the one up-front quantization
+    eng = _engine(lm_head_w8=True, chunk_tokens=4)
+    req = Request(rid=0, prompt=_prompts((9,))[0], max_new_tokens=4)
+    eng.submit(req)
+    eng.run_to_completion()
+    assert len(req.out_tokens) == 4
+    assert len(calls) == 2                      # one more for eng's params
+
+    # bare caller with UNprepared params: the step quantizes in-trace
+    serve = jax.jit(build_serve_step(cfg, mesh, hx))
+    state = dict(eng.state)
+    serve(params, state, jnp.zeros((2,), jnp.int32))
+    assert len(calls) == 3
+    # prepared params: tracing the step adds no quantization
+    serve2 = jax.jit(build_serve_step(cfg, mesh, hx))
+    serve2(prepared, state, jnp.zeros((2,), jnp.int32))
+    assert len(calls) == 3
