@@ -100,15 +100,25 @@ def bench_one(backend: str, *, b: int, qh: int, kh: int, s: int, hsz: int,
 
 
 def _accounting(b, qh, kh, s, hsz, total_len):
-    """Pruned vs dense K/V block accounting for one bench config.  Only
-    shapes/dtypes are consumed, so ShapeDtypeStructs avoid materializing
-    the (potentially multi-GiB) K/V tensors a second time."""
+    """Pruned vs dense K/V block accounting for one bench config, plus the
+    shared-pool *paged* replay (page-table indirection; page size =
+    ``page_positions(1, 16)`` — the serving engine's layout at KVP=1).
+    Only shapes/dtypes are consumed, so ShapeDtypeStructs avoid
+    materializing the (potentially multi-GiB) K/V tensors a second time."""
+    import numpy as np
+    from repro.core.kvcache import page_positions
     q = jax.ShapeDtypeStruct((b, qh, hsz), jnp.float32)
     k = v = jax.ShapeDtypeStruct((b, kh, s, hsz), jnp.float32)
     out = {}
     for label, prune in (("pruned", True), ("dense", False)):
         out[label] = flash_decode_accounting(q, k, v, total_len, 0, kvp=1,
                                              prune=prune)
+    page = page_positions(1, 16)
+    mp = -(-s // page)
+    pool = jax.ShapeDtypeStruct((1 + b * mp, kh, page, hsz), jnp.float32)
+    out["paged"] = flash_decode_accounting(
+        q, pool, pool, total_len, 0, kvp=1, prune=True,
+        block_tables=np.zeros((b, mp), np.int32))
     return out
 
 

@@ -22,7 +22,15 @@ silently drift):
    "rows": [{"load": 1.0, "chunk_tokens": 8, "sched_policy": "fcfs",
              "ttft_p50_s": ..., "ttft_p95_s": ..., "ttl_p50_s": ...,
              "ttl_p95_s": ..., "queue_wait_p50_s": ...,
-             "throughput_tok_s": ..., "n_finished": ..., "steps": ...}]}
+             "throughput_tok_s": ..., "n_finished": ...,
+             "paged_kv": false, "pool_occupancy_peak": ...,
+             "pool_frag_mean": ..., "capacity_retired": ...}]}
+
+``--paged-kv`` doubles the sweep with shared-pool paged rows: the pool
+columns record peak page occupancy and mean internal fragmentation of
+allocated pages (zeros on fixed-cap rows) plus capacity retirements
+(real count on both layouts — the paged/fixed token streams themselves
+are bit-identical, which ``scripts/paged_smoke.py`` asserts in CI).
 
 On CPU the absolute times are dominated by XLA dispatch, not kernel work —
 the *relative* one-shot-vs-chunked TTL spread is the signal tracked across
@@ -44,17 +52,25 @@ ROW_SCHEMA = {
     "ttl_p50_s": float, "ttl_p95_s": float,
     "queue_wait_p50_s": float, "throughput_tok_s": float,
     "n_finished": int, "n_tokens": int,
+    # shared-pool paged KV cache health: peak pool occupancy and mean
+    # internal fragmentation of allocated pages (zeros on fixed-cap rows),
+    # plus how many requests were capacity-retired (real count on both
+    # layouts)
+    "paged_kv": bool, "pool_occupancy_peak": float,
+    "pool_frag_mean": float, "capacity_retired": int,
 }
 
 
 def bench_cell(arch: str, *, load: float, chunk_tokens: int,
                sched_policy: str, requests: int, prompt_len: int,
-               max_new: int, max_batch: int, seed: int = 0) -> dict:
-    """One (load, chunk_tokens) sweep cell -> a ROW_SCHEMA row."""
+               max_new: int, max_batch: int, seed: int = 0,
+               paged_kv: bool = False) -> dict:
+    """One (load, chunk_tokens, paged_kv) sweep cell -> a ROW_SCHEMA row."""
     finished, summary = serve_demo(
         arch, reduced=True, n_requests=requests, prompt_len=prompt_len,
         max_new=max_new, max_batch=max_batch, chunk_tokens=chunk_tokens,
         sched_policy=sched_policy, traffic="poisson", arrival_rate=load,
+        paged_kv=True if paged_kv else None,
         seed=seed, log=lambda s: None)
     return {
         "load": float(load),
@@ -68,6 +84,10 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         "throughput_tok_s": summary["throughput_tok_s"],
         "n_finished": summary["n_finished"],
         "n_tokens": summary["n_tokens"],
+        "paged_kv": bool(summary["paged_kv"]),
+        "pool_occupancy_peak": float(summary["pool_occupancy_peak"]),
+        "pool_frag_mean": float(summary["pool_frag_mean"]),
+        "capacity_retired": int(summary["capacity_retired"]),
     }
 
 
@@ -83,28 +103,38 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="also sweep every cell with the shared-pool paged "
+                         "KV cache (records pool occupancy / fragmentation "
+                         "/ capacity retirements per row)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI cell: one load, 4 requests, short prompts")
+                    help="tiny CI cell: one load, 4 requests, short prompts"
+                         " (includes one paged row)")
     args = ap.parse_args()
 
     if args.smoke:
         args.loads, args.chunks = [1.0], [0, 4]
         args.requests, args.prompt_len, args.max_new = 4, 12, 4
         args.max_batch = 2
+        args.paged_kv = True
 
     rows = []
     for load in args.loads:
         for chunk in args.chunks:
-            row = bench_cell(args.arch, load=load, chunk_tokens=chunk,
-                             sched_policy=args.sched_policy,
-                             requests=args.requests,
-                             prompt_len=args.prompt_len,
-                             max_new=args.max_new, max_batch=args.max_batch)
-            rows.append(row)
-            print(f"load={load:<5} chunk={chunk:<4} "
-                  f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
-                  f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
-                  f"tput={row['throughput_tok_s']:7.1f} tok/s")
+            for paged in ((False, True) if args.paged_kv else (False,)):
+                row = bench_cell(args.arch, load=load, chunk_tokens=chunk,
+                                 sched_policy=args.sched_policy,
+                                 requests=args.requests,
+                                 prompt_len=args.prompt_len,
+                                 max_new=args.max_new,
+                                 max_batch=args.max_batch, paged_kv=paged)
+                rows.append(row)
+                print(f"load={load:<5} chunk={chunk:<4} "
+                      f"paged={int(paged)} "
+                      f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
+                      f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
+                      f"tput={row['throughput_tok_s']:7.1f} tok/s "
+                      f"pool_occ={row['pool_occupancy_peak']:.2f}")
 
     out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
                     "requests": args.requests, "prompt_len": args.prompt_len,

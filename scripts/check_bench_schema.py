@@ -44,6 +44,20 @@ def check(path: pathlib.Path) -> list[str]:
         for key in ("ttft_p50_s", "ttl_p50_s", "throughput_tok_s"):
             if not row.get(key, 0) > 0:
                 errors.append(f"row {i}: {key} must be > 0, got {row.get(key)}")
+        # paged-pool health columns: a paged row must have seen real
+        # occupancy; fixed-cap rows must report zeros (no phantom pool)
+        if row.get("paged_kv"):
+            if not 0 < row.get("pool_occupancy_peak", 0) <= 1:
+                errors.append(f"row {i}: paged row needs pool_occupancy_peak"
+                              f" in (0, 1], got "
+                              f"{row.get('pool_occupancy_peak')}")
+            if not 0 <= row.get("pool_frag_mean", -1) <= 1:
+                errors.append(f"row {i}: pool_frag_mean out of [0, 1]")
+        else:
+            for key in ("pool_occupancy_peak", "pool_frag_mean"):
+                if row.get(key, 0) != 0:
+                    errors.append(f"row {i}: fixed-cap row has nonzero "
+                                  f"{key}: {row.get(key)}")
     return errors
 
 

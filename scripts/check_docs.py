@@ -69,7 +69,16 @@ def check_docstrings() -> None:
         ("repro.serving.scheduler", "Scheduler"),
         ("repro.serving.scheduler", "Request"),
         ("repro.serving.metrics", "EngineMetrics"),
+        ("repro.serving.pool", "BlockAllocator"),
+        ("repro.serving.pool", "pages_for"),
         ("repro.core.kvcache", "quantize_decode_state"),
+        ("repro.core.kvcache", "cache_to_pages"),
+        ("repro.core.kvcache", "pages_to_cache"),
+        ("repro.core.kvcache", "gather_pages"),
+        ("repro.core.kvcache", "state_to_paged"),
+        ("repro.core.kvcache", "page_positions"),
+        ("repro.core.helix", "paged_slot_of_position"),
+        ("repro.kernels.pruning", "table_block"),
         ("repro.kernels.registry", "KernelFamily"),
         ("repro.kernels.registry", "backend_table"),
     ]

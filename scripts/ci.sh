@@ -25,8 +25,13 @@ python -m repro.launch.serve --list-backends
 # (and to the causal triangle in prefill) while outputs stay bit-exact
 python scripts/prune_smoke.py
 
+# paged-KV smoke: the shared-pool paged cache must produce token streams
+# identical to the fixed per-slot layout (one-shot + chunked prefill)
+python scripts/paged_smoke.py
+
 # serving smoke: scheduler-driven engine with chunked prefill under synthetic
-# Poisson traffic; writes BENCH_serving.json whose schema is then asserted
+# Poisson traffic; writes BENCH_serving.json (incl. a --paged-kv row with
+# pool occupancy/fragmentation columns) whose schema is then asserted
 # (perf rows can't silently drift)
 python benchmarks/bench_serving.py --smoke
 python scripts/check_bench_schema.py BENCH_serving.json

@@ -66,7 +66,8 @@ def _window_slice(total_len, rank, s_loc, *, kvp, rr_block, window):
 
 def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
                            quant: bool = False,
-                           contiguous: bool = False) -> bool:
+                           contiguous: bool = False,
+                           paged: bool = False) -> bool:
     """Static check: can this decode step run the fused KV-append epilogue?
 
     The fused path (kernels/flash_decode append mode) writes the new token's
@@ -86,6 +87,10 @@ def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
     if contiguous:
         return False
     del quant  # int8 caches fuse too (in-kernel quantization)
+    if paged:
+        # the paged pool never takes the cache-slice fast path (pages are
+        # indirected, not sliceable), so fusion always composes
+        return True
     if hx.prune_blocks:
         return True
     s_loc = s_cap // kvp
@@ -96,7 +101,8 @@ def fuse_append_applicable(hx, kvp: int, window, total_len, s_cap: int, *,
 def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                   contiguous: bool, kscale=None, vscale=None,
                   backend: str = "ref", k_new=None, v_new=None,
-                  prune: bool = True):
+                  prune: bool = True, block_tables=None,
+                  block_s: int = 512):
     """Per-rank partial attention + LSE over the local KV shard.
 
     contiguous=True: static split (whisper cross-attn KV) — every local slot
@@ -115,19 +121,38 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
     token's row to the local shard and returns
     ``(out, lse, kcache, vcache)`` (+ the updated scales for int8 caches)
     instead of ``(out, lse)``.
+    block_tables [B, max_pages]: shared-pool paged mode — k/v (and scales)
+    are this rank's pool-plane shards ``[n_pool, Kh, ps_loc, ...]``; the
+    Pallas backends stream pages through the prefetched table, the ref
+    backend gathers the pages into the equivalent dense local cache first
+    (bit-exact — masked tail slots contribute exact zeros).
+    block_s: fixed-layout kernel S-block size (``HelixConfig.attn_block_s``).
     """
-    s_loc = k.shape[2]
     fused = k_new is not None
+    paged = block_tables is not None
     assert not fused or backend != "ref", \
         "fused append requires a Pallas backend"
+    assert not (paged and contiguous), \
+        "paged mode excludes the contiguous (cross-attn) layout"
+    if paged and backend == "ref":
+        from repro.core.kvcache import gather_pages
+        k = gather_pages(k, block_tables)
+        v = gather_pages(v, block_tables)
+        if kscale is not None:
+            kscale = gather_pages(kscale, block_tables)
+            vscale = gather_pages(vscale, block_tables)
+        paged, block_tables = False, None
+    s_loc = k.shape[2]
     # Sliding-window cache-slice fast path: slice the live span out of the
     # shard and re-align positions via slot_offset.  Only worth it where the
     # kernel can't prune for itself — the ref backend, or a Pallas backend
     # with pruning disabled.  Incompatible with the fused append (the kernel
-    # must write the real cache, not a slice) —
-    # fuse_append_applicable() excludes the overlap.
+    # must write the real cache, not a slice) and with the paged pool (pages
+    # are indirected, not sliceable) — fuse_append_applicable() excludes
+    # the overlap.
     slot_offset = 0
-    if not contiguous and not fused and (backend == "ref" or not prune):
+    if (not contiguous and not fused and not paged
+            and (backend == "ref" or not prune)):
         sl = _window_slice(total_len, rank, s_loc, kvp=kvp,
                            rr_block=rr_block, window=window)
         if sl is not None:
@@ -146,6 +171,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                             contiguous=contiguous, slot_offset=slot_offset,
                             kscale=kscale, vscale=vscale,
                             k_new=k_new, v_new=v_new, prune=prune,
+                            block_tables=block_tables, block_s=block_s,
                             interpret=backend != "pallas")
     # ---- pure-JAX reference path ----
     if contiguous:
@@ -165,7 +191,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
 def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     *, window: int | jax.Array = 0, contiguous: bool = False,
                     hopb_chunks: int = 1, kscale=None, vscale=None,
-                    k_new=None, v_new=None):
+                    k_new=None, v_new=None, block_tables=None):
     """Exact sharded decode attention.
 
     Args:
@@ -186,12 +212,22 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     returns the updated scales.  Pass the pre-append caches
                     and a ``total_len`` that already counts the new token;
                     the caller must have checked ``fuse_append_applicable``.
+      block_tables: [B, max_pages] int32 — shared-pool *paged* mode:
+                    kcache/vcache are pool planes ``[n_blocks, Kh, block_s,
+                    hsz]`` (scales ``[n_blocks, Kh, block_s]``) whose
+                    block_s axis shards over the kvp axes exactly like the
+                    fixed layout's slot axis — each rank holds block_s/KVP
+                    rows of every page, its round-robin local slots for
+                    that page (core/kvcache.py paged layout).  The table is
+                    replicated; per-rank attention streams pages through
+                    it.  Fused append composes (the kernel writes the new
+                    row's page through the table).
 
     Returns: [B, Qh*hsz] attention output, sharded over (tpa, kvp) on dim 1 —
     exactly the TP layout the post-attention projection consumes (§2.2).
     In fused-append mode returns ``(out, kcache, vcache)`` with the appended
-    caches (same global layout/sharding as the inputs), plus
-    ``(kscale, vscale)`` for int8 caches.
+    caches (same global layout/sharding as the inputs — whole pool planes in
+    paged mode), plus ``(kscale, vscale)`` for int8 caches.
     """
     import math
     b, qh, hsz = q.shape
@@ -200,7 +236,9 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
     kvp = math.prod(mesh.shape[a] for a in kvp_axes)
     qh_local = qh // (mesh.shape[tpa] if tpa else 1)
     fused = k_new is not None
+    paged = block_tables is not None
     assert not fused or not contiguous
+    assert not (paged and contiguous)
     # The all-to-all splits the flattened (Qh_local*hsz) dim into KVP slices.
     # When it does not divide (e.g. hymba q_dim=1600, N=256) we zero-pad the
     # flat dim only — attention itself runs the canonical heads; pad elements
@@ -217,18 +255,22 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
 
     def local_fn(q_l, k_l, v_l, tl, *extras):
         rank = jax.lax.axis_index(kvp_axes)
-        ks_l = vs_l = kn_l = vn_l = None
+        ks_l = vs_l = kn_l = vn_l = tbl_l = None
         if kscale is not None:
             ks_l, vs_l, extras = extras[0], extras[1], extras[2:]
         if fused:
-            kn_l, vn_l = extras
+            kn_l, vn_l, extras = extras[0], extras[1], extras[2:]
+        if paged:
+            (tbl_l,) = extras
         res = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
                             rr_block=hx.rr_block, window=window,
                             contiguous=contiguous,
                             kscale=ks_l, vscale=vs_l,
                             backend=hx.attn_backend,
                             k_new=kn_l, v_new=vn_l,
-                            prune=hx.prune_blocks)
+                            prune=hx.prune_blocks,
+                            block_tables=tbl_l,
+                            block_s=hx.attn_block_s)
         out, lse = res[0], res[1]
         bl = out.shape[0]
         # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
@@ -250,6 +292,9 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
 
     tl_spec = P() if jnp.ndim(total_len) == 0 else P(None)
     quant = kscale is not None
+    # fixed layout: cache [B, Kh, S_cap, hsz], slot axis over kvp; paged:
+    # pool [n_blocks, Kh, block_s, hsz], the page's block_s axis over kvp —
+    # the *same* spec, by construction of the paged layout
     cache_spec = P(None, tpa, kvp_axes, None)
     in_specs = (P(None, tpa, None),                       # q: repl over kvp
                 cache_spec,                               # kcache
@@ -259,6 +304,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         in_specs += (P(None, tpa, kvp_axes), P(None, tpa, kvp_axes))
     if fused:
         in_specs += (P(None, tpa, None), P(None, tpa, None))  # k_new, v_new
+    if paged:
+        in_specs += (P(None, None),)                      # tables: replicated
     out_spec = P(None, ((tpa,) if tpa else ()) + kvp_axes)
     scale_spec = P(None, tpa, kvp_axes)
     if fused:
@@ -271,45 +318,102 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         local_fn, mesh=mesh, in_specs=in_specs,
         out_specs=out_specs, check_vma=False)
 
-    def call(qs, ks, vs, tl, kss, vss, kns, vns):
+    def call(qs, ks, vs, tl, kss, vss, kns, vns, tbl):
         args = (qs, ks, vs, tl)
         if quant:
             args += (kss, vss)
         if fused:
             args += (kns, vns)
+        if paged:
+            args += (tbl,)
         return shard_fn(*args)
 
     if hopb_chunks <= 1:
         return call(q, kcache, vcache, total_len, kscale, vscale,
-                    k_new, v_new)
+                    k_new, v_new, block_tables)
 
     # ---- HOP-B: batch-wise communication/computation overlap (§2.1.3) ----
     assert b % hopb_chunks == 0, (b, hopb_chunks)
     bc = b // hopb_chunks
     outs = []
+    # paged pool planes carry no batch axis: every chunk sees the whole
+    # pool (its table rows select its pages).  In fused mode the appended
+    # pool must thread chunk-to-chunk — that serializes the cache writes,
+    # but the attention/all-to-all overlap HOP-B exists for is unaffected.
+    kc_cur, vc_cur, ks_cur, vs_cur = kcache, vcache, kscale, vscale
     for i in range(hopb_chunks):
         csl = slice(i * bc, (i + 1) * bc)
         tl_i = total_len if jnp.ndim(total_len) == 0 else total_len[csl]
-        outs.append(call(q[csl], kcache[csl], vcache[csl], tl_i,
-                         kscale[csl] if quant else None,
-                         vscale[csl] if quant else None,
-                         k_new[csl] if fused else None,
-                         v_new[csl] if fused else None))
+        res = call(q[csl],
+                   kc_cur if paged else kc_cur[csl],
+                   vc_cur if paged else vc_cur[csl], tl_i,
+                   (ks_cur if paged else ks_cur[csl]) if quant else None,
+                   (vs_cur if paged else vs_cur[csl]) if quant else None,
+                   k_new[csl] if fused else None,
+                   v_new[csl] if fused else None,
+                   block_tables[csl] if paged else None)
+        if fused and paged:
+            outs.append(res[0])
+            kc_cur, vc_cur = res[1], res[2]
+            if quant:
+                ks_cur, vs_cur = res[3], res[4]
+        else:
+            outs.append(res)
+    if fused and paged:
+        out = jnp.concatenate(outs, axis=0)
+        if quant:
+            return out, kc_cur, vc_cur, ks_cur, vs_cur
+        return out, kc_cur, vc_cur
     if fused:
         return tuple(jnp.concatenate([o[i] for o in outs], axis=0)
                      for i in range(len(outs[0])))
     return jnp.concatenate(outs, axis=0)
 
 
+def paged_slot_of_position(pos, block_tables, *, kvp: int, rr_block: int,
+                           block_s: int):
+    """(physical page [B], in-page row [B]) holding global position ``pos``.
+
+    The paged twin of ``rr_slot_of_position``: position ``pos`` lives on
+    rank ``r = (pos//rr) % KVP`` at local slot ``j``, i.e. logical page
+    ``j // ps_loc`` at in-page row ``r*ps_loc + j % ps_loc`` (``ps_loc =
+    block_s/KVP`` — the page's block_s axis is rank-major).  Negative
+    positions (idle engine rows) clamp to logical page 0, whose table entry
+    is the reserved sink page."""
+    pos = jnp.asarray(pos, jnp.int32)
+    ps_loc = block_s // kvp
+    blk = pos // rr_block
+    rank = blk % kvp
+    j = (blk // kvp) * rr_block + pos % rr_block
+    page = jnp.clip(j // ps_loc, 0, block_tables.shape[1] - 1)
+    row = rank * ps_loc + j % ps_loc
+    b = block_tables.shape[0]
+    phys = block_tables[jnp.arange(b), jnp.broadcast_to(page, (b,))]
+    return phys, jnp.broadcast_to(row, (b,))
+
+
 def append_kv(kcache, vcache, k_new, v_new, total_len, *, kvp: int,
-              rr_block: int):
+              rr_block: int, block_tables=None):
     """Round-robin KV concatenation (§2.3), GSPMD-compatible.
 
     kcache [B, Kh, S_cap, hsz] (S_cap = KVP * S_loc, round-robin layout);
     k_new [B, Kh, hsz] for the token at position total_len - 1.  total_len
     may be scalar (uniform batch: dynamic-update-slice) or [B] (continuous
     batching: per-request scatter).
+
+    Paged mode (``block_tables`` [B, max_pages]): kcache/vcache are pool
+    planes ``[n_blocks, Kh, block_s, hsz]`` and the row scatters into the
+    physical page the table names for the token's logical page
+    (``paged_slot_of_position``); idle rows (total_len 0) land on the
+    reserved sink page 0.
     """
+    if block_tables is not None:
+        phys, row = paged_slot_of_position(
+            total_len - 1, block_tables, kvp=kvp, rr_block=rr_block,
+            block_s=kcache.shape[2])
+        kcache = kcache.at[phys, :, row, :].set(k_new.astype(kcache.dtype))
+        vcache = vcache.at[phys, :, row, :].set(v_new.astype(vcache.dtype))
+        return kcache, vcache
     s_cap = kcache.shape[2]
     s_loc = s_cap // kvp
     pos = total_len - 1
@@ -336,13 +440,22 @@ def quantize_kv_token(x):
 
 
 def append_kv_quant(kcache, vcache, kscale, vscale, k_new, v_new, total_len,
-                    *, kvp: int, rr_block: int):
+                    *, kvp: int, rr_block: int, block_tables=None):
     """int8 round-robin KV append: quantize the new token per (B, Kh) and
-    write payload + scale at its round-robin slot (§2.3 + §Perf kv8)."""
+    write payload + scale at its round-robin slot (§2.3 + §Perf kv8).
+    Paged mode (``block_tables``): the payload/scale scatter goes through
+    the block table into the pool planes, like ``append_kv``."""
     kq, ks = quantize_kv_token(k_new)
     vq, vs = quantize_kv_token(v_new)
     kcache, vcache = append_kv(kcache, vcache, kq, vq, total_len, kvp=kvp,
-                               rr_block=rr_block)
+                               rr_block=rr_block, block_tables=block_tables)
+    if block_tables is not None:
+        phys, row = paged_slot_of_position(
+            total_len - 1, block_tables, kvp=kvp, rr_block=rr_block,
+            block_s=kcache.shape[2])
+        kscale = kscale.at[phys, :, row].set(ks.astype(kscale.dtype))
+        vscale = vscale.at[phys, :, row].set(vs.astype(vscale.dtype))
+        return kcache, vcache, kscale, vscale
     s_loc = kcache.shape[2] // kvp
     slot = rr_slot_of_position(total_len - 1, kvp, s_loc, rr_block)
     if jnp.ndim(total_len) == 0:

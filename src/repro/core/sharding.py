@@ -83,6 +83,17 @@ class HelixConfig:
     #   all-gather the small activations, instead of the paper's replicated
     #   per-rank QKV compute (wins when decode is weight-read bound)
     kv_cache_bits: int = 16              # 8 => int8 KV cache + f32 scales
+    paged_kv: bool = False               # shared-pool paged KV cache: K/V
+    #   live in [L, n_blocks, Kh, block_s, hsz] pool planes with per-request
+    #   block tables instead of fixed per-slot rows, so cache pressure is a
+    #   *global* page count (serving/pool.py, core/kvcache.py paged layout).
+    #   Bit-exact vs the fixed layout at the same attn_block_s partition;
+    #   decode-state leaves gain `block_tables` [B, max_pages] int32.
+    attn_block_s: int = 512              # flash_decode S-block size (kernel
+    #   tuning knob; clamped to the shard capacity).  In paged mode the
+    #   per-rank page rows (rr_block) take over as the block size; setting
+    #   attn_block_s == rr_block makes fixed and paged online-softmax block
+    #   partitions identical, hence bit-exact parity between the layouts.
     # --- per-family kernel backends (kernels/registry.py) ---
     attn_backend: str = "ref"            # flash_decode (helix decode attn)
     prefill_backend: str = "ref"         # flash_prefill (prefill/train attn)

@@ -103,6 +103,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.utils import NEG_INF
 from repro.kernels.flash_decode.ref import local_valid_len
 from repro.kernels.pruning import phys_block as _phys_block
+from repro.kernels.pruning import table_block as _table_block
 
 
 def _append_slot(total_len, kvp: int, rr_block: int, s_max: int):
@@ -168,9 +169,14 @@ def prune_block_range(total_len, rank, slot_offset, window, *, kvp: int,
     return lo, jnp.maximum(hi - lo, 0)
 
 
-def _decode_kernel(meta_ref, tl_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+def _decode_kernel(meta_ref, tl_ref, *refs, scale: float,
                    kvp: int, rr_block: int, block_s: int, s_true: int,
-                   contiguous: bool, quant: bool, append: bool, prune: bool):
+                   contiguous: bool, quant: bool, append: bool, prune: bool,
+                   paged: bool):
+    if paged:
+        tbl_ref, q_ref, k_ref, v_ref, *rest = refs
+    else:
+        q_ref, k_ref, v_ref, *rest = refs
     if append and quant:
         (kscale_ref, vscale_ref, knew_ref, vnew_ref,
          krow_in_ref, vrow_in_ref, ksrow_in_ref, vsrow_in_ref,
@@ -302,7 +308,7 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
                         rr_block: int, block_s: int, s_true: int,
                         contiguous: bool = False, kscale=None, vscale=None,
                         k_new=None, v_new=None, prune: bool = True,
-                        interpret: bool = True):
+                        block_tables=None, interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
     q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; meta: [3] int32
@@ -315,57 +321,92 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     s_true: unpadded local capacity (slots >= s_true are masked).
     prune: skip fully-invalid S blocks (index_map clamp + pl.when) instead
     of masking them — bit-exact either way.
+
+    Paged mode (``block_tables`` [B, max_pages] int32, scalar-prefetched):
+    k/v are shared *pool* planes ``[n_pool, Kh, block_s, hsz]`` (scales
+    ``[n_pool, Kh, block_s]``) instead of per-request rows; grid step ``s``
+    streams physical page ``block_tables[b, logical]`` where ``logical`` is
+    exactly the fixed layout's (possibly prune-clamped) block id
+    (kernels/pruning.table_block).  All masking/position math runs on the
+    logical ids, so paged vs fixed is bit-exact; pruning composes (the
+    valid-span clamp walks table entries, keeping DMA elision).  The fused
+    append writes its row windows through the table too; outputs alias the
+    pool planes.  Excludes the contiguous layout and ``slot_offset``.
+
     returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32), plus the
-    appended caches kc, vc [B, Kh, S_pad, hsz] (aliased with k, v) and, in
-    int8 append mode, the updated kscale, vscale [B, Kh, S_pad].
+    appended caches (aliased with k, v — pool planes in paged mode) and, in
+    int8 append mode, the updated kscale, vscale.
     """
     b, kh, qp, hsz = q.shape
-    s_pad = k.shape[2]
-    assert s_pad % block_s == 0 and qp % 8 == 0
+    paged = block_tables is not None
     quant = kscale is not None
     assert quant == (vscale is not None)
     append = k_new is not None
     assert append == (v_new is not None)
     assert not (append and contiguous), \
         "fused append excludes the contiguous layout"
-    n_blocks = s_pad // block_s
+    if paged:
+        assert not contiguous, "paged mode excludes the contiguous layout"
+        assert k.shape[2] == block_s, (k.shape, block_s)
+        n_blocks = block_tables.shape[1]          # logical pages per request
+        s_pad = n_blocks * block_s                # logical local capacity
+    else:
+        s_pad = k.shape[2]
+        assert s_pad % block_s == 0
+        n_blocks = s_pad // block_s
+    assert qp % 8 == 0
 
     grid = (b, kh, n_blocks)
     kernel = functools.partial(
         _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant,
-        append=append, prune=prune)
+        append=append, prune=prune, paged=paged)
 
-    def kv_idx(b, h, s, meta_ref, tl_ref):
+    def logical_block(s, meta_ref, tl_ref, b):
         # pruned steps re-reference the previous step's block: the DMA is
         # elided, so HBM reads scale with the valid length, not capacity
         if not prune:
-            return (b, h, s, 0)
+            return s
         lo, nb = prune_block_range(
             tl_ref[b], meta_ref[0], meta_ref[1], meta_ref[2], kvp=kvp,
             rr_block=rr_block, block_s=block_s, s_true=s_true,
             contiguous=contiguous)
-        return (b, h, _phys_block(s, lo, nb, n_blocks), 0)
+        return _phys_block(s, lo, nb, n_blocks)
 
-    def scale_idx(b, h, s, meta_ref, tl_ref):
-        return kv_idx(b, h, s, meta_ref, tl_ref)[:3]
+    def kv_idx(b, h, s, meta_ref, tl_ref, *rest):
+        # paged: the physical pool page comes from the prefetched table at
+        # the (clamped) logical id — same id as the fixed layout, so the
+        # DMA-elision property survives the indirection (pruning.table_block)
+        lg = logical_block(s, meta_ref, tl_ref, b)
+        if paged:
+            return (rest[0][b, lg], h, 0, 0)
+        return (b, h, lg, 0)
 
-    def row_idx(b, h, s, meta_ref, tl_ref):
+    def scale_idx(b, h, s, meta_ref, tl_ref, *rest):
+        return kv_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
+
+    def row_idx(b, h, s, meta_ref, tl_ref, *rest):
         # target row window of the appended token; depends on the prefetched
         # per-request length only (rank-independent slot formula)
-        return (b, h, _append_slot(tl_ref[b], kvp, rr_block, s_pad), 0)
+        j_new = _append_slot(tl_ref[b], kvp, rr_block, s_pad)
+        if paged:
+            return (rest[0][b, j_new // block_s], h, j_new % block_s, 0)
+        return (b, h, j_new, 0)
 
-    def srow_idx(b, h, s, meta_ref, tl_ref):
-        return row_idx(b, h, s, meta_ref, tl_ref)[:3]
+    def srow_idx(b, h, s, meta_ref, tl_ref, *rest):
+        return row_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
+
+    def q_idx(b, h, s, *_):
+        return (b, h, 0, 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, qp, hsz), q_idx),
         pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
         pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
     ]
-    args = (meta, tl, q, k, v)
+    args = (meta, tl) + ((block_tables,) if paged else ()) + (q, k, v)
     out_specs = [
-        pl.BlockSpec((1, 1, qp, hsz), lambda b, h, s, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, qp, hsz), q_idx),
         pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
     ]
     out_shape = [
@@ -373,6 +414,9 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         jax.ShapeDtypeStruct((b, kh, qp), jnp.float32),
     ]
     aliases = {}
+    # inputs are numbered including the scalar-prefetch args; paged mode
+    # prefetches the block table too, shifting everything after it by one
+    npre = 3 if paged else 2
     if quant:
         in_specs += [
             pl.BlockSpec((1, 1, block_s), scale_idx),
@@ -392,12 +436,12 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
             pl.BlockSpec((1, 1, 1, hsz), row_idx),
         ]
         out_shape += [
-            jax.ShapeDtypeStruct((b, kh, s_pad, hsz), k.dtype),
-            jax.ShapeDtypeStruct((b, kh, s_pad, hsz), v.dtype),
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
         ]
-        # inputs are numbered including the 2 scalar-prefetch args:
-        # meta=0, tl=1, q=2, k=3, v=4 -> outputs 2/3 are the appended caches
-        aliases = {3: 2, 4: 3}
+        # e.g. unpaged: meta=0, tl=1, q=2, k=3, v=4 -> outputs 2/3 are the
+        # appended caches (aliased with the K/V inputs)
+        aliases = {npre + 1: 2, npre + 2: 3}
         if quant:
             in_specs += [
                 pl.BlockSpec((1, 1, 1), srow_idx),
@@ -409,19 +453,18 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
                 pl.BlockSpec((1, 1, 1), srow_idx),
             ]
             out_shape += [
-                jax.ShapeDtypeStruct((b, kh, s_pad), jnp.float32),
-                jax.ShapeDtypeStruct((b, kh, s_pad), jnp.float32),
+                jax.ShapeDtypeStruct(kscale.shape, jnp.float32),
+                jax.ShapeDtypeStruct(vscale.shape, jnp.float32),
             ]
-            # with quant the inputs are meta=0, tl=1, q=2, k=3, v=4,
-            # kscale=5, vscale=6, knew=7, vnew=8, then the row windows;
             # the scale outputs (4/5) alias the full scale inputs, the
             # cache outputs (2/3) the full K/V inputs
-            aliases = {3: 2, 4: 3, 5: 4, 6: 5}
+            aliases = {npre + 1: 2, npre + 2: 3,
+                       npre + 3: 4, npre + 4: 5}
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=npre,
             grid=grid,
             in_specs=in_specs,
             out_specs=out_specs,

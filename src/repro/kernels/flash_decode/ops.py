@@ -60,7 +60,8 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
                  window=0, scale: float | None = None, block_s: int = 512,
                  interpret: bool = True, contiguous: bool = False,
                  slot_offset=0, kscale=None, vscale=None,
-                 k_new=None, v_new=None, prune: bool = True):
+                 k_new=None, v_new=None, prune: bool = True,
+                 block_tables=None):
     """Decode-shape attention over one KV shard via the Pallas kernel.
 
     This is the flash_decode *family* entry point the kernel-backend
@@ -68,12 +69,24 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
     docstring for the full mode lattice and ``flash_decode_ref`` for the
     oracle that defines the semantics.
 
+    Paged mode: with ``block_tables`` ([B, max_pages] int32) the K/V
+    operands are shared pool planes ``[n_pool, Kh, page_s, hsz]``
+    (``kscale``/``vscale`` become ``[n_pool, Kh, page_s]``): request ``b``'s
+    logical local slots ``[p*page_s, (p+1)*page_s)`` live in physical pool
+    page ``block_tables[b, p]``.  The kernel's S-block size is pinned to
+    ``page_s`` and the index_maps stream through the prefetched table
+    (bit-exact vs the fixed layout at the same block size; pruning, quant
+    and the fused append all compose).  Unallocated table entries should
+    point at the reserved sink page 0.
+
     Returns ``(out [B, Qh, hsz], lse [B, Qh] f32)``, plus the appended
     ``(kcache, vcache)`` when ``k_new``/``v_new`` engage the fused-append
-    epilogue (and the updated ``(kscale, vscale)`` for int8 caches).
+    epilogue (and the updated ``(kscale, vscale)`` for int8 caches) — pool
+    planes in paged mode.
     """
     b, qh, hsz = q.shape
-    kh, s_cap = k.shape[1], k.shape[2]
+    kh = k.shape[1]
+    paged = block_tables is not None
     assert qh % kh == 0, (qh, kh)
     g = qh // kh
     if scale is None:
@@ -88,17 +101,31 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
         # (core/helix.fuse_append_applicable).
         assert not (isinstance(slot_offset, int) and slot_offset != 0), \
             "fused append excludes the sliding-window cache-slice fast path"
-
-    block_s = min(block_s, round_up(s_cap, 128))
+    if paged:
+        assert not contiguous, "paged mode excludes the contiguous layout"
+        assert not (isinstance(slot_offset, int) and slot_offset != 0), \
+            "paged mode excludes the cache-slice fast path"
+        # page size is the kernel block; logical capacity spans the table
+        block_s = k.shape[2]
+        s_cap = block_tables.shape[1] * block_s
+        kp, vp = k, v
+        tables = jnp.asarray(block_tables, jnp.int32)
+    else:
+        s_cap = k.shape[2]
+        block_s = min(block_s, round_up(s_cap, 128))
+        kp = pad_dim(k, 2, block_s)
+        vp = pad_dim(v, 2, block_s)
+        tables = None
     qp = round_up(g, 8)
 
     qg = q.reshape(b, kh, g, hsz)
     qg = pad_dim(qg, 2, qp)
-    kp = pad_dim(k, 2, block_s)
-    vp = pad_dim(v, 2, block_s)
     if kscale is not None:
-        kscale = pad_dim(kscale.astype(jnp.float32), 2, block_s)
-        vscale = pad_dim(vscale.astype(jnp.float32), 2, block_s)
+        kscale = kscale.astype(jnp.float32)
+        vscale = vscale.astype(jnp.float32)
+        if not paged:
+            kscale = pad_dim(kscale, 2, block_s)
+            vscale = pad_dim(vscale, 2, block_s)
 
     meta = jnp.stack([jnp.asarray(rank, jnp.int32),
                       jnp.asarray(slot_offset, jnp.int32),
@@ -119,12 +146,15 @@ def flash_decode(q, k, v, total_len, rank, *, kvp: int = 1, rr_block: int = 16,
     res = flash_decode_kernel(
         qg, kp, vp, meta, tl, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_cap, contiguous=contiguous,
-        kscale=kscale, vscale=vscale, prune=prune, interpret=interpret, **kw)
+        kscale=kscale, vscale=vscale, prune=prune, block_tables=tables,
+        interpret=interpret, **kw)
 
     out, lse = res[0], res[1]
     out = out[:, :, :g, :].reshape(b, qh, hsz)
     lse = lse[:, :, :g].reshape(b, qh)
     if append:
+        if paged:
+            return (out, lse) + tuple(res[2:])
         kc, vc = res[2][:, :, :s_cap], res[3][:, :, :s_cap]
         if quant:
             return out, lse, kc, vc, res[4][:, :, :s_cap], res[5][:, :, :s_cap]
@@ -136,7 +166,8 @@ def flash_decode_accounting(q, k, v, total_len, rank, *, kvp: int = 1,
                             rr_block: int = 16, window=0,
                             block_s: int = 512, contiguous: bool = False,
                             slot_offset=0, prune: bool = True,
-                            kscale=None, vscale=None, **_ignored):
+                            kscale=None, vscale=None, block_tables=None,
+                            **_ignored):
     """Blocks/bytes the matching ``flash_decode`` call streams from HBM.
 
     Replays the kernel's pruning ``index_map`` (``prune_block_range`` — the
@@ -145,6 +176,13 @@ def flash_decode_accounting(q, k, v, total_len, rank, *, kvp: int = 1,
     the same block are one DMA on TPU, which is exactly how pruning turns
     masked blocks into elided reads.  ``prune=False`` reproduces the dense
     sweep (every block of every (b, h) pair).
+
+    Paged mode (``block_tables`` [B, max_pages]): ``k``/``v`` are pool
+    planes ``[n_pool, Kh, page_s, hsz]``; the replay walks the same logical
+    page ranges through the table — a request's pages are distinct physical
+    planes, so the distinct-fetch count (and the prune bound
+    ``<= ceil(valid_len/block_s) + 1`` per (b, h)) is unchanged by the
+    indirection, only ``block_s`` is pinned to the page size.
 
     Pure host-side arithmetic — no kernel launch, any argument set accepted
     by ``flash_decode`` works (extra kwargs are ignored), and ``q``/``k``/
@@ -157,11 +195,18 @@ def flash_decode_accounting(q, k, v, total_len, rank, *, kvp: int = 1,
       (+ dequant-scale bytes in int8 mode);
       ``block_s``, ``n_blocks`` — resolved kernel blocking.
     """
-    b, kh = k.shape[0], k.shape[1]
-    s_cap, hsz = k.shape[2], k.shape[3]
-    block_s = min(block_s, round_up(s_cap, 128))
-    s_pad = round_up(s_cap, block_s)
-    n_blocks = s_pad // block_s
+    paged = block_tables is not None
+    kh, hsz = k.shape[1], k.shape[3]
+    b = q.shape[0]
+    if paged:
+        block_s = k.shape[2]                       # page size is the block
+        n_blocks = np.shape(block_tables)[1]       # logical pages
+        s_cap = n_blocks * block_s
+    else:
+        s_cap = k.shape[2]
+        block_s = min(block_s, round_up(s_cap, 128))
+        s_pad = round_up(s_cap, block_s)
+        n_blocks = s_pad // block_s
 
     tl = np.broadcast_to(np.asarray(total_len, np.int32).reshape(-1), (b,))
     if prune:

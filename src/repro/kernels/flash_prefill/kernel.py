@@ -12,13 +12,18 @@ TPU mapping
 Masking semantics (shared with ref.py) are computed in-kernel from prefetched
 scalars only — no per-position mask array is read from HBM:
 
-  meta [2] int32 : (q_offset, window) — q_offset shifts the query positions
-                   (prefill continuation); window <= 0 disables the sliding-
-                   window mask and is a *runtime* scalar, so traced per-layer
-                   windows (gemma3 local/global scan) work.
+  meta [1] int32 : (window,) — window <= 0 disables the sliding-window mask
+                   and is a *runtime* scalar, so traced per-layer windows
+                   (gemma3 local/global scan) work.
   lens [B] int32 : per-request valid KV lengths (continuous-batching prefill
                    over right-padded prompts); kv positions >= lens[b] are
                    masked.  Uniform batches prefetch a broadcast scalar.
+  offs [B] int32 : *per-request* q_offset — the global position of query
+                   row 0 (prefill continuation).  Per-row offsets are what
+                   let the serving engine pack requests at different
+                   (offset, length) prefill progress into ONE ragged chunk
+                   call (docs/serving.md); uniform batches prefetch a
+                   broadcast scalar.
 
 ``causal`` is a static kernel parameter: True for decoder self-attention
 (key <= query), False for encoder-decoder cross attention (whisper), where
@@ -53,6 +58,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.utils import NEG_INF
 from repro.kernels.pruning import phys_block as _phys_block
+from repro.kernels.pruning import table_block as _table_block  # noqa: F401
 
 
 def prefill_block_range(qi, kv_len, q_offset, window, *, causal: bool,
@@ -79,15 +85,19 @@ def prefill_block_range(qi, kv_len, q_offset, window, *, causal: bool,
     return lo, jnp.maximum(hi - lo, 0)
 
 
-def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
-                    m_ref, l_ref, *, scale: float, causal: bool, blk_q: int,
-                    blk_k: int, g: int, hsz: int, s_true: int, prune: bool):
+def _prefill_kernel(meta_ref, len_ref, off_ref, *refs, scale: float,
+                    causal: bool, blk_q: int, blk_k: int, g: int, hsz: int,
+                    s_true: int, prune: bool, paged: bool):
+    if paged:
+        _tbl_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     bi = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     n_kblocks = pl.num_programs(3)
-    q_offset = meta_ref[0]
-    window = meta_ref[1]
+    q_offset = off_ref[bi]
+    window = meta_ref[0]
     kv_len = len_ref[bi]
 
     @pl.when(ki == 0)
@@ -156,41 +166,61 @@ def _prefill_kernel(meta_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
         o_ref[0, 0] = out.reshape(blk_q, g * hsz).astype(o_ref.dtype)
 
 
-def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
-                         blk_q: int, blk_k: int, s_true: int,
-                         prune: bool = True, interpret: bool = True):
+def flash_prefill_kernel(q, k, v, meta, lens, offs, *, scale: float,
+                         causal: bool, blk_q: int, blk_k: int, s_true: int,
+                         prune: bool = True, block_tables=None,
+                         interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
-    q [B, Kh, T_pad, G*hsz]; k, v [B, Kh, S_pad, hsz]; meta [2] int32
-    (q_offset, window); lens [B] int32 per-request valid KV lengths;
+    q [B, Kh, T_pad, G*hsz]; k, v [B, Kh, S_pad, hsz]; meta [1] int32
+    (window,); lens [B] int32 per-request valid KV lengths; offs [B] int32
+    per-request q_offset (ragged chunk packing);
     s_true: unpadded S (slots >= s_true are masked); prune: skip (don't
     mask) kv blocks that are causally/window/length-dead (bit-exact).
+
+    Paged mode (``block_tables`` [B, max_pages] int32, scalar-prefetched):
+    k/v are shared pool planes ``[n_pool, Kh, blk_k, hsz]``; grid step
+    ``ki`` streams physical page ``block_tables[b, logical]`` where
+    ``logical`` is the fixed layout's (possibly skip-clamped) kv-block id.
+    All masking runs on logical positions, so paged == fixed bit-exactly.
 
     Returns out [B, Kh, T_pad, G*hsz] in q.dtype.
     """
     b, kh, t, ghsz = q.shape
-    s, hsz = k.shape[2], k.shape[3]
+    hsz = k.shape[3]
     g = ghsz // hsz
-    assert t % blk_q == 0 and s % blk_k == 0
-    n_kblocks = s // blk_k
+    paged = block_tables is not None
+    if paged:
+        assert k.shape[2] == blk_k, (k.shape, blk_k)
+        n_kblocks = block_tables.shape[1]
+        s = n_kblocks * blk_k
+    else:
+        s = k.shape[2]
+        assert s % blk_k == 0
+        n_kblocks = s // blk_k
+    assert t % blk_q == 0
 
     grid = (b, kh, t // blk_q, n_kblocks)
     kernel = functools.partial(_prefill_kernel, scale=scale, causal=causal,
                                blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz,
-                               s_true=s_true, prune=prune)
+                               s_true=s_true, prune=prune, paged=paged)
 
-    def kv_idx(b, h, qi, ki, meta_ref, len_ref):
-        if not prune:
-            return (b, h, ki, 0)
-        lo, nb = prefill_block_range(qi, len_ref[b], meta_ref[0], meta_ref[1],
-                                     causal=causal, blk_q=blk_q, blk_k=blk_k,
-                                     s_true=s_true)
-        return (b, h, _phys_block(ki, lo, nb, n_kblocks), 0)
+    def kv_idx(b, h, qi, ki, meta_ref, len_ref, off_ref, *rest):
+        if prune:
+            lo, nb = prefill_block_range(
+                qi, len_ref[b], off_ref[b], meta_ref[0], causal=causal,
+                blk_q=blk_q, blk_k=blk_k, s_true=s_true)
+            lg = _phys_block(ki, lo, nb, n_kblocks)
+        else:
+            lg = ki
+        if paged:
+            return (rest[0][b, lg], h, 0, 0)
+        return (b, h, lg, 0)
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=4 if paged else 3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, blk_q, ghsz),
@@ -208,4 +238,5 @@ def flash_prefill_kernel(q, k, v, meta, lens, *, scale: float, causal: bool,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kh, t, ghsz), q.dtype),
         interpret=interpret,
-    )(meta, lens, q, k, v)
+    )(*((meta, lens, offs) + ((block_tables,) if paged else ())
+        + (q, k, v)))

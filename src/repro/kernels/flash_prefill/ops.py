@@ -20,7 +20,7 @@ from repro.utils import round_up
 def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
                   seq_lens=None, scale: float | None = None,
                   blk_q: int = 128, blk_k: int = 128, prune: bool = True,
-                  interpret: bool = True):
+                  block_tables=None, interpret: bool = True):
     """Full-sequence attention via the Pallas flash-prefill kernel.
 
     The kernel-backed sibling of ``models/attention.chunked_attention`` —
@@ -31,11 +31,16 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
       q: ``[B, T, Qh, hsz]`` queries; ``Qh % Kh == 0`` (GQA grouping).
       k, v: ``[B, S, Kh, hsz]`` keys/values.  ``S == T`` for causal
         self-attention; any ``S`` for cross attention (``causal=False``).
+        In paged mode (``block_tables`` given) the K/V are shared pool
+        planes ``[n_pool, Kh, page_k, hsz]`` instead — kernel layout, page
+        size ``page_k`` pinned as ``blk_k``.
       causal: static — mask ``kpos > qpos`` (decoder self-attention).
       window: sliding window (``<= 0`` disables).  May be a *traced* scalar
         (per-layer local/global windows under ``lax.scan``).
       q_offset: global position of query row 0 (prefill continuation); may
-        be traced.
+        be traced, and may be a *per-request* ``[B]`` vector — the ragged
+        chunk-packing contract that lets the serving engine pack prefills
+        at different (offset, length) progress into one call.
       seq_lens: optional ``[B]`` int32 per-request valid KV lengths
         (continuous-batching prefill over right-padded prompts); kv positions
         ``>= seq_lens[b]`` are masked.  ``None`` means all ``S`` positions
@@ -46,6 +51,13 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
         masking them (index_map clamp + ``pl.when``; bit-exact either way).
         Causal T = S sweeps ~the lower triangle of the (T/blk_q, S/blk_k)
         rectangle; ``flash_prefill_accounting`` reports the exact counts.
+      block_tables: optional ``[B, max_pages]`` int32 — paged KV: kv-block
+        ``i`` of request ``b`` streams from pool plane
+        ``block_tables[b, i]`` (scalar-prefetched indirection; composes
+        with the causal/window skip, bit-exact vs the fixed layout).
+        Requires ``seq_lens``: table entries beyond a request's allocation
+        point at the shared sink page, whose contents are arbitrary — only
+        the per-request length mask keeps them out of the softmax.
       interpret: run the kernel through the Pallas interpreter (any JAX
         backend) instead of compiling for TPU.
 
@@ -53,37 +65,52 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
       ``[B, T, Qh, hsz]`` attention output in ``q.dtype``.
     """
     b, t, qh, hsz = q.shape
-    s, kh = k.shape[1], k.shape[2]
+    paged = block_tables is not None
+    kh = k.shape[1] if paged else k.shape[2]
     assert qh % kh == 0
     g = qh // kh
     if scale is None:
         scale = float(hsz) ** -0.5
 
     blk_q = min(blk_q, round_up(t, 8))
-    blk_k = min(blk_k, round_up(s, 8))
-    t_pad, s_pad = round_up(t, blk_q), round_up(s, blk_k)
+    t_pad = round_up(t, blk_q)
 
     # [B,T,Kh,G,hsz] -> [B,Kh,T,G*hsz]
     qg = q.reshape(b, t, kh, g, hsz).transpose(0, 2, 1, 3, 4).reshape(
         b, kh, t, g * hsz)
-    kg = k.transpose(0, 2, 1, 3)
-    vg = v.transpose(0, 2, 1, 3)
     qg = jnp.pad(qg, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
-    kg = jnp.pad(kg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
-    vg = jnp.pad(vg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if paged:
+        # sink-page table entries hold arbitrary data; only the per-request
+        # length mask keeps them out of the reduction
+        assert seq_lens is not None, "paged flash_prefill requires seq_lens"
+        blk_k = k.shape[2]                    # page size is the kv block
+        s = np.shape(block_tables)[1] * blk_k
+        kg, vg = k, v                         # pool planes, kernel layout
+        tables = jnp.asarray(block_tables, jnp.int32)
+    else:
+        s = k.shape[1]
+        blk_k = min(blk_k, round_up(s, 8))
+        s_pad = round_up(s, blk_k)
+        kg = k.transpose(0, 2, 1, 3)
+        vg = v.transpose(0, 2, 1, 3)
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        tables = None
     # kv rows beyond the true S are masked in-kernel (s_true); pad q rows
     # produce well-defined garbage and are sliced away below.
 
-    meta = jnp.stack([jnp.asarray(q_offset, jnp.int32),
-                      jnp.asarray(window, jnp.int32)])
+    meta = jnp.asarray(window, jnp.int32).reshape(1)
+    offs = jnp.broadcast_to(
+        jnp.asarray(q_offset, jnp.int32).reshape(-1), (b,))
     if seq_lens is None:
         lens = jnp.full((b,), s, jnp.int32)
     else:
         lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
 
-    out = flash_prefill_kernel(qg, kg, vg, meta, lens, scale=scale,
+    out = flash_prefill_kernel(qg, kg, vg, meta, lens, offs, scale=scale,
                                causal=causal, blk_q=blk_q, blk_k=blk_k,
-                               s_true=s, prune=prune, interpret=interpret)
+                               s_true=s, prune=prune, block_tables=tables,
+                               interpret=interpret)
     out = out[:, :, :t].reshape(b, kh, t, g, hsz).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, t, qh, hsz)
 
@@ -91,34 +118,48 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=0, q_offset=0,
 def flash_prefill_accounting(q, k, v, *, causal: bool = True, window=0,
                              q_offset=0, seq_lens=None, blk_q: int = 128,
                              blk_k: int = 128, prune: bool = True,
-                             **_ignored):
+                             block_tables=None, **_ignored):
     """KV blocks/bytes the matching ``flash_prefill`` call streams from HBM.
 
     Replays the kernel's skip range (``prefill_block_range`` — the same
     function its K/V ``index_map``s clamp with) over the (B, Kh, T-blocks,
     S-blocks) grid and counts distinct block fetches (consecutive steps on
-    the same block are one DMA).  Pure host-side arithmetic; accepts any
-    ``flash_prefill`` argument set (extra kwargs are ignored).
+    the same block are one DMA).  ``q_offset`` may be per-request ([B]) —
+    the ragged-packing contract.  Paged mode (``block_tables``): ``k``/``v``
+    are pool planes; the replay walks the same logical kv-block ranges
+    through the table (distinct logical pages are distinct planes, so the
+    count is unchanged; ``blk_k`` pins to the page size).  Pure host-side
+    arithmetic; accepts any ``flash_prefill`` argument set (extra kwargs
+    are ignored).
 
     Returns ``{"blocks_visited", "blocks_total", "bytes_read",
     "bytes_total", "blk_q", "blk_k", "n_qblocks", "n_kblocks"}``.
     """
     b, t, _, hsz = q.shape
-    s, kh = k.shape[1], k.shape[2]
+    paged = block_tables is not None
+    if paged:
+        kh = k.shape[1]
+        blk_k = k.shape[2]
+        n_k = np.shape(block_tables)[1]
+        s = n_k * blk_k
+    else:
+        s, kh = k.shape[1], k.shape[2]
+        blk_k = min(blk_k, round_up(s, 8))
+        n_k = round_up(s, blk_k) // blk_k
     blk_q = min(blk_q, round_up(t, 8))
-    blk_k = min(blk_k, round_up(s, 8))
     n_q = round_up(t, blk_q) // blk_q
-    n_k = round_up(s, blk_k) // blk_k
 
     lens = np.broadcast_to(
         np.full((b,), s, np.int32) if seq_lens is None
         else np.asarray(seq_lens, np.int32).reshape(-1), (b,))
+    offs = np.broadcast_to(
+        np.asarray(q_offset, np.int32).reshape(-1), (b,))
     if prune:
         # prefill_block_range is elementwise jnp: one vectorized call over
         # the [b, n_q] grid instead of b*n_q eager dispatch loops
         _, nb = prefill_block_range(
             jnp.arange(n_q, dtype=jnp.int32)[None, :],
-            jnp.asarray(lens)[:, None], jnp.asarray(q_offset, jnp.int32),
+            jnp.asarray(lens)[:, None], jnp.asarray(offs)[:, None],
             jnp.asarray(window, jnp.int32), causal=causal,
             blk_q=blk_q, blk_k=blk_k, s_true=s)
         # a fully-skipped row still fetches one (clamped) block

@@ -20,3 +20,15 @@ def phys_block(step, lo, nb, n_blocks: int):
     be traced scalars; always in ``[0, n_blocks)`` even for empty spans."""
     last = jnp.maximum(lo + nb - 1, lo)
     return jnp.clip(jnp.minimum(lo + step, last), 0, n_blocks - 1)
+
+
+def table_block(step, lo, nb, n_blocks: int, table_row):
+    """Paged generalization of ``phys_block``: the *logical* page id walks
+    the clamped span exactly as in the fixed layout, then the scalar-
+    prefetched block-table row maps it to the physical pool page.  Pruned
+    grid steps re-reference the previous step's logical page, hence the
+    same table entry, hence the same physical page — so the DMA-elision
+    property survives the indirection unchanged.  ``table_row`` is one
+    request's ``[max_pages]`` table (a Pallas scalar-prefetch ref slice or
+    an array)."""
+    return table_row[phys_block(step, lo, nb, n_blocks)]

@@ -19,6 +19,10 @@ prefill), ``--sched-policy`` picks the admission order (fcfs | sjf), and
 ``--traffic poisson --arrival-rate R`` replays a synthetic Poisson arrival
 process (R requests per engine step on average) instead of submitting
 everything up front; ``--metrics`` prints the TTFT/TTL/queue-wait summary.
+``--paged-kv`` switches to the shared-pool paged KV cache (``--pool-blocks``
+sizes the pool): one global page pool + per-request block tables instead of
+worst-case per-slot reservations, so admission gates on the global free-page
+count — token streams stay bit-exact vs the fixed layout.
 """
 from __future__ import annotations
 
@@ -60,18 +64,24 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                fuse_append: bool | None = None,
                prune_blocks: bool | None = None,
                lm_head_w8: bool | None = None,
+               paged_kv: bool | None = None,
+               pool_blocks: int | None = None,
                chunk_tokens: int = 0, sched_policy: str = "fcfs",
                traffic: str = "batch", arrival_rate: float = 0.5,
                seed: int = 0, log=print):
     """Run ``n_requests`` synthetic prompts through the continuous-batching
     engine and report throughput.  Returns (finished ``Request`` list,
-    metrics summary dict).
+    metrics summary dict — with the engine's ``pool_stats()`` merged in).
 
     The ``*_backend`` arguments override the corresponding ``hx`` fields
     (``None`` keeps the ``HelixConfig`` defaults); see kernels/registry.py.
     ``chunk_tokens`` > 0 enables chunked prefill (scheduler path);
     ``traffic="poisson"`` staggers submissions over engine steps with
-    ``arrival_rate`` requests/step on average.
+    ``arrival_rate`` requests/step on average.  ``paged_kv`` switches the
+    KV cache to the shared-pool paged layout (``pool_blocks`` pages of
+    ``kvp * rr_block`` positions; default = the fixed layout's HBM), making
+    cache pressure a global admission signal — bit-exact token streams
+    either way (scripts/paged_smoke.py asserts this in CI).
     """
     cfg = get_config(arch)
     if reduced:
@@ -87,7 +97,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                                    ("matmul_backend", matmul_backend),
                                    ("fuse_append", fuse_append),
                                    ("prune_blocks", prune_blocks),
-                                   ("lm_head_w8", lm_head_w8)]
+                                   ("lm_head_w8", lm_head_w8),
+                                   ("paged_kv", paged_kv)]
                  if v is not None}
     if overrides:
         hx = dataclasses.replace(hx, **overrides)
@@ -110,7 +121,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                           hx=hx, chunk_tokens=chunk_tokens if chunked else None,
                           chunk_prefill_step=chunk_step,
                           tp_width=mesh.shape["model"],
-                          sched_policy=sched_policy)
+                          sched_policy=sched_policy,
+                          pool_blocks=pool_blocks)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
     pending = [Request(rid=i,
@@ -131,6 +143,7 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in finished)
     summary = engine.metrics.summary()
+    summary.update(engine.pool_stats())
     log(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.2f}s "
         f"({toks / max(dt, 1e-9):.1f} tok/s, {steps} engine steps)")
     return finished, summary
@@ -180,6 +193,14 @@ def main():
                     help="disable length/causality-aware K/V block pruning "
                          "in the Pallas attention kernels (dense masked "
                          "sweep; bit-exact either way)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="shared-pool paged KV cache: K/V in pool pages "
+                         "with per-request block tables; cache pressure "
+                         "becomes a global free-page admission signal "
+                         "(bit-exact vs the fixed per-slot layout)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged mode: total pool pages incl. the sink page "
+                         "(default: the same HBM the fixed layout reserves)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the kernel registry's per-family backend "
                          "availability matrix and exit")
@@ -199,6 +220,8 @@ def main():
         fuse_append=False if args.no_fuse_append else None,
         prune_blocks=False if args.no_prune_blocks else None,
         lm_head_w8=True if args.lm_head_w8 else None,
+        paged_kv=True if args.paged_kv else None,
+        pool_blocks=args.pool_blocks,
         chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
         traffic=args.traffic, arrival_rate=args.arrival_rate)
     if args.metrics:

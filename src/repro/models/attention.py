@@ -148,7 +148,10 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     side of flash_prefill's ragged continuous-batching contract.  For causal
     self-attention over right-padded prompts the extra mask only affects pad
     *query* rows (valid rows never see later positions), so passing it keeps
-    the valid rows bit-identical.
+    the valid rows bit-identical.  ``q_offset`` may be a per-request ``[B]``
+    vector (ragged chunk packing: every row attends at its own prefill
+    progress) — masking then runs per row, bit-identical per row to the
+    scalar-offset call.
     """
     b, t, qh, hsz = q.shape
     s, kh = k.shape[1], k.shape[2]
@@ -164,25 +167,39 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     vf = v.astype(jnp.float32)
     kpos = jnp.arange(s)
 
+    off = jnp.asarray(q_offset, jnp.int32)
+    ragged_off = off.ndim == 1                            # [B] per-request
+
     def one_chunk(ci, qi):
         qf = qi.astype(jnp.float32) * (hsz ** -0.5)       # [B,Kh,G,cq,hsz]
         scores = jnp.einsum("bkgtd,bskd->bkgts", qf, kf)  # [B,Kh,G,cq,S]
-        qpos = ci * cq + jnp.arange(cq) + q_offset
-        mask = jnp.ones((cq, s), bool)
-        if causal:
-            mask &= kpos[None, :] <= qpos[:, None]
         weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
                          t + s + 10)
-        mask &= kpos[None, :] > qpos[:, None] - weff
+        if ragged_off:
+            qpos = ci * cq + jnp.arange(cq)[None, :] + off[:, None]  # [B,cq]
+            mask = jnp.ones((b, cq, s), bool)
+            if causal:
+                mask &= kpos[None, None, :] <= qpos[..., None]
+            mask &= kpos[None, None, :] > qpos[..., None] - weff
+        else:
+            qpos = ci * cq + jnp.arange(cq) + off
+            mask = jnp.ones((cq, s), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            mask &= kpos[None, :] > qpos[:, None] - weff
+        per_row = ragged_off or seq_lens is not None
         if seq_lens is not None:
             lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
-            mask = mask[None] & (kpos[None, None, :] < lens[:, None, None])
+            if not ragged_off:
+                mask = jnp.broadcast_to(mask[None], (b, cq, s))
+            mask = mask & (kpos[None, None, :] < lens[:, None, None])
+        if per_row:
             mask = mask[:, None, None]                    # [B,1,1,cq,S]
         scores = jnp.where(mask, scores, NEG_INF)
         p = jax.nn.softmax(scores, axis=-1)
         # fully-masked rows (seq_lens[b] == 0) produce uniform p over -inf
         # scores; zero them so dead rows emit zeros, matching the kernel
-        if seq_lens is not None:
+        if per_row:
             p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
         return jnp.einsum("bkgts,bskd->bkgtd", p, vf).astype(q.dtype)
 
@@ -278,7 +295,7 @@ def prefill_attention(q, k, v, *, causal: bool = True, window=0,
 def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
                      kvp: int = 1, rr_block: int = 16, rank=0,
                      kscale=None, vscale=None, block_s: int = 512,
-                     prune: bool = True):
+                     prune: bool = True, block_tables=None):
     """Single-shard decode-shape attention with backend selection.
 
     The unsharded sibling of core/helix.py's per-rank local attend —
@@ -289,15 +306,29 @@ def decode_attention(q, k, v, total_len, *, window=0, backend: str = "ref",
 
       q [B, Qh, hsz]; k, v [B, Kh, S, hsz]; total_len scalar or [B] int32.
 
+    ``block_tables`` ([B, max_pages] int32) switches to the shared-pool
+    paged layout: k/v are pool planes ``[n_pool, Kh, page_s, hsz]`` and the
+    kernel streams each request's pages through the table (the ref backend
+    gathers them into the dense equivalent first) — bit-exact vs the fixed
+    layout at ``block_s == page_s``.
+
     Returns (out [B, Qh, hsz], lse [B, Qh] f32).
     """
     from repro.kernels.flash_decode.ops import flash_decode
     from repro.kernels.flash_decode.ref import flash_decode_ref
     if backend == "ref":
+        if block_tables is not None:
+            from repro.core.kvcache import gather_pages
+            k = gather_pages(k, block_tables)
+            v = gather_pages(v, block_tables)
+            if kscale is not None:
+                kscale = gather_pages(kscale, block_tables)
+                vscale = gather_pages(vscale, block_tables)
         return flash_decode_ref(q, k, v, total_len, rank, kvp=kvp,
                                 rr_block=rr_block, window=window,
                                 kscale=kscale, vscale=vscale)
     return flash_decode(q, k, v, total_len, rank, kvp=kvp, rr_block=rr_block,
                         window=window, block_s=block_s,
                         kscale=kscale, vscale=vscale, prune=prune,
+                        block_tables=block_tables,
                         interpret=backend != "pallas")

@@ -80,7 +80,8 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                      fuse_append: bool | None = None,
                      prune_blocks: bool | None = None,
                      matmul_backend: str | None = None,
-                     lm_head_w8: bool | None = None):
+                     lm_head_w8: bool | None = None,
+                     paged_kv: bool | None = None):
     """Build one autoregressive Helix decode step for ``cfg`` on ``mesh``.
 
     Returns ``serve_step(params, state, tokens) -> (next_tokens, new_state)``
@@ -103,6 +104,11 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         family backend for the quantized lm_head matmul.
       lm_head_w8: overrides ``hx.lm_head_w8`` — int8-quantize the lm_head
         weights and route the logits matmul through w8a16_matmul.
+      paged_kv: overrides ``hx.paged_kv`` — shared-pool paged KV cache: the
+        state carries pool planes ``[L, n_blocks, Kh, block_s, hsz]`` plus a
+        ``block_tables`` [B, max_pages] leaf instead of fixed per-slot rows
+        (core/kvcache.py paged layout; bit-exact vs fixed at the same
+        ``attn_block_s`` partition).
     """
     import dataclasses
     import math
@@ -115,7 +121,8 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                        ("fuse_append", fuse_append),
                        ("prune_blocks", prune_blocks),
                        ("matmul_backend", matmul_backend),
-                       ("lm_head_w8", lm_head_w8)):
+                       ("lm_head_w8", lm_head_w8),
+                       ("paged_kv", paged_kv)):
         if val is not None and val != getattr(hx, field):
             overrides[field] = val
     if overrides:
@@ -164,8 +171,10 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             wo = jnp.pad(wo, ((0, o_dim - wo.shape[0]), (0, 0)))
         return cst(out @ wo, None, None)
 
-    def attn_phase(lp, h, kc, vc, ks, vs, tl_attn, win):
-        """Helix attention phase for one layer.  h [B,H] (replicated)."""
+    def attn_phase(lp, h, kc, vc, ks, vs, tl_attn, win, tables):
+        """Helix attention phase for one layer.  h [B,H] (replicated).
+        ``tables`` is the paged pool's [B, max_pages] block table (None in
+        the fixed-cap layout); kc/vc/ks/vs are then pool planes."""
         b = h.shape[0]
         # qkv_shard (§Perf, beyond-paper): weights over 'model', all-gather
         # the tiny activations — vs the paper's replicated per-rank QKV.
@@ -182,6 +191,7 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             q = apply_rope(q[:, None], pos, cfg.rope_theta)[:, 0]
             kn = apply_rope(kn[:, None], pos, cfg.rope_theta)[:, 0]
         chunks = hopb_chunks if b % hopb_chunks == 0 else 1
+        paged = tables is not None
         # Fused KV-append epilogue (§Perf, roadmap): on the Pallas backends
         # the decode kernel writes kn/vn into the cache itself, skipping the
         # separate append pass (one cache HBM round-trip per layer per
@@ -189,28 +199,30 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         # in-kernel, and with block pruning on there is no cache-slice
         # conflict left to fall back over.
         if fuse_append_applicable(hx, kvp, win, tl_attn, kc.shape[2],
-                                  quant=kv8):
+                                  quant=kv8, paged=paged):
             if kv8:
                 out, kc, vc, ks, vs = helix_attention(
                     mesh, hx, q, kc, vc, tl_attn, window=win,
                     hopb_chunks=chunks, kscale=ks, vscale=vs,
-                    k_new=kn, v_new=vn)
+                    k_new=kn, v_new=vn, block_tables=tables)
             else:
                 out, kc, vc = helix_attention(
                     mesh, hx, q, kc, vc, tl_attn, window=win,
-                    hopb_chunks=chunks, k_new=kn, v_new=vn)
+                    hopb_chunks=chunks, k_new=kn, v_new=vn,
+                    block_tables=tables)
         else:
             if kv8:
                 kc, vc, ks, vs = append_kv_quant(
                     kc, vc, ks, vs, kn, vn, tl_attn, kvp=kvp,
-                    rr_block=hx.rr_block)
+                    rr_block=hx.rr_block, block_tables=tables)
             else:
                 kc, vc = append_kv(kc, vc, kn, vn, tl_attn, kvp=kvp,
-                                   rr_block=hx.rr_block)
+                                   rr_block=hx.rr_block, block_tables=tables)
             out = helix_attention(mesh, hx, q, kc, vc, tl_attn, window=win,
                                   hopb_chunks=chunks,
                                   kscale=ks if kv8 else None,
-                                  vscale=vs if kv8 else None)
+                                  vscale=vs if kv8 else None,
+                                  block_tables=tables)
         # post-attention projection: TP = N over the combined (tpa, kvp)
         # layout; the All-Reduce the paper describes is emitted by GSPMD from
         # wo's input-dim sharding.
@@ -260,19 +272,19 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         return delta
 
     def layer_fn(x, lp, win, kc, vc, ks, vs, conv, sstate, xk, xv, tl_attn,
-                 s_enc):
+                 s_enc, tables):
         h = rms_norm(x, lp["ln1"])
         new_caches: dict[str, Any] = {}
         if cfg.has_attention and cfg.has_ssm:          # hybrid (hymba)
             a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
-                                               tl_attn, win)
+                                               tl_attn, win, tables)
             s_out, new_s = ssm_phase(lp["ssm"], h, conv, sstate)
             x = x + 0.5 * (a_out + s_out)
             new_caches.update(kcache=kc, vcache=vc, ssm_conv=new_s.conv,
                               ssm_state=new_s.ssm)
         elif cfg.has_attention:
             a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
-                                               tl_attn, win)
+                                               tl_attn, win, tables)
             x = x + a_out
             new_caches.update(kcache=kc, vcache=vc)
         else:                                          # pure ssm (mamba2)
@@ -295,6 +307,11 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         """tokens [B] int32 -> (next_tokens [B], new state)."""
         tl = state["total_len"]
         tl_attn = tl + 1                                # includes new token
+        # paged pool: the [B, max_pages] block table rides in the state and
+        # is shared by every layer (pool planes are per-layer, tables per
+        # request); it passes through the step unchanged — the host-side
+        # engine/scheduler owns page allocation.
+        tables = state.get("block_tables") if hx.paged_kv else None
         x = params["embed"][tokens]                     # [B, H]
         x = cst(x, None, None)
         if not cfg.use_rope:
@@ -327,7 +344,8 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                 leaf_i = jax.tree.map(lambda a: a[i], xs_p)
                 lp, kc, vc, ks, vs, conv, sstate, xk, xv = leaf_i
                 xcur, nc = layer_fn(xcur, lp, win_static[i], kc, vc, ks, vs,
-                                    conv, sstate, xk, xv, tl_attn, s_enc)
+                                    conv, sstate, xk, xv, tl_attn, s_enc,
+                                    tables)
                 outs.append(nc)
             stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
             return xcur, stacked

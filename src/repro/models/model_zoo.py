@@ -180,8 +180,12 @@ def make_chunk_prefill_step(cfg: ArchConfig, mesh: Mesh | None,
     filled, and ``next_tokens`` the ``[B, C]`` greedy next token after each
     chunk position (row ``t - 1 - q_offset`` of the final chunk is the
     request's first generated token, bit-identical to the one-shot
-    ``prefill_step`` argmax).  Jit-able; ``q_offset`` may be traced so every
-    chunk of a prefill shares one trace.  Only
+    ``prefill_step`` argmax).  ``q_offset`` may be a scalar or a *per-row*
+    ``[B]`` vector — ragged chunk packing: each request's chunk lands at
+    its own prefill progress (per-row rope positions, buffer writes and
+    flash_prefill masking), so requests at different (offset, length) pack
+    into one call bit-exactly.  Jit-able; ``q_offset`` may be traced so
+    every chunk of a prefill shares one trace.  Only
     ``chunked_prefill_supported`` archs are accepted."""
     assert chunked_prefill_supported(cfg), \
         f"chunked prefill unsupported for {cfg.name} ({cfg.family})"

@@ -142,17 +142,27 @@ def _attn_block(cfg: ArchConfig, ap, h, *, layout: HeadLayout, window,
         wv = apply_kv_layout(ap["wv"], layout, hsz)
         k = policy(h @ wk, "dp", None, "tp").reshape(b, t, layout.kv_pad, hsz)
         v = policy(h @ wv, "dp", None, "tp").reshape(b, t, layout.kv_pad, hsz)
+        off = jnp.asarray(q_offset, jnp.int32)
+        ragged = off.ndim == 1                 # [B] per-request offsets
         if cfg.use_rope:
-            pos = jnp.arange(t) + q_offset
-            q = apply_rope(q, pos[None, :], cfg.rope_theta)
-            k = apply_rope(k, pos[None, :], cfg.rope_theta)
+            pos = (off[:, None] + jnp.arange(t)[None, :] if ragged
+                   else (jnp.arange(t) + off)[None, :])
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
         if kv_buffer is not None:
             kbuf, vbuf = kv_buffer
-            off = jnp.asarray(q_offset, jnp.int32)
-            kbuf = jax.lax.dynamic_update_slice(
-                kbuf, k.astype(kbuf.dtype), (0, off, 0, 0))
-            vbuf = jax.lax.dynamic_update_slice(
-                vbuf, v.astype(vbuf.dtype), (0, off, 0, 0))
+            if ragged:
+                # ragged chunk packing: every request writes its chunk rows
+                # at its own prefill progress
+                upd = jax.vmap(lambda bu, nu, o: jax.lax.dynamic_update_slice(
+                    bu, nu, (o, 0, 0)))
+                kbuf = upd(kbuf, k.astype(kbuf.dtype), off)
+                vbuf = upd(vbuf, v.astype(vbuf.dtype), off)
+            else:
+                kbuf = jax.lax.dynamic_update_slice(
+                    kbuf, k.astype(kbuf.dtype), (0, off, 0, 0))
+                vbuf = jax.lax.dynamic_update_slice(
+                    vbuf, v.astype(vbuf.dtype), (0, off, 0, 0))
             k, v = kbuf, vbuf
     else:
         k, v = kv_override                     # cross-attn: precomputed enc KV
@@ -310,8 +320,13 @@ def forward(cfg: ArchConfig, params, tokens, *, policy=NO_POLICY,
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, p:]], axis=1)
     if not cfg.use_rope and not cfg.is_encdec:
         from repro.models.layers import sinusoidal_at
-        pos = (jnp.arange(t) + q_offset).astype(jnp.float32)
-        x = x + sinusoidal_at(pos, cfg.d_model)[None].astype(x.dtype)
+        off = jnp.asarray(q_offset, jnp.int32)
+        if off.ndim == 1:                      # ragged per-request offsets
+            pos = (off[:, None] + jnp.arange(t)[None, :]).astype(jnp.float32)
+            x = x + sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+        else:
+            pos = (jnp.arange(t) + off).astype(jnp.float32)
+            x = x + sinusoidal_at(pos, cfg.d_model)[None].astype(x.dtype)
 
     enc_out = None
     if cfg.is_encdec:

@@ -35,10 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.kvcache import (cache_capacity, init_decode_state,
+from repro.core.kvcache import (cache_capacity, cache_to_pages,
+                                init_decode_state, page_positions,
                                 quantize_decode_state)
 from repro.core.sharding import HelixConfig
 from repro.serving.metrics import EngineMetrics
+from repro.serving.pool import BlockAllocator
 from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
                                      Request, Scheduler)
 
@@ -66,6 +68,19 @@ class DecodeEngine:
     ``tp_width`` must match its mesh's 'model' axis size (it shapes the
     carry buffers' padded GQA head count); ``clock`` is the metrics clock
     (injectable for deterministic tests).
+
+    ``hx.paged_kv`` switches the decode state to the shared-pool paged
+    layout (serving/pool.py, docs/serving.md): K/V pool planes + a
+    ``block_tables`` state leaf, a ``BlockAllocator`` owning page
+    assignment, and the scheduler consulting the *global* free-page count
+    for admission/growth/retirement instead of the per-slot cap.
+    ``pool_blocks`` sizes the pool (pages of ``kvp * rr_block`` positions,
+    including the reserved sink page 0); the default matches the HBM the
+    fixed layout would reserve.  ``max_pages`` caps one request's block
+    table (default: the whole pool; cap it when serving with the ``ref``
+    backend or pruning off, whose per-request cost scales with the table
+    width).  Token streams are bit-exact vs the fixed layout
+    (tests/serving/test_paged_engine.py).
     """
 
     def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
@@ -75,7 +90,9 @@ class DecodeEngine:
                  chunk_tokens: int | None = None,
                  chunk_prefill_step: Callable | None = None,
                  tp_width: int = 1,
-                 sched_policy: str = "fcfs", clock=time.monotonic):
+                 sched_policy: str = "fcfs", clock=time.monotonic,
+                 pool_blocks: int | None = None,
+                 max_pages: int | None = None):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -103,9 +120,33 @@ class DecodeEngine:
         self.cap = cache_capacity(max_seq, kvp, rr_block)
         self.kvp, self.rr = kvp, rr_block
         self.kv8 = hx is not None and hx.kv_cache_bits == 8
-        self.state = init_decode_state(cfg, max_batch, self.cap, kvp,
-                                       rr_block, dtype=dtype,
-                                       kv_bits=8 if self.kv8 else 16)
+        # shared-pool paged KV cache (hx.paged_kv, serving/pool.py): K/V in
+        # pool planes + per-slot block-table rows; ``pool_blocks`` sizes the
+        # pool (default: the same HBM the fixed layout would reserve, plus
+        # the sink page 0 that idle rows' appends land in)
+        self.paged = hx is not None and hx.paged_kv
+        self.block_s = page_positions(kvp, rr_block)
+        if self.paged:
+            if not pool_blocks:
+                pool_blocks = max_batch * (self.cap // self.block_s) + 1
+            self.pool_blocks = pool_blocks
+            self.pool = BlockAllocator(pool_blocks, self.block_s)
+            # max_pages caps ONE request's table width (and so its logical
+            # capacity).  Default: the whole pool — maximum flexibility,
+            # but note the dense-sweep cost scales with it on the ref
+            # backend (gather_pages materializes max_pages*block_s
+            # positions per request) and on Pallas with pruning off; the
+            # default Pallas+prune path only ever visits valid pages.
+            self.max_pages = min(max_pages or self.pool.capacity,
+                                 self.pool.capacity)
+        else:
+            self.pool = None
+            self.pool_blocks = self.max_pages = 0
+        self.state = init_decode_state(
+            cfg, max_batch, self.cap, kvp, rr_block, dtype=dtype,
+            kv_bits=8 if self.kv8 else 16,
+            pool_blocks=self.pool_blocks if self.paged else 0,
+            max_pages=self.max_pages)
         # per-request lengths: [B]; empty slots keep 0
         self.state["total_len"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: list[Request | None] = [None] * max_batch
@@ -121,9 +162,11 @@ class DecodeEngine:
                            if chunk_prefill_step is not None else None)
         self.tp_width = tp_width
         self.sched = Scheduler(max_batch=max_batch, cap=self.cap,
-                               policy=sched_policy)
+                               policy=sched_policy, pool=self.pool,
+                               max_pages=self.max_pages)
         self.metrics = EngineMetrics(clock=clock)
         self._admission_retired: list[Request] = []
+        self._frag_samples: list[float] = []
 
     # ------------------------------------------------------------- requests
     def submit(self, req: Request) -> None:
@@ -174,6 +217,12 @@ class DecodeEngine:
                 self.slots[slot] = None
                 self.state["total_len"] = \
                     self.state["total_len"].at[slot].set(0)
+                if self.paged:
+                    # pages go back to the free list copy-free
+                    # (sched.preempt -> release -> pool.free); park the row
+                    # on the sink page
+                    self.state["block_tables"] = \
+                        self.state["block_tables"].at[slot].set(0)
                 self.sched.preempt(slot, req)
                 self.metrics.on_preempt(rid)
                 return True
@@ -206,6 +255,9 @@ class DecodeEngine:
                  for field, family in registry.FAMILY_FIELDS.items()]
         parts.append(f"fuse_append={self.hx.fuse_append}")
         parts.append(f"prune_blocks={self.hx.prune_blocks}")
+        if self.paged:
+            parts.append(f"paged_kv=True pool_blocks={self.pool_blocks} "
+                         f"block_s={self.block_s}")
         if self.hx.lm_head_w8:
             parts.append("lm_head_w8=True")
         if self.chunk_tokens:
@@ -235,39 +287,63 @@ class DecodeEngine:
         return retired
 
     def _prefill_chunk(self) -> list[Request]:
-        """Advance ONE packed group of same-progress prefills by one chunk.
+        """Advance ONE packed group of prefills by one chunk.
 
-        Groups share (offset, total length) so the packed call is bit-exact
-        with per-request calls (batch rows are independent); the group
-        containing the oldest prefilling request goes first."""
+        Ragged packing: requests at *different* (offset, length) prefill
+        progress pack into one chunk call — flash_prefill takes per-row
+        ``q_offset`` and each request writes its chunk at its own buffer
+        offset, so the packed call is bit-exact with per-request calls
+        (batch rows are independent; carry buffers are zero-padded to the
+        group's longest prompt, and those pad rows sit at positions every
+        causal query masks).  The only shared dimension is the chunk width
+        ``c`` (the token array must be rectangular), so the group is
+        "every prefilling request with the same remaining-clamped chunk
+        width as the oldest one"; the group containing the oldest
+        prefilling request goes first."""
         pre = [(slot, r) for slot, r in enumerate(self.slots)
                if r is not None and r.state == PREFILL
                and r.prefill_tokens is not None]
         if not pre:
             return []
+
+        def width(r: Request) -> int:
+            return min(self.chunk_tokens,
+                       len(r.prefill_tokens) - r.prefill_pos)
+
         # oldest admission first (admit_seq), NOT lowest slot index — a
         # freed low slot must not let fresh admissions starve an in-flight
         # prefill parked in a higher slot
         first = min(pre, key=lambda sr: sr[1].admit_seq)[1]
-        key = (first.prefill_pos, len(first.prefill_tokens))
-        group = [(s, r) for s, r in pre
-                 if (r.prefill_pos, len(r.prefill_tokens)) == key]
-        pos, t = key
-        c = min(self.chunk_tokens, t - pos)
+        c = width(first)
+        group = [(s, r) for s, r in pre if width(r) == c]
         tokens = jnp.asarray(
-            np.stack([r.prefill_tokens[pos:pos + c] for _, r in group]),
-            jnp.int32)
-        bufs = jax.tree.map(lambda *a: jnp.concatenate(a, axis=1),
-                            *[r.buffers for _, r in group])
-        next_toks, bufs = self.chunk_step(self.params, tokens, bufs,
-                                          jnp.asarray(pos, jnp.int32))
-        done = pos + c >= t
+            np.stack([r.prefill_tokens[r.prefill_pos:r.prefill_pos + c]
+                      for _, r in group]), jnp.int32)
+        tmax = max(len(r.prefill_tokens) for _, r in group)
+
+        def padbuf(a):
+            pad = tmax - a.shape[2]
+            if pad == 0:
+                return a
+            width_ = [(0, 0)] * a.ndim
+            width_[2] = (0, pad)
+            return jnp.pad(a, width_)
+
+        bufs = jax.tree.map(
+            lambda *leaves: jnp.concatenate([padbuf(a) for a in leaves],
+                                            axis=1),
+            *[r.buffers for _, r in group])
+        offs = jnp.asarray([r.prefill_pos for _, r in group], jnp.int32)
+        next_toks, bufs = self.chunk_step(self.params, tokens, bufs, offs)
         finished = []
-        toks_np = np.asarray(next_toks) if done else None
+        done = [r.prefill_pos + c >= len(r.prefill_tokens)
+                for _, r in group]
+        toks_np = np.asarray(next_toks) if any(done) else None
         for i, (slot, req) in enumerate(group):
-            req.buffers = jax.tree.map(lambda a: a[:, i:i + 1], bufs)
-            req.prefill_pos = pos + c
-            if done:
+            t_i = len(req.prefill_tokens)
+            req.buffers = jax.tree.map(lambda a: a[:, i:i + 1, :t_i], bufs)
+            req.prefill_pos += c
+            if done[i]:
                 finished += self._finish_prefill(req, slot,
                                                  int(toks_np[i, c - 1]))
         return finished
@@ -283,14 +359,14 @@ class DecodeEngine:
                                           kvp=self.kvp)
         req.buffers = None
         req.prefill_tokens = None
-        self._scatter_state(pstate, slot, t)
+        self._scatter_state(pstate, slot, t, req)
         return self._commit_first_token(req, slot, first_token)
 
     def _oneshot_prefill(self, req: Request, slot: int) -> list[Request]:
         toks_list = req.resume_tokens()
         toks = jnp.asarray(toks_list, jnp.int32)[None, :]
         last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
-        self._scatter_state(pstate, slot, len(toks_list))
+        self._scatter_state(pstate, slot, len(toks_list), req)
         nxt = int(jnp.argmax(last_logits[0, :self.cfg.vocab]))
         return self._commit_first_token(req, slot, nxt)
 
@@ -305,17 +381,43 @@ class DecodeEngine:
             return [self._retire(req, slot, "eos")]
         if len(req.out_tokens) >= req.max_new_tokens:
             return [self._retire(req, slot, "max_tokens")]
-        if self.sched.at_capacity(slot):
-            return [self._retire(req, slot, "capacity")]
-        return []
+        r = self._grow_or_retire(req, slot)
+        return [r] if r is not None else []
+
+    def _grow_or_retire(self, req: Request, slot: int) -> Request | None:
+        """Reserve what the next decode token needs through the capacity
+        oracle (``Scheduler.grow_for_next_token``): fixed layout — nothing,
+        until ``cap``; paged — the next page when a boundary is crossed,
+        mirrored into the device block table.  Returns the retired request
+        when growth is impossible (``finish_reason="capacity"``)."""
+        grown = self.sched.grow_for_next_token(slot)
+        if grown is None:
+            return self._retire(req, slot, "capacity")
+        if grown:
+            self._mirror_table(slot)
+        return None
+
+    def _mirror_table(self, slot: int) -> None:
+        """Write ``slot``'s page list into the device block-table row
+        (unused tail entries point at the sink page 0)."""
+        phys = self.pool.pages(self.slots[slot].rid)
+        row = np.zeros((self.max_pages,), np.int32)
+        row[:len(phys)] = phys
+        self.state["block_tables"] = \
+            self.state["block_tables"].at[slot].set(jnp.asarray(row))
 
     def _scatter_state(self, pstate: dict[str, Any], slot: int,
-                       t: int) -> None:
+                       t: int, req: Request) -> None:
         """Scatter a single-request prefill state into ``slot`` (copying
         the common round-robin prefix of every rank's local slots; int8
         engines quantize the fp prefill cache per slot row —
-        ``quantize_decode_state`` — matching the decode append formula)."""
-        if self.kv8 and "kcache" in pstate:
+        ``quantize_decode_state`` — matching the decode append formula).
+        Paged engines instead split the round-robin cache into pages
+        (``cache_to_pages``) and write them at the physical pool planes the
+        allocator granted at admission, then install the block-table row."""
+        if self.paged and "kcache" in pstate:
+            self._scatter_paged(pstate, slot, t, req)
+        elif self.kv8 and "kcache" in pstate:
             fp_slot = {}
             for key in ("kcache", "vcache"):
                 dst = jnp.zeros(
@@ -342,6 +444,36 @@ class DecodeEngine:
                 self.state[key] = self.state[key].at[:, slot].set(
                     pstate[key][:, 0])
         self.state["total_len"] = self.state["total_len"].at[slot].set(t)
+
+    def _scatter_paged(self, pstate: dict[str, Any], slot: int,
+                       t: int, req: Request) -> None:
+        """Paged half of ``_scatter_state``: prefill cache -> pool pages.
+
+        The request's round-robin cache splits into page stacks
+        (``cache_to_pages`` — pages hold ``block_s`` consecutive positions)
+        written at the physical planes granted at admission.  Pages granted
+        beyond the prefill extent stay untouched: any stale rows they hold
+        sit at positions >= t, which every backend masks.  int8 engines
+        quantize pagewise with the decode-append formula, exactly like the
+        fixed path."""
+        phys = self.pool.pages(req.rid)
+        pages = {key: cache_to_pages(pstate[key][:, 0], self.kvp,
+                                     self.block_s)
+                 for key in ("kcache", "vcache")}
+        n = min(pages["kcache"].shape[1], len(phys))
+        idx = jnp.asarray(phys[:n], jnp.int32)
+        if self.kv8:
+            pages = quantize_decode_state(
+                {key: pages[key][:, :n].astype(jnp.float32)
+                 for key in ("kcache", "vcache")})
+            for key in ("kcache", "vcache", "kscale", "vscale"):
+                self.state[key] = self.state[key].at[:, idx].set(pages[key])
+        else:
+            for key in ("kcache", "vcache"):
+                self.state[key] = self.state[key].at[:, idx].set(
+                    pages[key][:, :n].astype(self.state[key].dtype))
+        self._mirror_table(slot)
+        # (_scatter_state's shared tail installs total_len and ssm leaves)
 
     def _decode_step(self) -> list[Request]:
         """One decode step for every DECODE slot; returns retirements."""
@@ -376,9 +508,44 @@ class DecodeEngine:
                 finished.append(self._retire(req, i, "eos"))
             elif len(req.out_tokens) >= req.max_new_tokens:
                 finished.append(self._retire(req, i, "max_tokens"))
-            elif self.sched.at_capacity(i):
-                finished.append(self._retire(req, i, "capacity"))
+            else:
+                r = self._grow_or_retire(req, i)
+                if r is not None:
+                    finished.append(r)
+        if self.paged:
+            self._sample_pool()
         return finished
+
+    def _sample_pool(self) -> None:
+        """Record one pool-health sample (occupancy / internal
+        fragmentation of allocated pages) for ``pool_stats``."""
+        used = self.pool.used_count
+        if used == 0:
+            return
+        committed = sum(self.sched.slot_len)
+        self._frag_samples.append(
+            1.0 - committed / (used * self.block_s))
+
+    def pool_stats(self) -> dict[str, float]:
+        """Paged-pool health for the serving bench: peak occupancy (peak
+        pages in use / allocatable pages), mean internal fragmentation of
+        allocated pages (1 - committed/allocated slots, sampled each decode
+        step), and the retirement count with ``finish_reason="capacity"``.
+        Fixed-cap engines report zeros for the pool occupancy/fragmentation
+        fields; ``capacity_retired`` is the real count on both layouts."""
+        cap_retired = sum(
+            1 for m in self.metrics.requests.values()
+            if getattr(m, "finish_reason", None) == "capacity")
+        if not self.paged:
+            return {"paged_kv": False, "pool_occupancy_peak": 0.0,
+                    "pool_frag_mean": 0.0, "capacity_retired": cap_retired}
+        frag = (float(np.mean(self._frag_samples))
+                if self._frag_samples else 0.0)
+        return {"paged_kv": True,
+                "pool_occupancy_peak":
+                    self.pool.peak_in_use / max(self.pool.capacity, 1),
+                "pool_frag_mean": frag,
+                "capacity_retired": cap_retired}
 
     def _retire(self, req: Request, slot: int, reason: str) -> Request:
         req.done = True
@@ -387,6 +554,10 @@ class DecodeEngine:
         self.slots[slot] = None
         self.sched.release(slot)
         self.state["total_len"] = self.state["total_len"].at[slot].set(0)
+        if self.paged:
+            # park the freed row on the sink page (all-zero table row)
+            self.state["block_tables"] = \
+                self.state["block_tables"].at[slot].set(0)
         self.metrics.on_finish(req.rid, reason)
         return req
 

@@ -1,0 +1,129 @@
+"""Shared-pool paged KV cache: the block (page) allocator.
+
+The paper's premise is that DRAM reads for long KV histories cap interactive
+decode — yet a fixed per-slot cache (`core/kvcache.cache_capacity`) reserves
+worst-case HBM for *every* slot, so one multi-million-token request's
+capacity is multiplied by ``max_batch`` whether or not the other slots need
+it.  The paged pool replaces that with one shared plane of fixed-size
+**pages** plus a per-request block table:
+
+  * K/V live in pool planes ``[L, n_blocks, Kh, block_s, hsz]`` — page ``p``
+    of a request holds its global positions ``[i*block_s, (i+1)*block_s)``
+    for logical page index ``i`` (core/kvcache.py documents the layout and
+    its KVP sharding; the Pallas kernels index the physical page through a
+    scalar-prefetched ``[B, max_pages]`` table).
+  * ``BlockAllocator`` (this module) owns which physical page belongs to
+    which request: pure python, jax-free, so its invariants are
+    property-testable (tests/serving/test_pool_props.py) and the scheduler
+    can consult the **global** free-page count for admission instead of the
+    per-slot capacity gate.
+
+Page 0 is reserved as the *sink* page: idle engine slots keep zeroed block
+tables, so the decode step's unconditional per-row KV append lands in page 0
+instead of corrupting a live request's page.  The allocator therefore hands
+out pages ``1 .. n_blocks-1`` only.
+
+Preemption releases a request's pages **copy-free**: the pages go back on
+the free list and the request re-prefills on resume (the engine already
+recomputes preempted context — serving/engine.py).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+
+def pages_for(length: int, block_s: int) -> int:
+    """Pages needed to hold ``length`` committed cache positions."""
+    return -(-max(length, 0) // block_s)
+
+
+class BlockAllocator:
+    """Free-list allocator for the shared KV page pool (pure python).
+
+    ``n_blocks`` counts *all* pool planes including the reserved sink page 0;
+    ``capacity`` (= ``n_blocks - 1``) pages are allocatable.  Pages are
+    handed out in FIFO free-list order — deterministic, so engine runs
+    replay exactly.  Per-request page lists keep allocation order, i.e.
+    ``pages(rid)[i]`` is the physical page of logical page ``i``.
+    """
+
+    SINK = 0                              # reserved idle-row append target
+
+    def __init__(self, n_blocks: int, block_s: int):
+        assert n_blocks >= 2, "pool needs the sink page plus >= 1 real page"
+        assert block_s > 0
+        self.n_blocks = n_blocks
+        self.block_s = block_s
+        self._free: deque[int] = deque(range(1, n_blocks))
+        self._pages: dict[int, list[int]] = {}
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def capacity(self) -> int:
+        """Allocatable page count (pool minus the reserved sink page)."""
+        return self.n_blocks - 1
+
+    @property
+    def free_count(self) -> int:
+        """Pages currently on the free list."""
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        """Pages currently owned by requests."""
+        return self.capacity - len(self._free)
+
+    def pages(self, rid: int) -> list[int]:
+        """Physical pages owned by ``rid`` in logical-page order."""
+        return self._pages.get(rid, [])
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed for ``length`` positions at this pool's page size."""
+        return pages_for(length, self.block_s)
+
+    # ---------------------------------------------------------- mutation
+    def alloc(self, rid: int, n: int) -> list[int] | None:
+        """Grant ``n`` fresh pages to (new) request ``rid``.
+
+        Returns the page list, or None (allocator untouched) when fewer
+        than ``n`` pages are free.  ``rid`` must not already hold pages."""
+        assert rid not in self._pages, f"rid {rid} already holds pages"
+        if n > len(self._free):
+            return None
+        got = [self._free.popleft() for _ in range(n)]
+        self._pages[rid] = got
+        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        return list(got)
+
+    def extend(self, rid: int, n: int) -> list[int] | None:
+        """Grant ``n`` more pages to ``rid`` (decode growth / chunked-prefill
+        extension).  Returns only the *new* pages, or None (allocator
+        untouched) when fewer than ``n`` are free."""
+        assert rid in self._pages, f"rid {rid} holds no pages"
+        if n > len(self._free):
+            return None
+        got = [self._free.popleft() for _ in range(n)]
+        self._pages[rid].extend(got)
+        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        return got
+
+    def free(self, rid: int) -> int:
+        """Release all of ``rid``'s pages back to the free list (retirement
+        or preemption — copy-free) and return how many were released."""
+        got = self._pages.pop(rid, [])
+        self._free.extend(got)
+        return len(got)
+
+    # -------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Assert page conservation and exclusive ownership (the property
+        suite calls this after every simulated operation)."""
+        owned = [p for pages in self._pages.values() for p in pages]
+        allp = owned + list(self._free)
+        assert len(allp) == len(set(allp)), "page double-assignment"
+        assert sorted(allp) == list(range(1, self.n_blocks)), \
+            f"page conservation violated: {sorted(allp)}"
+        assert self.SINK not in owned, "sink page handed out"
+        assert self.free_count == self.capacity - sum(
+            len(p) for p in self._pages.values())

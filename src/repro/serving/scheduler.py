@@ -69,15 +69,29 @@ class Scheduler:
     ``cap`` is the per-slot KV capacity; a slot's committed length may
     never reach it (the engine retires the request one token earlier —
     ``at_capacity``).  All methods are O(queue) python; the engine calls
-    ``admit()`` once per step and mirrors the returned placements."""
+    ``admit()`` once per step and mirrors the returned placements.
 
-    def __init__(self, max_batch: int, cap: int, policy: str = "fcfs"):
+    **Capacity oracle** (the single authority both admission paths and the
+    retirement check consult, so they can never disagree): with ``pool``
+    (a ``serving/pool.BlockAllocator`` — the shared-pool paged KV cache)
+    capacity is the *global* free-page count — ``fits`` asks whether the
+    request could ever hold its prompt + one token in ``max_pages`` pages,
+    ``can_admit_now`` whether that many pages are free *now* (otherwise the
+    request stays queued instead of being rejected), and
+    ``grow_for_next_token`` reserves the next decode token's page on
+    demand.  Without ``pool`` the same three methods fall back to the
+    per-slot ``cap`` gate (always-admissible once a slot is free)."""
+
+    def __init__(self, max_batch: int, cap: int, policy: str = "fcfs",
+                 pool=None, max_pages: int = 0):
         if policy not in POLICIES:
             raise ValueError(f"unknown sched policy {policy!r}; "
                              f"choose from {POLICIES}")
         self.policy = policy
         self.cap = cap
         self.max_batch = max_batch
+        self.pool = pool
+        self.max_pages = max_pages or (pool.capacity if pool else 0)
         self.queue: list[Request] = []
         self.slot_rids: list[int | None] = [None] * max_batch
         self.slot_len: list[int] = [0] * max_batch
@@ -122,9 +136,49 @@ class Scheduler:
             return None
 
     def fits(self, req: Request) -> bool:
-        """Cache-pressure gate: can ``req``'s prefill leave room for at
-        least one generated token in the per-slot capacity?"""
-        return len(req.resume_tokens()) + 1 <= self.cap
+        """Cache-pressure gate: could ``req``'s prefill plus one generated
+        token *ever* fit — the per-slot capacity (fixed layout), or
+        ``max_pages`` of the shared pool (paged)?  False means reject."""
+        need = len(req.resume_tokens()) + 1
+        if self.pool is None:
+            return need <= self.cap
+        return self.pool.pages_for(need) <= min(self.pool.capacity,
+                                                self.max_pages)
+
+    def can_admit_now(self, req: Request) -> bool:
+        """Whether the capacity oracle can grant ``req``'s admission
+        reservation *right now*.  Fixed layout: always (the free slot IS
+        the reservation).  Paged: the prompt + one token's pages must be on
+        the free list; otherwise the request waits in the queue for running
+        requests to retire and release pages."""
+        if self.pool is None:
+            return True
+        return (self.pool.pages_for(len(req.resume_tokens()) + 1)
+                <= self.pool.free_count)
+
+    def grow_for_next_token(self, slot: int) -> list[int] | None:
+        """Reserve whatever the *next* decode token needs for ``slot``.
+
+        Returns the newly granted physical pages ([] when the committed
+        length + 1 still fits the reservation — always, in the fixed
+        layout, until ``cap``), or None when the request cannot grow:
+        per-slot ``cap`` reached, ``max_pages`` reached, or the pool's free
+        list is empty — the engine then retires it with
+        ``finish_reason="capacity"``.  This is the paged twin of
+        ``at_capacity`` with the reservation made atomically, so a
+        concurrent admission cannot snatch the page between check and
+        commit."""
+        if self.pool is None:
+            return None if self.slot_len[slot] + 1 >= self.cap else []
+        rid = self.slot_rids[slot]
+        assert rid is not None, slot
+        need = self.pool.pages_for(self.slot_len[slot] + 1)
+        have = len(self.pool.pages(rid))
+        if need <= have:
+            return []
+        if need > self.max_pages:
+            return None
+        return self.pool.extend(rid, need - have)
 
     def reject(self, req: Request) -> None:
         """Retire ``req`` unplaced with ``finish_reason="rejected"``."""
@@ -147,11 +201,24 @@ class Scheduler:
             if slot is None:
                 break
             req = self._pick()
-            self.queue.remove(req)
             if not self.fits(req):            # can't even hold one new token
+                self.queue.remove(req)
                 self.reject(req)
                 continue
+            if not self.can_admit_now(req):
+                # pool pressure: the pick waits (stays queued) for running
+                # requests to release pages — no skip-ahead, so a big
+                # request can't be starved by a stream of small ones
+                break
+            self.queue.remove(req)
             need = len(req.resume_tokens())
+            if self.pool is not None:
+                # reserve prompt + first-token pages up front: the chunked
+                # prefill carries K/V in side buffers and commits them to
+                # the pool only at finalize, so full reservation here keeps
+                # multi-step prefills deadlock-free (no partial holds)
+                got = self.pool.alloc(req.rid, self.pool.pages_for(need + 1))
+                assert got is not None, "can_admit_now lied"
             req.state = PREFILL
             self._stamp(req)
             self.slot_rids[slot] = req.rid
@@ -164,17 +231,27 @@ class Scheduler:
         engine's legacy one-shot ``add_request`` path).  Returns the slot,
         or None when full — or when the cache-pressure gate rejects the
         request (``req.finish_reason == "rejected"``; same behavior as the
-        ``admit()`` path, and it keeps ``slot_len < cap`` invariant-true)."""
+        ``admit()`` path, and it keeps ``slot_len < cap`` invariant-true).
+        Both admission paths share the same capacity oracle (``fits`` /
+        ``can_admit_now``), so they cannot disagree on what is admissible;
+        under pool pressure (paged, pages busy *now*) the request is
+        neither placed nor rejected — None, like a full batch."""
         slot = self.free_slot()
         if slot is None:
             return None
         if not self.fits(req):
             self.reject(req)
             return None
+        if not self.can_admit_now(req):
+            return None
+        need = len(req.resume_tokens())
+        if self.pool is not None:
+            got = self.pool.alloc(req.rid, self.pool.pages_for(need + 1))
+            assert got is not None, "can_admit_now lied"
         req.state = PREFILL
         self._stamp(req)
         self.slot_rids[slot] = req.rid
-        self.slot_len[slot] = len(req.resume_tokens())
+        self.slot_len[slot] = need
         return slot
 
     # ----------------------------------------------------------- running
@@ -183,11 +260,24 @@ class Scheduler:
         self.slot_len[slot] += 1
 
     def at_capacity(self, slot: int) -> bool:
-        """True when ``slot`` cannot hold another token (retire now)."""
-        return self.slot_len[slot] + 1 >= self.cap
+        """True when ``slot`` cannot hold another token (retire now).
+        Read-only twin of ``grow_for_next_token`` — fixed: the per-slot
+        ``cap`` is reached; paged: the next token's page can neither be
+        covered by the reservation nor granted from the free list."""
+        if self.pool is None:
+            return self.slot_len[slot] + 1 >= self.cap
+        rid = self.slot_rids[slot]
+        need = self.pool.pages_for(self.slot_len[slot] + 1)
+        have = len(self.pool.pages(rid)) if rid is not None else 0
+        return need > have and (need > self.max_pages
+                                or need - have > self.pool.free_count)
 
     def release(self, slot: int) -> None:
-        """Free ``slot`` (request retired or preempted)."""
+        """Free ``slot`` (request retired or preempted); paged mode also
+        returns the request's pool pages to the free list — copy-free."""
+        rid = self.slot_rids[slot]
+        if self.pool is not None and rid is not None:
+            self.pool.free(rid)
         self.slot_rids[slot] = None
         self.slot_len[slot] = 0
 
@@ -204,13 +294,26 @@ class Scheduler:
     def check_invariants(self) -> None:
         """Assert the scheduling invariants the property suite pins:
         no rid in two slots, queue and slots disjoint, committed lengths
-        within capacity."""
+        within capacity; paged mode additionally checks page conservation
+        and that every slot's reservation covers its committed length."""
         live = [r for r in self.slot_rids if r is not None]
         assert len(live) == len(set(live)), f"slot double-assignment: {live}"
         qrids = [r.rid for r in self.queue]
         assert len(qrids) == len(set(qrids)), f"queue duplicates: {qrids}"
         assert not set(qrids) & set(live), "request both queued and placed"
         for s, (rid, ln) in enumerate(zip(self.slot_rids, self.slot_len)):
-            if rid is not None:
+            if rid is None:
+                continue
+            if self.pool is None:
                 assert 0 < ln < self.cap, \
                     f"slot {s} length {ln} violates capacity {self.cap}"
+            else:
+                have = len(self.pool.pages(rid))
+                assert 0 < ln <= have * self.pool.block_s, \
+                    f"slot {s} length {ln} exceeds its {have} pages"
+                assert have <= self.max_pages, (s, have, self.max_pages)
+        if self.pool is not None:
+            self.pool.check_invariants()
+            holders = {r for r in self.pool._pages if self.pool.pages(r)}
+            assert holders <= set(live), \
+                f"pages held by unplaced requests: {holders - set(live)}"

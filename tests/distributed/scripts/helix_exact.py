@@ -109,6 +109,62 @@ for tl_new in (total_len + 1, jnp.asarray([201, 38, 151, 10], jnp.int32)):
     np.testing.assert_array_equal(np.asarray(vc_f), np.asarray(vc_u))
 print("fused KV-append epilogue == unfused (KVP=8, scalar + [B] tl): OK")
 
+# ---- shared-pool paged KV == fixed-cap layout through the KVP=8 shard_map ----
+from repro.core.kvcache import cache_to_pages, pages_to_cache
+hx_bs = dataclasses.replace(hx, attn_block_s=RR)          # align partitions
+hx_bs_pl = dataclasses.replace(hx_pl, attn_block_s=RR)
+BS = KVP * RR                                             # positions / page
+MP = S_CAP // BS
+NPOOL = 1 + B * MP
+tbl = np.zeros((B, MP), np.int32)
+perm = np.random.default_rng(5).permutation(np.arange(1, NPOOL))
+pool_k = jnp.zeros((NPOOL, KH, BS, HSZ), jnp.float32)
+pool_v = jnp.zeros((NPOOL, KH, BS, HSZ), jnp.float32)
+pi = 0
+for b in range(B):
+    pk_pages = cache_to_pages(k_rr[b][None], KVP, BS)[0]
+    pv_pages = cache_to_pages(v_rr[b][None], KVP, BS)[0]
+    for p in range(MP):
+        phys = int(perm[pi]); pi += 1
+        tbl[b, p] = phys
+        pool_k = pool_k.at[phys].set(pk_pages[p])
+        pool_v = pool_v.at[phys].set(pv_pages[p])
+tbl = jnp.asarray(tbl)
+for hxf, hxp_base in ((hx_bs, hx_bs), (hx_bs_pl, hx_bs_pl)):
+    hxp = dataclasses.replace(hxp_base, paged_kv=True)
+    for tl_case, win in ((total_len, 0), (tls, 0), (tls, 64)):
+        with set_mesh(mesh):
+            of = jax.jit(lambda q, k, v: helix_attention(
+                mesh, hxf, q, k, v, tl_case, window=win))(q, k_rr, v_rr)
+            op = jax.jit(lambda q, k, v, t: helix_attention(
+                mesh, hxp, q, k, v, tl_case, window=win,
+                block_tables=t))(q, pool_k, pool_v, tbl)
+        np.testing.assert_array_equal(np.asarray(of), np.asarray(op))
+print("paged pool == fixed (KVP=8, ref + pallas, windowed, [B] tl): OK")
+
+# paged fused append == fixed fused append (pool planes reassemble exactly)
+kn_p = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))
+vn_p = jnp.asarray(rng.standard_normal((B, KH, HSZ), np.float32))
+tl_pp = jnp.asarray([201, 38, 151, 10], jnp.int32)
+hxp = dataclasses.replace(hx_bs_pl, paged_kv=True)
+with set_mesh(mesh):
+    out_ff, kc_ff, vc_ff = jax.jit(lambda q, k, v, kn, vn: helix_attention(
+        mesh, hx_bs_pl, q, k, v, tl_pp, k_new=kn, v_new=vn))(
+            q, k_rr, v_rr, kn_p, vn_p)
+    out_fp, pk_fp, pv_fp = jax.jit(
+        lambda q, k, v, kn, vn, t: helix_attention(
+            mesh, hxp, q, k, v, tl_pp, k_new=kn, v_new=vn,
+            block_tables=t))(q, pool_k, pool_v, kn_p, vn_p, tbl)
+np.testing.assert_array_equal(np.asarray(out_ff), np.asarray(out_fp))
+tbl_np = np.asarray(tbl)
+got_k = jnp.stack([pages_to_cache(pk_fp[tbl_np[b]][None], KVP)[0]
+                   for b in range(B)])
+got_v = jnp.stack([pages_to_cache(pv_fp[tbl_np[b]][None], KVP)[0]
+                   for b in range(B)])
+np.testing.assert_array_equal(np.asarray(got_k), np.asarray(kc_ff))
+np.testing.assert_array_equal(np.asarray(got_v), np.asarray(vc_ff))
+print("paged fused KV-append == fixed (KVP=8 shard_map): OK")
+
 # ---- chunked prefill == one-shot prefill through the KVP=8 shard_map ----
 from repro.configs import get_config
 from repro.models.model_zoo import (build_serve_step, finalize_chunked_prefill,

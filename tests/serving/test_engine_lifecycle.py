@@ -197,31 +197,55 @@ def test_oneshot_engine_stalls_decode_monolithically():
 
 
 def test_inflight_prefill_not_starved_by_fresh_admissions():
-    """Chunk scheduling is oldest-admission-first: when a lower slot frees
-    and a fresh request is admitted into it, the older in-flight prefill in
-    the higher slot keeps advancing (and finishes) first."""
-    eng = _engine(max_batch=2, max_seq=64, chunk_tokens=3)
+    """Chunk scheduling is oldest-admission-first: the packed group is
+    always the one containing the oldest in-flight prefill, so requests
+    that can't join it (different remaining-clamped chunk width) wait.
+    With ragged packing the only un-packable case left is a width mismatch
+    — here the older request sits on its final partial chunk while the
+    fresh admission wants a full-width chunk."""
+    eng = _engine(max_batch=2, max_seq=64, chunk_tokens=4)
     quick = Request(rid=0, prompt=_prompts((4,))[0], max_new_tokens=1)
     older = Request(rid=1, prompt=_prompts((30,), seed=3)[0],
-                    max_new_tokens=2)
-    # different length than `older` so the two can't pack into one group
-    newer = Request(rid=2, prompt=_prompts((24,), seed=4)[0],
-                    max_new_tokens=2)
+                    max_new_tokens=2)          # 30 = 7*4 + partial 2
+    newer = Request(rid=2, prompt=_prompts((40,), seed=4)[0],
+                    max_new_tokens=2)          # full-width chunks only
     eng.submit(quick)
     eng.submit(older)
     eng.submit(newer)                 # queued: both slots taken
     for _ in range(100):
         eng.step()
-        if quick.done and newer.state == PREFILL:
+        if quick.done and newer.state == PREFILL and older.prefill_pos == 28:
             break
-    assert quick.done and newer.state == PREFILL   # newer took slot 0
-    assert older.state == PREFILL and older.prefill_pos > 0
+    # newer took slot 0; older is parked on its final width-2 chunk
+    assert quick.done and newer.state == PREFILL
+    assert older.state == PREFILL and older.prefill_pos == 28
+    pos_before = newer.prefill_pos
     while older.state == PREFILL:
         eng.step()
-    # the fresh admission never advanced while the older prefill ran
-    assert newer.prefill_pos == 0
+    # newer (width 4) could not join older's width-2 group — the oldest
+    # prefill finished first without the fresh admission advancing
+    assert newer.prefill_pos == pos_before
     eng.run_to_completion()
     assert older.done and newer.done
+
+
+def test_ragged_chunk_packing_advances_together():
+    """Requests at *different* (offset, length) but the same chunk width
+    pack into ONE chunk call per step (the PR-4 same-progress restriction
+    is gone): after one engine step both in-flight prefills advanced."""
+    eng = _engine(max_batch=2, max_seq=64, chunk_tokens=4)
+    a = Request(rid=0, prompt=_prompts((20,), seed=5)[0], max_new_tokens=2)
+    eng.submit(a)
+    eng.step()                         # a admitted + first chunk
+    assert a.state == PREFILL and a.prefill_pos == 4
+    b = Request(rid=1, prompt=_prompts((13,), seed=6)[0], max_new_tokens=2)
+    eng.submit(b)
+    eng.step()                         # b admitted; packs with a (width 4)
+    eng.step()
+    assert a.prefill_pos > 4 and b.prefill_pos > 0, \
+        (a.prefill_pos, b.prefill_pos)
+    eng.run_to_completion()
+    assert a.done and b.done
 
 
 # ---------------------------------------------------------------- preempt

@@ -1,0 +1,156 @@
+"""BlockAllocator property suite (the shared-pool paged KV cache's page
+accounting): random alloc/extend/preempt/free streams must never hand a
+page to two requests, must conserve pages exactly (free + Σ allocated ==
+capacity), and must keep the reserved sink page out of circulation.
+
+Hypothesis-driven when available (repro.testing.optional_hypothesis —
+skips, never collection-errors, without it); the deterministic twins at
+the bottom always run."""
+import pytest
+
+from repro.serving.pool import BlockAllocator, pages_for
+from repro.testing import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+
+# ---------------------------------------------------------------- driver
+def drive(pool: BlockAllocator, ops):
+    """Replay an operation stream against ``pool``, asserting the
+    allocator's invariants after every step.
+
+    ``ops`` = list of (kind, rid, n) with kind in {"alloc", "extend",
+    "free"}; ``extend`` on an unknown rid degrades to ``alloc`` and
+    ``alloc`` on a live rid to ``extend``, so arbitrary random streams are
+    always well-formed.  Returns the set of live rids."""
+    live: set[int] = set()
+    for kind, rid, n in ops:
+        if kind == "free":
+            released = pool.free(rid)
+            if rid in live:
+                assert released > 0
+            else:
+                assert released == 0
+            live.discard(rid)
+        else:
+            if rid in live:
+                before = len(pool.pages(rid))
+                got = pool.extend(rid, n)
+                if got is not None:
+                    assert len(got) == n
+                    assert pool.pages(rid)[before:] == got
+            else:
+                free_before = pool.free_count
+                got = pool.alloc(rid, n)
+                if got is None:
+                    assert n > free_before
+                else:
+                    assert len(got) == n
+                    assert pool.pages(rid) == got
+                    live.add(rid)
+        pool.check_invariants()
+        assert pool.free_count == pool.capacity - sum(
+            len(pool.pages(r)) for r in live)
+    return live
+
+
+def check_stream(n_blocks, stream):
+    pool = BlockAllocator(n_blocks=n_blocks, block_s=16)
+    live = drive(pool, stream)
+    # exact conservation at the end: free everything, pool returns to full
+    for rid in list(live):
+        pool.free(rid)
+    pool.check_invariants()
+    assert pool.free_count == pool.capacity
+    assert pool.peak_in_use <= pool.capacity
+
+
+# ------------------------------------------------------------- properties
+@given(st.integers(2, 40),
+       st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                          st.integers(0, 7), st.integers(0, 9)),
+                max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_allocator_random_streams(n_blocks, stream):
+    check_stream(n_blocks, stream)
+
+
+@given(st.integers(1, 6), st.lists(st.integers(1, 50), max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_no_double_assignment_across_requests(n_reqs, lengths):
+    """Distinct requests' page lists are always disjoint, and pages_for
+    matches the lengths they were sized from."""
+    pool = BlockAllocator(n_blocks=64, block_s=16)
+    owned = {}
+    for rid in range(n_reqs):
+        need = pages_for(lengths[rid % max(len(lengths), 1)]
+                         if lengths else 1, pool.block_s)
+        got = pool.alloc(rid, need)
+        if got is not None:
+            owned[rid] = got
+    flat = [p for pages in owned.values() for p in pages]
+    assert len(flat) == len(set(flat))
+    assert BlockAllocator.SINK not in flat
+    pool.check_invariants()
+
+
+# ---------------------------------------------------- deterministic twins
+def test_pages_for():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+    assert pages_for(-3, 16) == 0
+
+
+def test_alloc_extend_free_cycle():
+    check_stream(8, [("alloc", 0, 3), ("extend", 0, 2), ("alloc", 1, 2),
+                     ("alloc", 2, 9),           # over capacity -> refused
+                     ("free", 0, 0), ("alloc", 2, 5), ("free", 1, 0),
+                     ("free", 2, 0), ("alloc", 3, 7)])
+
+
+def test_preempt_releases_pages_copy_free():
+    """Preemption is pool.free: every page returns to the free list and a
+    later request can take the full pool again."""
+    pool = BlockAllocator(n_blocks=10, block_s=16)
+    assert pool.alloc(0, 9) is not None
+    assert pool.alloc(1, 1) is None          # pool exhausted
+    assert pool.free(0) == 9                 # preempt: all pages back
+    assert pool.free_count == 9
+    assert pool.alloc(1, 9) is not None
+    pool.check_invariants()
+
+
+def test_fifo_determinism():
+    """Page hand-out order is deterministic (FIFO free list), so engine
+    runs replay bit-identically."""
+    a = BlockAllocator(n_blocks=8, block_s=16)
+    b = BlockAllocator(n_blocks=8, block_s=16)
+    for pool in (a, b):
+        pool.alloc(0, 2)
+        pool.alloc(1, 3)
+        pool.free(0)
+        pool.extend(1, 2)
+        pool.alloc(2, 2)
+    assert a.pages(1) == b.pages(1)
+    assert a.pages(2) == b.pages(2)
+
+
+def test_exhaustion_refusal_leaves_state_untouched():
+    pool = BlockAllocator(n_blocks=5, block_s=16)
+    pool.alloc(0, 2)
+    before = (pool.free_count, list(pool.pages(0)))
+    assert pool.alloc(1, 3) is None
+    assert pool.extend(0, 3) is None
+    assert (pool.free_count, list(pool.pages(0))) == before
+    pool.check_invariants()
+
+
+def test_sink_page_reserved():
+    pool = BlockAllocator(n_blocks=4, block_s=16)
+    got = pool.alloc(0, 3)
+    assert got is not None and BlockAllocator.SINK not in got
+    assert pool.capacity == 3
+    with pytest.raises(AssertionError):
+        BlockAllocator(n_blocks=1, block_s=16)
