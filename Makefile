@@ -1,5 +1,6 @@
 # Tier-1 verify: `make test` == what CI runs (scripts/ci.sh).
-.PHONY: test test-fast bench-decode bench-serving check-docs list-backends
+.PHONY: test test-fast bench-decode bench-serving check-docs list-backends \
+	analyze
 
 test:
 	bash scripts/ci.sh
@@ -16,6 +17,12 @@ bench-decode:
 bench-serving:
 	PYTHONPATH=src python benchmarks/bench_serving.py
 	python scripts/check_bench_schema.py BENCH_serving.json
+
+# static contract checker (strict): kernel index-space audit + jaxpr
+# collective/dtype audit + host-sync lint; writes ANALYSIS.json
+analyze:
+	python scripts/analyze.py --strict
+	python scripts/check_analysis_schema.py ANALYSIS.json
 
 # docs check: public-API docstrings + README CLI-flag drift
 check-docs:

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Run the Helix static contract checker (see docs/analysis.md).
+
+Layers: index (kernel index-space audit), jaxpr (collective/dtype audit of
+the serving step graphs), sync (host-sync AST lint over serving/launch).
+
+    python scripts/analyze.py                 # errors fail, warnings print
+    python scripts/analyze.py --strict        # any unsuppressed finding fails
+    python scripts/analyze.py --skip jaxpr    # run a subset
+    python scripts/analyze.py --update-baseline   # rewrite suppress entries
+
+Writes the machine-readable report to ANALYSIS.json (schema asserted by
+scripts/check_analysis_schema.py); baseline suppressions live in
+ANALYSIS_BASELINE.json and match findings on (check, path, symbol) — never
+line numbers.  CI runs ``--strict`` (scripts/ci.sh, ``make analyze``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LAYERS = ("index", "jaxpr", "sync")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on any unsuppressed finding (CI gate)")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated layers to skip "
+                         f"(of: {', '.join(LAYERS)})")
+    ap.add_argument("--json", default="ANALYSIS.json",
+                    help="machine-readable report path ('' disables)")
+    ap.add_argument("--baseline", default="ANALYSIS_BASELINE.json",
+                    help="baseline suppression file ('' disables)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "(review the diff before committing!)")
+    args = ap.parse_args()
+
+    skip = {s for s in args.skip.split(",") if s}
+    unknown = skip - set(LAYERS)
+    if unknown:
+        ap.error(f"unknown layers in --skip: {sorted(unknown)}")
+
+    from repro.analysis import (Report, lint_paths, load_baseline,
+                                run_index_audit)
+    from repro.analysis.jaxpr_audit import run_jaxpr_audit
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    report = Report()
+    if "index" not in skip:
+        run_index_audit(report)
+    if "jaxpr" not in skip:
+        run_jaxpr_audit(report)
+    if "sync" not in skip:
+        report.extend(lint_paths(repo_root=repo))
+        report.mark_run("sync")
+
+    if args.update_baseline:
+        entries = [{"check": f.check, "path": f.path, "symbol": f.symbol,
+                    "reason": "baselined by --update-baseline; document "
+                              "why this finding is intentional"}
+                   for f in sorted({f.key(): f
+                                    for f in report.findings}.values(),
+                                   key=lambda f: f.key())]
+        path = os.path.join(repo, args.baseline or "ANALYSIS_BASELINE.json")
+        with open(path, "w") as f:
+            json.dump({"suppress": entries}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(entries)} suppress entries to {path}")
+        return 0
+
+    stale = []
+    if args.baseline:
+        bpath = os.path.join(repo, args.baseline)
+        if os.path.exists(bpath):
+            stale = report.apply_baseline(load_baseline(bpath))
+
+    meta = {"generated_by": "scripts/analyze.py",
+            "strict": args.strict,
+            "baseline": args.baseline or None}
+    if args.json:
+        jpath = os.path.join(repo, args.json)
+        with open(jpath, "w") as f:
+            json.dump(report.to_dict(meta), f, indent=2)
+            f.write("\n")
+
+    print(report.render())
+    for e in stale:
+        print(f"[stale baseline] {e['check']} {e['path']} ({e['symbol']}): "
+              f"no longer found — remove the entry")
+
+    if report.unsuppressed("error"):
+        return 1
+    if args.strict and (report.unsuppressed() or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

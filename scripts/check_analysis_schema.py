@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""CI schema check for the machine-readable static-analysis report.
+
+Asserts ``ANALYSIS.json`` (scripts/analyze.py) carries every field
+downstream tooling keys on — check ids from the catalog, typed finding
+fields, a consistent summary — so a refactor of the analyzer can't
+silently drop a column or invent an untracked check id.
+
+Run directly:  python scripts/check_analysis_schema.py [ANALYSIS.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+META_KEYS = {"generated_by", "strict", "baseline", "checks_run"}
+SUMMARY_KEYS = {"total", "errors", "warnings", "suppressed"}
+CHECK_ID_RE = re.compile(r"^[a-z]+\.[a-z-]+$")
+LAYERS = {"index", "jaxpr", "sync"}
+
+
+def check(path: pathlib.Path) -> list[str]:
+    # single source of truth for the per-finding schema + check catalog
+    from repro.analysis.findings import CHECKS, FINDING_FIELDS, SEVERITIES
+    errors: list[str] = []
+    data = json.loads(path.read_text())
+
+    meta = data.get("meta", {})
+    missing_meta = META_KEYS - set(meta)
+    if missing_meta:
+        errors.append(f"meta missing keys: {sorted(missing_meta)}")
+    run = set(meta.get("checks_run", []))
+    if not run <= LAYERS:
+        errors.append(f"meta.checks_run has unknown layers: "
+                      f"{sorted(run - LAYERS)}")
+    if not run:
+        errors.append("meta.checks_run empty — no layer ran")
+
+    summary = data.get("summary", {})
+    missing_sum = SUMMARY_KEYS - set(summary)
+    if missing_sum:
+        errors.append(f"summary missing keys: {sorted(missing_sum)}")
+
+    findings = data.get("findings", None)
+    if findings is None:
+        errors.append("no findings list")
+        return errors
+    n_sup = 0
+    for i, f in enumerate(findings):
+        for key, typ in FINDING_FIELDS.items():
+            if key not in f:
+                errors.append(f"finding {i}: missing {key!r}")
+            elif not isinstance(f[key], typ):
+                errors.append(f"finding {i}: {key!r} is "
+                              f"{type(f[key]).__name__}, want {typ.__name__}")
+        cid = f.get("check", "")
+        if not CHECK_ID_RE.match(cid):
+            errors.append(f"finding {i}: malformed check id {cid!r}")
+        elif cid not in CHECKS:
+            errors.append(f"finding {i}: check id {cid!r} not in catalog")
+        if f.get("severity") not in SEVERITIES:
+            errors.append(f"finding {i}: bad severity {f.get('severity')!r}")
+        n_sup += bool(f.get("suppressed"))
+    if summary.get("total") != len(findings):
+        errors.append(f"summary.total {summary.get('total')} != "
+                      f"{len(findings)} findings")
+    if summary.get("suppressed") != n_sup:
+        errors.append(f"summary.suppressed {summary.get('suppressed')} != "
+                      f"{n_sup} suppressed findings")
+    return errors
+
+
+def main() -> int:
+    path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                        else ROOT / "ANALYSIS.json")
+    if not path.exists():
+        print(f"[check_analysis_schema] {path} missing "
+              "(run scripts/analyze.py first)")
+        return 1
+    errors = check(path)
+    if errors:
+        print(f"[check_analysis_schema] FAILED for {path}:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"[check_analysis_schema] OK ({path})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

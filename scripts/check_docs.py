@@ -79,8 +79,23 @@ def check_docstrings() -> None:
         ("repro.core.kvcache", "page_positions"),
         ("repro.core.helix", "paged_slot_of_position"),
         ("repro.kernels.pruning", "table_block"),
+        ("repro.kernels.pruning", "span_clamp"),
         ("repro.kernels.registry", "KernelFamily"),
         ("repro.kernels.registry", "backend_table"),
+        ("repro.kernels.registry", "contract_suite"),
+        ("repro.kernels.contract", "KernelContract"),
+        ("repro.kernels.contract", "Operand"),
+        ("repro.analysis.findings", "Finding"),
+        ("repro.analysis.findings", "Report"),
+        ("repro.analysis.findings", "load_baseline"),
+        ("repro.analysis.index_audit", "audit_contract"),
+        ("repro.analysis.index_audit", "run_index_audit"),
+        ("repro.analysis.index_audit", "eval_index_table"),
+        ("repro.analysis.jaxpr_audit", "audit_step_fn"),
+        ("repro.analysis.jaxpr_audit", "collect_collectives"),
+        ("repro.analysis.jaxpr_audit", "run_jaxpr_audit"),
+        ("repro.analysis.host_sync", "lint_source"),
+        ("repro.analysis.host_sync", "lint_paths"),
     ]
     for mod_name, sym in public:
         mod = importlib.import_module(mod_name)
@@ -102,6 +117,7 @@ CLI_SOURCES = {
     "repro.launch.train": ROOT / "src/repro/launch/train.py",
     "bench_decode_kernel.py": ROOT / "benchmarks/bench_decode_kernel.py",
     "bench_serving.py": ROOT / "benchmarks/bench_serving.py",
+    "analyze.py": ROOT / "scripts/analyze.py",
 }
 FLAG_RE = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)[\"']")
 

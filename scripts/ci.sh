@@ -21,6 +21,12 @@ python scripts/check_docs.py
 # kernel-registry smoke: imports every family and prints the backend matrix
 python -m repro.launch.serve --list-backends
 
+# static contract checker: index-space audit of every kernel family's
+# contracts, jaxpr collective/dtype audit of the serving step graphs, and
+# the host-sync lint — strict: any unbaselined finding fails the build
+python scripts/analyze.py --strict
+python scripts/check_analysis_schema.py ANALYSIS.json
+
 # block-pruning smoke: pruning shrinks visited K/V blocks at short lengths
 # (and to the causal triangle in prefill) while outputs stay bit-exact
 python scripts/prune_smoke.py

@@ -1,0 +1,29 @@
+"""Helix static contract checker (see docs/analysis.md).
+
+Three analysis layers, each emitting ``Finding``s into one ``Report``:
+
+  index_audit  — enumerates every grid step of every kernel-family
+                 ``KernelContract`` and host-evaluates the real index_map
+                 callables: in-bounds access (incl. paged table
+                 indirection), the DMA-elision invariant of pruned steps,
+                 and alias-race freedom of the fused-append row windows.
+  jaxpr_audit  — traces the serving step functions and walks the jaxpr:
+                 exactly one KVP combine (all_to_all + all_gather) per
+                 attention layer, collectives only over mesh axes, no
+                 fp64 upcasts, decode-state dtypes preserved.
+  host_sync    — AST lint over ``serving/``/``launch/`` flagging
+                 per-token device->host syncs (``int()``/``.item()`` on
+                 device arrays, ``np.asarray`` in loops,
+                 ``block_until_ready``), with a baseline for the
+                 intentional batched transfer.
+
+``scripts/analyze.py`` is the CLI front-end (gated in CI via
+``scripts/ci.sh`` / ``make analyze``).
+"""
+from repro.analysis.findings import (CHECKS, Finding, Report,
+                                     load_baseline)  # noqa: F401
+from repro.analysis.host_sync import lint_paths, lint_source  # noqa: F401
+from repro.analysis.index_audit import (audit_contract,
+                                        run_index_audit)  # noqa: F401
+from repro.analysis.jaxpr_audit import (audit_step_fn, collect_collectives,
+                                        run_jaxpr_audit)  # noqa: F401

@@ -1,0 +1,199 @@
+"""Findings registry for the static contract checker.
+
+A ``Finding`` is one defect or notable pattern located at (path, line,
+symbol) with a check id from the catalog below; a ``Report`` collects them,
+applies the baseline-suppression file, and serializes the machine-readable
+``ANALYSIS.json`` (schema asserted by ``scripts/check_analysis_schema.py``).
+
+Check catalog (id -> default severity); docs/analysis.md documents each:
+
+  contract.missing        error    family has no analysis contract hook
+  bounds.block            error    index_map addresses a block out of range
+  bounds.page             error    paged table/page indirection out of pool
+  dma.elision             error    pruned grid step changes blocks (DMA not
+                                   elided -> dead-block HBM traffic)
+  alias.race              error    fused-append aliased window races a
+                                   same-step read / another writer
+  collective.count        error    KVP combine duplicated or missing
+  collective.axis         error    collective over a wrong/unknown mesh axis
+  dtype.upcast            error    fp64 value in the decode hot path, or a
+                                   decode-state leaf changing dtype
+  sync.scalar-cast        error    int()/float() on a device value
+  sync.item               error    .item() on a device value
+  sync.asarray            warning  device->host np.asarray transfer (the
+                                   intentional batched ones are baselined)
+  sync.asarray-loop       error    per-slot np.asarray inside a loop
+  sync.block-until-ready  error    block_until_ready in a step loop
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+CHECKS: dict[str, str] = {
+    "contract.missing": "error",
+    "bounds.block": "error",
+    "bounds.page": "error",
+    "dma.elision": "error",
+    "alias.race": "error",
+    "collective.count": "error",
+    "collective.axis": "error",
+    "dtype.upcast": "error",
+    "sync.scalar-cast": "error",
+    "sync.item": "error",
+    "sync.asarray": "warning",
+    "sync.asarray-loop": "error",
+    "sync.block-until-ready": "error",
+}
+
+SEVERITIES = ("error", "warning")
+
+# field name -> python type of one serialized finding (ANALYSIS.json);
+# scripts/check_analysis_schema.py imports this as the source of truth.
+FINDING_FIELDS = {
+    "check": str,
+    "severity": str,
+    "path": str,
+    "line": int,
+    "symbol": str,
+    "message": str,
+    "suppressed": bool,
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One analyzer finding: a check id located at (path, line, symbol).
+
+    ``symbol`` is the enclosing function / kernel case / step-fn name —
+    baseline suppressions match on (check, path, symbol), never on line
+    numbers, so they survive unrelated edits.  ``severity`` defaults from
+    the ``CHECKS`` catalog.
+    """
+
+    check: str
+    path: str
+    symbol: str
+    message: str
+    line: int = 0
+    severity: str = ""
+    suppressed: bool = False
+
+    def __post_init__(self):
+        if self.check not in CHECKS:
+            raise ValueError(f"unknown check id {self.check!r}; "
+                             f"catalog: {sorted(CHECKS)}")
+        if not self.severity:
+            self.severity = CHECKS[self.check]
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    def key(self) -> tuple:
+        """Line-independent identity used by baseline suppression."""
+        return (self.check, self.path, self.symbol)
+
+    def to_dict(self) -> dict:
+        """Serialized finding — exactly the ``FINDING_FIELDS`` columns."""
+        return {k: getattr(self, k) for k in FINDING_FIELDS}
+
+
+def load_baseline(path) -> list[dict]:
+    """Parse a baseline file -> list of suppress entries.
+
+    Format (``ANALYSIS_BASELINE.json``)::
+
+        {"suppress": [{"check": ..., "path": ..., "symbol": ...,
+                       "reason": ...}, ...]}
+
+    Every entry must carry all four keys; ``reason`` documents *why* the
+    finding is intentional (e.g. the one batched device->host transfer per
+    decode step).
+    """
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("suppress", [])
+    for e in entries:
+        missing = {"check", "path", "symbol", "reason"} - set(e)
+        if missing:
+            raise ValueError(f"baseline entry {e!r} missing keys {missing}")
+        if e["check"] not in CHECKS:
+            raise ValueError(f"baseline entry {e!r}: unknown check id")
+    return entries
+
+
+class Report:
+    """Collects findings across the analysis layers and renders results.
+
+    ``apply_baseline`` marks findings matching a suppress entry (on the
+    line-independent ``Finding.key``) as suppressed and reports stale
+    entries that no longer match anything — a baseline should shrink as
+    true positives get fixed, not accumulate dead weight.
+    """
+
+    def __init__(self):
+        self.findings: list[Finding] = []
+        self.checks_run: list[str] = []
+
+    def add(self, finding: Finding):
+        """Record one finding."""
+        self.findings.append(finding)
+
+    def extend(self, findings: Iterable[Finding]):
+        """Record a batch of findings (one layer's output)."""
+        self.findings.extend(findings)
+
+    def mark_run(self, layer: str):
+        """Note that an analysis layer (index/jaxpr/sync) completed."""
+        if layer not in self.checks_run:
+            self.checks_run.append(layer)
+
+    def apply_baseline(self, entries: list[dict]) -> list[dict]:
+        """Suppress matching findings; returns the *stale* entries."""
+        keys = {(e["check"], e["path"], e["symbol"]): e for e in entries}
+        hit = set()
+        for f in self.findings:
+            e = keys.get(f.key())
+            if e is not None:
+                f.suppressed = True
+                hit.add(f.key())
+        return [e for k, e in keys.items() if k not in hit]
+
+    def unsuppressed(self, severity: str | None = None) -> list[Finding]:
+        """Findings not covered by the baseline, optionally by severity."""
+        return [f for f in self.findings if not f.suppressed
+                and (severity is None or f.severity == severity)]
+
+    def summary(self) -> dict:
+        """Counts for ANALYSIS.json: total/errors/warnings/suppressed."""
+        return {
+            "total": len(self.findings),
+            "errors": len(self.unsuppressed("error")),
+            "warnings": len(self.unsuppressed("warning")),
+            "suppressed": sum(f.suppressed for f in self.findings),
+        }
+
+    def to_dict(self, meta: dict | None = None) -> dict:
+        """The ANALYSIS.json payload (see check_analysis_schema.py)."""
+        return {
+            "meta": dict(meta or {}, checks_run=list(self.checks_run)),
+            "summary": self.summary(),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+    def render(self) -> str:
+        """Human-readable listing, errors first, suppressed last."""
+        order = {"error": 0, "warning": 1}
+        lines = []
+        for f in sorted(self.findings,
+                        key=lambda f: (f.suppressed, order[f.severity],
+                                       f.path, f.line)):
+            tag = "suppressed" if f.suppressed else f.severity
+            loc = f"{f.path}:{f.line}" if f.line else f.path
+            lines.append(f"[{tag:<10s}] {f.check:<22s} {loc} "
+                         f"({f.symbol}): {f.message}")
+        s = self.summary()
+        lines.append(f"{s['errors']} error(s), {s['warnings']} warning(s), "
+                     f"{s['suppressed']} suppressed "
+                     f"(layers: {', '.join(self.checks_run) or 'none'})")
+        return "\n".join(lines)

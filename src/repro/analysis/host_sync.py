@@ -1,0 +1,224 @@
+"""Host-sync lint: AST pass flagging per-token device->host transfers.
+
+The serving hot loop must touch the host exactly once per step (the batched
+``np.asarray`` of the sampled tokens) — any extra device->host sync
+serializes the TPU pipeline and shows up directly in the paper's TTL.  This
+pass walks the ``serving/`` and ``launch/`` sources and flags:
+
+  sync.scalar-cast        ``int(...)``/``float(...)`` on a device value —
+                          a blocking scalar transfer per call
+  sync.item               ``.item()`` on a device value — same
+  sync.asarray            ``np.asarray``/``np.array`` of a device value —
+                          a device->host copy; the intentional one batched
+                          transfer per step lives in the baseline file
+  sync.asarray-loop       the same inside a ``for``/``while`` body — the
+                          per-slot transfer anti-pattern
+  sync.block-until-ready  ``.block_until_ready()`` anywhere in serving code
+
+Device provenance is tracked per function with a small forward dataflow:
+values returned by ``jnp.*``/``jax.*`` calls, by names bound to
+``jax.jit(...)`` anywhere in the module (including ``self.attr = jax.jit``),
+and values derived from those by indexing/attribute access are DEVICE;
+``np.*`` results and unknown names default to HOST (so numpy-only metric
+code stays quiet).  The lint is source-level — it runs on checked-in files,
+not live objects — which is what lets CI gate it without building a model.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding
+
+DEFAULT_LINT_ROOTS = ("src/repro/serving", "src/repro/launch")
+
+
+def _attr_root(node):
+    """Leftmost name of a dotted expression (``jnp.argmax`` -> ``jnp``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _collect_device_fns(tree) -> tuple[set, set]:
+    """Names / ``self.<attr>``s bound to ``jax.jit(...)`` in the module."""
+    names, attrs = set(), set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        v = node.value
+        if not (isinstance(v, ast.Call) and _attr_root(v.func) == "jax"):
+            continue
+        # jax.jit(...) or jax.jit(...)(...) style wrappers
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                names.add(tgt.id)
+            elif (isinstance(tgt, ast.Attribute)
+                  and isinstance(tgt.value, ast.Name)
+                  and tgt.value.id == "self"):
+                attrs.add(tgt.attr)
+    return names, attrs
+
+
+class _FnLinter(ast.NodeVisitor):
+    """Lint one function body with DEVICE/HOST name tracking."""
+
+    def __init__(self, path, fn_name, device_fns, device_attrs):
+        self.path = path
+        self.fn = fn_name
+        self.device_fns = device_fns
+        self.device_attrs = device_attrs
+        self.device_names: set[str] = set()
+        self.loop_depth = 0
+        self.findings: list[Finding] = []
+
+    # --- provenance ---------------------------------------------------
+
+    def _is_device(self, node) -> bool:
+        """Does evaluating ``node`` yield (or contain) a device value?"""
+        if isinstance(node, ast.Name):
+            return node.id in self.device_names
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            root = _attr_root(node) if isinstance(node, ast.Attribute) \
+                else None
+            if root in ("np", "numpy"):
+                return False
+            inner = node.value
+            return self._is_device(inner)
+        if isinstance(node, ast.Call):
+            root = _attr_root(node.func)
+            if root in ("jnp", "jax"):
+                return True
+            if root in ("np", "numpy"):
+                return False
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in self.device_fns:
+                return True
+            if (isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in self.device_attrs):
+                return True
+            # a call of unknown origin: device if any argument is
+            return any(self._is_device(a) for a in node.args)
+        if isinstance(node, (ast.BinOp,)):
+            return self._is_device(node.left) or self._is_device(node.right)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._is_device(e) for e in node.elts)
+        return False
+
+    def _bind(self, target, device: bool):
+        if isinstance(target, ast.Name):
+            (self.device_names.add if device
+             else self.device_names.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, device)
+
+    # --- statements ---------------------------------------------------
+
+    def visit_Assign(self, node):
+        self.visit(node.value)
+        device = self._is_device(node.value)
+        # np.asarray(device) yields a HOST value (and is flagged below)
+        if (isinstance(node.value, ast.Call)
+                and _attr_root(node.value.func) in ("np", "numpy")):
+            device = False
+        for tgt in node.targets:
+            self._bind(tgt, device)
+
+    def visit_For(self, node):
+        self.visit(node.iter)
+        self._bind(node.target, self._is_device(node.iter))
+        self.loop_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_depth -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_While(self, node):
+        self.visit(node.test)
+        self.loop_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_depth -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_FunctionDef(self, node):
+        # nested defs are linted as their own scope by the module pass
+        return
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # --- flag rules ---------------------------------------------------
+
+    def _flag(self, check, node, message):
+        self.findings.append(Finding(
+            check=check, path=self.path, symbol=self.fn,
+            line=node.lineno, message=message))
+
+    def visit_Call(self, node):
+        func = node.func
+        if (isinstance(func, ast.Name) and func.id in ("int", "float")
+                and node.args and self._is_device(node.args[0])):
+            self._flag("sync.scalar-cast", node,
+                       f"{func.id}() on a device value blocks on a "
+                       f"per-call device->host scalar transfer")
+        elif isinstance(func, ast.Attribute) and func.attr == "item" \
+                and self._is_device(func.value):
+            self._flag("sync.item", node,
+                       ".item() on a device value blocks on a scalar "
+                       "transfer")
+        elif isinstance(func, ast.Attribute) \
+                and func.attr == "block_until_ready":
+            self._flag("sync.block-until-ready", node,
+                       "block_until_ready() stalls the dispatch pipeline "
+                       "in serving code")
+        elif (_attr_root(func) in ("np", "numpy")
+              and isinstance(func, ast.Attribute)
+              and func.attr in ("asarray", "array")
+              and node.args and self._is_device(node.args[0])):
+            if self.loop_depth:
+                self._flag("sync.asarray-loop", node,
+                           "np.asarray of a device value inside a loop — "
+                           "per-slot transfers; batch one transfer per "
+                           "step instead")
+            else:
+                self._flag("sync.asarray", node,
+                           "device->host transfer (np.asarray); intended "
+                           "batched transfers belong in the baseline")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str) -> list[Finding]:
+    """Lint one python source string; ``path`` labels the findings."""
+    tree = ast.parse(src)
+    device_fns, device_attrs = _collect_device_fns(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            linter = _FnLinter(path, node.name, device_fns, device_attrs)
+            # seed: self-method calls of jitted attrs make results device;
+            # parameters are unknown -> HOST (conservative for noise)
+            for stmt in node.body:
+                linter.visit(stmt)
+            findings.extend(linter.findings)
+    return findings
+
+
+def lint_paths(roots=DEFAULT_LINT_ROOTS, repo_root=".") -> list[Finding]:
+    """Lint every ``.py`` file under the serving/launch roots."""
+    findings = []
+    for root in roots:
+        base = os.path.join(repo_root, root)
+        for dirpath, _, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, repo_root)
+                with open(full) as f:
+                    findings.extend(lint_source(f.read(), rel))
+    return findings

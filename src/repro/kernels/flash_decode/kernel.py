@@ -169,6 +169,80 @@ def prune_block_range(total_len, rank, slot_offset, window, *, kvp: int,
     return lo, jnp.maximum(hi - lo, 0)
 
 
+def decode_index_maps(*, kvp: int, rr_block: int, block_s: int, s_true: int,
+                      n_blocks: int, contiguous: bool, prune: bool,
+                      paged: bool):
+    """Named index_map callables for one decode-kernel configuration.
+
+    The single source of truth for the kernel's DMA addressing:
+    ``flash_decode_kernel`` passes exactly these callables to
+    ``pallas_call``, and ``ops.flash_decode_contract`` exposes the same
+    callables to the static index-space auditor (``repro.analysis``), so
+    what the auditor proves is what the kernel runs.
+
+    Every map takes ``(b, h, s, meta_ref, tl_ref, [tables_ref])`` — the
+    grid coordinates then the scalar-prefetch operands — and is a pure jnp
+    function of them (no data-dependent python branches; see
+    ``kernels/pruning.py``).  Keys:
+
+      kv     streamed K/V blocks (1, 1, block_s, hsz); prune-clamped, and
+             table-indirected in paged mode
+      scale  streamed dequant-scale blocks (1, 1, block_s); same clamp
+      row    fused-append (1, 1, 1, hsz) row window of the new token
+      srow   fused-append (1, 1, 1) scale-row window
+      q      resident query block (constant along the S axis)
+      new    the new token's (1, 1, hsz) K/V row (resident)
+      lse    the [B, Kh, Qp] log-sum-exp output
+    """
+    s_pad = n_blocks * block_s
+
+    def logical_block(s, meta_ref, tl_ref, b):
+        # pruned steps re-reference the previous step's block: the DMA is
+        # elided, so HBM reads scale with the valid length, not capacity
+        if not prune:
+            return s
+        lo, nb = prune_block_range(
+            tl_ref[b], meta_ref[0], meta_ref[1], meta_ref[2], kvp=kvp,
+            rr_block=rr_block, block_s=block_s, s_true=s_true,
+            contiguous=contiguous)
+        return _phys_block(s, lo, nb, n_blocks)
+
+    def kv_idx(b, h, s, meta_ref, tl_ref, *rest):
+        # paged: the physical pool page comes from the prefetched table at
+        # the (clamped) logical id — same id as the fixed layout, so the
+        # DMA-elision property survives the indirection (pruning.table_block)
+        lg = logical_block(s, meta_ref, tl_ref, b)
+        if paged:
+            return (rest[0][b, lg], h, 0, 0)
+        return (b, h, lg, 0)
+
+    def scale_idx(b, h, s, meta_ref, tl_ref, *rest):
+        return kv_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
+
+    def row_idx(b, h, s, meta_ref, tl_ref, *rest):
+        # target row window of the appended token; depends on the prefetched
+        # per-request length only (rank-independent slot formula)
+        j_new = _append_slot(tl_ref[b], kvp, rr_block, s_pad)
+        if paged:
+            return (rest[0][b, j_new // block_s], h, j_new % block_s, 0)
+        return (b, h, j_new, 0)
+
+    def srow_idx(b, h, s, meta_ref, tl_ref, *rest):
+        return row_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
+
+    def q_idx(b, h, s, *_):
+        return (b, h, 0, 0)
+
+    def new_idx(b, h, s, *_):
+        return (b, h, 0)
+
+    def lse_idx(b, h, s, *_):
+        return (b, h, 0)
+
+    return {"kv": kv_idx, "scale": scale_idx, "row": row_idx,
+            "srow": srow_idx, "q": q_idx, "new": new_idx, "lse": lse_idx}
+
+
 def _decode_kernel(meta_ref, tl_ref, *refs, scale: float,
                    kvp: int, rr_block: int, block_s: int, s_true: int,
                    contiguous: bool, quant: bool, append: bool, prune: bool,
@@ -362,42 +436,11 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant,
         append=append, prune=prune, paged=paged)
 
-    def logical_block(s, meta_ref, tl_ref, b):
-        # pruned steps re-reference the previous step's block: the DMA is
-        # elided, so HBM reads scale with the valid length, not capacity
-        if not prune:
-            return s
-        lo, nb = prune_block_range(
-            tl_ref[b], meta_ref[0], meta_ref[1], meta_ref[2], kvp=kvp,
-            rr_block=rr_block, block_s=block_s, s_true=s_true,
-            contiguous=contiguous)
-        return _phys_block(s, lo, nb, n_blocks)
-
-    def kv_idx(b, h, s, meta_ref, tl_ref, *rest):
-        # paged: the physical pool page comes from the prefetched table at
-        # the (clamped) logical id — same id as the fixed layout, so the
-        # DMA-elision property survives the indirection (pruning.table_block)
-        lg = logical_block(s, meta_ref, tl_ref, b)
-        if paged:
-            return (rest[0][b, lg], h, 0, 0)
-        return (b, h, lg, 0)
-
-    def scale_idx(b, h, s, meta_ref, tl_ref, *rest):
-        return kv_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
-
-    def row_idx(b, h, s, meta_ref, tl_ref, *rest):
-        # target row window of the appended token; depends on the prefetched
-        # per-request length only (rank-independent slot formula)
-        j_new = _append_slot(tl_ref[b], kvp, rr_block, s_pad)
-        if paged:
-            return (rest[0][b, j_new // block_s], h, j_new % block_s, 0)
-        return (b, h, j_new, 0)
-
-    def srow_idx(b, h, s, meta_ref, tl_ref, *rest):
-        return row_idx(b, h, s, meta_ref, tl_ref, *rest)[:3]
-
-    def q_idx(b, h, s, *_):
-        return (b, h, 0, 0)
+    idx = decode_index_maps(
+        kvp=kvp, rr_block=rr_block, block_s=block_s, s_true=s_true,
+        n_blocks=n_blocks, contiguous=contiguous, prune=prune, paged=paged)
+    q_idx, kv_idx, scale_idx = idx["q"], idx["kv"], idx["scale"]
+    row_idx, srow_idx = idx["row"], idx["srow"]
 
     in_specs = [
         pl.BlockSpec((1, 1, qp, hsz), q_idx),
@@ -407,7 +450,7 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     args = (meta, tl) + ((block_tables,) if paged else ()) + (q, k, v)
     out_specs = [
         pl.BlockSpec((1, 1, qp, hsz), q_idx),
-        pl.BlockSpec((1, 1, qp), lambda b, h, s, *_: (b, h, 0)),
+        pl.BlockSpec((1, 1, qp), idx["lse"]),
     ]
     out_shape = [
         jax.ShapeDtypeStruct((b, kh, qp, hsz), q.dtype),
@@ -425,8 +468,8 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
     if append:
         in_specs += [
-            pl.BlockSpec((1, 1, hsz), lambda b, h, s, *_: (b, h, 0)),
-            pl.BlockSpec((1, 1, hsz), lambda b, h, s, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, hsz), idx["new"]),
+            pl.BlockSpec((1, 1, hsz), idx["new"]),
             pl.BlockSpec((1, 1, 1, hsz), row_idx),
             pl.BlockSpec((1, 1, 1, hsz), row_idx),
         ]

@@ -48,7 +48,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.utils import round_up, pad_dim
-from repro.kernels.flash_decode.kernel import (flash_decode_kernel,
+from repro.kernels.contract import KernelContract, Operand
+from repro.kernels.flash_decode.kernel import (_append_slot,
+                                               decode_index_maps,
+                                               flash_decode_kernel,
                                                prune_block_range)
 
 
@@ -234,3 +237,181 @@ def flash_decode_accounting(q, k, v, total_len, rank, *, kvp: int = 1,
         "block_s": block_s,
         "n_blocks": n_blocks,
     }
+
+# --- static-analysis contract -------------------------------------------
+
+# default audit lattice: prune x window x paged x kv8 x rr/contiguous x
+# slot_offset x fused append, at interpreter-friendly toy shapes.  Mode
+# exclusions mirror flash_decode's assertions (append/paged exclude the
+# contiguous layout and the cache-slice fast path).
+_CONTRACT_LATTICE = (
+    dict(case="rr-prune"),
+    dict(case="rr-dense", prune=False),
+    dict(case="rr-window", window=6),
+    dict(case="rr-window-slice", window=6, slot_offset=3),
+    dict(case="rr-rank0", rank=0),
+    dict(case="contig-prune", contiguous=True, kvp=1, rank=0),
+    dict(case="contig-window", contiguous=True, kvp=1, rank=0, window=6),
+    dict(case="contig-rank1", contiguous=True, rank=1, total_len=(20, 30)),
+    dict(case="kv8-prune", quant=True),
+    dict(case="append-rr", append=True),
+    dict(case="append-kv8", append=True, quant=True),
+    dict(case="append-window", append=True, window=6),
+    dict(case="paged-prune", paged=True),
+    dict(case="paged-dense", paged=True, prune=False),
+    dict(case="paged-kv8", paged=True, quant=True),
+    dict(case="paged-append-kv8", paged=True, quant=True, append=True),
+    dict(case="paged-sink-tail", paged=True, sink_tail=True),
+)
+
+
+def decode_case_contract(case="rr-prune", *, b=2, qh=4, kh=2, hsz=8,
+                         s_cap=16, kvp=2, rr_block=2, block_s=4, rank=1,
+                         total_len=(5, 13), window=0, slot_offset=0,
+                         contiguous=False, quant=False, append=False,
+                         prune=True, paged=False, sink_tail=False, seed=0):
+    """Build the ``KernelContract`` for one flash_decode configuration.
+
+    Mirrors ``flash_decode``'s geometry resolution (padding, block sizing,
+    prefetch layout) at the given shapes and binds the *same* index_map
+    callables the kernel would pass to ``pallas_call``
+    (``kernel.decode_index_maps``), so the static auditor proves properties
+    of the real DMA addressing.  ``sink_tail`` leaves unallocated paged
+    table entries on the reserved sink page 0.  Returns one
+    ``KernelContract``; ``flash_decode_contract`` assembles the lattice.
+    """
+    g = qh // kh
+    qp = round_up(g, 8)
+    if paged:
+        n_blocks = s_cap // block_s
+        s_pad = n_blocks * block_s
+    else:
+        block_s = min(block_s, round_up(s_cap, 128))
+        s_pad = round_up(s_cap, block_s)
+        n_blocks = s_pad // block_s
+    s_true = s_cap
+
+    meta = np.array([rank, slot_offset, window], np.int32)
+    tl = np.broadcast_to(np.asarray(total_len, np.int32).reshape(-1), (b,))
+    prefetch = (meta, tl)
+
+    table = None
+    n_pool = None
+    if paged:
+        rng = np.random.RandomState(seed)
+        n_pool = 1 + b * n_blocks            # page 0 is the reserved sink
+        table = (1 + rng.permutation(b * n_blocks)
+                 .reshape(b, n_blocks)).astype(np.int32)
+        if sink_tail:
+            # entries past the valid span are unallocated -> sink page 0
+            need = (tl + block_s - 1) // block_s
+            for i in range(b):
+                table[i, max(int(need[i]), 1):] = 0
+        prefetch = prefetch + (table,)
+
+    idx = decode_index_maps(
+        kvp=kvp, rr_block=rr_block, block_s=block_s, s_true=s_true,
+        n_blocks=n_blocks, contiguous=contiguous, prune=prune, paged=paged)
+
+    kv_shape = ((n_pool, kh, block_s, hsz) if paged
+                else (b, kh, s_pad, hsz))
+    sc_shape = ((n_pool, kh, block_s) if paged else (b, kh, s_pad))
+    pax = 0 if paged else None
+
+    operands = [
+        Operand("q", (b, kh, qp, hsz), (1, 1, qp, hsz), idx["q"]),
+        Operand("k", kv_shape, (1, 1, block_s, hsz), idx["kv"],
+                streamed=True, paged_axis=pax),
+        Operand("v", kv_shape, (1, 1, block_s, hsz), idx["kv"],
+                streamed=True, paged_axis=pax),
+    ]
+    if quant:
+        operands += [
+            Operand("kscale", sc_shape, (1, 1, block_s), idx["scale"],
+                    streamed=True, paged_axis=pax),
+            Operand("vscale", sc_shape, (1, 1, block_s), idx["scale"],
+                    streamed=True, paged_axis=pax),
+        ]
+    if append:
+        operands += [
+            Operand("k_new", (b, kh, hsz), (1, 1, hsz), idx["new"]),
+            Operand("v_new", (b, kh, hsz), (1, 1, hsz), idx["new"]),
+            Operand("k_row_in", kv_shape, (1, 1, 1, hsz), idx["row"],
+                    paged_axis=pax),
+            Operand("v_row_in", kv_shape, (1, 1, 1, hsz), idx["row"],
+                    paged_axis=pax),
+        ]
+        if quant:
+            operands += [
+                Operand("kscale_row_in", sc_shape, (1, 1, 1), idx["srow"],
+                        paged_axis=pax),
+                Operand("vscale_row_in", sc_shape, (1, 1, 1), idx["srow"],
+                        paged_axis=pax),
+            ]
+    operands += [
+        Operand("out", (b, kh, qp, hsz), (1, 1, qp, hsz), idx["q"],
+                kind="out"),
+        Operand("lse", (b, kh, qp), (1, 1, qp), idx["lse"], kind="out"),
+    ]
+    npre = 3 if paged else 2
+    aliases = {}
+    if append:
+        operands += [
+            Operand("k_row_out", kv_shape, (1, 1, 1, hsz), idx["row"],
+                    kind="out", alias_of="k", paged_axis=pax),
+            Operand("v_row_out", kv_shape, (1, 1, 1, hsz), idx["row"],
+                    kind="out", alias_of="v", paged_axis=pax),
+        ]
+        aliases = {npre + 1: 2, npre + 2: 3}
+        if quant:
+            operands += [
+                Operand("kscale_row_out", sc_shape, (1, 1, 1), idx["srow"],
+                        kind="out", alias_of="kscale", paged_axis=pax),
+                Operand("vscale_row_out", sc_shape, (1, 1, 1), idx["srow"],
+                        kind="out", alias_of="vscale", paged_axis=pax),
+            ]
+            aliases = {npre + 1: 2, npre + 2: 3, npre + 3: 4, npre + 4: 5}
+
+    active = None
+    if prune:
+        lo_d, nb_d = prune_block_range(
+            jnp.asarray(tl), jnp.asarray(rank, jnp.int32),
+            jnp.asarray(slot_offset, jnp.int32),
+            jnp.asarray(window, jnp.int32), kvp=kvp, rr_block=rr_block,
+            block_s=block_s, s_true=s_true, contiguous=contiguous)
+        nb_np = np.asarray(nb_d)
+
+        def active(bi, h, s, _nb=nb_np):
+            return bool(s < _nb[bi])
+
+    expected_row = None
+    if append:
+        j_new = np.asarray(_append_slot(jnp.asarray(tl), kvp, rr_block,
+                                        s_pad))
+
+        def expected_row(bi, h, _j=j_new, _tbl=table):
+            j = int(_j[bi])
+            if _tbl is not None:
+                return (int(_tbl[bi, j // block_s]), h, j % block_s, 0)
+            return (bi, h, j, 0)
+
+    return KernelContract(
+        family="flash_decode", case=case, grid=(b, kh, n_blocks),
+        operands=operands, prefetch=prefetch, stream_axis=2,
+        aliases=aliases, active=active, expected_row=expected_row,
+        table=table, n_pool=n_pool,
+        notes=dict(kvp=kvp, rr_block=rr_block, block_s=block_s,
+                   s_true=s_true, prune=prune, paged=paged, quant=quant,
+                   append=append, contiguous=contiguous, window=window,
+                   slot_offset=slot_offset))
+
+
+def flash_decode_contract():
+    """Contracts for the flash_decode audit lattice (``repro.analysis``).
+
+    One ``KernelContract`` per configuration in the default lattice —
+    prune x window x paged x kv8 x rr/contiguous x slot_offset x fused
+    append — each binding the kernel's real index_map callables at toy
+    shapes the auditor can enumerate exhaustively.
+    """
+    return [decode_case_contract(**dict(c)) for c in _CONTRACT_LATTICE]

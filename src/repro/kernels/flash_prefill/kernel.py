@@ -85,6 +85,42 @@ def prefill_block_range(qi, kv_len, q_offset, window, *, causal: bool,
     return lo, jnp.maximum(hi - lo, 0)
 
 
+def prefill_index_maps(*, causal: bool, blk_q: int, blk_k: int, s_true: int,
+                       n_kblocks: int, prune: bool, paged: bool):
+    """Named index_map callables for one prefill-kernel configuration.
+
+    The single source of truth for the kernel's DMA addressing:
+    ``flash_prefill_kernel`` passes exactly these callables to
+    ``pallas_call``, and ``ops.flash_prefill_contract`` exposes the same
+    callables to the static index-space auditor (``repro.analysis``).
+
+    Every map takes ``(b, h, qi, ki, meta_ref, len_ref, off_ref,
+    [tables_ref])`` and is a pure jnp function of its arguments (no
+    data-dependent python branches; see ``kernels/pruning.py``).  Keys:
+
+      kv  streamed K/V blocks (1, 1, blk_k, hsz); skip-clamped, and
+          table-indirected in paged mode
+      q   resident query / output blocks (constant along the kv axis)
+    """
+
+    def kv_idx(b, h, qi, ki, meta_ref, len_ref, off_ref, *rest):
+        if prune:
+            lo, nb = prefill_block_range(
+                qi, len_ref[b], off_ref[b], meta_ref[0], causal=causal,
+                blk_q=blk_q, blk_k=blk_k, s_true=s_true)
+            lg = _phys_block(ki, lo, nb, n_kblocks)
+        else:
+            lg = ki
+        if paged:
+            return (rest[0][b, lg], h, 0, 0)
+        return (b, h, lg, 0)
+
+    def q_idx(b, h, qi, ki, *_):
+        return (b, h, qi, 0)
+
+    return {"kv": kv_idx, "q": q_idx}
+
+
 def _prefill_kernel(meta_ref, len_ref, off_ref, *refs, scale: float,
                     causal: bool, blk_q: int, blk_k: int, g: int, hsz: int,
                     s_true: int, prune: bool, paged: bool):
@@ -205,17 +241,10 @@ def flash_prefill_kernel(q, k, v, meta, lens, offs, *, scale: float,
                                blk_q=blk_q, blk_k=blk_k, g=g, hsz=hsz,
                                s_true=s_true, prune=prune, paged=paged)
 
-    def kv_idx(b, h, qi, ki, meta_ref, len_ref, off_ref, *rest):
-        if prune:
-            lo, nb = prefill_block_range(
-                qi, len_ref[b], off_ref[b], meta_ref[0], causal=causal,
-                blk_q=blk_q, blk_k=blk_k, s_true=s_true)
-            lg = _phys_block(ki, lo, nb, n_kblocks)
-        else:
-            lg = ki
-        if paged:
-            return (rest[0][b, lg], h, 0, 0)
-        return (b, h, lg, 0)
+    idx = prefill_index_maps(causal=causal, blk_q=blk_q, blk_k=blk_k,
+                             s_true=s_true, n_kblocks=n_kblocks, prune=prune,
+                             paged=paged)
+    kv_idx, q_idx = idx["kv"], idx["q"]
 
     return pl.pallas_call(
         kernel,
@@ -223,13 +252,11 @@ def flash_prefill_kernel(q, k, v, meta, lens, offs, *, scale: float,
             num_scalar_prefetch=4 if paged else 3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, blk_q, ghsz),
-                             lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, blk_q, ghsz), q_idx),
                 pl.BlockSpec((1, 1, blk_k, hsz), kv_idx),
                 pl.BlockSpec((1, 1, blk_k, hsz), kv_idx),
             ],
-            out_specs=pl.BlockSpec((1, 1, blk_q, ghsz),
-                                   lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+            out_specs=pl.BlockSpec((1, 1, blk_q, ghsz), q_idx),
             scratch_shapes=[
                 pltpu.VMEM((blk_q * g, hsz), jnp.float32),
                 pltpu.VMEM((blk_q * g, 1), jnp.float32),

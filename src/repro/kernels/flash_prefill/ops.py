@@ -179,3 +179,111 @@ def flash_prefill_accounting(q, k, v, *, causal: bool = True, window=0,
         "n_qblocks": n_q,
         "n_kblocks": n_k,
     }
+
+# --- static-analysis contract -------------------------------------------
+
+from repro.kernels.contract import KernelContract, Operand  # noqa: E402
+from repro.kernels.flash_prefill.kernel import prefill_index_maps  # noqa: E402
+
+# default audit lattice: causal x window x prune x paged x ragged packing
+_CONTRACT_LATTICE = (
+    dict(case="causal-prune"),
+    dict(case="causal-dense", prune=False),
+    dict(case="causal-window", window=6),
+    dict(case="causal-ragged", q_offset=(0, 3), seq_lens=(5, 16)),
+    dict(case="cross-dense", causal=False, prune=False),
+    dict(case="cross-lens", causal=False, seq_lens=(5, 16)),
+    dict(case="paged-prune", paged=True, seq_lens=(5, 16)),
+    dict(case="paged-window", paged=True, window=6, seq_lens=(5, 16)),
+    dict(case="paged-sink-tail", paged=True, seq_lens=(5, 12),
+         sink_tail=True),
+)
+
+
+def prefill_case_contract(case="causal-prune", *, b=2, kh=2, g=2, hsz=8,
+                          t=8, s=16, blk_q=4, blk_k=4, causal=True,
+                          window=0, q_offset=0, seq_lens=None, prune=True,
+                          paged=False, sink_tail=False, seed=0):
+    """Build the ``KernelContract`` for one flash_prefill configuration.
+
+    Mirrors ``flash_prefill``'s geometry resolution (block sizing, padding,
+    prefetch layout) and binds the *same* index_map callables the kernel
+    passes to ``pallas_call`` (``kernel.prefill_index_maps``).  Returns one
+    ``KernelContract``; ``flash_prefill_contract`` assembles the lattice.
+    """
+    blk_q = min(blk_q, round_up(t, 8))
+    t_pad = round_up(t, blk_q)
+    if paged:
+        n_kblocks = s // blk_k
+        s_pad = n_kblocks * blk_k
+    else:
+        blk_k = min(blk_k, round_up(s, 8))
+        s_pad = round_up(s, blk_k)
+        n_kblocks = s_pad // blk_k
+
+    meta = np.array([window], np.int32)
+    lens = (np.full((b,), s, np.int32) if seq_lens is None
+            else np.broadcast_to(np.asarray(seq_lens, np.int32), (b,)))
+    offs = np.broadcast_to(np.asarray(q_offset, np.int32).reshape(-1), (b,))
+    prefetch = (meta, lens, offs)
+
+    table = None
+    n_pool = None
+    if paged:
+        rng = np.random.RandomState(seed)
+        n_pool = 1 + b * n_kblocks           # page 0 is the reserved sink
+        table = (1 + rng.permutation(b * n_kblocks)
+                 .reshape(b, n_kblocks)).astype(np.int32)
+        if sink_tail:
+            need = (lens + blk_k - 1) // blk_k
+            for i in range(b):
+                table[i, max(int(need[i]), 1):] = 0
+        prefetch = prefetch + (table,)
+
+    idx = prefill_index_maps(causal=causal, blk_q=blk_q, blk_k=blk_k,
+                             s_true=s, n_kblocks=n_kblocks, prune=prune,
+                             paged=paged)
+
+    kv_shape = ((n_pool, kh, blk_k, hsz) if paged
+                else (b, kh, s_pad, hsz))
+    pax = 0 if paged else None
+    operands = [
+        Operand("q", (b, kh, t_pad, g * hsz), (1, 1, blk_q, g * hsz),
+                idx["q"]),
+        Operand("k", kv_shape, (1, 1, blk_k, hsz), idx["kv"],
+                streamed=True, paged_axis=pax),
+        Operand("v", kv_shape, (1, 1, blk_k, hsz), idx["kv"],
+                streamed=True, paged_axis=pax),
+        Operand("out", (b, kh, t_pad, g * hsz), (1, 1, blk_q, g * hsz),
+                idx["q"], kind="out"),
+    ]
+
+    active = None
+    if prune:
+        _, nb = prefill_block_range(
+            jnp.arange(t_pad // blk_q, dtype=jnp.int32)[None, :],
+            jnp.asarray(lens)[:, None], jnp.asarray(offs)[:, None],
+            jnp.asarray(window, jnp.int32), causal=causal, blk_q=blk_q,
+            blk_k=blk_k, s_true=s)
+        nb_np = np.asarray(nb)
+
+        def active(bi, h, qi, ki, _nb=nb_np):
+            return bool(ki < _nb[bi, qi])
+
+    return KernelContract(
+        family="flash_prefill", case=case,
+        grid=(b, kh, t_pad // blk_q, n_kblocks), operands=operands,
+        prefetch=prefetch, stream_axis=3, active=active, table=table,
+        n_pool=n_pool,
+        notes=dict(causal=causal, window=window, prune=prune, paged=paged,
+                   blk_q=blk_q, blk_k=blk_k, s_true=s))
+
+
+def flash_prefill_contract():
+    """Contracts for the flash_prefill audit lattice (``repro.analysis``).
+
+    One ``KernelContract`` per configuration in the default lattice —
+    causal x window x prune x paged x ragged chunk packing — each binding
+    the kernel's real index_map callables at toy shapes.
+    """
+    return [prefill_case_contract(**dict(c)) for c in _CONTRACT_LATTICE]

@@ -68,6 +68,14 @@ class KernelFamily:
     ``index_map`` and reports the HBM blocks/bytes a call streams
     (benchmarks and the CI pruning smoke consume it via
     ``registry.accounting``).
+
+    ``contract`` names the family's static-analysis contract hook: a
+    zero-argument function returning the ``KernelContract`` list
+    (``kernels/contract.py``) the index-space auditor (``repro.analysis``)
+    proves bounds/DMA-elision/alias-race properties over.  Every family
+    must carry one — ``scripts/analyze.py --strict`` fails loudly
+    (``contract.missing``) for a family without it rather than silently
+    skipping it.
     """
     name: str
     ref: str                  # "module:function" of the pure-jnp oracle
@@ -75,6 +83,7 @@ class KernelFamily:
     used_by: str              # call-site summary for the backend table
     grad: str = "none"        # "none" | "ref-vjp"
     accounting: str | None = None   # "module:function" block accounting
+    contract: str | None = None     # "module:function" analysis contracts
 
     def _load(self, spec: str) -> Callable:
         import importlib
@@ -102,7 +111,9 @@ FAMILIES: dict[str, KernelFamily] = {
             used_by="Helix decode attention (core/helix._local_attend)",
             grad="none",
             accounting="repro.kernels.flash_decode.ops:"
-                       "flash_decode_accounting"),
+                       "flash_decode_accounting",
+            contract="repro.kernels.flash_decode.ops:"
+                     "flash_decode_contract"),
         KernelFamily(
             name="flash_prefill",
             ref="repro.kernels.flash_prefill.ref:flash_prefill_ref",
@@ -111,20 +122,25 @@ FAMILIES: dict[str, KernelFamily] = {
                     "prefill_attention)",
             grad="ref-vjp",
             accounting="repro.kernels.flash_prefill.ops:"
-                       "flash_prefill_accounting"),
+                       "flash_prefill_accounting",
+            contract="repro.kernels.flash_prefill.ops:"
+                     "flash_prefill_contract"),
         KernelFamily(
             name="ssd_prefill",
             ref="repro.kernels.ssd_prefill.ref:ssd_prefill_ref",
             kernel="repro.kernels.ssd_prefill.ops:ssd_prefill",
             used_by="Mamba2 SSD prefill core (models/ssm.ssd_chunked)",
-            grad="ref-vjp"),
+            grad="ref-vjp",
+            contract="repro.kernels.ssd_prefill.ops:ssd_prefill_contract"),
         KernelFamily(
             name="w8a16_matmul",
             ref="repro.kernels.w8a16_matmul.ref:w8a16_matmul_ref",
             kernel="repro.kernels.w8a16_matmul.ops:w8a16_matmul",
             used_by="int8-weight lm_head matmul (decode_model, "
                     "HelixConfig.lm_head_w8)",
-            grad="none"),
+            grad="none",
+            contract="repro.kernels.w8a16_matmul.ops:"
+                     "w8a16_matmul_contract"),
     )
 }
 
@@ -163,6 +179,24 @@ def accounting(family: str) -> Callable:
     return fam._load(fam.accounting)
 
 
+def contract_suite(family: str) -> list:
+    """The family's ``KernelContract`` list for the static auditor.
+
+    Loads and calls the family's ``contract`` hook (see ``KernelFamily``).
+    Raises ``ValueError`` for unknown families and for families without a
+    contract hook — the analyzer turns the latter into a
+    ``contract.missing`` finding instead of silently skipping the family.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; "
+                         f"registered: {sorted(FAMILIES)}")
+    fam = FAMILIES[family]
+    if fam.contract is None:
+        raise ValueError(f"kernel family {family!r} has no analysis "
+                         f"contract hook (see docs/analysis.md)")
+    return fam._load(fam.contract)()
+
+
 def interpret_flag(backend: str) -> bool:
     """The ``interpret=`` value for a Pallas backend string."""
     assert backend in ("pallas-interpret", "pallas"), backend
@@ -194,8 +228,9 @@ def backend_table() -> str:
     broken kernel module fails the listing.
     """
     rows = [f"{'family':<14s} {'grad':<8s} "
-            + "".join(f"{b:<18s}" for b in BACKENDS) + "  used by"]
-    rows.append("-" * 78)
+            + "".join(f"{b:<18s}" for b in BACKENDS)
+            + f"{'contract':<10s}" + "  used by"]
+    rows.append("-" * 88)
     for name, fam in FAMILIES.items():
         cells = []
         for b in BACKENDS:
@@ -204,6 +239,13 @@ def backend_table() -> str:
         for backend in ("ref", "pallas-interpret"):
             # resolving imports the module: a broken kernel fails loudly here
             fam.resolve(backend)
+        if fam.contract is not None:
+            # same loud-failure policy for the analysis contract hook
+            fam._load(fam.contract)
+            contract_cell = "yes"
+        else:
+            contract_cell = "MISSING"
         rows.append(f"{name:<14s} {fam.grad:<8s} "
-                    + "".join(f"{c:<18s}" for c in cells) + f"  {fam.used_by}")
+                    + "".join(f"{c:<18s}" for c in cells)
+                    + f"{contract_cell:<10s}" + f"  {fam.used_by}")
     return "\n".join(rows)

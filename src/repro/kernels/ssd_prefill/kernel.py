@@ -23,6 +23,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def ssd_index_maps():
+    """Named index_map callables for the SSD-prefill kernel.
+
+    The single source of truth for the kernel's block addressing:
+    ``ssd_prefill_kernel`` passes exactly these callables to
+    ``pallas_call``, and ``ops.ssd_prefill_contract`` exposes them to the
+    static index-space auditor (``repro.analysis``).  All maps are static
+    functions of the grid coordinates ``(b, h, c)`` — the SSD scan
+    prefetches no scalars.  Keys:
+
+      chunk  token-chunk streams (x, dt, B, C, y) — block (1, 1, lc, ·)
+      head   per-head constants (a, d) — block (1, 1)
+      state  chunk-carry state (h0, h_out) — resident along the chunk axis
+    """
+    return {
+        "chunk": lambda b, h, c: (b, h, c, 0),
+        "head": lambda b, h, c: (h, 0),
+        "state": lambda b, h, c: (b, h, 0, 0),
+    }
+
+
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref, y_ref,
                 hout_ref, h_ref, *, lc: int, hd: int, ds: int):
     ci = pl.program_id(2)
@@ -86,21 +107,22 @@ def ssd_prefill_kernel(x, dt, a, bmat, cmat, d, h0, *, lc: int,
     assert t % lc == 0
     grid = (b, nh, t // lc)
     kernel = functools.partial(_ssd_kernel, lc=lc, hd=hd, ds=ds)
+    idx = ssd_index_maps()
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, lc, hd), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1, lc, 1), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
-            pl.BlockSpec((1, 1, lc, ds), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1, lc, ds), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
-            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, lc, hd), idx["chunk"]),
+            pl.BlockSpec((1, 1, lc, 1), idx["chunk"]),
+            pl.BlockSpec((1, 1), idx["head"]),
+            pl.BlockSpec((1, 1, lc, ds), idx["chunk"]),
+            pl.BlockSpec((1, 1, lc, ds), idx["chunk"]),
+            pl.BlockSpec((1, 1), idx["head"]),
+            pl.BlockSpec((1, 1, hd, ds), idx["state"]),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, lc, hd), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, lc, hd), idx["chunk"]),
+            pl.BlockSpec((1, 1, hd, ds), idx["state"]),
         ],
         scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
         out_shape=[

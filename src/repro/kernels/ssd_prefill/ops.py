@@ -51,3 +51,47 @@ def ssd_prefill(x, dt, a, bmat, cmat, d, *, h0=None, lc: int = 64,
         bb, cb, d.astype(jnp.float32)[:, None], h0.astype(jnp.float32),
         lc=lc, interpret=interpret)
     return y.transpose(0, 2, 1, 3)[:, :t], h
+
+# --- static-analysis contract -------------------------------------------
+
+from repro.kernels.contract import KernelContract, Operand  # noqa: E402
+from repro.kernels.ssd_prefill.kernel import ssd_index_maps  # noqa: E402
+
+
+def ssd_prefill_contract():
+    """Contracts for the ssd_prefill audit lattice (``repro.analysis``).
+
+    The SSD scan has no scalar prefetch, pruning, or aliasing — the
+    contract pins the static chunk/head/state block addressing
+    (``kernel.ssd_index_maps``, the same callables ``ssd_prefill_kernel``
+    passes to ``pallas_call``) over a small chunked and a single-chunk
+    geometry so the auditor proves in-bounds access and that the
+    chunk-carry state stays resident along the scan axis.
+    """
+    contracts = []
+    for case, (b, nh, t, hd, ds, lc) in (
+            ("chunked", (2, 2, 8, 8, 8, 4)),
+            ("one-chunk", (1, 2, 4, 8, 8, 4))):
+        idx = ssd_index_maps()
+        operands = [
+            Operand("x", (b, nh, t, hd), (1, 1, lc, hd), idx["chunk"],
+                    streamed=True),
+            Operand("dt", (b, nh, t, 1), (1, 1, lc, 1), idx["chunk"],
+                    streamed=True),
+            Operand("a", (nh, 1), (1, 1), idx["head"]),
+            Operand("bmat", (b, nh, t, ds), (1, 1, lc, ds), idx["chunk"],
+                    streamed=True),
+            Operand("cmat", (b, nh, t, ds), (1, 1, lc, ds), idx["chunk"],
+                    streamed=True),
+            Operand("d", (nh, 1), (1, 1), idx["head"]),
+            Operand("h0", (b, nh, hd, ds), (1, 1, hd, ds), idx["state"]),
+            Operand("y", (b, nh, t, hd), (1, 1, lc, hd), idx["chunk"],
+                    kind="out"),
+            Operand("h_out", (b, nh, hd, ds), (1, 1, hd, ds), idx["state"],
+                    kind="out"),
+        ]
+        contracts.append(KernelContract(
+            family="ssd_prefill", case=case, grid=(b, nh, t // lc),
+            operands=operands, stream_axis=2,
+            notes=dict(lc=lc, hd=hd, ds=ds)))
+    return contracts

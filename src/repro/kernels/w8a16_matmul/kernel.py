@@ -21,6 +21,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def w8a16_index_maps():
+    """Named index_map callables for the w8a16 matmul kernel.
+
+    The single source of truth for the kernel's block addressing:
+    ``w8a16_matmul_kernel`` passes exactly these callables to
+    ``pallas_call``, and ``ops.w8a16_matmul_contract`` exposes them to the
+    static index-space auditor (``repro.analysis``).  All maps are static
+    functions of the grid coordinates ``(i, j, ki)``.  Keys:
+
+      x      activation blocks (bm, bk), streamed along K
+      w      int8 weight blocks (bk, bn), streamed along K
+      scale  per-N-block dequant scales (1, bn), resident along K
+      out    output blocks (bm, bn)
+    """
+    return {
+        "x": lambda i, j, ki: (i, ki),
+        "w": lambda i, j, ki: (ki, j),
+        "scale": lambda i, j, ki: (0, j),
+        "out": lambda i, j, ki: (i, j),
+    }
+
+
 def _w8a16_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bm, bn, bk):
     ki = pl.program_id(2)
 
@@ -47,15 +69,16 @@ def w8a16_matmul_kernel(x, qw, scale, *, bm, bn, bk, interpret: bool = True):
     n = qw.shape[1]
     grid = (m // bm, n // bn, k // bk)
     kernel = functools.partial(_w8a16_kernel, bm=bm, bn=bn, bk=bk)
+    idx = w8a16_index_maps()
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
-            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
-            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+            pl.BlockSpec((bm, bk), idx["x"]),
+            pl.BlockSpec((bk, bn), idx["w"]),
+            pl.BlockSpec((1, bn), idx["scale"]),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), idx["out"]),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         interpret=interpret,

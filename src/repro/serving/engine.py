@@ -247,11 +247,19 @@ class DecodeEngine:
             self.step()
 
     def describe_backends(self) -> str:
-        """One-line per-family kernel-backend summary (serve logging)."""
+        """One-line per-family kernel-backend summary (serve logging).
+
+        Each family is tagged ``!nocontract`` when it registers no
+        static-analysis contract hook — the same condition
+        ``scripts/analyze.py --strict`` fails on (``contract.missing``),
+        surfaced here so a serving log shows unaudited kernels at a glance.
+        """
         if self.hx is None:
             return "ref (no HelixConfig)"
         from repro.kernels import registry
         parts = [f"{family}={getattr(self.hx, field)}"
+                 + ("" if registry.FAMILIES[family].contract is not None
+                    else "!nocontract")
                  for field, family in registry.FAMILY_FIELDS.items()]
         parts.append(f"fuse_append={self.hx.fuse_append}")
         parts.append(f"prune_blocks={self.hx.prune_blocks}")
@@ -367,7 +375,10 @@ class DecodeEngine:
         toks = jnp.asarray(toks_list, jnp.int32)[None, :]
         last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
         self._scatter_state(pstate, slot, len(toks_list), req)
-        nxt = int(jnp.argmax(last_logits[0, :self.cfg.vocab]))
+        # device-side argmax, then the same batched host transfer as
+        # step(): one np.asarray per prefill, never a per-token int(jnp)
+        nxt_dev = jnp.argmax(last_logits[:, :self.cfg.vocab], axis=-1)
+        nxt = int(np.asarray(nxt_dev)[0])
         return self._commit_first_token(req, slot, nxt)
 
     def _commit_first_token(self, req: Request, slot: int,
