@@ -58,19 +58,26 @@ ROW_SCHEMA = {
     # layouts)
     "paged_kv": bool, "pool_occupancy_peak": float,
     "pool_frag_mean": float, "capacity_retired": int,
+    # prefix sharing: share of chunked admissions that matched a cached
+    # prefix, and the peak count of pages mapped by >1 request (zeros on
+    # rows without --prefix-share)
+    "prefix_share": bool, "prefix_hit_rate": float,
+    "pages_shared_peak": int,
 }
 
 
 def bench_cell(arch: str, *, load: float, chunk_tokens: int,
                sched_policy: str, requests: int, prompt_len: int,
                max_new: int, max_batch: int, seed: int = 0,
-               paged_kv: bool = False) -> dict:
+               paged_kv: bool = False, prefix_share: bool = False,
+               shared_prefix_len: int = 0) -> dict:
     """One (load, chunk_tokens, paged_kv) sweep cell -> a ROW_SCHEMA row."""
     finished, summary = serve_demo(
         arch, reduced=True, n_requests=requests, prompt_len=prompt_len,
         max_new=max_new, max_batch=max_batch, chunk_tokens=chunk_tokens,
         sched_policy=sched_policy, traffic="poisson", arrival_rate=load,
-        paged_kv=True if paged_kv else None,
+        paged_kv=True if paged_kv else None, prefix_share=prefix_share,
+        shared_prefix_len=shared_prefix_len,
         seed=seed, log=lambda s: None)
     return {
         "load": float(load),
@@ -88,6 +95,9 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         "pool_occupancy_peak": float(summary["pool_occupancy_peak"]),
         "pool_frag_mean": float(summary["pool_frag_mean"]),
         "capacity_retired": int(summary["capacity_retired"]),
+        "prefix_share": bool(prefix_share),
+        "prefix_hit_rate": float(summary["prefix_hit_rate"]),
+        "pages_shared_peak": int(summary["pages_shared_peak"]),
     }
 
 
@@ -107,34 +117,57 @@ def main():
                     help="also sweep every cell with the shared-pool paged "
                          "KV cache (records pool occupancy / fragmentation "
                          "/ capacity retirements per row)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="also sweep paged+chunked cells with the prefix "
+                         "index + copy-on-write page sharing on a "
+                         "shared-prefix workload (records prefix_hit_rate "
+                         "and pages_shared_peak per row)")
+    ap.add_argument("--shared-prefix-len", type=int, default=32,
+                    help="prefix-share rows: common leading tokens per "
+                         "prompt")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell: one load, 4 requests, short prompts"
-                         " (includes one paged row)")
+                         " (includes one paged + one prefix-share row)")
     args = ap.parse_args()
 
     if args.smoke:
         args.loads, args.chunks = [1.0], [0, 4]
-        args.requests, args.prompt_len, args.max_new = 4, 12, 4
+        args.requests, args.prompt_len, args.max_new = 4, 20, 8
         args.max_batch = 2
         args.paged_kv = True
+        # the shared prefix must span >= 1 full page (kvp * rr_block = 16
+        # positions here) for whole-page sharing — shorter prefixes only
+        # exercise the KV-restore path and pages_shared_peak stays 0 —
+        # and followers must arrive while the registrant still decodes
+        # (max_new stretches its lifetime past the arrival gaps)
+        args.prefix_share, args.shared_prefix_len = True, 16
 
     rows = []
     for load in args.loads:
         for chunk in args.chunks:
             for paged in ((False, True) if args.paged_kv else (False,)):
-                row = bench_cell(args.arch, load=load, chunk_tokens=chunk,
-                                 sched_policy=args.sched_policy,
-                                 requests=args.requests,
-                                 prompt_len=args.prompt_len,
-                                 max_new=args.max_new,
-                                 max_batch=args.max_batch, paged_kv=paged)
-                rows.append(row)
-                print(f"load={load:<5} chunk={chunk:<4} "
-                      f"paged={int(paged)} "
-                      f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
-                      f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
-                      f"tput={row['throughput_tok_s']:7.1f} tok/s "
-                      f"pool_occ={row['pool_occupancy_peak']:.2f}")
+                shares = ((False, True)
+                          if args.prefix_share and paged and chunk
+                          else (False,))
+                for share in shares:
+                    row = bench_cell(
+                        args.arch, load=load, chunk_tokens=chunk,
+                        sched_policy=args.sched_policy,
+                        requests=args.requests,
+                        prompt_len=args.prompt_len,
+                        max_new=args.max_new,
+                        max_batch=args.max_batch, paged_kv=paged,
+                        prefix_share=share,
+                        shared_prefix_len=(args.shared_prefix_len
+                                           if share else 0))
+                    rows.append(row)
+                    print(f"load={load:<5} chunk={chunk:<4} "
+                          f"paged={int(paged)} share={int(share)} "
+                          f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
+                          f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
+                          f"tput={row['throughput_tok_s']:7.1f} tok/s "
+                          f"pool_occ={row['pool_occupancy_peak']:.2f} "
+                          f"hit={row['prefix_hit_rate']:.2f}")
 
     out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
                     "requests": args.requests, "prompt_len": args.prompt_len,

@@ -58,6 +58,22 @@ def check(path: pathlib.Path) -> list[str]:
                 if row.get(key, 0) != 0:
                     errors.append(f"row {i}: fixed-cap row has nonzero "
                                   f"{key}: {row.get(key)}")
+        # prefix-sharing columns: a sharing row must have matched at least
+        # one prefix (else the workload/stagger is broken and the row is
+        # measuring nothing); non-sharing rows must report zeros
+        if row.get("prefix_share"):
+            if not 0 < row.get("prefix_hit_rate", 0) <= 1:
+                errors.append(f"row {i}: prefix_share row needs "
+                              f"prefix_hit_rate in (0, 1], got "
+                              f"{row.get('prefix_hit_rate')}")
+            if not row.get("pages_shared_peak", 0) >= 1:
+                errors.append(f"row {i}: prefix_share row needs "
+                              "pages_shared_peak >= 1")
+        else:
+            for key in ("prefix_hit_rate", "pages_shared_peak"):
+                if row.get(key, 0) != 0:
+                    errors.append(f"row {i}: non-sharing row has nonzero "
+                                  f"{key}: {row.get(key)}")
     return errors
 
 

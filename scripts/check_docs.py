@@ -68,6 +68,7 @@ def check_docstrings() -> None:
         ("repro.serving.engine", "DecodeEngine"),
         ("repro.serving.scheduler", "Scheduler"),
         ("repro.serving.scheduler", "Request"),
+        ("repro.serving.scheduler", "PrefixIndex"),
         ("repro.serving.metrics", "EngineMetrics"),
         ("repro.serving.pool", "BlockAllocator"),
         ("repro.serving.pool", "pages_for"),

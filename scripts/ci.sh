@@ -35,6 +35,12 @@ python scripts/prune_smoke.py
 # identical to the fixed per-slot layout (one-shot + chunked prefill)
 python scripts/paged_smoke.py
 
+# prefix-sharing smoke: refcounted copy-on-write page sharing + grouped
+# shared-prefix decode must keep token streams identical to the unshared
+# run, prefill only the suffix on a hit, and read shared prefix pages once
+# per group (accounting bytes check)
+python scripts/prefix_smoke.py
+
 # serving smoke: scheduler-driven engine with chunked prefill under synthetic
 # Poisson traffic; writes BENCH_serving.json (incl. a --paged-kv row with
 # pool occupancy/fragmentation columns) whose schema is then asserted

@@ -112,7 +112,15 @@ def _check_bounds(contract, op, table) -> list[Finding]:
 
 
 def _check_table(contract) -> list[Finding]:
-    """Paged block-table sanity: pool-range + cross-request overlap."""
+    """Paged block-table sanity: pool-range + cross-request overlap.
+
+    A non-sink page mapped by two request rows is an alias race by default.
+    Contracts carrying the ``shared_ok`` note (refcounted prefix sharing
+    with copy-on-write — serving/pool.py) may share *read-only* pages
+    across rows; pages a fused-append row window writes
+    (``contract.expected_row``) must stay exclusive even then, since the
+    engine's CoW guard guarantees an appended page has refcount 1.
+    """
     findings = []
     table = np.asarray(contract.table)
     n_pool = contract.n_pool
@@ -125,6 +133,13 @@ def _check_table(contract) -> list[Finding]:
                     f"{_fmt_steps(bad)} -> "
                     f"{table[tuple(bad[:_MAX_DETAIL].T)].tolist()}"))
         return findings
+    shared_ok = bool(contract.notes.get("shared_ok"))
+    write_pages: set[int] = set()
+    if shared_ok and contract.expected_row is not None:
+        kh = contract.grid[1] if len(contract.grid) > 1 else 1
+        for bi in range(table.shape[0]):
+            for h in range(kh):
+                write_pages.add(int(contract.expected_row(bi, h)[0]))
     seen: dict[int, int] = {}
     for b in range(table.shape[0]):
         for p in table[b]:
@@ -132,11 +147,15 @@ def _check_table(contract) -> list[Finding]:
             if p == 0:
                 continue        # shared sink page: duplicates intended
             if p in seen and seen[p] != b:
+                if shared_ok and p not in write_pages:
+                    continue    # read-only refcounted prefix page
+                what = ("append-target page shared across requests"
+                        if shared_ok else "shared writable page")
                 findings.append(Finding(
                     check="alias.race", path=_path(contract),
                     symbol=_symbol(contract, "block_table"),
                     message=f"non-sink pool page {p} mapped by requests "
-                            f"{seen[p]} and {b} — shared writable page"))
+                            f"{seen[p]} and {b} — {what}"))
             seen[p] = b
     return findings
 

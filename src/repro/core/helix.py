@@ -102,7 +102,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                   contiguous: bool, kscale=None, vscale=None,
                   backend: str = "ref", k_new=None, v_new=None,
                   prune: bool = True, block_tables=None,
-                  block_s: int = 512):
+                  block_s: int = 512, groups=None):
     """Per-rank partial attention + LSE over the local KV shard.
 
     contiguous=True: static split (whisper cross-attn KV) — every local slot
@@ -127,6 +127,9 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
     backend gathers the pages into the equivalent dense local cache first
     (bit-exact — masked tail slots contribute exact zeros).
     block_s: fixed-layout kernel S-block size (``HelixConfig.attn_block_s``).
+    groups: (group_id [B], group_np [B]) — grouped shared-prefix decode
+    (Pallas paged mode); the ref backend *ignores* the grouping, which is
+    exactly the oracle semantics (grouping must not change results).
     """
     fused = k_new is not None
     paged = block_tables is not None
@@ -134,6 +137,8 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
         "fused append requires a Pallas backend"
     assert not (paged and contiguous), \
         "paged mode excludes the contiguous (cross-attn) layout"
+    assert groups is None or paged, \
+        "grouped decode requires the paged pool"
     if paged and backend == "ref":
         from repro.core.kvcache import gather_pages
         k = gather_pages(k, block_tables)
@@ -172,7 +177,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
                             kscale=kscale, vscale=vscale,
                             k_new=k_new, v_new=v_new, prune=prune,
                             block_tables=block_tables, block_s=block_s,
-                            interpret=backend != "pallas")
+                            groups=groups, interpret=backend != "pallas")
     # ---- pure-JAX reference path ----
     if contiguous:
         # positions rank*s_loc + j: with kvp=1 the round-robin formula
@@ -191,7 +196,7 @@ def _local_attend(q, k, v, total_len, rank, *, kvp, rr_block, window,
 def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     *, window: int | jax.Array = 0, contiguous: bool = False,
                     hopb_chunks: int = 1, kscale=None, vscale=None,
-                    k_new=None, v_new=None, block_tables=None):
+                    k_new=None, v_new=None, block_tables=None, groups=None):
     """Exact sharded decode attention.
 
     Args:
@@ -222,6 +227,14 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                     replicated; per-rank attention streams pages through
                     it.  Fused append composes (the kernel writes the new
                     row's page through the table).
+      groups:       (group_id [B], group_np [B]) int32 — grouped shared-
+                    prefix decode (paged mode): requests whose tables share
+                    their leading ``group_np`` pages stream each shared page
+                    once per group (kernels/flash_decode ``groups``).  Both
+                    arrays are replicated; the ref backend ignores them
+                    (grouping is bit-exact, so the oracle doesn't need
+                    them).  Forces ``hopb_chunks=1`` — groups span the
+                    whole batch, chunking would split them.
 
     Returns: [B, Qh*hsz] attention output, sharded over (tpa, kvp) on dim 1 —
     exactly the TP layout the post-attention projection consumes (§2.2).
@@ -237,8 +250,12 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
     qh_local = qh // (mesh.shape[tpa] if tpa else 1)
     fused = k_new is not None
     paged = block_tables is not None
+    grouped = groups is not None
     assert not fused or not contiguous
     assert not (paged and contiguous)
+    assert not grouped or paged, "grouped decode requires the paged pool"
+    if grouped:
+        hopb_chunks = 1        # groups span the batch; chunks would split them
     # The all-to-all splits the flattened (Qh_local*hsz) dim into KVP slices.
     # When it does not divide (e.g. hymba q_dim=1600, N=256) we zero-pad the
     # flat dim only — attention itself runs the canonical heads; pad elements
@@ -255,13 +272,15 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
 
     def local_fn(q_l, k_l, v_l, tl, *extras):
         rank = jax.lax.axis_index(kvp_axes)
-        ks_l = vs_l = kn_l = vn_l = tbl_l = None
+        ks_l = vs_l = kn_l = vn_l = tbl_l = grp_l = None
         if kscale is not None:
             ks_l, vs_l, extras = extras[0], extras[1], extras[2:]
         if fused:
             kn_l, vn_l, extras = extras[0], extras[1], extras[2:]
         if paged:
-            (tbl_l,) = extras
+            tbl_l, extras = extras[0], extras[1:]
+        if grouped:
+            grp_l = (extras[0], extras[1])
         res = _local_attend(q_l, k_l, v_l, tl, rank, kvp=kvp,
                             rr_block=hx.rr_block, window=window,
                             contiguous=contiguous,
@@ -270,7 +289,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
                             k_new=kn_l, v_new=vn_l,
                             prune=hx.prune_blocks,
                             block_tables=tbl_l,
-                            block_s=hx.attn_block_s)
+                            block_s=hx.attn_block_s,
+                            groups=grp_l)
         out, lse = res[0], res[1]
         bl = out.shape[0]
         # single all-to-all over the query-head axis (§2.1.2): volume B×H/TPA,
@@ -306,6 +326,8 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
         in_specs += (P(None, tpa, None), P(None, tpa, None))  # k_new, v_new
     if paged:
         in_specs += (P(None, None),)                      # tables: replicated
+    if grouped:
+        in_specs += (P(None), P(None))                    # group_id, group_np
     out_spec = P(None, ((tpa,) if tpa else ()) + kvp_axes)
     scale_spec = P(None, tpa, kvp_axes)
     if fused:
@@ -326,6 +348,9 @@ def helix_attention(mesh: Mesh, hx: HelixConfig, q, kcache, vcache, total_len,
             args += (kns, vns)
         if paged:
             args += (tbl,)
+        if grouped:
+            args += (jnp.asarray(groups[0], jnp.int32),
+                     jnp.asarray(groups[1], jnp.int32))
         return shard_fn(*args)
 
     if hopb_chunks <= 1:

@@ -135,7 +135,8 @@ def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
                         kvp: int, rr_block: int = 16,
                         dtype=jnp.bfloat16, kv_bits: int = 16,
                         pool_blocks: int = 0,
-                        max_pages: int = 0) -> dict[str, Any]:
+                        max_pages: int = 0,
+                        grouped: bool = False) -> dict[str, Any]:
     """ShapeDtypeStructs for every decode-state leaf (dry-run input_specs).
 
     ``pool_blocks > 0`` switches the attention K/V leaves to the shared-pool
@@ -143,7 +144,10 @@ def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
     ``[L, pool_blocks, Kh, block_s, hsz]`` with ``block_s =
     page_positions(kvp, rr_block)``, plus a ``block_tables``
     ``[batch, max_pages]`` int32 leaf (``max_pages`` defaults to
-    ``pool_blocks`` — any request may take the whole pool)."""
+    ``pool_blocks`` — any request may take the whole pool).  ``grouped``
+    (paged only) adds the grouped shared-prefix decode's ``group_id``/
+    ``group_np`` ``[batch]`` int32 leaves (``HelixConfig.grouped_decode``;
+    the serving engine recomputes them each step)."""
     s: dict[str, Any] = {"total_len": jax.ShapeDtypeStruct((), jnp.int32)}
     L = cfg.n_layers
     if cfg.has_attention:
@@ -155,6 +159,9 @@ def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
                 (L, pool_blocks, cfg.n_kv_heads, bs, cfg.hsz), kv_dtype)
             s["kcache"], s["vcache"] = kv, kv
             s["block_tables"] = jax.ShapeDtypeStruct((batch, mp), jnp.int32)
+            if grouped:
+                gi = jax.ShapeDtypeStruct((batch,), jnp.int32)
+                s["group_id"], s["group_np"] = gi, gi
             if kv_bits == 8:
                 sc = jax.ShapeDtypeStruct(
                     (L, pool_blocks, cfg.n_kv_heads, bs), jnp.float32)
@@ -198,6 +205,8 @@ def decode_state_specs(cfg: ArchConfig, hx: HelixConfig,
         s["kcache"] = s["vcache"] = P(None, None, tpa, kvp, None)
         if hx.paged_kv:
             s["block_tables"] = P(None, None)
+            if hx.grouped_decode:
+                s["group_id"] = s["group_np"] = P(None)
         if hx.kv_cache_bits == 8:
             s["kscale"] = s["vscale"] = P(None, None, tpa, kvp)
     if cfg.has_ssm:
@@ -219,16 +228,20 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, kvp: int,
                       rr_block: int = 16, dtype=jnp.bfloat16,
                       total_len: int | jax.Array = 0,
                       kv_bits: int = 16, pool_blocks: int = 0,
-                      max_pages: int = 0) -> dict[str, Any]:
+                      max_pages: int = 0,
+                      grouped: bool = False) -> dict[str, Any]:
     """Zero-initialised decode state (concrete arrays, small/test use).
 
     ``kv_bits=8`` allocates int8 K/V payloads plus per-slot f32 scale
     planes (``kscale``/``vscale``).  ``pool_blocks > 0`` allocates the
     shared-pool *paged* layout instead (pool planes + zeroed
-    ``block_tables`` — every row starts parked on the sink page 0)."""
+    ``block_tables`` — every row starts parked on the sink page 0).
+    ``grouped`` adds zeroed ``group_id``/``group_np`` leaves (all rows
+    singleton groups under group 0 with no shared prefix, which decodes
+    identically to ungrouped)."""
     shapes = decode_state_shapes(cfg, batch, seq_len, kvp, rr_block, dtype,
                                  kv_bits=kv_bits, pool_blocks=pool_blocks,
-                                 max_pages=max_pages)
+                                 max_pages=max_pages, grouped=grouped)
     state = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
     tl = jnp.asarray(total_len, jnp.int32)
     state["total_len"] = tl

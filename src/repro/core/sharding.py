@@ -118,6 +118,14 @@ class HelixConfig:
     #   oracle or the Pallas kernel).  Changes numerics (weight-only
     #   quantization); all matmul_backend choices agree on the same
     #   quantized weights up to fp summation order.
+    grouped_decode: bool = False         # grouped shared-prefix decode
+    #   (CoDec-style, arXiv 2505.17694) on the paged Pallas backends:
+    #   requests whose block tables share leading pages (prefix sharing —
+    #   serving/pool.py) stack their Q rows and stream each shared page
+    #   once per *group* instead of once per request.  Requires paged_kv;
+    #   decode-state leaves gain `group_id`/`group_np` [B] int32 (the
+    #   engine recomputes them each step).  Bit-exact vs ungrouped; the
+    #   ref backend ignores the grouping (oracle semantics).
 
     def __post_init__(self):
         from repro.kernels import registry

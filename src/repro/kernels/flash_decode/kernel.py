@@ -171,7 +171,7 @@ def prune_block_range(total_len, rank, slot_offset, window, *, kvp: int,
 
 def decode_index_maps(*, kvp: int, rr_block: int, block_s: int, s_true: int,
                       n_blocks: int, contiguous: bool, prune: bool,
-                      paged: bool):
+                      paged: bool, grouped: bool = False):
     """Named index_map callables for one decode-kernel configuration.
 
     The single source of truth for the kernel's DMA addressing:
@@ -193,10 +193,18 @@ def decode_index_maps(*, kvp: int, rr_block: int, block_s: int, s_true: int,
       q      resident query block (constant along the S axis)
       new    the new token's (1, 1, hsz) K/V row (resident)
       lse    the [B, Kh, Qp] log-sum-exp output
+
+    ``grouped`` (suffix pass of the shared-prefix grouped decode — paged
+    only): a fourth prefetch operand ``start [B]`` gives each request's
+    first *unshared* logical page; the pruned span's lower bound is lifted
+    to it, so the shared prefix pages — already streamed once per group by
+    the prefix pass (``grouped_prefix_index_maps``) — are never re-read
+    per request.  Maps then take ``(b, h, s, meta, tl, tables, start)``.
     """
     s_pad = n_blocks * block_s
+    assert not grouped or paged, "grouped suffix maps require paged mode"
 
-    def logical_block(s, meta_ref, tl_ref, b):
+    def logical_block(s, meta_ref, tl_ref, b, *rest):
         # pruned steps re-reference the previous step's block: the DMA is
         # elided, so HBM reads scale with the valid length, not capacity
         if not prune:
@@ -205,13 +213,19 @@ def decode_index_maps(*, kvp: int, rr_block: int, block_s: int, s_true: int,
             tl_ref[b], meta_ref[0], meta_ref[1], meta_ref[2], kvp=kvp,
             rr_block=rr_block, block_s=block_s, s_true=s_true,
             contiguous=contiguous)
+        if grouped:
+            # suffix pass: blocks below the request's shared-prefix extent
+            # were streamed by the prefix pass — lift the span above them
+            lo2 = jnp.maximum(lo, rest[1][b])
+            nb = jnp.maximum(lo + nb - lo2, 0)
+            lo = lo2
         return _phys_block(s, lo, nb, n_blocks)
 
     def kv_idx(b, h, s, meta_ref, tl_ref, *rest):
         # paged: the physical pool page comes from the prefetched table at
         # the (clamped) logical id — same id as the fixed layout, so the
         # DMA-elision property survives the indirection (pruning.table_block)
-        lg = logical_block(s, meta_ref, tl_ref, b)
+        lg = logical_block(s, meta_ref, tl_ref, b, *rest)
         if paged:
             return (rest[0][b, lg], h, 0, 0)
         return (b, h, lg, 0)
@@ -246,11 +260,16 @@ def decode_index_maps(*, kvp: int, rr_block: int, block_s: int, s_true: int,
 def _decode_kernel(meta_ref, tl_ref, *refs, scale: float,
                    kvp: int, rr_block: int, block_s: int, s_true: int,
                    contiguous: bool, quant: bool, append: bool, prune: bool,
-                   paged: bool):
+                   paged: bool, grouped: bool = False):
     if paged:
-        tbl_ref, q_ref, k_ref, v_ref, *rest = refs
-    else:
-        q_ref, k_ref, v_ref, *rest = refs
+        tbl_ref, *refs = refs
+    if grouped:
+        # suffix pass of the grouped shared-prefix decode: one more prefetch
+        # operand (per-request first unshared page) plus the prefix pass's
+        # raw online-softmax state, resumed instead of a cold init.
+        start_ref, *refs = refs
+        acc0_ref, m0_ref, l0_ref, *refs = refs
+    q_ref, k_ref, v_ref, *rest = refs
     if append and quant:
         (kscale_ref, vscale_ref, knew_ref, vnew_ref,
          krow_in_ref, vrow_in_ref, ksrow_in_ref, vsrow_in_ref,
@@ -273,16 +292,33 @@ def _decode_kernel(meta_ref, tl_ref, *refs, scale: float,
 
     @pl.when(si == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        if grouped:
+            # resume the prefix pass's raw state: blocks < start were
+            # already accumulated once per group, in the same block order
+            # the ungrouped kernel would have used, so continuing the
+            # online softmax from here is bit-exact.
+            acc_ref[...] = acc0_ref[0, 0]
+            m_ref[...] = m0_ref[0, 0][:, None]
+            l_ref[...] = l0_ref[0, 0][:, None]
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
 
     if prune:
         lo_blk, nb = prune_block_range(
             total_len, rank, slot_offset, window, kvp=kvp, rr_block=rr_block,
             block_s=block_s, s_true=s_true, contiguous=contiguous)
+        if grouped:
+            # shared-prefix blocks were streamed by the prefix pass; lift
+            # the span above them (mirrors decode_index_maps grouped clamp)
+            lo2 = jnp.maximum(lo_blk, start_ref[bi])
+            nb = jnp.maximum(lo_blk + nb - lo2, 0)
+            lo_blk = lo2
         phys = _phys_block(si, lo_blk, nb, n_blocks)
         active = si < nb
+    elif grouped:
+        phys, active = si, si >= start_ref[bi]
     else:
         phys, active = si, None
 
@@ -364,7 +400,7 @@ def _decode_kernel(meta_ref, tl_ref, *refs, scale: float,
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    if prune:
+    if active is not None:
         pl.when(active)(_compute)
     else:
         _compute()
@@ -382,7 +418,8 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
                         rr_block: int, block_s: int, s_true: int,
                         contiguous: bool = False, kscale=None, vscale=None,
                         k_new=None, v_new=None, prune: bool = True,
-                        block_tables=None, interpret: bool = True):
+                        block_tables=None, sfx_start=None, init_state=None,
+                        interpret: bool = True):
     """Raw pallas_call.  Shapes must already be padded/blocked (see ops.py).
 
     q: [B, Kh, Qp, hsz]; k, v: [B, Kh, S_pad, hsz]; meta: [3] int32
@@ -407,6 +444,17 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     append writes its row windows through the table too; outputs alias the
     pool planes.  Excludes the contiguous layout and ``slot_offset``.
 
+    Grouped suffix mode (``sfx_start`` [B] int32 + ``init_state`` — paged
+    only): this call becomes the *suffix* pass of the grouped shared-prefix
+    decode.  ``init_state = (acc0 [B,Kh,Qp,hsz], m0 [B,Kh,Qp], l0
+    [B,Kh,Qp])`` f32 is the per-request unstacked raw state from
+    ``prefix_pass_kernel`` and seeds the online softmax at the first grid
+    step; blocks below ``sfx_start[b]`` are skipped (prune mode lifts the
+    span clamp, so the prefix pages' DMAs stay elided).  Because the prefix
+    pass visits blocks ``0..start-1`` in the same order and with the same
+    masks as the ungrouped kernel, resuming here is bit-exact with a plain
+    ungrouped call.
+
     returns out [B, Kh, Qp, hsz] (q.dtype), lse [B, Kh, Qp] (f32), plus the
     appended caches (aliased with k, v — pool planes in paged mode) and, in
     int8 append mode, the updated kscale, vscale.
@@ -419,6 +467,9 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     assert append == (v_new is not None)
     assert not (append and contiguous), \
         "fused append excludes the contiguous layout"
+    grouped = sfx_start is not None
+    assert grouped == (init_state is not None)
+    assert not grouped or paged, "grouped suffix mode requires paged mode"
     if paged:
         assert not contiguous, "paged mode excludes the contiguous layout"
         assert k.shape[2] == block_s, (k.shape, block_s)
@@ -434,20 +485,37 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     kernel = functools.partial(
         _decode_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
         block_s=block_s, s_true=s_true, contiguous=contiguous, quant=quant,
-        append=append, prune=prune, paged=paged)
+        append=append, prune=prune, paged=paged, grouped=grouped)
 
     idx = decode_index_maps(
         kvp=kvp, rr_block=rr_block, block_s=block_s, s_true=s_true,
-        n_blocks=n_blocks, contiguous=contiguous, prune=prune, paged=paged)
+        n_blocks=n_blocks, contiguous=contiguous, prune=prune, paged=paged,
+        grouped=grouped)
     q_idx, kv_idx, scale_idx = idx["q"], idx["kv"], idx["scale"]
     row_idx, srow_idx = idx["row"], idx["srow"]
 
-    in_specs = [
+    in_specs = []
+    args = (meta, tl) + ((block_tables,) if paged else ())
+    if grouped:
+        # the prefix pass's raw state rides in *before* q so the q/k/v
+        # positions (and the append aliases below) shift by exactly three
+        acc0, m0, l0 = init_state
+        args += (sfx_start,)
+        in_specs += [
+            pl.BlockSpec((1, 1, qp, hsz), q_idx),
+            pl.BlockSpec((1, 1, qp), idx["lse"]),
+            pl.BlockSpec((1, 1, qp), idx["lse"]),
+        ]
+    in_specs += [
         pl.BlockSpec((1, 1, qp, hsz), q_idx),
         pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
         pl.BlockSpec((1, 1, block_s, hsz), kv_idx),
     ]
-    args = (meta, tl) + ((block_tables,) if paged else ()) + (q, k, v)
+    if grouped:
+        args += (acc0.astype(jnp.float32), m0.astype(jnp.float32),
+                 l0.astype(jnp.float32), q, k, v)
+    else:
+        args += (q, k, v)
     out_specs = [
         pl.BlockSpec((1, 1, qp, hsz), q_idx),
         pl.BlockSpec((1, 1, qp), idx["lse"]),
@@ -458,8 +526,12 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
     ]
     aliases = {}
     # inputs are numbered including the scalar-prefetch args; paged mode
-    # prefetches the block table too, shifting everything after it by one
-    npre = 3 if paged else 2
+    # prefetches the block table too, and grouped suffix mode the per-row
+    # start page, shifting everything after them
+    npre = (3 if paged else 2) + (1 if grouped else 0)
+    # the k/v inputs sit right after q, which follows the three init-state
+    # arrays in grouped mode
+    qoff = npre + (3 if grouped else 0)
     if quant:
         in_specs += [
             pl.BlockSpec((1, 1, block_s), scale_idx),
@@ -484,7 +556,7 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         ]
         # e.g. unpaged: meta=0, tl=1, q=2, k=3, v=4 -> outputs 2/3 are the
         # appended caches (aliased with the K/V inputs)
-        aliases = {npre + 1: 2, npre + 2: 3}
+        aliases = {qoff + 1: 2, qoff + 2: 3}
         if quant:
             in_specs += [
                 pl.BlockSpec((1, 1, 1), srow_idx),
@@ -501,8 +573,8 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
             ]
             # the scale outputs (4/5) alias the full scale inputs, the
             # cache outputs (2/3) the full K/V inputs
-            aliases = {npre + 1: 2, npre + 2: 3,
-                       npre + 3: 4, npre + 4: 5}
+            aliases = {qoff + 1: 2, qoff + 2: 3,
+                       qoff + 3: 4, qoff + 4: 5}
 
     return pl.pallas_call(
         kernel,
@@ -519,5 +591,185 @@ def flash_decode_kernel(q, k, v, meta, tl, *, scale: float, kvp: int,
         ),
         out_shape=out_shape,
         input_output_aliases=aliases,
+        interpret=interpret,
+    )(*args)
+
+
+def grouped_prefix_index_maps(*, n_blocks: int):
+    """Index maps for the grouped shared-prefix pass (CoDec-style, arXiv
+    2505.17694).
+
+    Grid is ``(G, Kh, n_blocks)``; each group ``g`` streams its shared
+    prefix pages once — span-clamped to ``[0, gnp[g])`` so pruned steps
+    re-reference the previous page and the DMA is elided (same property as
+    the decode maps).  Prefetch operands are ``(meta [3], gnp [G],
+    gtl [G, Gm], gtab [G, max_pages])``; every map is a pure jnp function
+    of the grid coordinates and prefetched scalars.
+    """
+
+    def kv_idx(g, h, s, meta_ref, gnp_ref, gtl_ref, gtab_ref):
+        lg = _phys_block(s, 0, gnp_ref[g], n_blocks)
+        return (gtab_ref[g, lg], h, 0, 0)
+
+    def scale_idx(g, h, s, *refs):
+        return kv_idx(g, h, s, *refs)[:3]
+
+    def q_idx(g, h, s, *_):
+        return (g, h, 0, 0)
+
+    def ml_idx(g, h, s, *_):
+        return (g, h, 0)
+
+    return {"kv": kv_idx, "scale": scale_idx, "q": q_idx, "acc": q_idx,
+            "ml": ml_idx}
+
+
+def _prefix_kernel(meta_ref, gnp_ref, gtl_ref, gtab_ref, *refs, scale: float,
+                   kvp: int, rr_block: int, block_s: int, s_true: int,
+                   quant: bool, gm: int, qp: int):
+    if quant:
+        (q_ref, k_ref, v_ref, kscale_ref, vscale_ref,
+         acc_out, m_out, l_out, acc_ref, m_ref, l_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         acc_out, m_out, l_out, acc_ref, m_ref, l_ref) = refs
+    gi = pl.program_id(0)
+    si = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+    rank = meta_ref[0]
+    window = meta_ref[2]
+    np_g = gnp_ref[gi]
+    # per-member lengths, broadcast to the stacked Q rows: member m owns
+    # rows [m*qp, (m+1)*qp).  gm is static, so this unrolls to SMEM loads.
+    tl_g = jnp.stack([gtl_ref[gi, mi] for mi in range(gm)])        # [gm]
+    tl_rows = jnp.broadcast_to(tl_g[:, None], (gm, qp)).reshape(gm * qp)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    lg = _phys_block(si, 0, np_g, n_blocks)
+    active = si < np_g
+
+    @pl.when(active)
+    def _compute():
+        kraw = k_ref[0, 0]                               # [bs, hsz] cache dt
+        vraw = v_ref[0, 0]
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [gm*qp, hsz]
+        k = kraw.astype(jnp.float32)
+        v = vraw.astype(jnp.float32)
+        if quant:
+            k = k * kscale_ref[0, 0][:, None]
+            v = v * vscale_ref[0, 0][:, None]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        # position math on the *logical* block id — shared prefix pages sit
+        # at the same leading logical indices in every member's table, so
+        # one block serves all gm members; only the length/window masks
+        # differ per member row.
+        jj = lg * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_s), 1)
+        pos = ((jj // rr_block) * kvp + rank) * rr_block + (jj % rr_block)
+        tl_col = tl_rows[:, None]                        # [gm*qp, 1]
+        mask = jnp.logical_and(jj < s_true, pos < tl_col)
+        mask = jnp.logical_and(
+            mask, jnp.where(window > 0, pos >= tl_col - window, True))
+
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # [gm*qp, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == n_blocks - 1)
+    def _emit():
+        # RAW online-softmax state — no normalization; the suffix pass
+        # resumes from exactly these (acc, m, l) per member row.
+        acc_out[0, 0] = acc_ref[...]
+        m_out[0, 0] = m_ref[:, 0]
+        l_out[0, 0] = l_ref[:, 0]
+
+
+def prefix_pass_kernel(q_stacked, k, v, meta, gnp, gtl, gtab, *, scale: float,
+                       kvp: int, rr_block: int, block_s: int, s_true: int,
+                       kscale=None, vscale=None, interpret: bool = True):
+    """Raw pallas_call: shared-prefix pass of the grouped decode.
+
+    q_stacked: [G, Kh, Gm*Qp, hsz] — requests sharing a prefix have their
+    query blocks stacked along one row axis (member m at rows [m*Qp,
+    (m+1)*Qp)); padding member rows must carry gtl == 0 so they mask to the
+    identity update.  k/v: shared pool planes [n_pool, Kh, block_s, hsz]
+    (int8 + [n_pool, Kh, block_s] f32 scales in quant mode).  meta: [3]
+    int32 (rank, 0, window); gnp: [G] shared prefix pages per group; gtl:
+    [G, Gm] per-member total lengths; gtab: [G, max_pages] the group's
+    (identical leading) page table.
+
+    Each shared page is streamed from HBM **once per group** instead of
+    once per member — the ~1/group_size prefix bytes-read reduction the
+    accounting layer proves.  Returns the raw f32 online-softmax state
+    (acc [G, Kh, Gm*Qp, hsz], m [G, Kh, Gm*Qp], l [G, Kh, Gm*Qp]) for the
+    suffix pass (``flash_decode_kernel(sfx_start=..., init_state=...)``).
+    Groups with ``gnp == 0`` (singletons/idle rows) emit the cold state
+    (acc = 0, m = -inf, l = 0), so the suffix pass degenerates to the
+    ungrouped kernel for them.
+    """
+    g, kh, rows, hsz = q_stacked.shape
+    gm_max = gtl.shape[1]
+    assert rows % gm_max == 0, (rows, gm_max)
+    qp = rows // gm_max
+    quant = kscale is not None
+    assert quant == (vscale is not None)
+    assert k.shape[2] == block_s, (k.shape, block_s)
+    n_blocks = gtab.shape[1]
+
+    idx = grouped_prefix_index_maps(n_blocks=n_blocks)
+    kernel = functools.partial(
+        _prefix_kernel, scale=scale, kvp=kvp, rr_block=rr_block,
+        block_s=block_s, s_true=s_true, quant=quant, gm=gm_max, qp=qp)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hsz), idx["q"]),
+        pl.BlockSpec((1, 1, block_s, hsz), idx["kv"]),
+        pl.BlockSpec((1, 1, block_s, hsz), idx["kv"]),
+    ]
+    args = (meta, gnp, gtl, gtab, q_stacked, k, v)
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_s), idx["scale"]),
+            pl.BlockSpec((1, 1, block_s), idx["scale"]),
+        ]
+        args += (kscale.astype(jnp.float32), vscale.astype(jnp.float32))
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(g, kh, n_blocks),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, rows, hsz), idx["acc"]),
+                pl.BlockSpec((1, 1, rows), idx["ml"]),
+                pl.BlockSpec((1, 1, rows), idx["ml"]),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((rows, hsz), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((g, kh, rows, hsz), jnp.float32),
+            jax.ShapeDtypeStruct((g, kh, rows), jnp.float32),
+            jax.ShapeDtypeStruct((g, kh, rows), jnp.float32),
+        ],
         interpret=interpret,
     )(*args)

@@ -66,6 +66,9 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                lm_head_w8: bool | None = None,
                paged_kv: bool | None = None,
                pool_blocks: int | None = None,
+               prefix_share: bool = False,
+               grouped_decode: bool | None = None,
+               shared_prefix_len: int = 0,
                chunk_tokens: int = 0, sched_policy: str = "fcfs",
                traffic: str = "batch", arrival_rate: float = 0.5,
                seed: int = 0, log=print):
@@ -82,6 +85,15 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     ``kvp * rr_block`` positions; default = the fixed layout's HBM), making
     cache pressure a global admission signal — bit-exact token streams
     either way (scripts/paged_smoke.py asserts this in CI).
+
+    ``shared_prefix_len`` makes every synthetic prompt start with the same
+    ``shared_prefix_len`` tokens (distinct random suffixes fill the rest);
+    ``prefix_share`` turns on the engine's prefix index + refcounted
+    copy-on-write page sharing over it (needs ``paged_kv`` + chunked
+    prefill), and ``grouped_decode`` additionally decodes each shared
+    prefix once per *group* of requests instead of once per request
+    (``HelixConfig.grouped_decode``) — all bit-exact vs the unshared run
+    (scripts/prefix_smoke.py asserts this in CI).
     """
     cfg = get_config(arch)
     if reduced:
@@ -98,7 +110,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                                    ("fuse_append", fuse_append),
                                    ("prune_blocks", prune_blocks),
                                    ("lm_head_w8", lm_head_w8),
-                                   ("paged_kv", paged_kv)]
+                                   ("paged_kv", paged_kv),
+                                   ("grouped_decode", grouped_decode)]
                  if v is not None}
     if overrides:
         hx = dataclasses.replace(hx, **overrides)
@@ -122,11 +135,15 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                           chunk_prefill_step=chunk_step,
                           tp_width=mesh.shape["model"],
                           sched_policy=sched_policy,
-                          pool_blocks=pool_blocks)
+                          pool_blocks=pool_blocks,
+                          prefix_share=prefix_share)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab,
+                          min(shared_prefix_len, prompt_len)).tolist()
     pending = [Request(rid=i,
-                       prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
+                       prompt=shared + rng.integers(
+                           0, cfg.vocab, prompt_len - len(shared)).tolist(),
                        max_new_tokens=max_new)
                for i in range(n_requests)]
     arrivals = ([0] * n_requests if traffic == "batch"
@@ -201,6 +218,19 @@ def main():
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="paged mode: total pool pages incl. the sink page "
                          "(default: the same HBM the fixed layout reserves)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="prefix index + refcounted copy-on-write page "
+                         "sharing: prompts matching a cached prefix map the "
+                         "shared pages and prefill only their suffix (needs "
+                         "--paged-kv and --chunk-tokens; bit-exact)")
+    ap.add_argument("--grouped-decode", action="store_true",
+                    help="grouped shared-prefix decode: requests whose "
+                         "tables share leading pages read them once per "
+                         "group per step instead of once per request "
+                         "(needs --paged-kv; bit-exact)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="synthetic workload: every prompt starts with the "
+                         "same this-many tokens (exercises --prefix-share)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the kernel registry's per-family backend "
                          "availability matrix and exit")
@@ -222,6 +252,9 @@ def main():
         lm_head_w8=True if args.lm_head_w8 else None,
         paged_kv=True if args.paged_kv else None,
         pool_blocks=args.pool_blocks,
+        prefix_share=args.prefix_share,
+        grouped_decode=True if args.grouped_decode else None,
+        shared_prefix_len=args.shared_prefix_len,
         chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
         traffic=args.traffic, arrival_rate=args.arrival_rate)
     if args.metrics:

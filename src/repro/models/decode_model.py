@@ -171,10 +171,12 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             wo = jnp.pad(wo, ((0, o_dim - wo.shape[0]), (0, 0)))
         return cst(out @ wo, None, None)
 
-    def attn_phase(lp, h, kc, vc, ks, vs, tl_attn, win, tables):
+    def attn_phase(lp, h, kc, vc, ks, vs, tl_attn, win, tables, groups=None):
         """Helix attention phase for one layer.  h [B,H] (replicated).
         ``tables`` is the paged pool's [B, max_pages] block table (None in
-        the fixed-cap layout); kc/vc/ks/vs are then pool planes."""
+        the fixed-cap layout); kc/vc/ks/vs are then pool planes.
+        ``groups`` is the grouped shared-prefix decode's (group_id,
+        group_np) [B] pair (None = ungrouped; forces hopb_chunks=1)."""
         b = h.shape[0]
         # qkv_shard (§Perf, beyond-paper): weights over 'model', all-gather
         # the tiny activations — vs the paper's replicated per-rank QKV.
@@ -191,6 +193,8 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             q = apply_rope(q[:, None], pos, cfg.rope_theta)[:, 0]
             kn = apply_rope(kn[:, None], pos, cfg.rope_theta)[:, 0]
         chunks = hopb_chunks if b % hopb_chunks == 0 else 1
+        if groups is not None:
+            chunks = 1      # groups span the batch; chunks would split them
         paged = tables is not None
         # Fused KV-append epilogue (§Perf, roadmap): on the Pallas backends
         # the decode kernel writes kn/vn into the cache itself, skipping the
@@ -204,12 +208,12 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                 out, kc, vc, ks, vs = helix_attention(
                     mesh, hx, q, kc, vc, tl_attn, window=win,
                     hopb_chunks=chunks, kscale=ks, vscale=vs,
-                    k_new=kn, v_new=vn, block_tables=tables)
+                    k_new=kn, v_new=vn, block_tables=tables, groups=groups)
             else:
                 out, kc, vc = helix_attention(
                     mesh, hx, q, kc, vc, tl_attn, window=win,
                     hopb_chunks=chunks, k_new=kn, v_new=vn,
-                    block_tables=tables)
+                    block_tables=tables, groups=groups)
         else:
             if kv8:
                 kc, vc, ks, vs = append_kv_quant(
@@ -222,7 +226,7 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                                   hopb_chunks=chunks,
                                   kscale=ks if kv8 else None,
                                   vscale=vs if kv8 else None,
-                                  block_tables=tables)
+                                  block_tables=tables, groups=groups)
         # post-attention projection: TP = N over the combined (tpa, kvp)
         # layout; the All-Reduce the paper describes is emitted by GSPMD from
         # wo's input-dim sharding.
@@ -272,19 +276,19 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         return delta
 
     def layer_fn(x, lp, win, kc, vc, ks, vs, conv, sstate, xk, xv, tl_attn,
-                 s_enc, tables):
+                 s_enc, tables, groups=None):
         h = rms_norm(x, lp["ln1"])
         new_caches: dict[str, Any] = {}
         if cfg.has_attention and cfg.has_ssm:          # hybrid (hymba)
             a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
-                                               tl_attn, win, tables)
+                                               tl_attn, win, tables, groups)
             s_out, new_s = ssm_phase(lp["ssm"], h, conv, sstate)
             x = x + 0.5 * (a_out + s_out)
             new_caches.update(kcache=kc, vcache=vc, ssm_conv=new_s.conv,
                               ssm_state=new_s.ssm)
         elif cfg.has_attention:
             a_out, kc, vc, ks, vs = attn_phase(lp["attn"], h, kc, vc, ks, vs,
-                                               tl_attn, win, tables)
+                                               tl_attn, win, tables, groups)
             x = x + a_out
             new_caches.update(kcache=kc, vcache=vc)
         else:                                          # pure ssm (mamba2)
@@ -312,6 +316,11 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         # request); it passes through the step unchanged — the host-side
         # engine/scheduler owns page allocation.
         tables = state.get("block_tables") if hx.paged_kv else None
+        # grouped shared-prefix decode: the engine recomputes the [B]
+        # group_id/group_np leaves each step from the pool's page sharing
+        groups = None
+        if hx.grouped_decode and hx.paged_kv and "group_id" in state:
+            groups = (state["group_id"], state["group_np"])
         x = params["embed"][tokens]                     # [B, H]
         x = cst(x, None, None)
         if not cfg.use_rope:
@@ -345,7 +354,7 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
                 lp, kc, vc, ks, vs, conv, sstate, xk, xv = leaf_i
                 xcur, nc = layer_fn(xcur, lp, win_static[i], kc, vc, ks, vs,
                                     conv, sstate, xk, xv, tl_attn, s_enc,
-                                    tables)
+                                    tables, groups)
                 outs.append(nc)
             stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
             return xcur, stacked

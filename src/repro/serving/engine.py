@@ -92,7 +92,8 @@ class DecodeEngine:
                  tp_width: int = 1,
                  sched_policy: str = "fcfs", clock=time.monotonic,
                  pool_blocks: int | None = None,
-                 max_pages: int | None = None):
+                 max_pages: int | None = None,
+                 prefix_share: bool = False):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -142,11 +143,16 @@ class DecodeEngine:
         else:
             self.pool = None
             self.pool_blocks = self.max_pages = 0
+        # grouped shared-prefix decode (hx.grouped_decode): requests whose
+        # tables share leading pages decode those pages once per *group*
+        # instead of once per request; _set_groups refreshes the
+        # group_id/group_np leaves from the pool's refcounts each step.
+        self.grouped = self.paged and hx is not None and hx.grouped_decode
         self.state = init_decode_state(
             cfg, max_batch, self.cap, kvp, rr_block, dtype=dtype,
             kv_bits=8 if self.kv8 else 16,
             pool_blocks=self.pool_blocks if self.paged else 0,
-            max_pages=self.max_pages)
+            max_pages=self.max_pages, grouped=self.grouped)
         # per-request lengths: [B]; empty slots keep 0
         self.state["total_len"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: list[Request | None] = [None] * max_batch
@@ -161,9 +167,25 @@ class DecodeEngine:
         self.chunk_step = (jax.jit(chunk_prefill_step)
                            if chunk_prefill_step is not None else None)
         self.tp_width = tp_width
+        # prefix sharing (docs/serving.md): a PrefixIndex matches new
+        # prompts against committed prefixes; matched pages are mapped
+        # refcounted into the new request's table and only the suffix
+        # chunk-prefills.  Needs the paged pool (pages to share) and
+        # chunked prefill (a suffix-only prefill is just a resumed one).
+        self.prefix_index = None
+        if prefix_share:
+            if not (self.paged and self.chunk_tokens):
+                raise ValueError("prefix_share needs hx.paged_kv and "
+                                 "chunk_tokens (suffix-only prefill rides "
+                                 "the chunked-prefill q_offset contract)")
+            from repro.serving.scheduler import PrefixIndex
+            self.prefix_index = PrefixIndex(self.block_s, self.pool)
+        self._prefix_admits = 0
+        self._prefix_hits = 0
         self.sched = Scheduler(max_batch=max_batch, cap=self.cap,
                                policy=sched_policy, pool=self.pool,
-                               max_pages=self.max_pages)
+                               max_pages=self.max_pages,
+                               prefix_index=self.prefix_index)
         self.metrics = EngineMetrics(clock=clock)
         self._admission_retired: list[Request] = []
         self._frag_samples: list[float] = []
@@ -285,6 +307,11 @@ class DecodeEngine:
                 req.prefill_pos = 0
                 req.buffers = init_prefill_buffers(
                     self.cfg, 1, len(toks), tp_width=self.tp_width)
+                if self.prefix_index is not None:
+                    self._prefix_admits += 1
+                    if req.shared_len and req.shared_kv is not None:
+                        self._prefix_hits += 1
+                        self._restore_prefix(req)
             else:
                 retired += self._oneshot_prefill(req, slot)
         # cache-pressure rejections retire without ever holding a slot
@@ -293,6 +320,40 @@ class DecodeEngine:
             self.metrics.on_finish(req.rid, "rejected")
             retired.append(req)
         return retired
+
+    def _restore_prefix(self, req: Request) -> None:
+        """Install the prefix index's host-fp K/V for the matched prefix
+        into ``req``'s fresh carry buffers and fast-forward the prefill to
+        the suffix.
+
+        The stored K/V is the registrant's own prefill output for those
+        positions — bit-identical to what re-prefilling the same tokens
+        would write (chunked prefill is causal with absolute rope
+        positions), so skipping ``[0, shared_len)`` changes nothing
+        downstream: TTFT becomes suffix-only."""
+        m = req.shared_len
+        k_np, v_np = req.shared_kv
+        req.shared_kv = None
+        for key, host in (("kcache", k_np), ("vcache", v_np)):
+            req.buffers[key] = req.buffers[key].at[:, 0, :m].set(
+                jnp.asarray(host[:, :m],
+                            req.buffers[key].dtype))
+        req.prefill_pos = m
+
+    def _register_prefix(self, req: Request, t: int) -> None:
+        """Publish a finished prefill to the prefix index: its token
+        prefix, its (now committed) page list, and a host fp copy of its
+        carry-buffer K/V.
+
+        Captured *before* any quantization: a later hit restores fp rows
+        into the sharer's buffers, keeping the suffix prefill bit-exact
+        even on kv8 engines (whose pool pages quantize per row, so the
+        shared physical pages are also byte-identical to what the sharer
+        would have written)."""
+        kv = (np.asarray(req.buffers["kcache"][:, 0, :t]),
+              np.asarray(req.buffers["vcache"][:, 0, :t]))
+        self.prefix_index.register(list(req.prefill_tokens),
+                                   list(self.pool.pages(req.rid)), kv)
 
     def _prefill_chunk(self) -> list[Request]:
         """Advance ONE packed group of prefills by one chunk.
@@ -365,6 +426,8 @@ class DecodeEngine:
         hx = self.hx if self.hx is not None else _default_hx(self.rr)
         pstate = finalize_chunked_prefill(self.cfg, hx, req.buffers, t,
                                           kvp=self.kvp)
+        if self.prefix_index is not None:
+            self._register_prefix(req, t)
         req.buffers = None
         req.prefill_tokens = None
         self._scatter_state(pstate, slot, t, req)
@@ -472,19 +535,93 @@ class DecodeEngine:
                                      self.block_s)
                  for key in ("kcache", "vcache")}
         n = min(pages["kcache"].shape[1], len(phys))
-        idx = jnp.asarray(phys[:n], jnp.int32)
-        if self.kv8:
-            pages = quantize_decode_state(
-                {key: pages[key][:, :n].astype(jnp.float32)
-                 for key in ("kcache", "vcache")})
-            for key in ("kcache", "vcache", "kscale", "vscale"):
-                self.state[key] = self.state[key].at[:, idx].set(pages[key])
-        else:
-            for key in ("kcache", "vcache"):
-                self.state[key] = self.state[key].at[:, idx].set(
-                    pages[key][:, :n].astype(self.state[key].dtype))
+        # shared leading pages already hold the registrant's rows —
+        # byte-identical to what this request would write for the same
+        # token prefix (per-row quantization on kv8), and possibly still
+        # mapped by other requests; only the unshared tail is scattered.
+        s0 = min(getattr(req, "shared_pages", 0), n)
+        if s0 < n:
+            idx = jnp.asarray(phys[s0:n], jnp.int32)
+            if self.kv8:
+                qpages = quantize_decode_state(
+                    {key: pages[key][:, s0:n].astype(jnp.float32)
+                     for key in ("kcache", "vcache")})
+                for key in ("kcache", "vcache", "kscale", "vscale"):
+                    self.state[key] = \
+                        self.state[key].at[:, idx].set(qpages[key])
+            else:
+                for key in ("kcache", "vcache"):
+                    self.state[key] = self.state[key].at[:, idx].set(
+                        pages[key][:, s0:n].astype(self.state[key].dtype))
         self._mirror_table(slot)
         # (_scatter_state's shared tail installs total_len and ssm leaves)
+
+    def _cow_guard(self, active: list[int]) -> None:
+        """Make every slot's append-target page exclusive before the decode
+        step writes it (copy-on-write).
+
+        The admission path already CoWs a shared partial page eagerly, so a
+        shared append target here means a request decoded *through* a page
+        boundary into a still-shared page — possible only when a request's
+        committed length ends exactly on the shared-prefix boundary.  The
+        allocator hands back a fresh page; the device copy of the old
+        page's committed rows happens here, before the kernel's append."""
+        for i in active:
+            req = self.slots[i]
+            li = self.sched.slot_len[i] // self.block_s
+            phys = self.pool.pages(req.rid)
+            if li >= len(phys) or self.pool.refcount(phys[li]) == 1:
+                continue
+            res = self.pool.cow(req.rid, li)
+            assert res is not None, \
+                "CoW with an empty free list: admission must pre-charge " \
+                "the divergent page (scheduler._reserve)"
+            old, new = res
+            keys = ("kcache", "vcache") + \
+                (("kscale", "vscale") if self.kv8 else ())
+            for key in keys:
+                self.state[key] = \
+                    self.state[key].at[:, new].set(self.state[key][:, old])
+            self._mirror_table(i)
+
+    def _set_groups(self, active: list[int]) -> None:
+        """Refresh the grouped-decode ``group_id``/``group_np`` leaves.
+
+        Slots whose tables start on the same physical page form a group;
+        ``group_np`` is the longest run of *identical* leading pages common
+        to every member, capped at each member's full committed pages so
+        the fused append (block ``slot_len // block_s``) always lands in
+        the per-request suffix.  Every member gets the same ``group_np`` —
+        the prefix pass has no per-member block mask, so an unequal start
+        would double-count the blocks between the smallest and largest.
+        Singletons and idle rows stay their own group with ``group_np=0``,
+        which the kernel decodes exactly as ungrouped."""
+        gid = np.arange(self.max_batch, dtype=np.int32)
+        gnp = np.zeros(self.max_batch, dtype=np.int32)
+        buckets: dict[int, list[int]] = {}
+        for i in active:
+            pages = self.pool.pages(self.slots[i].rid)
+            if pages and pages[0] != 0:
+                buckets.setdefault(pages[0], []).append(i)
+        for members in buckets.values():
+            if len(members) < 2:
+                continue
+            lists = [self.pool.pages(self.slots[i].rid) for i in members]
+            depth = min(min(len(pl) for pl in lists),
+                        min(self.sched.slot_len[i] // self.block_s
+                            for i in members))
+            lcp = 0
+            while lcp < depth and all(pl[lcp] == lists[0][lcp]
+                                      for pl in lists):
+                lcp += 1
+            if lcp == 0:
+                continue
+            g = min(members)
+            for i in members:
+                gid[i] = g
+                gnp[i] = lcp
+        self.state["group_id"] = jnp.asarray(gid)
+        self.state["group_np"] = jnp.asarray(gnp)
 
     def _decode_step(self) -> list[Request]:
         """One decode step for every DECODE slot; returns retirements."""
@@ -492,6 +629,10 @@ class DecodeEngine:
                   if r is not None and r.state == DECODE]
         if not active:
             return []
+        if self.paged and self.prefix_index is not None:
+            self._cow_guard(active)
+        if self.grouped:
+            self._set_groups(active)
         next_tokens, self.state = self.serve_step(
             self.params, self.state, self.cur_tokens)
         self.cur_tokens = next_tokens
@@ -541,22 +682,29 @@ class DecodeEngine:
         """Paged-pool health for the serving bench: peak occupancy (peak
         pages in use / allocatable pages), mean internal fragmentation of
         allocated pages (1 - committed/allocated slots, sampled each decode
-        step), and the retirement count with ``finish_reason="capacity"``.
-        Fixed-cap engines report zeros for the pool occupancy/fragmentation
-        fields; ``capacity_retired`` is the real count on both layouts."""
+        step), the retirement count with ``finish_reason="capacity"``, and
+        the prefix-sharing pair: ``prefix_hit_rate`` (share of chunked
+        admissions that matched a cached prefix) and ``pages_shared_peak``
+        (peak pages mapped by more than one request).  Fixed-cap engines
+        report zeros for the pool fields; ``capacity_retired`` is the real
+        count on both layouts."""
         cap_retired = sum(
             1 for m in self.metrics.requests.values()
             if getattr(m, "finish_reason", None) == "capacity")
         if not self.paged:
             return {"paged_kv": False, "pool_occupancy_peak": 0.0,
-                    "pool_frag_mean": 0.0, "capacity_retired": cap_retired}
+                    "pool_frag_mean": 0.0, "capacity_retired": cap_retired,
+                    "prefix_hit_rate": 0.0, "pages_shared_peak": 0}
         frag = (float(np.mean(self._frag_samples))
                 if self._frag_samples else 0.0)
         return {"paged_kv": True,
                 "pool_occupancy_peak":
                     self.pool.peak_in_use / max(self.pool.capacity, 1),
                 "pool_frag_mean": frag,
-                "capacity_retired": cap_retired}
+                "capacity_retired": cap_retired,
+                "prefix_hit_rate":
+                    self._prefix_hits / max(self._prefix_admits, 1),
+                "pages_shared_peak": self.pool.pages_shared_peak}
 
     def _retire(self, req: Request, slot: int, reason: str) -> Request:
         req.done = True

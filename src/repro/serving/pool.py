@@ -1,4 +1,4 @@
-"""Shared-pool paged KV cache: the block (page) allocator.
+"""Shared-pool paged KV cache: the refcounted block (page) allocator.
 
 The paper's premise is that DRAM reads for long KV histories cap interactive
 decode — yet a fixed per-slot cache (`core/kvcache.cache_capacity`) reserves
@@ -18,14 +18,31 @@ it.  The paged pool replaces that with one shared plane of fixed-size
     can consult the **global** free-page count for admission instead of the
     per-slot capacity gate.
 
+Prefix sharing (refcounts + copy-on-write)
+------------------------------------------
+Pages are **refcounted**: ``share()`` maps another request's live pages into
+a new request's table (the scheduler's prefix index matches a new prompt
+against committed prefixes, so same-system-prompt traffic pays its prefix
+pages once), ``release()`` decrefs and a page returns to the FIFO free list
+only at refcount zero, and ``cow()`` gives a holder a fresh *exclusive* page
+for one logical index before its first divergent append — a page with
+refcount > 1 is never written (the engine/device copy happens before the
+write, through the exclusive page ``cow`` hands back).  Capacity accounting
+is in **unique** pages: a page shared by five requests occupies one page of
+HBM, so ``used_count``/``free_count`` (and through them the scheduler's
+admission oracle) never double-charge a shared prefix.  Every page also
+carries a **generation** stamp bumped each time it leaves the free list, so
+the prefix index can detect stale entries whose pages were recycled.
+
 Page 0 is reserved as the *sink* page: idle engine slots keep zeroed block
 tables, so the decode step's unconditional per-row KV append lands in page 0
 instead of corrupting a live request's page.  The allocator therefore hands
 out pages ``1 .. n_blocks-1`` only.
 
 Preemption releases a request's pages **copy-free**: the pages go back on
-the free list and the request re-prefills on resume (the engine already
-recomputes preempted context — serving/engine.py).
+the free list (or stay alive under a sharer's refcount) and the request
+re-prefills on resume (the engine already recomputes preempted context —
+serving/engine.py).
 """
 from __future__ import annotations
 
@@ -38,13 +55,16 @@ def pages_for(length: int, block_s: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator for the shared KV page pool (pure python).
+    """Refcounted free-list allocator for the shared KV page pool.
 
     ``n_blocks`` counts *all* pool planes including the reserved sink page 0;
     ``capacity`` (= ``n_blocks - 1``) pages are allocatable.  Pages are
     handed out in FIFO free-list order — deterministic, so engine runs
     replay exactly.  Per-request page lists keep allocation order, i.e.
-    ``pages(rid)[i]`` is the physical page of logical page ``i``.
+    ``pages(rid)[i]`` is the physical page of logical page ``i``; the same
+    physical page may appear in several requests' lists (prefix sharing),
+    in which case its refcount equals its multiplicity across lists and it
+    is charged to the pool once.
     """
 
     SINK = 0                              # reserved idle-row append target
@@ -56,7 +76,10 @@ class BlockAllocator:
         self.block_s = block_s
         self._free: deque[int] = deque(range(1, n_blocks))
         self._pages: dict[int, list[int]] = {}
+        self._refs: list[int] = [0] * n_blocks
+        self._gen: list[int] = [0] * n_blocks
         self.peak_in_use = 0
+        self.pages_shared_peak = 0
 
     # ------------------------------------------------------------ queries
     @property
@@ -71,7 +94,8 @@ class BlockAllocator:
 
     @property
     def used_count(self) -> int:
-        """Pages currently owned by requests."""
+        """*Unique* pages currently owned by requests — a shared prefix
+        page counts once however many tables map it."""
         return self.capacity - len(self._free)
 
     def pages(self, rid: int) -> list[int]:
@@ -82,7 +106,32 @@ class BlockAllocator:
         """Pages needed for ``length`` positions at this pool's page size."""
         return pages_for(length, self.block_s)
 
+    def refcount(self, page: int) -> int:
+        """How many request tables currently map ``page`` (0 = free)."""
+        return self._refs[page]
+
+    def generation(self, page: int) -> int:
+        """Allocation-generation stamp of ``page`` — bumped each time the
+        page leaves the free list, so a (page, generation) pair uniquely
+        names one tenancy (the prefix index's staleness check)."""
+        return self._gen[page]
+
+    def shared_count(self) -> int:
+        """Pages currently mapped by more than one request table."""
+        return sum(1 for r in self._refs if r > 1)
+
     # ---------------------------------------------------------- mutation
+    def _take(self) -> int:
+        page = self._free.popleft()
+        self._refs[page] = 1
+        self._gen[page] += 1
+        return page
+
+    def _note_peaks(self) -> None:
+        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        self.pages_shared_peak = max(self.pages_shared_peak,
+                                     self.shared_count())
+
     def alloc(self, rid: int, n: int) -> list[int] | None:
         """Grant ``n`` fresh pages to (new) request ``rid``.
 
@@ -91,9 +140,9 @@ class BlockAllocator:
         assert rid not in self._pages, f"rid {rid} already holds pages"
         if n > len(self._free):
             return None
-        got = [self._free.popleft() for _ in range(n)]
+        got = [self._take() for _ in range(n)]
         self._pages[rid] = got
-        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        self._note_peaks()
         return list(got)
 
     def extend(self, rid: int, n: int) -> list[int] | None:
@@ -103,27 +152,96 @@ class BlockAllocator:
         assert rid in self._pages, f"rid {rid} holds no pages"
         if n > len(self._free):
             return None
-        got = [self._free.popleft() for _ in range(n)]
+        got = [self._take() for _ in range(n)]
         self._pages[rid].extend(got)
-        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        self._note_peaks()
         return got
 
-    def free(self, rid: int) -> int:
-        """Release all of ``rid``'s pages back to the free list (retirement
-        or preemption — copy-free) and return how many were released."""
+    def share(self, rid: int, phys_pages: list[int]) -> list[int]:
+        """Map existing **live** pages into (new) request ``rid``'s table —
+        the prefix-sharing entry point.
+
+        Each page's refcount is incremented; no page moves and no free page
+        is consumed (``free_count`` is untouched — shared prefixes are not
+        double-charged).  ``phys_pages`` become ``rid``'s leading logical
+        pages in order; follow with ``extend`` for the unshared suffix and
+        ``cow`` for a trailing partial page.  Sharing a free or sink page
+        asserts — the prefix index must validate entries (refcount +
+        generation) before handing pages here."""
+        assert rid not in self._pages, f"rid {rid} already holds pages"
+        for p in phys_pages:
+            assert p != self.SINK, "sharing the sink page"
+            assert self._refs[p] > 0, f"sharing free page {p}"
+        for p in phys_pages:
+            self._refs[p] += 1
+        self._pages[rid] = list(phys_pages)
+        self._note_peaks()
+        return list(phys_pages)
+
+    def cow(self, rid: int, logical: int) -> tuple[int, int] | None:
+        """Make ``rid``'s logical page ``logical`` exclusive before a write
+        (copy-on-write).
+
+        Returns ``(old_phys, new_phys)``: when the page is already exclusive
+        (refcount 1) it is returned unchanged (``old == new``, nothing
+        allocated); when shared, a fresh page is taken from the free list,
+        installed at ``logical`` in ``rid``'s table, and the old page's
+        refcount is decremented — the *caller* copies whatever committed
+        rows the old page held into ``new`` before writing (the allocator
+        never touches page contents; a page with refcount > 1 is never
+        mutated).  Returns None (allocator untouched) when the page is
+        shared but the free list is empty."""
+        old = self._pages[rid][logical]
+        if self._refs[old] == 1:
+            return (old, old)
+        if not self._free:
+            return None
+        new = self._take()
+        self._pages[rid][logical] = new
+        self._refs[old] -= 1
+        self._note_peaks()
+        return (old, new)
+
+    def release(self, rid: int) -> int:
+        """Decref all of ``rid``'s pages (retirement or preemption —
+        copy-free); pages reaching refcount zero return to the FIFO free
+        list.  Returns how many pages actually became free (shared pages a
+        survivor still maps stay live and are not counted)."""
         got = self._pages.pop(rid, [])
-        self._free.extend(got)
-        return len(got)
+        freed = 0
+        for p in got:
+            assert self._refs[p] > 0, f"releasing free page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                freed += 1
+        return freed
+
+    def free(self, rid: int) -> int:
+        """Alias of ``release`` (the pre-refcount name, kept for callers)."""
+        return self.release(rid)
 
     # -------------------------------------------------------- invariants
     def check_invariants(self) -> None:
-        """Assert page conservation and exclusive ownership (the property
-        suite calls this after every simulated operation)."""
-        owned = [p for pages in self._pages.values() for p in pages]
-        allp = owned + list(self._free)
-        assert len(allp) == len(set(allp)), "page double-assignment"
-        assert sorted(allp) == list(range(1, self.n_blocks)), \
-            f"page conservation violated: {sorted(allp)}"
-        assert self.SINK not in owned, "sink page handed out"
-        assert self.free_count == self.capacity - sum(
-            len(p) for p in self._pages.values())
+        """Assert page conservation under refcounts (the property suite
+        calls this after every simulated operation): unique owned pages +
+        free pages == capacity, every page's refcount equals its
+        multiplicity across request tables, no page is both free and owned,
+        and the sink page is never handed out."""
+        mult: dict[int, int] = {}
+        for pages in self._pages.values():
+            for p in pages:
+                mult[p] = mult.get(p, 0) + 1
+        free = list(self._free)
+        assert len(free) == len(set(free)), "free-list duplicates"
+        assert not set(free) & set(mult), "page both free and owned"
+        assert sorted(set(mult) | set(free)) == list(range(1, self.n_blocks)), \
+            f"page conservation violated: owned {sorted(mult)} free {sorted(free)}"
+        assert len(mult) + len(free) == self.capacity
+        for p in range(self.n_blocks):
+            assert self._refs[p] >= 0, f"negative refcount on page {p}"
+            assert self._refs[p] == mult.get(p, 0), \
+                f"page {p} refcount {self._refs[p]} != multiplicity {mult.get(p, 0)}"
+        assert self.SINK not in mult, "sink page handed out"
+        assert self._refs[self.SINK] == 0
+        assert self.free_count == self.capacity - len(mult)

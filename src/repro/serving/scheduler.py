@@ -56,11 +56,139 @@ class Request:
     prefill_tokens: list[int] | None = None   # prompt (+ generated on resume)
     prefill_pos: int = 0                      # next chunk offset
     buffers: Any = None                       # K/V carry buffers (device)
+    # --- prefix-sharing bookkeeping (engine-internal, set at admission) ---
+    shared_len: int = 0                       # matched prefix tokens (restore)
+    shared_pages: int = 0                     # leading logical pages shared
+    shared_kv: Any = None                     # host fp K/V of [0, shared_len)
 
     def resume_tokens(self) -> list[int]:
         """Tokens to (re-)prefill: the prompt plus anything already
         generated (preempted requests recompute their full context)."""
         return list(self.prompt) + list(self.out_tokens)
+
+
+class PrefixIndex:
+    """Hash trie over token ids, at page granularity, mapping prompts onto
+    already-committed KV prefixes (the prefix-sharing index).
+
+    Registration happens when a request finishes chunked prefill: the engine
+    hands over the token sequence, the request's physical page list (with
+    the pool's generation stamps), and a **host fp copy** of the carried
+    K/V buffers.  An arriving prompt then walks the trie — one node per
+    full page of ``block_s`` token ids — to its longest registered prefix:
+
+      * the matched length ``m`` gates *compute*: the engine restores the
+        host fp K/V for ``[0, m)`` into the new request's prefill buffers
+        and chunk-prefills only the suffix (TTFT ~ suffix-only).  The host
+        copy is captured before quantization, so restoration is bit-exact
+        for fp and kv8 alike and never needs to invert the pool layout.
+      * the entry's still-live leading pages gate *memory*:
+        ``valid_leading_pages`` checks refcount + generation per page, and
+        the scheduler ``share()``s exactly that many full pages instead of
+        charging fresh ones (see ``Scheduler.fits``).
+
+    Entries never go "wrong", only stale: the host K/V is a pure function
+    of the token prefix, so a fully-recycled entry still saves prefill
+    compute even when no pages are shareable any more.  ``max_entries``
+    bounds host memory with FIFO eviction."""
+
+    def __init__(self, block_s: int, pool, max_entries: int = 64):
+        assert block_s > 0
+        self.block_s = block_s
+        self.pool = pool
+        self.max_entries = max_entries
+        self._root: dict = {"children": {}, "entries": []}
+        self._order: list[dict] = []          # FIFO eviction order
+        self._seq = 0
+        self.lookups = 0
+        self.hits = 0
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def register(self, tokens, pages, kv=None) -> None:
+        """Insert one committed prefix: ``tokens`` (the full prefilled
+        sequence), its physical ``pages`` (snapshotted with the pool's
+        current generation stamps), and ``kv`` — host fp
+        ``(k, v)`` arrays of shape ``[L, len(tokens), Kp, hsz]`` captured
+        from the prefill carry buffers before quantization."""
+        toks = tuple(int(t) for t in tokens)
+        entry = {"tokens": toks, "pages": list(pages),
+                 "gens": [self.pool.generation(p) for p in pages],
+                 "kv": kv, "seq": self._seq, "nodes": []}
+        self._seq += 1
+        node = self._root
+        node["entries"].append(entry)
+        entry["nodes"].append(node)
+        bs = self.block_s
+        for d in range(len(toks) // bs):
+            key = toks[d * bs:(d + 1) * bs]
+            nxt = node["children"].get(key)
+            if nxt is None:
+                nxt = {"children": {}, "entries": []}
+                node["children"][key] = nxt
+            node = nxt
+            node["entries"].append(entry)
+            entry["nodes"].append(node)
+        self._order.append(entry)
+        while len(self._order) > self.max_entries:
+            old = self._order.pop(0)
+            for n in old["nodes"]:
+                n["entries"].remove(old)
+
+    def match(self, tokens, limit: int) -> tuple[int, dict | None]:
+        """Longest registered prefix of ``tokens``: returns ``(m, entry)``
+        with ``m <= limit`` matched token ids (0, None on miss).  Walks the
+        page-key trie to the deepest node, then extends token-by-token into
+        the partial page against that node's entries; equal-length matches
+        break toward the entry with the most still-live (shareable) leading
+        pages — a retired twin's entry saves the same prefill compute but
+        no memory — then toward the earliest-registered (determinism)."""
+        self.lookups += 1
+        toks = tuple(int(t) for t in tokens)
+        bs = self.block_s
+        path = [self._root]
+        node = self._root
+        for d in range(len(toks) // bs):
+            nxt = node["children"].get(toks[d * bs:(d + 1) * bs])
+            if nxt is None:
+                break
+            node = nxt
+            path.append(node)
+        best_m, best, best_key = 0, None, None
+        for depth in range(len(path) - 1, -1, -1):
+            for e in sorted(path[depth]["entries"], key=lambda e: e["seq"]):
+                m = depth * bs
+                et = e["tokens"]
+                hi = min(len(toks), len(et), limit)
+                while m < hi and toks[m] == et[m]:
+                    m += 1
+                m = min(m, limit)
+                key = (m, self.valid_leading_pages(e), -e["seq"])
+                if best_key is None or key > best_key:
+                    best_m, best, best_key = m, e, key
+            if best_m > 0:
+                break       # shallower nodes can only match shorter prefixes
+        if best_m <= 0:
+            return 0, None
+        self.hits += 1
+        return best_m, best
+
+    def valid_leading_pages(self, entry: dict) -> int:
+        """How many of ``entry``'s leading pages are still the same tenancy
+        they were at registration (refcount > 0 and unchanged generation) —
+        the shareable page span.  Later pages may have been recycled; the
+        host K/V stays usable regardless."""
+        n = 0
+        for p, g in zip(entry["pages"], entry["gens"]):
+            if self.pool.refcount(p) <= 0 or self.pool.generation(p) != g:
+                break
+            n += 1
+        return n
+
+    def hit_rate(self) -> float:
+        """Fraction of lookups that matched a non-empty prefix."""
+        return self.hits / max(self.lookups, 1)
 
 
 class Scheduler:
@@ -83,7 +211,7 @@ class Scheduler:
     per-slot ``cap`` gate (always-admissible once a slot is free)."""
 
     def __init__(self, max_batch: int, cap: int, policy: str = "fcfs",
-                 pool=None, max_pages: int = 0):
+                 pool=None, max_pages: int = 0, prefix_index=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown sched policy {policy!r}; "
                              f"choose from {POLICIES}")
@@ -92,6 +220,7 @@ class Scheduler:
         self.max_batch = max_batch
         self.pool = pool
         self.max_pages = max_pages or (pool.capacity if pool else 0)
+        self.prefix_index = prefix_index
         self.queue: list[Request] = []
         self.slot_rids: list[int | None] = [None] * max_batch
         self.slot_len: list[int] = [0] * max_batch
@@ -135,26 +264,54 @@ class Scheduler:
         except ValueError:
             return None
 
+    def _prefix_plan(self, req: Request) -> tuple[int, dict | None, int, int]:
+        """One consistent prefix-share decision for all oracle methods:
+        ``(m, entry, shared_full, total_pages)`` — ``m`` matched tokens,
+        ``shared_full`` full pages the pool can ``share()`` (still-live
+        leading pages of the entry), ``total_pages`` the request's full
+        table width (prompt + one token).  With no pool or no index:
+        ``(0, None, 0, total)``."""
+        need = len(req.resume_tokens())
+        if self.pool is None:
+            return 0, None, 0, 0
+        total = self.pool.pages_for(need + 1)
+        if self.prefix_index is None or need < 2:
+            return 0, None, 0, total
+        m, entry = self.prefix_index.match(req.resume_tokens(),
+                                           limit=need - 1)
+        if entry is None:
+            return 0, None, 0, total
+        valid = self.prefix_index.valid_leading_pages(entry)
+        shared_full = min(m // self.pool.block_s, valid)
+        return m, entry, shared_full, total
+
     def fits(self, req: Request) -> bool:
         """Cache-pressure gate: could ``req``'s prefill plus one generated
-        token *ever* fit — the per-slot capacity (fixed layout), or
-        ``max_pages`` of the shared pool (paged)?  False means reject."""
+        token *ever* fit — the per-slot capacity (fixed layout), or the
+        shared pool (paged)?  False means reject.  Paged admission charges
+        only the **unshared suffix**: pages the prefix index can satisfy
+        from live shared pages are not counted against the pool (a batch of
+        same-prefix requests that exceeds the pool unshared still admits
+        shared), while the *full* table width still must respect
+        ``max_pages``."""
         need = len(req.resume_tokens()) + 1
         if self.pool is None:
             return need <= self.cap
-        return self.pool.pages_for(need) <= min(self.pool.capacity,
-                                                self.max_pages)
+        _, _, shared_full, total = self._prefix_plan(req)
+        return (total <= self.max_pages
+                and total - shared_full <= self.pool.capacity)
 
     def can_admit_now(self, req: Request) -> bool:
         """Whether the capacity oracle can grant ``req``'s admission
         reservation *right now*.  Fixed layout: always (the free slot IS
-        the reservation).  Paged: the prompt + one token's pages must be on
-        the free list; otherwise the request waits in the queue for running
-        requests to retire and release pages."""
+        the reservation).  Paged: the **unshared** pages — the suffix after
+        the prefix index's live shared span — must be on the free list;
+        otherwise the request waits in the queue for running requests to
+        retire and release pages."""
         if self.pool is None:
             return True
-        return (self.pool.pages_for(len(req.resume_tokens()) + 1)
-                <= self.pool.free_count)
+        _, _, shared_full, total = self._prefix_plan(req)
+        return total - shared_full <= self.pool.free_count
 
     def grow_for_next_token(self, slot: int) -> list[int] | None:
         """Reserve whatever the *next* decode token needs for ``slot``.
@@ -179,6 +336,42 @@ class Scheduler:
         if need > self.max_pages:
             return None
         return self.pool.extend(rid, need - have)
+
+    def _reserve(self, req: Request) -> None:
+        """Perform the paged admission reservation ``can_admit_now`` just
+        approved: ``share()`` the prefix index's live leading pages,
+        ``cow()`` the trailing partial page (the request's first appended
+        token diverges right after the shared prefix — resolved before any
+        write, so a shared page is never mutated), then ``alloc``/``extend``
+        fresh pages for the unshared suffix.  Records the match on the
+        request (``shared_len``/``shared_pages``/``shared_kv``) for the
+        engine's buffer restore and scatter."""
+        if self.pool is None:
+            return
+        req.shared_len = 0          # stale match from a prior admission
+        req.shared_pages = 0
+        req.shared_kv = None
+        m, entry, shared_full, total = self._prefix_plan(req)
+        if entry is None:
+            got = self.pool.alloc(req.rid, total)
+            assert got is not None, "can_admit_now lied"
+            return
+        bs = self.pool.block_s
+        valid = self.prefix_index.valid_leading_pages(entry)
+        partial = (shared_full == m // bs and m % bs != 0
+                   and valid > shared_full
+                   and len(entry["pages"]) > shared_full)
+        take = shared_full + 1 if partial else shared_full
+        self.pool.share(req.rid, entry["pages"][:take])
+        if partial:
+            got = self.pool.cow(req.rid, shared_full)
+            assert got is not None, "can_admit_now lied"
+        if total > take:
+            got = self.pool.extend(req.rid, total - take)
+            assert got is not None, "can_admit_now lied"
+        req.shared_len = m
+        req.shared_pages = shared_full
+        req.shared_kv = entry["kv"]
 
     def reject(self, req: Request) -> None:
         """Retire ``req`` unplaced with ``finish_reason="rejected"``."""
@@ -212,13 +405,12 @@ class Scheduler:
                 break
             self.queue.remove(req)
             need = len(req.resume_tokens())
-            if self.pool is not None:
-                # reserve prompt + first-token pages up front: the chunked
-                # prefill carries K/V in side buffers and commits them to
-                # the pool only at finalize, so full reservation here keeps
-                # multi-step prefills deadlock-free (no partial holds)
-                got = self.pool.alloc(req.rid, self.pool.pages_for(need + 1))
-                assert got is not None, "can_admit_now lied"
+            # reserve prompt + first-token pages up front (shared prefix
+            # pages + fresh suffix pages): the chunked prefill carries K/V
+            # in side buffers and commits them to the pool only at
+            # finalize, so full reservation here keeps multi-step prefills
+            # deadlock-free (no partial holds)
+            self._reserve(req)
             req.state = PREFILL
             self._stamp(req)
             self.slot_rids[slot] = req.rid
@@ -245,9 +437,7 @@ class Scheduler:
         if not self.can_admit_now(req):
             return None
         need = len(req.resume_tokens())
-        if self.pool is not None:
-            got = self.pool.alloc(req.rid, self.pool.pages_for(need + 1))
-            assert got is not None, "can_admit_now lied"
+        self._reserve(req)
         req.state = PREFILL
         self._stamp(req)
         self.slot_rids[slot] = req.rid

@@ -165,6 +165,36 @@ np.testing.assert_array_equal(np.asarray(got_k), np.asarray(kc_ff))
 np.testing.assert_array_equal(np.asarray(got_v), np.asarray(vc_ff))
 print("paged fused KV-append == fixed (KVP=8 shard_map): OK")
 
+# ---- grouped shared-prefix decode == ungrouped through the KVP=8 shard_map ----
+# rows 0,1 map the same first physical page (a shared prefix in the pool);
+# the two-pass grouped kernel must be bit-identical to the ungrouped sweep
+# over the same tables, including windowed and fused-append modes.
+tbl2_np = np.asarray(tbl).copy()
+tbl2_np[1, 0] = tbl2_np[0, 0]
+tbl2 = jnp.asarray(tbl2_np)
+gid_g = jnp.asarray([0, 0, 2, 3], jnp.int32)
+gnp_g = jnp.asarray([1, 1, 0, 0], jnp.int32)   # 1 shared page; 2 singletons
+tls2 = jnp.asarray([200, 150, 200, 129], jnp.int32)
+with set_mesh(mesh):
+    for win in (0, 64):
+        ou = jax.jit(lambda q, k, v, t: helix_attention(
+            mesh, hxp, q, k, v, tls2, window=win, block_tables=t))(
+                q, pool_k, pool_v, tbl2)
+        og = jax.jit(lambda q, k, v, t, g, n: helix_attention(
+            mesh, hxp, q, k, v, tls2, window=win, block_tables=t,
+            groups=(g, n)))(q, pool_k, pool_v, tbl2, gid_g, gnp_g)
+        np.testing.assert_array_equal(np.asarray(og), np.asarray(ou))
+    of, kf, vf = jax.jit(lambda q, k, v, kn, vn, t: helix_attention(
+        mesh, hxp, q, k, v, tls2 + 1, k_new=kn, v_new=vn, block_tables=t))(
+            q, pool_k, pool_v, kn_p, vn_p, tbl2)
+    og2, kg2, vg2 = jax.jit(lambda q, k, v, kn, vn, t, g, n: helix_attention(
+        mesh, hxp, q, k, v, tls2 + 1, k_new=kn, v_new=vn, block_tables=t,
+        groups=(g, n)))(q, pool_k, pool_v, kn_p, vn_p, tbl2, gid_g, gnp_g)
+np.testing.assert_array_equal(np.asarray(og2), np.asarray(of))
+np.testing.assert_array_equal(np.asarray(kg2), np.asarray(kf))
+np.testing.assert_array_equal(np.asarray(vg2), np.asarray(vf))
+print("grouped shared-prefix == ungrouped (KVP=8, windowed + fused append): OK")
+
 # ---- chunked prefill == one-shot prefill through the KVP=8 shard_map ----
 from repro.configs import get_config
 from repro.models.model_zoo import (build_serve_step, finalize_chunked_prefill,

@@ -177,6 +177,80 @@ def test_prefill_causal_triangle_formula():
     assert frac <= 0.56
 
 
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_grouped_accounting_prefix_bound_and_bruteforce():
+    """Grouped shared-prefix decode: the accounting's two-pass split is
+    pinned against brute-force enumeration, and the prefix read volume
+    scales with the number of *groups*, not the number of requests — the
+    ~1/group_size bytes-read reduction the CoDec-style pass exists for."""
+    b, kh, hsz = 6, 2, 32
+    bs, mp = 16, 5
+    n_pool = 16
+    pp = 2                                    # shared prefix pages per group
+    # two groups of three: rows 0-2 share pages [1, 2], rows 3-5 share
+    # [6, 7]; each row owns one or two suffix pages after the prefix
+    tables = np.zeros((b, mp), np.int32)
+    tables[0] = [1, 2, 3, 0, 0]
+    tables[1] = [1, 2, 4, 5, 0]
+    tables[2] = [1, 2, 8, 0, 0]
+    tables[3] = [6, 7, 9, 0, 0]
+    tables[4] = [6, 7, 10, 11, 0]
+    tables[5] = [6, 7, 12, 0, 0]
+    tl = np.array([37, 52, 35, 44, 61, 33], np.int32)
+    gid = np.array([0, 0, 0, 3, 3, 3], np.int32)
+    gnp = np.full((b,), pp, np.int32)
+    kv = _sds((n_pool, kh, bs, hsz))
+    acc = flash_decode_accounting(
+        _sds((b, 8, hsz)), kv, kv, tl, 0, kvp=1, rr_block=bs,
+        block_tables=tables, groups=(gid, gnp))
+
+    # brute force, prefix pass: grid row g streams max(group_np_g, 1)
+    # pages (memberless rows fetch the clamped sink page once)
+    gnp_row = np.zeros((b,), np.int64)
+    np.maximum.at(gnp_row, gid, gnp)
+    prefix_oracle = kh * int(np.maximum(gnp_row, 1).sum())
+    # brute force, suffix pass: valid blocks at or past the shared span
+    suffix_oracle = 0
+    for r in range(b):
+        pos = np.asarray(shard_positions(mp * bs, 0, 1, bs))
+        blocks = {j // bs for j in np.nonzero(pos < tl[r])[0]
+                  if j // bs >= gnp[r]}
+        suffix_oracle += kh * max(len(blocks), 1)
+    assert acc["prefix_blocks"] == prefix_oracle
+    assert acc["suffix_blocks"] == suffix_oracle
+    assert acc["blocks_visited"] == prefix_oracle + suffix_oracle
+
+    # the ISSUE bound: prefix reads scale with n_groups, not n_requests
+    n_groups = len({int(g) for g in gid})
+    assert acc["prefix_blocks"] <= kh * (pp * n_groups + (b - n_groups))
+    assert acc["prefix_blocks"] < kh * pp * b
+    # exact 1/group_size on the real (non-sink) prefix volume: 3 members
+    # per group read the shared pages once instead of three times
+    assert kh * n_groups * pp * 3 == kh * pp * b
+
+    # bytes split is consistent and the ungrouped call reports no prefix
+    blk_bytes = 2 * bs * hsz * 4
+    assert acc["prefix_bytes"] == acc["prefix_blocks"] * blk_bytes
+    assert acc["bytes_read"] == acc["blocks_visited"] * blk_bytes
+    un = flash_decode_accounting(
+        _sds((b, 8, hsz)), kv, kv, tl, 0, kvp=1, rr_block=bs,
+        block_tables=tables)
+    assert un["prefix_blocks"] == un["prefix_bytes"] == 0
+    assert un["suffix_blocks"] == un["blocks_visited"]
+    # grouping strictly reduces total reads on this shared workload
+    assert acc["bytes_read"] < un["bytes_read"]
+
+    # dense grouped: suffix degenerates to the full sweep, prefix unchanged
+    dense = flash_decode_accounting(
+        _sds((b, 8, hsz)), kv, kv, tl, 0, kvp=1, rr_block=bs,
+        block_tables=tables, groups=(gid, gnp), prune=False)
+    assert dense["suffix_blocks"] == b * kh * mp == dense["blocks_total"]
+    assert dense["prefix_blocks"] == prefix_oracle
+
+
 def test_registry_accounting_surface():
     """registry.accounting resolves the attention families and rejects the
     families without an accounting layer."""

@@ -1,7 +1,11 @@
 """BlockAllocator property suite (the shared-pool paged KV cache's page
-accounting): random alloc/extend/preempt/free streams must never hand a
-page to two requests, must conserve pages exactly (free + Σ allocated ==
-capacity), and must keep the reserved sink page out of circulation.
+accounting): random interleaved alloc/extend/share/CoW-append/preempt/free
+streams must conserve pages exactly (free + Σ *unique* allocated ==
+capacity), keep every page's refcount equal to its multiplicity across
+request tables (never negative), never free a page while another table
+still references it, never hand a fresh page to two requests, keep the
+reserved sink page out of circulation, and replay deterministically (FIFO
+free list) — the refcount/CoW battery behind prefix sharing.
 
 Hypothesis-driven when available (repro.testing.optional_hypothesis —
 skips, never collection-errors, without it); the deterministic twins at
@@ -15,30 +19,83 @@ given, settings, st = optional_hypothesis()
 
 
 # ---------------------------------------------------------------- driver
+def unique_owned(pool, live):
+    """Unique pages across the live requests' tables."""
+    return {p for r in live for p in pool.pages(r)}
+
+
 def drive(pool: BlockAllocator, ops):
     """Replay an operation stream against ``pool``, asserting the
     allocator's invariants after every step.
 
     ``ops`` = list of (kind, rid, n) with kind in {"alloc", "extend",
-    "free"}; ``extend`` on an unknown rid degrades to ``alloc`` and
-    ``alloc`` on a live rid to ``extend``, so arbitrary random streams are
-    always well-formed.  Returns the set of live rids."""
+    "free", "share", "cow"}; ``extend`` on an unknown rid degrades to
+    ``alloc`` and ``alloc`` on a live rid to ``extend``; ``share`` maps
+    request ``n % …``'s pages into new rid (degrading to ``alloc`` when no
+    donor exists); ``cow`` makes one of rid's logical pages exclusive — so
+    arbitrary random streams are always well-formed.  Returns the set of
+    live rids."""
     live: set[int] = set()
     for kind, rid, n in ops:
-        if kind == "free":
-            released = pool.free(rid)
-            if rid in live:
-                assert released > 0
+        if kind == "share":
+            donors = sorted(r for r in live if r != rid and pool.pages(r))
+            if rid in live or not donors:
+                kind = "alloc" if rid not in live else "extend"
+                n = max(n % 4, 1)
             else:
-                assert released == 0
+                src = donors[n % len(donors)]
+                src_pages = list(pool.pages(src))
+                take = (n % len(src_pages)) + 1
+                before = {p: pool.refcount(p) for p in src_pages[:take]}
+                got = pool.share(rid, src_pages[:take])
+                assert got == src_pages[:take] == pool.pages(rid)
+                for p in src_pages[:take]:
+                    assert pool.refcount(p) == before[p] + 1
+                assert pool.pages(src) == src_pages   # donor untouched
+                live.add(rid)
+        if kind == "cow":
+            if rid not in live or not pool.pages(rid):
+                continue
+            li = n % len(pool.pages(rid))
+            old = pool.pages(rid)[li]
+            refs = pool.refcount(old)
+            free_before = pool.free_count
+            res = pool.cow(rid, li)
+            if refs == 1:
+                # exclusive already: CoW is a no-op, nothing allocated
+                assert res == (old, old)
+                assert pool.free_count == free_before
+            elif res is None:
+                assert free_before == 0        # only refusal reason
+                assert pool.pages(rid)[li] == old
+            else:
+                o, new = res
+                assert o == old and new != old
+                assert pool.pages(rid)[li] == new
+                # CoW never mutates a shared page: the old page stays
+                # live under the other holders, one refcount lighter
+                assert pool.refcount(old) == refs - 1 >= 1
+                assert pool.refcount(new) == 1
+        elif kind == "free":
+            pages_before = list(pool.pages(rid))
+            shared = [p for p in pages_before if pool.refcount(p) > 1]
+            exclusive = [p for p in pages_before if pool.refcount(p) == 1]
+            released = pool.free(rid)
+            # only exclusively-held pages return to the free list
+            assert released == len(exclusive)
+            # no page freed while referenced: survivors' pages stay live
+            for p in shared:
+                assert pool.refcount(p) >= 1
             live.discard(rid)
-        else:
+        elif kind in ("alloc", "extend"):
             if rid in live:
                 before = len(pool.pages(rid))
                 got = pool.extend(rid, n)
                 if got is not None:
                     assert len(got) == n
                     assert pool.pages(rid)[before:] == got
+                    for p in got:
+                        assert pool.refcount(p) == 1
             else:
                 free_before = pool.free_count
                 got = pool.alloc(rid, n)
@@ -49,8 +106,9 @@ def drive(pool: BlockAllocator, ops):
                     assert pool.pages(rid) == got
                     live.add(rid)
         pool.check_invariants()
-        assert pool.free_count == pool.capacity - sum(
-            len(pool.pages(r)) for r in live)
+        assert pool.free_count == pool.capacity - len(unique_owned(pool,
+                                                                   live))
+        assert all(pool.refcount(p) >= 0 for p in range(pool.n_blocks))
     return live
 
 
@@ -63,11 +121,13 @@ def check_stream(n_blocks, stream):
     pool.check_invariants()
     assert pool.free_count == pool.capacity
     assert pool.peak_in_use <= pool.capacity
+    assert pool.pages_shared_peak <= pool.capacity
 
 
 # ------------------------------------------------------------- properties
 @given(st.integers(2, 40),
-       st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+       st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free",
+                                           "share", "cow"]),
                           st.integers(0, 7), st.integers(0, 9)),
                 max_size=60))
 @settings(max_examples=200, deadline=None)
@@ -78,8 +138,8 @@ def test_allocator_random_streams(n_blocks, stream):
 @given(st.integers(1, 6), st.lists(st.integers(1, 50), max_size=12))
 @settings(max_examples=100, deadline=None)
 def test_no_double_assignment_across_requests(n_reqs, lengths):
-    """Distinct requests' page lists are always disjoint, and pages_for
-    matches the lengths they were sized from."""
+    """Distinct requests' *fresh* page lists are always disjoint, and
+    pages_for matches the lengths they were sized from."""
     pool = BlockAllocator(n_blocks=64, block_s=16)
     owned = {}
     for rid in range(n_reqs):
@@ -92,6 +152,23 @@ def test_no_double_assignment_across_requests(n_reqs, lengths):
     assert len(flat) == len(set(flat))
     assert BlockAllocator.SINK not in flat
     pool.check_invariants()
+
+
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free",
+                                           "share", "cow"]),
+                          st.integers(0, 5), st.integers(0, 9)),
+                max_size=40))
+@settings(max_examples=150, deadline=None)
+def test_share_cow_fifo_determinism(stream):
+    """Two pools replaying the same share/CoW-laced stream hand out
+    identical page lists — refcounting must not perturb FIFO order."""
+    a = BlockAllocator(n_blocks=16, block_s=16)
+    b = BlockAllocator(n_blocks=16, block_s=16)
+    drive(a, stream)
+    drive(b, stream)
+    for rid in range(6):
+        assert a.pages(rid) == b.pages(rid)
+    assert list(a._free) == list(b._free)
 
 
 # ---------------------------------------------------- deterministic twins
@@ -108,6 +185,90 @@ def test_alloc_extend_free_cycle():
                      ("alloc", 2, 9),           # over capacity -> refused
                      ("free", 0, 0), ("alloc", 2, 5), ("free", 1, 0),
                      ("free", 2, 0), ("alloc", 3, 7)])
+
+
+def test_share_cow_cycle():
+    """Deterministic twin of the refcount battery: share a prefix, CoW the
+    divergent page, release in both orders, conserve exactly."""
+    check_stream(12, [("alloc", 0, 4), ("share", 1, 0), ("cow", 1, 3),
+                      ("extend", 1, 2), ("share", 2, 0), ("cow", 2, 1),
+                      ("free", 0, 0), ("free", 2, 0), ("cow", 1, 0),
+                      ("free", 1, 0), ("alloc", 3, 11)])
+
+
+def test_share_is_not_double_charged():
+    """A page shared by N tables occupies one pool page: unique-page
+    accounting (the admission oracle's no-double-charge guarantee)."""
+    pool = BlockAllocator(n_blocks=8, block_s=16)
+    pool.alloc(0, 3)
+    free_before = pool.free_count
+    pool.share(1, pool.pages(0)[:2])
+    pool.share(2, pool.pages(0)[:2])
+    assert pool.free_count == free_before          # sharing charges nothing
+    assert pool.used_count == 3                    # unique pages
+    assert pool.refcount(pool.pages(0)[0]) == 3
+    pool.check_invariants()
+
+
+def test_release_keeps_shared_pages_live():
+    """Releasing the original owner must not free pages a sharer still
+    maps — they return to the free list only at refcount zero."""
+    pool = BlockAllocator(n_blocks=8, block_s=16)
+    pool.alloc(0, 3)
+    shared = pool.pages(0)[:2]
+    pool.share(1, shared)
+    assert pool.free(0) == 1                       # only the exclusive page
+    assert all(pool.refcount(p) == 1 for p in shared)
+    assert pool.pages(1) == shared
+    assert pool.free(1) == 2                       # last holder frees them
+    assert pool.free_count == pool.capacity
+    pool.check_invariants()
+
+
+def test_cow_gives_exclusive_page_and_preserves_donor():
+    """CoW on a shared page: the sharer gets a fresh exclusive page, the
+    donor's page (and its other holders) are untouched — a page with
+    refcount > 1 is never mutated in place."""
+    pool = BlockAllocator(n_blocks=8, block_s=16)
+    pool.alloc(0, 2)
+    pool.share(1, pool.pages(0))
+    old = pool.pages(1)[1]
+    o, new = pool.cow(1, 1)
+    assert (o, new != old, pool.refcount(old), pool.refcount(new)) == \
+        (old, True, 1, 1)
+    assert pool.pages(0)[1] == old                 # donor keeps the page
+    # exclusive page: CoW degrades to a no-op
+    assert pool.cow(1, 1) == (new, new)
+    pool.check_invariants()
+
+
+def test_cow_refuses_when_pool_exhausted():
+    pool = BlockAllocator(n_blocks=4, block_s=16)
+    pool.alloc(0, 3)                               # pool exhausted
+    pool.free(0)
+    pool.alloc(0, 1)
+    pool.share(1, pool.pages(0))
+    pool.extend(0, 2)                              # free list now empty
+    assert pool.free_count == 0
+    before = list(pool.pages(1))
+    assert pool.cow(1, 0) is None                  # shared + no free page
+    assert pool.pages(1) == before
+    pool.check_invariants()
+
+
+def test_generation_stamps_detect_recycling():
+    """A (page, generation) pair names one tenancy: free + realloc bumps
+    the generation, so stale prefix-index entries are detectable."""
+    pool = BlockAllocator(n_blocks=4, block_s=16)
+    pool.alloc(0, 3)
+    page = pool.pages(0)[0]
+    gen = pool.generation(page)
+    pool.free(0)
+    assert pool.generation(page) == gen            # free alone: unchanged
+    pool.alloc(1, 3)
+    assert page in pool.pages(1)
+    assert pool.generation(page) == gen + 1        # recycled: bumped
+    pool.check_invariants()
 
 
 def test_preempt_releases_pages_copy_free():

@@ -1,0 +1,168 @@
+"""Prefix sharing + grouped shared-prefix decode: engine-level exactness.
+
+The PR's serving-layer acceptance criteria:
+
+  * shared-prefix engine streams are token-for-token identical to the
+    unshared engine across {ref, pallas-interpret} x {fp, kv8} x
+    {grouped decode on/off} x {prune on/off} — sharing and grouping are
+    pure memory/bandwidth optimisations, never numerics;
+  * divergence immediately after the shared prefix: a prompt that IS the
+    registered prefix (every generated token diverges from the first
+    appended one) stays bit-exact — the admission path CoWs the shared
+    partial page before the first append writes it;
+  * admission regression: a same-prefix batch whose *unshared* page
+    demand exceeds the pool still admits (and completes) shared, because
+    fits/can_admit_now charge only the unshared suffix;
+  * the grouped engine actually forms groups mid-run (group_np > 0) and
+    dissolves them by drain time (leaves reset to singleton defaults).
+
+Kernel-level grouped exactness (two-pass prefix+suffix vs ungrouped) is
+covered in tests/kernels/test_flash_decode_paged.py; the accounting
+bound in tests/kernels/test_block_accounting.py.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import (build_serve_step, make_chunk_prefill_step,
+                                    make_prefill_step)
+from repro.models.transformer import init_params
+from repro.serving import DecodeEngine, Request
+from repro.utils import make_mesh, set_mesh
+
+CFG = get_config("granite-3-2b").reduced()
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+MESH = make_mesh((1, 1), ("data", "model"))
+
+_RNG = np.random.default_rng(11)
+PREFIX = _RNG.integers(0, CFG.vocab, 40).tolist()
+SUFFIXES = [_RNG.integers(0, CFG.vocab, n).tolist() for n in (7, 9, 5)]
+PROMPTS = [PREFIX + s for s in SUFFIXES]
+
+
+def _hx(backend="ref", *, grouped=False, kv8=False, prune=True):
+    return HelixConfig(kvp_axes=(), tpa_axis=None, attn_block_s=16,
+                       attn_backend=backend, prefill_backend=backend,
+                       paged_kv=True, kv_cache_bits=8 if kv8 else 16,
+                       prune_blocks=prune, grouped_decode=grouped)
+
+
+def _engine(hx, *, share, max_batch=3, max_seq=96, chunk=8,
+            pool_blocks=None):
+    with set_mesh(MESH):
+        serve = build_serve_step(CFG, MESH, hx)
+        prefill = make_prefill_step(CFG, MESH, hx)
+        cs = make_chunk_prefill_step(CFG, MESH, hx)
+        return DecodeEngine(CFG, PARAMS, serve, prefill, max_batch=max_batch,
+                            max_seq=max_seq, hx=hx, chunk_tokens=chunk,
+                            chunk_prefill_step=cs, tp_width=1,
+                            pool_blocks=pool_blocks, prefix_share=share)
+
+
+def _run(hx, *, share, prompts=PROMPTS, max_new=6, probe=None):
+    """Staggered submission: request 0 prefills fully (registering its
+    prefix) before the same-prefix followers arrive — an immediate batch
+    would race registration, which happens at prefill finalize."""
+    eng = _engine(hx, share=share)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    with set_mesh(MESH):
+        eng.submit(reqs[0])
+        while reqs[0].state != "decode":
+            eng.step()
+        for r in reqs[1:]:
+            eng.submit(r)
+        while not all(r.done for r in reqs):
+            eng.step()
+            if probe is not None:
+                probe(eng)
+    return [tuple(r.out_tokens) for r in reqs], eng
+
+
+_BASELINES: dict[tuple, list] = {}
+
+
+def _baseline(backend, kv8):
+    key = (backend, kv8)
+    if key not in _BASELINES:
+        _BASELINES[key], _ = _run(_hx(backend, kv8=kv8), share=False)
+    return _BASELINES[key]
+
+
+# ------------------------------------------------------ bit-exact lattice
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+@pytest.mark.parametrize("kv8", [False, True])
+@pytest.mark.parametrize("grouped", [False, True])
+@pytest.mark.parametrize("prune", [True, False])
+def test_prefix_share_stream_parity(backend, kv8, grouped, prune):
+    streams, eng = _run(
+        _hx(backend, grouped=grouped, kv8=kv8, prune=prune), share=True)
+    assert streams == _baseline(backend, kv8)
+    stats = eng.pool_stats()
+    assert stats["prefix_hit_rate"] > 0          # followers actually matched
+    assert stats["pages_shared_peak"] >= 2       # full prefix pages mapped 2x
+    assert eng.pool.free_count == eng.pool.capacity   # refcounts drained
+
+
+def test_grouped_engine_forms_and_dissolves_groups():
+    """The grouped engine's group_np leaf goes positive while same-prefix
+    requests decode together and returns to the singleton default (all
+    zeros, identical-to-ungrouped semantics) once they retire."""
+    seen = []
+
+    def probe(eng):
+        seen.append(np.asarray(eng.state["group_np"]).max())
+
+    _, eng = _run(_hx("ref", grouped=True), share=True, probe=probe)
+    assert max(seen) >= 2                        # >= 2 full pages grouped
+    assert np.asarray(eng.state["group_np"]).max() == 0
+    assert eng.pool.free_count == eng.pool.capacity
+
+
+# --------------------------------------- divergence right after the prefix
+@pytest.mark.parametrize("grouped", [False, True])
+def test_divergence_immediately_after_prefix(grouped):
+    """A follower whose prompt IS the shared prefix: its very first
+    appended token lands right after the shared span, so the admission
+    CoW of the shared partial page is what keeps request 0's cache
+    intact.  Streams must match the unshared engine exactly."""
+    prompts = [list(PREFIX), list(PREFIX)]
+    base, _ = _run(_hx("ref"), share=False, prompts=prompts)
+    streams, eng = _run(_hx("ref", grouped=grouped), share=True,
+                        prompts=prompts)
+    assert streams == base
+    assert streams[0] == streams[1]              # same prompt, same stream
+    assert eng.pool_stats()["prefix_hit_rate"] > 0
+    assert eng.pool.free_count == eng.pool.capacity
+
+
+# --------------------------------------------------- admission regression
+def test_same_prefix_batch_admits_shared_when_unshared_exceeds_pool():
+    """fits/can_admit_now charge only the unshared suffix: with request 0
+    holding 4 of 7 pool pages, an unshared follower (4 pages) could never
+    be admitted concurrently, but the same-prefix follower shares 2 full
+    pages and walks straight in."""
+    hx = _hx("ref")
+    eng = _engine(hx, share=True, max_batch=3, max_seq=96, pool_blocks=8)
+    assert eng.pool.capacity == 7
+    r0 = Request(rid=0, prompt=list(PROMPTS[0]), max_new_tokens=12)
+    with set_mesh(MESH):
+        eng.submit(r0)
+        while r0.state != "decode":
+            eng.step()
+        # r0: pages_for(47+1) = 4 pages held -> 3 free
+        assert eng.pool.free_count == 3
+        followers = [Request(rid=i, prompt=list(PROMPTS[i]),
+                             max_new_tokens=3) for i in (1, 2)]
+        for r in followers:
+            assert eng.sched.fits(r)             # suffix-only charge
+            eng.submit(r)
+        eng.step()
+        # both placed immediately despite 2 x 4 > 3 free pages unshared
+        assert all(r.state in ("prefill", "decode") for r in followers)
+        eng.run_to_completion()
+    assert all(r.finish_reason == "max_tokens" for r in followers)
+    assert eng.pool_stats()["pages_shared_peak"] >= 2
+    assert eng.pool.free_count == eng.pool.capacity
