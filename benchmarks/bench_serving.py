@@ -32,6 +32,13 @@ allocated pages (zeros on fixed-cap rows) plus capacity retirements
 (real count on both layouts — the paged/fixed token streams themselves
 are bit-identical, which ``scripts/paged_smoke.py`` asserts in CI).
 
+``--turns T`` appends a multi-turn row pair (history re-prefilled vs
+``--session-kv`` host-tier restore): the ``turn2_ttft_s`` /
+``restore_p95_ms`` / ``spills`` / ``restores`` columns quantify the host
+KV tier, and the session row's ``resume_reprefill_chunks`` stays 0 —
+turn>=2 prefill work is the fresh turn only, independent of history
+length (asserted in ``--smoke``).
+
 On CPU the absolute times are dominated by XLA dispatch, not kernel work —
 the *relative* one-shot-vs-chunked TTL spread is the signal tracked across
 PRs; rerun on TPU for real latencies.  ``--smoke`` runs one tiny cell per
@@ -63,6 +70,13 @@ ROW_SCHEMA = {
     # rows without --prefix-share)
     "prefix_share": bool, "prefix_hit_rate": float,
     "pages_shared_peak": int,
+    # host KV tier (--turns / --session-kv): turn count, spill/restore
+    # totals, restore-latency p95, and mean TTFT of turn>=2 requests —
+    # with session_kv it tracks the fresh turn length, not the growing
+    # history (zeros on single-turn rows without a host store)
+    "turns": int, "session_kv": bool,
+    "spills": int, "restores": int, "restore_p95_ms": float,
+    "resume_reprefill_chunks": int, "turn2_ttft_s": float,
 }
 
 
@@ -70,7 +84,8 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
                sched_policy: str, requests: int, prompt_len: int,
                max_new: int, max_batch: int, seed: int = 0,
                paged_kv: bool = False, prefix_share: bool = False,
-               shared_prefix_len: int = 0) -> dict:
+               shared_prefix_len: int = 0, turns: int = 1,
+               session_kv: bool = False) -> dict:
     """One (load, chunk_tokens, paged_kv) sweep cell -> a ROW_SCHEMA row."""
     finished, summary = serve_demo(
         arch, reduced=True, n_requests=requests, prompt_len=prompt_len,
@@ -78,6 +93,7 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         sched_policy=sched_policy, traffic="poisson", arrival_rate=load,
         paged_kv=True if paged_kv else None, prefix_share=prefix_share,
         shared_prefix_len=shared_prefix_len,
+        turns=turns, session_kv=session_kv,
         seed=seed, log=lambda s: None)
     return {
         "load": float(load),
@@ -98,6 +114,13 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         "prefix_share": bool(prefix_share),
         "prefix_hit_rate": float(summary["prefix_hit_rate"]),
         "pages_shared_peak": int(summary["pages_shared_peak"]),
+        "turns": int(turns),
+        "session_kv": bool(session_kv),
+        "spills": int(summary["spills"]),
+        "restores": int(summary["restores"]),
+        "restore_p95_ms": float(summary["restore_s"]["p95"] * 1e3),
+        "resume_reprefill_chunks": int(summary["resume_reprefill_chunks"]),
+        "turn2_ttft_s": float(summary["turn2_ttft_s"]),
     }
 
 
@@ -125,9 +148,19 @@ def main():
     ap.add_argument("--shared-prefix-len", type=int, default=32,
                     help="prefix-share rows: common leading tokens per "
                          "prompt")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="multi-turn rows: each request is a session "
+                         "resubmitting its full context plus fresh tokens "
+                         "every turn (adds a session_kv off/on row pair)")
+    ap.add_argument("--session-kv", action="store_true",
+                    help="with --turns: also sweep the multi-turn rows with "
+                         "host-tier session KV, so turn>=2 restores history "
+                         "instead of re-prefilling it (turn2_ttft_s / "
+                         "spills / restores columns)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell: one load, 4 requests, short prompts"
-                         " (includes one paged + one prefix-share row)")
+                         " (includes one paged + one prefix-share row and a"
+                         " session-KV multi-turn row pair)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -141,6 +174,7 @@ def main():
         # and followers must arrive while the registrant still decodes
         # (max_new stretches its lifetime past the arrival gaps)
         args.prefix_share, args.shared_prefix_len = True, 16
+        args.turns, args.session_kv = 3, True
 
     rows = []
     for load in args.loads:
@@ -168,6 +202,32 @@ def main():
                           f"tput={row['throughput_tok_s']:7.1f} tok/s "
                           f"pool_occ={row['pool_occupancy_peak']:.2f} "
                           f"hit={row['prefix_hit_rate']:.2f}")
+
+    if args.turns > 1:
+        # multi-turn pair: history re-prefilled every turn vs restored from
+        # the host tier — same workload, so the turn2_ttft_s delta (and the
+        # session row's zero resume_reprefill_chunks) is the tier's win
+        chunk = next((c for c in args.chunks if c), 8)
+        for skv in ((False, True) if args.session_kv else (False,)):
+            row = bench_cell(
+                args.arch, load=args.loads[0], chunk_tokens=chunk,
+                sched_policy=args.sched_policy, requests=args.requests,
+                prompt_len=args.prompt_len, max_new=args.max_new,
+                max_batch=args.max_batch, paged_kv=True,
+                turns=args.turns, session_kv=skv)
+            rows.append(row)
+            print(f"turns={args.turns} session_kv={int(skv)} "
+                  f"chunk={chunk:<4} "
+                  f"turn2_ttft={row['turn2_ttft_s']*1e3:8.1f}ms "
+                  f"spills={row['spills']} restores={row['restores']} "
+                  f"restore_p95={row['restore_p95_ms']:.1f}ms "
+                  f"reprefill_chunks={row['resume_reprefill_chunks']}")
+            if args.smoke and skv:
+                # the independence-of-history proof, counted not timed:
+                # every turn>=2 restored its history (no faults injected),
+                # so prefill work per turn is the fresh tokens only
+                assert row["restores"] > 0, row
+                assert row["resume_reprefill_chunks"] == 0, row
 
     out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
                     "requests": args.requests, "prompt_len": args.prompt_len,

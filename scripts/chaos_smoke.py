@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""CI chaos smoke for the host KV tier (scripts/ci.sh).
+
+Drives the same preempt-mid-decode workload through the paged engine five
+ways — no faults, then each injected failure mode at probability 1.0
+(restore_fail, corrupt, store_full, delay) — and asserts the PR's
+acceptance criteria end to end:
+
+  * token streams are identical to a never-preempted baseline in EVERY
+    run: spill/restore is exact bytes, and every injected fault degrades
+    to the re-prefill fallback, never to divergent tokens;
+  * without faults the resume runs **zero re-prefill chunks** (the
+    preempted request never re-enters PREFILL) and the restore counter
+    ticks;
+  * with faults the matching counter ticks (restores_failed /
+    checksum_mismatches / store_full+preempt_drops) and the fallback is
+    counted in ``resume_reprefill_chunks``;
+  * the injected delay holds only the restoring slot (other streams keep
+    decoding) and still commits with zero re-prefill chunks.
+
+Run directly:  PYTHONPATH=src python scripts/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+
+from repro.configs import get_config                           # noqa: E402
+from repro.core.sharding import HelixConfig                    # noqa: E402
+from repro.models.model_zoo import (build_serve_step,          # noqa: E402
+                                    make_chunk_prefill_step,
+                                    make_prefill_step)
+from repro.models.transformer import init_params               # noqa: E402
+from repro.serving import DecodeEngine, Request                # noqa: E402
+from repro.serving.faults import FaultPlan                     # noqa: E402
+from repro.utils import make_mesh, set_mesh                    # noqa: E402
+
+CHUNK = 4
+PROMPT_LENS = (24, 13, 9)
+MAX_NEW = 8
+PREEMPT_AFTER = 3        # preempt r0 once it has decoded this many tokens
+
+
+def _engine(cfg, params, mesh, *, host_pages, fault_plan):
+    hx = HelixConfig(kvp_axes=(), tpa_axis=None, attn_block_s=16,
+                     paged_kv=True)
+    with set_mesh(mesh):
+        serve = build_serve_step(cfg, mesh, hx)
+        prefill = make_prefill_step(cfg, mesh, hx)
+        cs = make_chunk_prefill_step(cfg, mesh, hx)
+        return DecodeEngine(cfg, params, serve, prefill, max_batch=3,
+                            max_seq=96, hx=hx, chunk_tokens=CHUNK,
+                            chunk_prefill_step=cs, tp_width=1,
+                            host_pages=host_pages, fault_plan=fault_plan)
+
+
+def run(cfg, params, mesh, prompts, *, host_pages=0, fault_plan=None,
+        preempt=False):
+    """One engine run; returns (streams, summary, post_preempt_prefills)."""
+    eng = _engine(cfg, params, mesh, host_pages=host_pages,
+                  fault_plan=fault_plan)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    preempted = False
+    post_prefills = 0
+    with set_mesh(mesh):
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(10_000):
+            if all(r.done for r in reqs):
+                break
+            eng.step()
+            if (preempt and not preempted
+                    and len(reqs[0].out_tokens) >= PREEMPT_AFTER
+                    and reqs[0].state == "decode"):
+                eng.preempt(0)
+                preempted = True
+            if preempted:
+                post_prefills += reqs[0].state == "prefill"
+    assert all(r.done for r in reqs), [r.state for r in reqs]
+    assert not preempt or preempted, "preempt trigger never fired"
+    assert eng.pool.free_count == eng.pool.capacity        # pool drained
+    if eng.store is not None:
+        eng.store.check_invariants()
+    return ([tuple(r.out_tokens) for r in reqs],
+            eng.metrics.summary(), post_prefills)
+
+
+def main() -> int:
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in PROMPT_LENS]
+
+    base, base_sum, _ = run(cfg, params, mesh, prompts)
+    assert base_sum["preempts"] == 0
+
+    # healthy tier: spill -> restore, zero re-prefill chunks, same stream
+    ok, ok_sum, ok_pf = run(cfg, params, mesh, prompts,
+                            host_pages=64, preempt=True)
+    assert ok == base, f"healthy spill/restore diverged:\n{base}\n{ok}"
+    assert ok_sum["preempt_spills"] == 1 and ok_sum["preempt_drops"] == 0, \
+        ok_sum
+    assert ok_sum["restores"] >= 1 and ok_sum["restores_failed"] == 0, ok_sum
+    assert ok_sum["resume_reprefill_chunks"] == 0, ok_sum
+    assert ok_pf == 0, f"resumed request re-entered PREFILL ({ok_pf} steps)"
+
+    # no tier at all: the drop/re-prefill fallback, still bit-exact
+    drop, drop_sum, drop_pf = run(cfg, params, mesh, prompts, preempt=True)
+    assert drop == base, "no-tier re-prefill fallback diverged"
+    assert drop_sum["preempt_drops"] == 1 and drop_sum["spills"] == 0, \
+        drop_sum
+    assert drop_sum["resume_reprefill_chunks"] > 0 and drop_pf > 0, drop_sum
+
+    # every injected fault: stream stays identical, its counter ticks,
+    # and the fallback (when one happens) is counted
+    matrix = {
+        "restore_fail": FaultPlan(seed=1, restore_fail=1.0),
+        "corrupt": FaultPlan(seed=2, corrupt=1.0),
+        "store_full": FaultPlan(seed=3, store_full=1.0),
+        "delay": FaultPlan(seed=4, delay=1.0, delay_steps=3),
+    }
+    counters = {}
+    for name, plan in matrix.items():
+        s, summ, pf = run(cfg, params, mesh, prompts,
+                          host_pages=64, fault_plan=plan, preempt=True)
+        assert s == base, f"fault {name!r} diverged the stream"
+        counters[name] = summ
+        if name == "restore_fail":
+            assert summ["restores_failed"] >= 1, summ
+            assert summ["resume_reprefill_chunks"] > 0 and pf > 0, summ
+        elif name == "corrupt":
+            assert summ["checksum_mismatches"] >= 1, summ
+            assert summ["restores_failed"] >= 1, summ
+            assert summ["resume_reprefill_chunks"] > 0 and pf > 0, summ
+        elif name == "store_full":
+            # the save itself is refused: the preemption degrades to the
+            # drop path and resume re-prefills
+            assert summ["spills"] == 0 and summ["preempt_drops"] == 1, summ
+            assert summ["resume_reprefill_chunks"] > 0 and pf > 0, summ
+        elif name == "delay":
+            # slower host tier, same outcome: restore commits late but
+            # still with zero re-prefill chunks
+            assert summ["restores"] >= 1 and summ["restores_failed"] == 0, \
+                summ
+            assert summ["resume_reprefill_chunks"] == 0 and pf == 0, summ
+
+    print(f"[chaos_smoke] streams identical across baseline + healthy "
+          f"spill/restore + no-tier drop + {len(matrix)} fault runs; "
+          f"healthy resume re-prefilled 0 chunks (restores="
+          f"{ok_sum['restores']}); fallbacks counted: "
+          + ", ".join(f"{k}={counters[k]['resume_reprefill_chunks']}"
+                      for k in matrix))
+    print("[chaos_smoke] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -74,6 +74,28 @@ def check(path: pathlib.Path) -> list[str]:
                 if row.get(key, 0) != 0:
                     errors.append(f"row {i}: non-sharing row has nonzero "
                                   f"{key}: {row.get(key)}")
+        # host KV tier columns: a session row must have restored history
+        # with zero re-prefill fallback (faults are never injected in the
+        # bench, so any fallback means the tier is broken); non-session
+        # rows must report a zero turn-2 TTFT only when single-turn
+        if row.get("session_kv"):
+            if row.get("turns", 1) < 2:
+                errors.append(f"row {i}: session_kv row needs turns >= 2")
+            if not row.get("restores", 0) >= 1:
+                errors.append(f"row {i}: session_kv row needs restores >= 1")
+            if row.get("resume_reprefill_chunks", -1) != 0:
+                errors.append(f"row {i}: session_kv row (no faults) must "
+                              "have resume_reprefill_chunks == 0, got "
+                              f"{row.get('resume_reprefill_chunks')}")
+            if not row.get("turn2_ttft_s", 0) > 0:
+                errors.append(f"row {i}: session_kv row needs "
+                              "turn2_ttft_s > 0")
+        elif row.get("turns", 1) == 1:
+            for key in ("spills", "restores", "turn2_ttft_s",
+                        "restore_p95_ms"):
+                if row.get(key, 0) != 0:
+                    errors.append(f"row {i}: single-turn row has nonzero "
+                                  f"{key}: {row.get(key)}")
     return errors
 
 

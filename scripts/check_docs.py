@@ -72,12 +72,17 @@ def check_docstrings() -> None:
         ("repro.serving.metrics", "EngineMetrics"),
         ("repro.serving.pool", "BlockAllocator"),
         ("repro.serving.pool", "pages_for"),
+        ("repro.serving.tier", "HostPageStore"),
+        ("repro.serving.faults", "FaultPlan"),
+        ("repro.serving.faults", "FaultInjector"),
         ("repro.core.kvcache", "quantize_decode_state"),
         ("repro.core.kvcache", "cache_to_pages"),
         ("repro.core.kvcache", "pages_to_cache"),
         ("repro.core.kvcache", "gather_pages"),
         ("repro.core.kvcache", "state_to_paged"),
         ("repro.core.kvcache", "page_positions"),
+        ("repro.core.kvcache", "gather_pool_pages"),
+        ("repro.core.kvcache", "scatter_pool_pages"),
         ("repro.core.helix", "paged_slot_of_position"),
         ("repro.kernels.pruning", "table_block"),
         ("repro.kernels.pruning", "span_clamp"),

@@ -41,6 +41,12 @@ python scripts/paged_smoke.py
 # per group (accounting bytes check)
 python scripts/prefix_smoke.py
 
+# host-tier chaos smoke: preempt/spill/restore must keep token streams
+# identical to a never-preempted baseline with zero re-prefill chunks, and
+# every injected fault (restore_fail / corrupt / store_full / delay) must
+# degrade to the counted re-prefill fallback, never to divergent tokens
+python scripts/chaos_smoke.py
+
 # serving smoke: scheduler-driven engine with chunked prefill under synthetic
 # Poisson traffic; writes BENCH_serving.json (incl. a --paged-kv row with
 # pool occupancy/fragmentation columns) whose schema is then asserted

@@ -24,6 +24,9 @@ Check catalog (id -> default severity); docs/analysis.md documents each:
                                    intentional batched ones are baselined)
   sync.asarray-loop       error    per-slot np.asarray inside a loop
   sync.block-until-ready  error    block_until_ready in a step loop
+  sync.device-get         warning  jax.device_get D2H transfer (sanctioned
+                                   batched spill sites are baselined)
+  sync.device-get-loop    error    per-page jax.device_get inside a loop
 """
 from __future__ import annotations
 
@@ -45,6 +48,8 @@ CHECKS: dict[str, str] = {
     "sync.asarray": "warning",
     "sync.asarray-loop": "error",
     "sync.block-until-ready": "error",
+    "sync.device-get": "warning",
+    "sync.device-get-loop": "error",
 }
 
 SEVERITIES = ("error", "warning")

@@ -14,6 +14,13 @@ pass walks the ``serving/`` and ``launch/`` sources and flags:
   sync.asarray-loop       the same inside a ``for``/``while`` body — the
                           per-slot transfer anti-pattern
   sync.block-until-ready  ``.block_until_ready()`` anywhere in serving code
+  sync.device-get         ``jax.device_get(...)`` — a D2H transfer; the
+                          sanctioned batched spill sites (serving/tier.py's
+                          one-transfer-per-spill contract) live in the
+                          baseline file
+  sync.device-get-loop    the same inside a loop body — the per-page spill
+                          anti-pattern (N blocking transfers where one
+                          batched tree transfer works)
 
 Device provenance is tracked per function with a small forward dataflow:
 values returned by ``jnp.*``/``jax.*`` calls, by names bound to
@@ -176,6 +183,24 @@ class _FnLinter(ast.NodeVisitor):
             self._flag("sync.block-until-ready", node,
                        "block_until_ready() stalls the dispatch pipeline "
                        "in serving code")
+        elif (isinstance(func, ast.Attribute)
+              and func.attr == "device_get"
+              and _attr_root(func) == "jax"):
+            # jax.device_get is always a D2H transfer; no provenance check
+            # needed.  In a loop it is the per-page spill anti-pattern
+            # (N blocking transfers where one batched tree transfer works —
+            # the sanctioned spill sites do exactly that and live in the
+            # baseline).
+            if self.loop_depth:
+                self._flag("sync.device-get-loop", node,
+                           "jax.device_get inside a loop — per-page D2H "
+                           "transfers; gather pages on device and issue "
+                           "ONE batched device_get instead")
+            else:
+                self._flag("sync.device-get", node,
+                           "device->host transfer (jax.device_get); "
+                           "sanctioned batched spill sites belong in the "
+                           "baseline")
         elif (_attr_root(func) in ("np", "numpy")
               and isinstance(func, ast.Attribute)
               and func.attr in ("asarray", "array")

@@ -100,6 +100,38 @@ def gather_pages(pool, tables):
     return g.reshape(b, pool.shape[1], mp * pool.shape[2], *pool.shape[3:])
 
 
+def gather_pool_pages(state: dict[str, Any], phys) -> dict[str, jax.Array]:
+    """Device-side page-stack gather for the host spill path.
+
+    Selects the physical pages ``phys`` (logical-page order) out of every
+    pool plane present in ``state`` — K/V payloads and, on kv8 engines,
+    the f32 scale planes — as ``[L, P, ...]`` stacks.  One gather per
+    plane; the caller performs the single batched device->host transfer
+    (serving/engine.py's sanctioned spill site), so the exact pool bytes
+    (int8 payloads + scales included) round-trip through the host tier."""
+    idx = jnp.asarray(phys, jnp.int32)
+    return {key: state[key][:, idx]
+            for key in ("kcache", "vcache", "kscale", "vscale")
+            if key in state}
+
+
+def scatter_pool_pages(state: dict[str, Any], phys,
+                       planes: dict[str, Any]) -> dict[str, Any]:
+    """Inverse of ``gather_pool_pages``: H2D restore of spilled pages.
+
+    Writes each plane's ``[L, P, ...]`` page stack back into the pool at
+    the physical pages ``phys`` (freshly granted at re-admission — the
+    original tenancy is gone).  Returns a copy of ``state`` with the pool
+    planes updated; bytes land exactly as spilled, which is what makes a
+    spill/restore resume bit-exact with never having been preempted."""
+    out = dict(state)
+    idx = jnp.asarray(phys, jnp.int32)
+    for key, stack in planes.items():
+        out[key] = state[key].at[:, idx].set(
+            jnp.asarray(stack, state[key].dtype))
+    return out
+
+
 def state_to_paged(state: dict[str, Any], tables, n_blocks: int, kvp: int,
                    block_s: int) -> dict[str, Any]:
     """Fixed-cap decode state -> the equivalent paged state (test helper).

@@ -23,6 +23,14 @@ everything up front; ``--metrics`` prints the TTFT/TTL/queue-wait summary.
 sizes the pool): one global page pool + per-request block tables instead of
 worst-case per-slot reservations, so admission gates on the global free-page
 count — token streams stay bit-exact vs the fixed layout.
+
+Host KV tier (docs/serving.md): ``--host-pages N`` spills preempted
+requests' live pages to a host store so resume runs zero re-prefill
+chunks, ``--session-kv`` persists retired requests' pages per session so
+``--turns T`` multi-turn conversations restore their history, and
+``--fault-plan 'k=v,...'`` deterministically injects the tier's failure
+modes (every one degrades to re-prefill, never to divergent tokens —
+scripts/chaos_smoke.py asserts this in CI).
 """
 from __future__ import annotations
 
@@ -69,6 +77,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                prefix_share: bool = False,
                grouped_decode: bool | None = None,
                shared_prefix_len: int = 0,
+               host_pages: int = 0, session_kv: bool = False,
+               fault_plan=None, turns: int = 1,
                chunk_tokens: int = 0, sched_policy: str = "fcfs",
                traffic: str = "batch", arrival_rate: float = 0.5,
                seed: int = 0, log=print):
@@ -94,6 +104,18 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     prefix once per *group* of requests instead of once per request
     (``HelixConfig.grouped_decode``) — all bit-exact vs the unshared run
     (scripts/prefix_smoke.py asserts this in CI).
+
+    Host KV tier (docs/serving.md): ``host_pages`` sizes the
+    ``HostPageStore`` so preemptions spill live pages and resume with zero
+    re-prefill chunks; ``session_kv`` persists retired requests' pages per
+    session id; ``fault_plan`` (a ``serving/faults.FaultPlan`` or its
+    ``"k=v,..."`` spec string) deterministically injects the tier's
+    failure modes.  ``turns`` > 1 runs a multi-turn conversation workload:
+    each request is a session whose turn t+1 prompt is its full turn-t
+    context plus ``prompt_len`` fresh tokens, submitted the step turn t
+    finishes — the summary's ``turn2_ttft_s`` isolates what the session
+    restore buys (with ``session_kv`` it tracks the *new* turn length, not
+    the ever-growing history).
     """
     cfg = get_config(arch)
     if reduced:
@@ -129,14 +151,23 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
         log(f"[serve] {cfg.name}: chunked prefill unsupported for this "
             "family; falling back to one-shot prefill")
 
+    if isinstance(fault_plan, str):
+        from repro.serving.faults import FaultPlan
+        fault_plan = FaultPlan.parse(fault_plan)
+    # a multi-turn workload without history reuse still grows context per
+    # turn; max_seq must cover the final turn's full conversation
+    turn_seq = turns * (prompt_len + max_new) + 1
     engine = DecodeEngine(cfg, params, serve_step, prefill_step,
-                          max_batch=max_batch, max_seq=max_seq, kvp=kvp,
+                          max_batch=max_batch,
+                          max_seq=max(max_seq, turn_seq), kvp=kvp,
                           hx=hx, chunk_tokens=chunk_tokens if chunked else None,
                           chunk_prefill_step=chunk_step,
                           tp_width=mesh.shape["model"],
                           sched_policy=sched_policy,
                           pool_blocks=pool_blocks,
-                          prefix_share=prefix_share)
+                          prefix_share=prefix_share,
+                          host_pages=host_pages, session_kv=session_kv,
+                          fault_plan=fault_plan)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab,
@@ -144,10 +175,13 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     pending = [Request(rid=i,
                        prompt=shared + rng.integers(
                            0, cfg.vocab, prompt_len - len(shared)).tolist(),
-                       max_new_tokens=max_new)
+                       max_new_tokens=max_new,
+                       session_id=f"s{i}" if turns > 1 else None)
                for i in range(n_requests)]
     arrivals = ([0] * n_requests if traffic == "batch"
                 else poisson_arrival_steps(n_requests, arrival_rate, seed))
+    turn_of = {r.rid: 1 for r in pending}
+    next_rid = n_requests
     finished: list[Request] = []
     t0 = time.time()
     steps = 0
@@ -155,12 +189,32 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
         while pending and arrivals[0] <= steps:
             engine.submit(pending.pop(0))
             arrivals.pop(0)
-        finished += engine.step()
+        for r in engine.step():
+            finished.append(r)
+            t = turn_of[r.rid]
+            if (turns > 1 and t < turns and r.session_id is not None
+                    and r.finish_reason in ("eos", "max_tokens")):
+                # next turn: full conversation so far + fresh "user" text;
+                # with session_kv the engine restores the history pages
+                # and only the fresh tokens ever prefill
+                nxt = Request(
+                    rid=next_rid,
+                    prompt=(list(r.prompt) + list(r.out_tokens)
+                            + rng.integers(0, cfg.vocab, prompt_len).tolist()),
+                    max_new_tokens=max_new, session_id=r.session_id)
+                turn_of[next_rid] = t + 1
+                next_rid += 1
+                engine.submit(nxt)
         steps += 1
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in finished)
     summary = engine.metrics.summary()
     summary.update(engine.pool_stats())
+    summary.update(engine.tier_stats())
+    late = [engine.metrics.requests[r.rid].ttft for r in finished
+            if turn_of.get(r.rid, 1) >= 2
+            and engine.metrics.requests[r.rid].ttft is not None]
+    summary["turn2_ttft_s"] = float(np.mean(late)) if late else 0.0
     log(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.2f}s "
         f"({toks / max(dt, 1e-9):.1f} tok/s, {steps} engine steps)")
     return finished, summary
@@ -231,6 +285,27 @@ def main():
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="synthetic workload: every prompt starts with the "
                          "same this-many tokens (exercises --prefix-share)")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host KV tier capacity in pool pages: preempted "
+                         "requests spill their live pages and resume with "
+                         "zero re-prefill chunks (needs --paged-kv; 0 = no "
+                         "spill tier)")
+    ap.add_argument("--session-kv", action="store_true",
+                    help="persist retired requests' KV pages in the host "
+                         "tier keyed by session id, so the next turn of a "
+                         "multi-turn conversation restores its history "
+                         "instead of re-prefilling it (needs --paged-kv)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject host-tier faults, 'k=v,...' over seed/"
+                         "restore_fail/corrupt/store_full/delay/delay_steps "
+                         "(e.g. 'seed=1,restore_fail=0.5,delay=0.2'); every "
+                         "injected fault degrades to re-prefill, never to "
+                         "divergent tokens")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="multi-turn workload: each request is a session "
+                         "whose turn t+1 resubmits its full context plus "
+                         "fresh tokens (pairs with --session-kv; the "
+                         "summary's turn2_ttft_s isolates the benefit)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the kernel registry's per-family backend "
                          "availability matrix and exit")
@@ -255,6 +330,8 @@ def main():
         prefix_share=args.prefix_share,
         grouped_decode=True if args.grouped_decode else None,
         shared_prefix_len=args.shared_prefix_len,
+        host_pages=args.host_pages, session_kv=args.session_kv,
+        fault_plan=args.fault_plan, turns=args.turns,
         chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
         traffic=args.traffic, arrival_rate=args.arrival_rate)
     if args.metrics:

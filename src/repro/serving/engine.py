@@ -36,13 +36,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.kvcache import (cache_capacity, cache_to_pages,
-                                init_decode_state, page_positions,
-                                quantize_decode_state)
+                                gather_pool_pages, init_decode_state,
+                                page_positions, quantize_decode_state,
+                                scatter_pool_pages)
 from repro.core.sharding import HelixConfig
 from repro.serving.metrics import EngineMetrics
 from repro.serving.pool import BlockAllocator
 from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
-                                     Request, Scheduler)
+                                     RESTORING, Request, Scheduler)
+from repro.serving.tier import HostPageStore
 
 __all__ = ["DecodeEngine", "Request"]
 
@@ -93,7 +95,10 @@ class DecodeEngine:
                  sched_policy: str = "fcfs", clock=time.monotonic,
                  pool_blocks: int | None = None,
                  max_pages: int | None = None,
-                 prefix_share: bool = False):
+                 prefix_share: bool = False,
+                 host_pages: int = 0,
+                 session_kv: bool = False,
+                 fault_plan=None):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -167,6 +172,30 @@ class DecodeEngine:
         self.chunk_step = (jax.jit(chunk_prefill_step)
                            if chunk_prefill_step is not None else None)
         self.tp_width = tp_width
+        # host KV tier (serving/tier.py, docs/serving.md): spill live
+        # pages on preemption for a zero-re-prefill resume (host_pages
+        # sizes it), persist retired requests' pages per session_id for
+        # multi-turn restore, and cap the prefix index's host K/V blobs
+        # under the same LRU.  fault_plan (serving/faults.py) injects the
+        # tier's failure modes deterministically — every injected fault
+        # degrades to the re-prefill fallback, never to divergent tokens.
+        self.session_kv = session_kv
+        self.spill_enabled = host_pages > 0
+        if (host_pages or session_kv) and not self.paged:
+            raise ValueError("the host KV tier (host_pages / session_kv) "
+                             "needs hx.paged_kv — spill/restore is "
+                             "page-granularity")
+        if (host_pages or session_kv) and any(
+                k in self.state
+                for k in ("ssm_conv", "ssm_state", "xk", "xv")):
+            raise ValueError("the host KV tier only spills pool planes; "
+                             "this arch keeps non-paged state leaves "
+                             "(ssm/enc-dec) a restore could not rebuild")
+        self.store = None
+        if self.paged and (host_pages or session_kv or prefix_share):
+            cap = host_pages or max(4 * self.pool.capacity, 256)
+            self.store = HostPageStore(cap, faults=fault_plan)
+        self._restores: dict[int, dict] = {}    # slot -> in-flight restore
         # prefix sharing (docs/serving.md): a PrefixIndex matches new
         # prompts against committed prefixes; matched pages are mapped
         # refcounted into the new request's table and only the suffix
@@ -179,7 +208,8 @@ class DecodeEngine:
                                  "chunk_tokens (suffix-only prefill rides "
                                  "the chunked-prefill q_offset contract)")
             from repro.serving.scheduler import PrefixIndex
-            self.prefix_index = PrefixIndex(self.block_s, self.pool)
+            self.prefix_index = PrefixIndex(self.block_s, self.pool,
+                                            store=self.store)
         self._prefix_admits = 0
         self._prefix_hits = 0
         self.sched = Scheduler(max_batch=max_batch, cap=self.cap,
@@ -228,14 +258,29 @@ class DecodeEngine:
 
     def preempt(self, rid: int) -> bool:
         """Release ``rid``'s slot mid-flight and requeue it at the queue
-        front.  The resumed request re-prefills its prompt plus everything
-        generated so far, so greedy decoding continues with identical
-        output tokens.  Returns False when ``rid`` holds no slot."""
+        front.  With a host tier (``host_pages``) a decoding request's
+        live pool pages are **spilled** to the ``HostPageStore`` first, so
+        resume is a block-table rebuild + H2D restore with zero re-prefill
+        chunks and a bit-exact continued stream; without one (or when the
+        store refuses the save) the pages drop and the resumed request
+        re-prefills its prompt plus everything generated so far — greedy
+        decoding continues with identical output tokens either way.
+        Returns False when ``rid`` holds no slot."""
         for slot, req in enumerate(self.slots):
             if req is not None and req.rid == rid:
+                spilled = False
+                if slot in self._restores:
+                    # restore still in flight: nothing committed on the
+                    # device; cancel the job (the store entry survives, so
+                    # the next resume retries the restore)
+                    self._restores.pop(slot)
+                elif (req.state == DECODE and self.spill_enabled
+                        and self.store is not None):
+                    spilled = self._spill(req, slot)
                 req.buffers = None
                 req.prefill_pos = 0
                 req.prefill_tokens = None
+                req.forced_tokens = None
                 self.slots[slot] = None
                 self.state["total_len"] = \
                     self.state["total_len"].at[slot].set(0)
@@ -246,15 +291,38 @@ class DecodeEngine:
                     self.state["block_tables"] = \
                         self.state["block_tables"].at[slot].set(0)
                 self.sched.preempt(slot, req)
-                self.metrics.on_preempt(rid)
+                self.metrics.on_preempt(rid, spilled=spilled)
                 return True
         return False
+
+    def _spill(self, req: Request, slot: int) -> bool:
+        """Save ``req``'s live pool pages (exact bytes: int8 payloads and
+        scale planes included) into the host store before the pool
+        releases them.  One device-side page gather + ONE batched
+        device->host transfer per preemption — the sanctioned spill site
+        (ANALYSIS_BASELINE.json); never a per-page transfer in a loop,
+        which the ``sync.device-get-loop`` lint flags."""
+        committed = self.sched.slot_len[slot]
+        phys = self.pool.pages(req.rid)[:self.pool.pages_for(committed)]
+        if committed <= 0 or not phys:
+            return False
+        planes = gather_pool_pages(self.state, phys)
+        host = jax.device_get(planes)
+        ok = self.store.put(f"spill:{req.rid}", host,
+                            tokens=req.resume_tokens()[:committed])
+        req.spill_key = f"spill:{req.rid}" if ok else None
+        req.spill_len = committed if ok else 0
+        if ok:
+            self.metrics.bump("spills")
+        self._sync_store_counters()
+        return ok
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:
         """One bounded engine iteration: admission, at most one prefill
         chunk, one decode step for every decoding slot.  Returns the
         requests retired this step."""
+        self._advance_restores()
         finished = self._admission_retired + self._admit()
         self._admission_retired = []
         finished += self._prefill_chunk()
@@ -300,6 +368,8 @@ class DecodeEngine:
         for req, slot in self.sched.admit():
             self.metrics.on_admit(req.rid)
             self.slots[slot] = req
+            if self._try_restore(req, slot):
+                continue
             toks = req.resume_tokens()
             if self.chunk_tokens and self.chunk_step is not None:
                 from repro.models.model_zoo import init_prefill_buffers
@@ -320,6 +390,129 @@ class DecodeEngine:
             self.metrics.on_finish(req.rid, "rejected")
             retired.append(req)
         return retired
+
+    def _restore_candidate(self, req: Request) -> tuple[str | None, int]:
+        """Which host-store entry (if any) can resume ``req`` without
+        re-prefilling, and how many committed tokens it covers.
+
+        Preempt-spill entries win (exact pages of this very request);
+        otherwise a session entry whose stored tokens are a prefix of the
+        new prompt covers the conversation history.  Either way the
+        restored span must leave at least one token to decode (the engine
+        re-enters DECODE with ``cur = resume[m]`` and teacher-forces the
+        rest), and a prefix-share match longer than the restorable span
+        wins instead."""
+        resume = req.resume_tokens()
+        if req.spill_key is not None:
+            toks = self.store.tokens(req.spill_key)
+            m = 0 if toks is None else len(toks)
+            if 0 < m < len(resume) and tuple(resume[:m]) == toks:
+                return req.spill_key, m
+        if self.session_kv and req.session_id is not None:
+            key = f"session:{req.session_id}"
+            toks = self.store.tokens(key)
+            if toks:
+                m = min(len(toks), len(resume) - 1)
+                if (m > 0 and tuple(resume[:len(toks)])[:m] == toks[:m]
+                        and tuple(resume[:m]) == toks[:m]
+                        and m > req.shared_len):
+                    return key, m
+        return None, 0
+
+    def _try_restore(self, req: Request, slot: int) -> bool:
+        """Attempt the zero-re-prefill resume path at admission.
+
+        On a store hit the request enters RESTORING and a restore job is
+        queued: pages scatter back H2D and decode continues exactly where
+        it left off — committed the same step when the tier is healthy, or
+        after the injected ``delay`` steps (other slots keep decoding
+        meanwhile, so a slow host tier degrades this request's TTFT, never
+        in-flight TTL).  Any failure (missing/evicted entry, injected
+        restore_fail, checksum/generation mismatch) returns False and the
+        caller falls back to the old re-prefill path — counted, never
+        divergent."""
+        if self.store is None:
+            return False
+        key, committed = self._restore_candidate(req)
+        if key is None:
+            return False
+        planes, delay, why = self.store.restore(key)
+        self._sync_store_counters()
+        if planes is None:
+            if why != "missing":
+                self.metrics.bump("restores_failed")
+            req.resume_fallback = True   # this admission re-prefills
+            if req.spill_key == key:
+                req.spill_key = None     # don't retry a dead entry
+                req.spill_len = 0
+            return False
+        req.state = RESTORING
+        req.prefill_tokens = None
+        req.buffers = None
+        self._restores[slot] = {"req": req, "planes": planes,
+                                "remaining": delay, "committed": committed,
+                                "t0": self.metrics.clock()}
+        if delay == 0:
+            self._commit_restore(slot)
+        return True
+
+    def _advance_restores(self) -> None:
+        """Tick the in-flight (fault-delayed) restore jobs by one engine
+        step, committing those whose delay expired.  Runs before
+        admission, so ``delay=d`` holds the slot idle for exactly ``d``
+        steps while every other slot prefills/decodes normally."""
+        for slot in list(self._restores):
+            job = self._restores[slot]
+            job["remaining"] -= 1
+            if job["remaining"] <= 0:
+                self._commit_restore(slot)
+
+    def _commit_restore(self, slot: int) -> None:
+        """Land a restore job: H2D-scatter the spilled pages into the
+        pages granted at re-admission (skipping prefix-shared leading
+        pages, which already hold byte-identical rows), rebuild the
+        device block-table row, reinstall the committed length, and
+        re-enter DECODE with the catch-up token queue — zero prefill
+        chunks."""
+        job = self._restores.pop(slot)
+        req: Request = job["req"]
+        committed: int = job["committed"]
+        n = self.pool.pages_for(committed)
+        phys = self.pool.pages(req.rid)[:n]
+        s0 = min(req.shared_pages, n)
+        if s0 < n:
+            self.state = scatter_pool_pages(
+                self.state, phys[s0:n],
+                {k: v[:, s0:n] for k, v in job["planes"].items()})
+        self._mirror_table(slot)
+        self.state["total_len"] = \
+            self.state["total_len"].at[slot].set(committed)
+        self.sched.slot_len[slot] = committed
+        resume = req.resume_tokens()
+        self.cur_tokens = self.cur_tokens.at[slot].set(int(resume[committed]))
+        # tokens beyond the restored span that are already known (the
+        # resumed request's last sample / the session's new turn) are
+        # teacher-forced through the decode path one step each — they
+        # attend over the restored pages, so no prefill chunk ever runs
+        req.forced_tokens = list(resume[committed + 1:])
+        req.shared_kv = None
+        req.state = DECODE
+        if req.spill_key is not None:
+            # one-shot: the entry is stale the moment decode continues
+            self.store.drop(req.spill_key)
+            req.spill_key = None
+            req.spill_len = 0
+        self.metrics.bump("restores")
+        self.metrics.on_restore(req.rid, self.metrics.clock() - job["t0"])
+        self._sync_store_counters()
+
+    def _sync_store_counters(self) -> None:
+        """Mirror the store's monotonic fault counters into the metrics
+        summary (idempotent absolute sets)."""
+        self.metrics.set_counter("checksum_mismatches",
+                                 self.store.checksum_mismatches
+                                 + self.store.stale_generations)
+        self.metrics.set_counter("store_evictions", self.store.evictions)
 
     def _restore_prefix(self, req: Request) -> None:
         """Install the prefix index's host-fp K/V for the matched prefix
@@ -385,6 +578,11 @@ class DecodeEngine:
         first = min(pre, key=lambda sr: sr[1].admit_seq)[1]
         c = width(first)
         group = [(s, r) for s, r in pre if width(r) == c]
+        for _, r in group:
+            if self._is_resume(r):
+                # a prefill chunk that reruns known context — zero on the
+                # host-tier happy path, counted on every fallback
+                self.metrics.bump("resume_reprefill_chunks")
         tokens = jnp.asarray(
             np.stack([r.prefill_tokens[r.prefill_pos:r.prefill_pos + c]
                       for _, r in group]), jnp.int32)
@@ -433,8 +631,19 @@ class DecodeEngine:
         self._scatter_state(pstate, slot, t, req)
         return self._commit_first_token(req, slot, first_token)
 
+    def _is_resume(self, req: Request) -> bool:
+        """Whether this request's prefill work recomputes context the host
+        tier could have restored: it was preempted before, or a restore
+        attempt for it failed this admission."""
+        m = self.metrics.requests.get(req.rid)
+        return bool((m is not None and m.n_preempts > 0)
+                    or req.resume_fallback)
+
     def _oneshot_prefill(self, req: Request, slot: int) -> list[Request]:
         toks_list = req.resume_tokens()
+        if self._is_resume(req):
+            # the whole one-shot prefill is one "chunk" of redone work
+            self.metrics.bump("resume_reprefill_chunks")
         toks = jnp.asarray(toks_list, jnp.int32)[None, :]
         last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
         self._scatter_state(pstate, slot, len(toks_list), req)
@@ -650,8 +859,22 @@ class DecodeEngine:
         # would each block on the device queue — B syncs instead of 1)
         toks_np = np.asarray(next_tokens)
         finished = []
+        forced: list[tuple[int, int]] = []
         for i in active:
             req = self.slots[i]
+            if req.forced_tokens:
+                # teacher-forced catch-up after a restore: this step
+                # appended the KV row for the current *known* token, so
+                # the sampled token is overridden by the next known one.
+                # Nothing is emitted (these are prompt/history tokens,
+                # not samples): no out_tokens append, no TTFT/TTL event —
+                # only the committed length advances.
+                forced.append((i, req.forced_tokens.pop(0)))
+                self.sched.on_token(i)
+                r = self._grow_or_retire(req, i)
+                if r is not None:
+                    finished.append(r)
+                continue
             tok = int(toks_np[i])
             req.out_tokens.append(tok)
             self.sched.on_token(i)
@@ -664,6 +887,10 @@ class DecodeEngine:
                 r = self._grow_or_retire(req, i)
                 if r is not None:
                     finished.append(r)
+        if forced:
+            idx = jnp.asarray([i for i, _ in forced], jnp.int32)
+            val = jnp.asarray([t for _, t in forced], jnp.int32)
+            self.cur_tokens = self.cur_tokens.at[idx].set(val)
         if self.paged:
             self._sample_pool()
         return finished
@@ -694,7 +921,8 @@ class DecodeEngine:
         if not self.paged:
             return {"paged_kv": False, "pool_occupancy_peak": 0.0,
                     "pool_frag_mean": 0.0, "capacity_retired": cap_retired,
-                    "prefix_hit_rate": 0.0, "pages_shared_peak": 0}
+                    "prefix_hit_rate": 0.0, "pages_shared_peak": 0,
+                    "store_evictions": 0}
         frag = (float(np.mean(self._frag_samples))
                 if self._frag_samples else 0.0)
         return {"paged_kv": True,
@@ -704,12 +932,39 @@ class DecodeEngine:
                 "capacity_retired": cap_retired,
                 "prefix_hit_rate":
                     self._prefix_hits / max(self._prefix_admits, 1),
-                "pages_shared_peak": self.pool.pages_shared_peak}
+                "pages_shared_peak": self.pool.pages_shared_peak,
+                "store_evictions":
+                    self.store.evictions if self.store is not None else 0}
+
+    def tier_stats(self) -> dict:
+        """Host KV tier health for the serving bench: store occupancy and
+        the save/restore/fault counters (``HostPageStore.stats``).  Engines
+        without a host store report all-zero counters so downstream schema
+        consumers never key-error."""
+        if self.store is None:
+            return {k: 0 for k in (
+                "host_pages_capacity", "host_pages_used", "host_entries",
+                "host_saves", "host_restores", "restores_failed",
+                "checksum_mismatches", "stale_generations",
+                "store_evictions", "store_full")}
+        return self.store.stats()
 
     def _retire(self, req: Request, slot: int, reason: str) -> Request:
         req.done = True
         req.state = DONE
         req.finish_reason = reason
+        # session KV: persist the retired request's committed pages keyed
+        # by session id — BEFORE the pool reclaims them — so the next turn
+        # restores the conversation history instead of re-prefilling it
+        if (self.session_kv and req.session_id is not None
+                and self.store is not None
+                and reason in ("eos", "max_tokens")):
+            self._save_session(req, slot)
+        if req.spill_key is not None:
+            # a retired request never resumes; free its spill entry
+            self.store.drop(req.spill_key)
+            req.spill_key = None
+            req.spill_len = 0
         self.slots[slot] = None
         self.sched.release(slot)
         self.state["total_len"] = self.state["total_len"].at[slot].set(0)
@@ -719,6 +974,23 @@ class DecodeEngine:
                 self.state["block_tables"].at[slot].set(0)
         self.metrics.on_finish(req.rid, reason)
         return req
+
+    def _save_session(self, req: Request, slot: int) -> None:
+        """Spill a retiring request's committed pages under its session
+        key (same exact-bytes gather + one batched D2H as ``_spill``).
+        The stored token prefix is ``prompt + out[:-1]`` — always a proper
+        prefix of turn N+1's prompt (history + new text), which is what
+        makes the restore applicability check a plain prefix match."""
+        committed = self.sched.slot_len[slot]
+        phys = self.pool.pages(req.rid)[:self.pool.pages_for(committed)]
+        if committed <= 0 or not phys:
+            return
+        planes = gather_pool_pages(self.state, phys)
+        host = jax.device_get(planes)
+        if self.store.put(f"session:{req.session_id}", host,
+                          tokens=req.resume_tokens()[:committed]):
+            self.metrics.bump("spills")
+        self._sync_store_counters()
 
 
 def _default_hx(rr_block: int) -> HelixConfig:

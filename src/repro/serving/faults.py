@@ -1,0 +1,114 @@
+"""Deterministic fault injection for the host KV tier (serving/tier.py).
+
+Robustness is only provable if every failure surface can be *driven*: a
+``FaultPlan`` is a seeded, declarative description of which host-tier
+faults to inject and how often, so a chaos run (scripts/chaos_smoke.py,
+tests/serving/test_spill_restore_exact.py) replays the exact same fault
+sequence every time.  The four injectable faults mirror the tier's real
+failure modes:
+
+  ``restore_fail``  the restore RPC/copy is lost — ``HostPageStore.restore``
+                    returns nothing and the engine must fall back to
+                    re-prefill;
+  ``corrupt``       host memory corruption — one stored page is damaged
+                    *after* its checksum was computed (a byte flip) or its
+                    generation stamp is bumped, so the restore-time
+                    verification detects it;
+  ``store_full``    the host tier refuses a save (capacity exhausted
+                    upstream) — the spill degrades to the old drop path;
+  ``delay``         a slow host tier — the restore's pages arrive only
+                    after ``delay_steps`` engine steps, overlapping decode.
+
+Draws are made from one ``numpy`` generator seeded at construction, in a
+fixed per-operation order, so a given (seed, op-stream) pair always yields
+the same faults — the property the fault-matrix tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["FaultPlan"]
+
+# injectable fault kinds, in the fixed per-operation draw order
+_KINDS = ("store_full", "corrupt", "restore_fail", "delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded declarative fault schedule for the host page store.
+
+    Each field is an injection probability in ``[0, 1]`` (0 = never, the
+    default — a plan with all-zero rates injects nothing and draws
+    nothing observable); ``delay_steps`` is how many engine steps a
+    delayed restore withholds its pages.  Construct directly or via
+    ``parse("seed=1,restore_fail=0.5,delay=1.0,delay_steps=4")``.
+    """
+
+    seed: int = 0
+    restore_fail: float = 0.0
+    corrupt: float = 0.0
+    store_full: float = 0.0
+    delay: float = 0.0
+    delay_steps: int = 2
+
+    def __post_init__(self):
+        for kind in _KINDS:
+            p = getattr(self, kind)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{kind} rate {p} outside [0, 1]")
+        if self.delay_steps < 0:
+            raise ValueError(f"delay_steps {self.delay_steps} < 0")
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Build a plan from a ``k=v,k=v`` CLI spec (``--fault-plan``).
+
+        Keys are the dataclass fields; ``seed``/``delay_steps`` parse as
+        int, rates as float.  Empty spec -> the inert default plan."""
+        kw: dict[str, float | int] = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            if "=" not in part:
+                raise ValueError(f"fault-plan field {part!r} is not k=v")
+            k, v = (s.strip() for s in part.split("=", 1))
+            if k not in {f.name for f in dataclasses.fields(cls)}:
+                raise ValueError(f"unknown fault-plan field {k!r}")
+            kw[k] = int(v) if k in ("seed", "delay_steps") else float(v)
+        return cls(**kw)
+
+    def injector(self) -> "FaultInjector":
+        """Fresh stateful draw stream for this plan (one per store)."""
+        return FaultInjector(self)
+
+
+class FaultInjector:
+    """The stateful half of a ``FaultPlan``: one seeded draw stream.
+
+    ``draw(kind)`` returns True when the fault fires and tallies it in
+    ``injected``.  All-zero plans short-circuit without consuming
+    generator state, so "no plan" and "inert plan" behave identically."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._rng = np.random.default_rng(plan.seed)
+        self.injected: dict[str, int] = {k: 0 for k in _KINDS}
+
+    @property
+    def active(self) -> bool:
+        """True when any fault has a non-zero rate."""
+        return any(getattr(self.plan, k) > 0 for k in _KINDS)
+
+    def draw(self, kind: str) -> bool:
+        """One Bernoulli draw for ``kind``; tallies and returns the hit."""
+        p = getattr(self.plan, kind)
+        if p <= 0.0:
+            return False
+        hit = bool(self._rng.random() < p)
+        if hit:
+            self.injected[kind] += 1
+        return hit
+
+    def pick(self, n: int) -> int:
+        """Deterministic index draw in ``[0, n)`` (corruption targets)."""
+        return int(self._rng.integers(0, max(n, 1)))

@@ -30,7 +30,13 @@ class RequestMetrics:
     finish_reason: str | None = None
     n_tokens: int = 0
     n_preempts: int = 0
+    # the host-tier split of n_preempts (serving/tier.py): spill = live
+    # pages saved for a zero-re-prefill resume; drop = pages discarded
+    # (no store / store refused), resume re-prefills
+    n_preempt_spills: int = 0
+    n_preempt_drops: int = 0
     ttl_samples: list[float] = dataclasses.field(default_factory=list)
+    restore_samples: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def queue_wait(self) -> float | None:
@@ -58,10 +64,17 @@ def _stats(vals) -> dict[str, float]:
 class EngineMetrics:
     """Lifecycle-event collector the engine drives; pure host python."""
 
+    # host-tier counter keys always present in summary() (zeros without a
+    # host store), so bench/schema consumers never key-error
+    TIER_COUNTERS = ("spills", "restores", "restores_failed",
+                     "checksum_mismatches", "store_evictions",
+                     "resume_reprefill_chunks")
+
     def __init__(self, clock=time.monotonic):
         self.clock = clock
         self.requests: dict[int, RequestMetrics] = {}
         self.start_t = clock()
+        self.counters: dict[str, int] = {k: 0 for k in self.TIER_COUNTERS}
 
     # ------------------------------------------------------------ events
     def on_submit(self, rid: int) -> None:
@@ -87,9 +100,31 @@ class EngineMetrics:
         m.last_token_t = now
         m.n_tokens += 1
 
-    def on_preempt(self, rid: int) -> None:
-        """Request was preempted (slot released, requeued)."""
-        self.requests[rid].n_preempts += 1
+    def on_preempt(self, rid: int, spilled: bool = False) -> None:
+        """Request was preempted (slot released, requeued).  ``spilled``
+        records whether its live pages made it into the host tier (resume
+        restores, zero re-prefill) or were dropped (resume re-prefills)."""
+        m = self.requests[rid]
+        m.n_preempts += 1
+        if spilled:
+            m.n_preempt_spills += 1
+        else:
+            m.n_preempt_drops += 1
+
+    def on_restore(self, rid: int, seconds: float) -> None:
+        """One completed host->device restore for ``rid`` took
+        ``seconds`` from admission to committed pages (the latency a slow
+        host tier adds to TTFT — never to in-flight TTL)."""
+        self.requests[rid].restore_samples.append(seconds)
+
+    def bump(self, counter: str, n: int = 1) -> None:
+        """Increment a summary counter (host-tier events and the like)."""
+        self.counters[counter] = self.counters.get(counter, 0) + n
+
+    def set_counter(self, counter: str, value: int) -> None:
+        """Pin a summary counter to an absolute value (mirroring a
+        monotonic store-side counter is idempotent this way)."""
+        self.counters[counter] = int(value)
 
     def on_finish(self, rid: int, reason: str) -> None:
         """Request retired (eos | max_tokens | capacity | rejected)."""
@@ -114,6 +149,10 @@ class EngineMetrics:
             "queue_wait_s": _stats([m.queue_wait for m in fin
                                     if m.queue_wait is not None]),
             "preempts": sum(m.n_preempts for m in fin),
+            "preempt_spills": sum(m.n_preempt_spills for m in fin),
+            "preempt_drops": sum(m.n_preempt_drops for m in fin),
+            "restore_s": _stats([s for m in fin for s in m.restore_samples]),
+            **{k: self.counters.get(k, 0) for k in self.TIER_COUNTERS},
             "finish_reasons": {r: sum(1 for m in fin if m.finish_reason == r)
                                for r in {m.finish_reason for m in fin}},
         }

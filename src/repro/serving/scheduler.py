@@ -25,9 +25,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 # lifecycle states (plain strings so they serialize/log cleanly)
 QUEUED = "queued"
 PREFILL = "prefill"
+# awaiting a host-tier page restore (serving/tier.py): the slot is held
+# and other slots keep decoding, but this one neither prefills nor
+# decodes until the (possibly fault-delayed) H2D restore commits
+RESTORING = "restoring"
 DECODE = "decode"
 DONE = "done"
 
@@ -52,6 +58,7 @@ class Request:
     finish_reason: str | None = None
     preempted: bool = False                   # awaiting resume (front of queue)
     admit_seq: int = -1                       # admission order stamp
+    session_id: str | None = None             # multi-turn session KV key
     # --- chunked-prefill bookkeeping (engine-internal) ---
     prefill_tokens: list[int] | None = None   # prompt (+ generated on resume)
     prefill_pos: int = 0                      # next chunk offset
@@ -60,11 +67,35 @@ class Request:
     shared_len: int = 0                       # matched prefix tokens (restore)
     shared_pages: int = 0                     # leading logical pages shared
     shared_kv: Any = None                     # host fp K/V of [0, shared_len)
+    # --- host-tier spill/restore bookkeeping (engine-internal) ---
+    spill_key: str | None = None              # host store key of spilled pages
+    spill_len: int = 0                        # committed tokens when spilled
+    forced_tokens: list[int] | None = None    # restore catch-up token queue
+    resume_fallback: bool = False             # restore failed -> re-prefill
 
     def resume_tokens(self) -> list[int]:
         """Tokens to (re-)prefill: the prompt plus anything already
         generated (preempted requests recompute their full context)."""
         return list(self.prompt) + list(self.out_tokens)
+
+
+def _kv_to_pages(arr, block_s: int):
+    """Carry-layout host K/V ``[L, t, Kp, hsz]`` -> page stack
+    ``[L, P, block_s, Kp, hsz]`` (zero-padded tail) for the host store."""
+    arr = np.asarray(arr)
+    l, t = arr.shape[:2]
+    p = -(-t // block_s)
+    if p * block_s != t:
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, p * block_s - t)
+        arr = np.pad(arr, pad)
+    return arr.reshape(l, p, block_s, *arr.shape[2:])
+
+
+def _pages_to_kv(pages, t: int):
+    """Inverse of ``_kv_to_pages``: drop the padding back to ``t`` rows."""
+    l, p, bs = pages.shape[:3]
+    return pages.reshape(l, p * bs, *pages.shape[3:])[:, :t]
 
 
 class PrefixIndex:
@@ -90,12 +121,18 @@ class PrefixIndex:
     Entries never go "wrong", only stale: the host K/V is a pure function
     of the token prefix, so a fully-recycled entry still saves prefill
     compute even when no pages are shareable any more.  ``max_entries``
-    bounds host memory with FIFO eviction."""
+    bounds the entry count with FIFO eviction; with ``store`` (a
+    ``serving/tier.HostPageStore``) the K/V blobs themselves live under
+    the store's page-capacity LRU instead of inline — an evicted or
+    corrupt blob degrades that entry to pages-only sharing (the suffix
+    prefill falls back to a full prefill, still bit-exact)."""
 
-    def __init__(self, block_s: int, pool, max_entries: int = 64):
+    def __init__(self, block_s: int, pool, max_entries: int = 64,
+                 store=None):
         assert block_s > 0
         self.block_s = block_s
         self.pool = pool
+        self.store = store
         self.max_entries = max_entries
         self._root: dict = {"children": {}, "entries": []}
         self._order: list[dict] = []          # FIFO eviction order
@@ -111,8 +148,18 @@ class PrefixIndex:
         sequence), its physical ``pages`` (snapshotted with the pool's
         current generation stamps), and ``kv`` — host fp
         ``(k, v)`` arrays of shape ``[L, len(tokens), Kp, hsz]`` captured
-        from the prefill carry buffers before quantization."""
+        from the prefill carry buffers before quantization.
+
+        With a host page store, the blob is deposited there under a
+        ``prefix:<seq>`` key (page-reshaped, checksummed, LRU-bounded) and
+        the entry keeps only the key; a refused save (store-full fault)
+        registers the entry pages-only."""
         toks = tuple(int(t) for t in tokens)
+        if kv is not None and self.store is not None:
+            key = f"prefix:{self._seq}"
+            planes = {"k": _kv_to_pages(kv[0], self.block_s),
+                      "v": _kv_to_pages(kv[1], self.block_s)}
+            kv = key if self.store.put(key, planes, tokens=toks) else None
         entry = {"tokens": toks, "pages": list(pages),
                  "gens": [self.pool.generation(p) for p in pages],
                  "kv": kv, "seq": self._seq, "nodes": []}
@@ -135,6 +182,8 @@ class PrefixIndex:
             old = self._order.pop(0)
             for n in old["nodes"]:
                 n["entries"].remove(old)
+            if self.store is not None and isinstance(old["kv"], str):
+                self.store.drop(old["kv"])
 
     def match(self, tokens, limit: int) -> tuple[int, dict | None]:
         """Longest registered prefix of ``tokens``: returns ``(m, entry)``
@@ -173,6 +222,24 @@ class PrefixIndex:
             return 0, None
         self.hits += 1
         return best_m, best
+
+    def resolve_kv(self, entry: dict):
+        """The entry's host fp ``(k, v)`` arrays for a buffer restore, or
+        None when unavailable.  Inline blobs return as stored; store-backed
+        blobs fetch through the ``HostPageStore`` with integrity
+        verification but no injected restore faults (this runs inside the
+        admission decision, which must be internally consistent) — an
+        evicted or corrupt blob clears the entry's reference and the
+        admission proceeds pages-only with a full prefill."""
+        kv = entry["kv"]
+        if kv is None or not isinstance(kv, str):
+            return kv
+        planes = None if self.store is None else self.store.fetch(kv)
+        if planes is None:
+            entry["kv"] = None
+            return None
+        t = len(entry["tokens"])
+        return (_pages_to_kv(planes["k"], t), _pages_to_kv(planes["v"], t))
 
     def valid_leading_pages(self, entry: dict) -> int:
         """How many of ``entry``'s leading pages are still the same tenancy
@@ -371,7 +438,7 @@ class Scheduler:
             assert got is not None, "can_admit_now lied"
         req.shared_len = m
         req.shared_pages = shared_full
-        req.shared_kv = entry["kv"]
+        req.shared_kv = self.prefix_index.resolve_kv(entry)
 
     def reject(self, req: Request) -> None:
         """Retire ``req`` unplaced with ``finish_reason="rejected"``."""

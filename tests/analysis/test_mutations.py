@@ -279,6 +279,34 @@ def test_item_and_block_until_ready_flagged():
     assert found == {"sync.item", "sync.block-until-ready"}
 
 
+def test_per_page_device_get_loop_is_flagged():
+    """The per-page spill anti-pattern the host tier must never use: one
+    blocking jax.device_get per pool page inside the spill loop."""
+    src = (
+        "import jax\n"
+        "def spill(self, state, phys):\n"
+        "    pages = []\n"
+        "    for p in phys:\n"
+        "        pages.append(jax.device_get(state['kcache'][:, p]))\n"
+        "    return pages\n"
+    )
+    found = _checks(lint_source(src, "mutant.py"))
+    assert found == {"sync.device-get-loop"}
+
+
+def test_batched_device_get_is_warning_not_error():
+    """ONE batched device_get of a gathered plane dict (the sanctioned
+    spill shape) lints as the baselinable warning, not the loop error."""
+    src = (
+        "import jax\n"
+        "def spill(self, planes):\n"
+        "    return jax.device_get(planes)\n"
+    )
+    findings = lint_source(src, "mutant.py")
+    assert _checks(findings) == {"sync.device-get"}
+    assert all(f.severity == "warning" for f in findings)
+
+
 def test_jitted_self_attr_provenance():
     """Calls of self.<attr> bound to jax.jit anywhere in the module are
     device values — the engine's serve_step pattern."""

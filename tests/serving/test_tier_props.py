@@ -1,0 +1,262 @@
+"""HostPageStore property suite (the host KV tier's accounting): random
+interleaved put/restore/fetch/drop streams must conserve pages exactly
+(``pages_used`` == Σ live entries' pages, never above capacity), evict in
+LRU order with restores/fetches refreshing recency, hand back bit-exact
+bytes for every healthy entry, refuse stale generations and corrupt
+checksums (dropping the entry so bad bytes are never served twice), and
+replay deterministically — including the seeded ``FaultPlan`` draws.
+
+Hypothesis-driven when available (repro.testing.optional_hypothesis —
+skips, never collection-errors, without it); the deterministic twins at
+the bottom always run.  Mirrors tests/serving/test_pool_props.py for the
+device-side allocator."""
+import numpy as np
+import pytest
+
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.tier import HostPageStore
+from repro.testing import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+
+def make_planes(key: int, n_pages: int) -> dict[str, np.ndarray]:
+    """Deterministic per-key payload: two planes sharing the page axis."""
+    rng = np.random.default_rng(key)
+    return {"k": rng.normal(size=(2, n_pages, 3, 4)).astype(np.float32),
+            "v": rng.normal(size=(2, n_pages, 3, 4)).astype(np.float32)}
+
+
+# ---------------------------------------------------------------- driver
+def drive(store: HostPageStore, ops):
+    """Replay an operation stream, asserting invariants after every step.
+
+    ``ops`` = list of (kind, key_id, n) with kind in {"put", "restore",
+    "fetch", "drop"}; a model dict mirrors what must be live and in which
+    LRU order, so eviction order and byte-exactness are checked against an
+    independent implementation."""
+    model: dict[str, int] = {}     # key -> n_pages, in LRU order (old first)
+    for kind, kid, n in ops:
+        key = f"r{kid}"
+        if kind == "put":
+            n = max(n % 5, 1)
+            ok = store.put(key, make_planes(kid, n), tokens=range(n))
+            if n > store.capacity:
+                assert not ok
+            else:
+                assert ok
+                model.pop(key, None)
+                model[key] = n
+                while sum(model.values()) > store.capacity:
+                    model.pop(next(iter(model)))   # LRU eviction
+        elif kind == "drop":
+            assert store.drop(key) == (key in model)
+            model.pop(key, None)
+        elif kind in ("restore", "fetch"):
+            if kind == "restore":
+                planes, delay, why = store.restore(key)
+            else:
+                planes, delay, why = store.fetch(key), 0, None
+            if key not in model:
+                assert planes is None
+            else:
+                assert planes is not None and delay == 0 and why is None
+                want = make_planes(kid, model[key])
+                for name in want:
+                    assert np.array_equal(planes[name], want[name])
+                model[key] = model.pop(key)           # re-append = touch
+        store.check_invariants()
+        assert set(store._entries) == set(model)
+        assert list(store._entries) == list(model)       # LRU order
+        assert store.pages_used == sum(model.values())
+        assert store.pages_used <= store.capacity
+    return model
+
+
+def check_stream(capacity, stream):
+    store = HostPageStore(capacity)
+    model = drive(store, stream)
+    for key in list(model):
+        assert store.drop(key)
+    store.check_invariants()
+    assert store.pages_used == 0 and len(store) == 0
+
+
+# ------------------------------------------------------------- properties
+@given(st.integers(2, 12),
+       st.lists(st.tuples(st.sampled_from(["put", "restore", "fetch",
+                                           "drop"]),
+                          st.integers(0, 6), st.integers(0, 9)),
+                max_size=50))
+@settings(max_examples=200, deadline=None)
+def test_store_random_streams(capacity, stream):
+    check_stream(capacity, stream)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["put", "restore", "fetch",
+                                           "drop"]),
+                          st.integers(0, 4), st.integers(0, 9)),
+                max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_store_replay_determinism(stream):
+    """Two stores replaying the same stream hold identical entries in
+    identical LRU order with identical counters."""
+    a, b = HostPageStore(8), HostPageStore(8)
+    drive(a, stream)
+    drive(b, stream)
+    assert list(a._entries) == list(b._entries)
+    assert a.stats() == b.stats()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95),
+       st.integers(1, 30))
+@settings(max_examples=100, deadline=None)
+def test_fault_draws_deterministic(seed, p, n):
+    """Same plan -> identical draw sequences; a zero-rate kind never draws
+    (and never consumes rng state, so mixed plans stay aligned)."""
+    plan = FaultPlan(seed=seed, restore_fail=p)
+    a, b = plan.injector(), plan.injector()
+    seq = [a.draw("restore_fail") for _ in range(n)]
+    assert seq == [b.draw("restore_fail") for _ in range(n)]
+    assert not any(a.draw("corrupt") for _ in range(n))   # rate 0.0
+    assert [a.draw("restore_fail") for _ in range(n)] == \
+        [b.draw("restore_fail") for _ in range(n)]
+
+
+# ---------------------------------------------------- deterministic twins
+def test_round_trip_exact_bytes():
+    store = HostPageStore(8)
+    planes = make_planes(3, 2)
+    assert store.put("a", planes, tokens=[1, 2, 3])
+    got, delay, why = store.restore("a")
+    assert (delay, why) == (0, None)
+    for name in planes:
+        assert np.array_equal(got[name], planes[name])
+    assert store.tokens("a") == (1, 2, 3)
+
+
+def test_lru_eviction_order_and_touch():
+    """Filling past capacity evicts oldest-untouched first; restore/fetch
+    refresh recency so a touched entry survives."""
+    store = HostPageStore(4)
+    for key in ("a", "b", "c", "d"):
+        assert store.put(key, make_planes(ord(key), 1))
+    assert store.restore("a")[0] is not None         # touch a -> newest
+    assert store.put("e", make_planes(9, 2))         # needs 2: evicts b, c
+    assert not store.has("b") and not store.has("c")
+    assert store.has("a") and store.has("d") and store.has("e")
+    assert store.evictions == 2 and store.evicted_pages == 2
+    store.check_invariants()
+
+
+def test_capacity_never_exceeded_and_oversize_refused():
+    store = HostPageStore(3)
+    assert not store.put("big", make_planes(0, 4))   # alone > capacity
+    assert store.store_full == 1 and len(store) == 0
+    assert store.put("a", make_planes(1, 2))
+    assert store.put("b", make_planes(2, 2))         # evicts a
+    assert store.pages_used == 2 <= store.capacity
+    assert not store.has("a")
+    store.check_invariants()
+
+
+def test_overwrite_same_key_replaces():
+    store = HostPageStore(8)
+    assert store.put("a", make_planes(1, 2))
+    assert store.put("a", make_planes(2, 3))
+    assert store.pages_used == 3 and len(store) == 1
+    got = store.fetch("a")
+    assert np.array_equal(got["k"], make_planes(2, 3)["k"])
+
+
+def test_stale_generation_refused_and_dropped():
+    store = HostPageStore(4)
+    assert store.put("a", make_planes(1, 2))
+    store._entries["a"].page_gens[1] += 1            # recycled under us
+    planes, _, why = store.restore("a")
+    assert planes is None and why == "generation"
+    assert store.stale_generations == 1 and store.restores_failed == 1
+    assert not store.has("a")                        # never served later
+    assert store.restore("a") == (None, 0, "missing")
+    store.check_invariants()
+
+
+def test_checksum_mismatch_refused_and_dropped():
+    store = HostPageStore(4)
+    assert store.put("a", make_planes(1, 2))
+    arr = store._entries["a"].planes["k"]
+    page = np.ascontiguousarray(arr[:, 0])
+    page.view(np.uint8).reshape(-1)[5] ^= 0xFF
+    arr[:, 0] = page
+    planes, _, why = store.restore("a")
+    assert planes is None and why == "checksum"
+    assert store.checksum_mismatches == 1 and store.restores_failed == 1
+    assert not store.has("a")
+    store.check_invariants()
+
+
+def test_fetch_has_no_injected_faults():
+    """The prefix-admission path (fetch) must be consistent across the up
+    to three calls per decision: injected restore faults never apply."""
+    plan = FaultPlan(seed=0, restore_fail=1.0, delay=1.0)
+    store = HostPageStore(4, faults=plan)
+    assert store.put("a", make_planes(1, 1))
+    for _ in range(3):
+        assert store.fetch("a") is not None
+    planes, _, why = store.restore("a")              # restore DOES draw
+    assert planes is None and why == "injected"
+
+
+def test_injected_corruption_caught_at_restore():
+    store = HostPageStore(4, faults=FaultPlan(seed=2, corrupt=1.0))
+    assert store.put("a", make_planes(1, 2))         # corrupted at put
+    planes, _, why = store.restore("a")
+    assert planes is None and why in ("checksum", "generation")
+    assert store.restores_failed == 1
+    store.check_invariants()
+
+
+def test_injected_store_full_refuses_save():
+    store = HostPageStore(8, faults=FaultPlan(seed=0, store_full=1.0))
+    assert not store.put("a", make_planes(1, 1))
+    assert store.store_full == 1 and len(store) == 0
+
+
+def test_injected_delay_withholds_planes():
+    store = HostPageStore(4, faults=FaultPlan(seed=0, delay=1.0,
+                                              delay_steps=3))
+    assert store.put("a", make_planes(1, 1))
+    planes, delay, why = store.restore("a")
+    assert planes is not None and delay == 3 and why is None
+
+
+def test_ragged_page_axes_rejected():
+    store = HostPageStore(4)
+    bad = {"k": np.zeros((2, 2, 3)), "v": np.zeros((2, 3, 3))}
+    with pytest.raises(AssertionError):
+        store.put("a", bad)
+
+
+def test_put_copies_caller_buffers():
+    """Mutating the caller's arrays after put must not corrupt the entry
+    (the spill path reuses its host buffers)."""
+    store = HostPageStore(4)
+    planes = make_planes(1, 1)
+    assert store.put("a", planes, tokens=[7])
+    planes["k"][:] = 0.0
+    got, _, why = store.restore("a")
+    assert why is None
+    assert np.array_equal(got["k"], make_planes(1, 1)["k"])
+
+
+def test_fault_plan_parse_and_validation():
+    plan = FaultPlan.parse("seed=5,restore_fail=0.25,delay=1.0,delay_steps=7")
+    assert plan == FaultPlan(seed=5, restore_fail=0.25, delay=1.0,
+                             delay_steps=7)
+    assert FaultPlan.parse("") == FaultPlan()
+    with pytest.raises(ValueError):
+        FaultPlan.parse("restore_fail=1.5")          # rate out of [0, 1]
+    with pytest.raises(ValueError):
+        FaultPlan.parse("bogus=1.0")                 # unknown key
+    inj = FaultPlan().injector()
+    assert isinstance(inj, FaultInjector) and not inj.active
