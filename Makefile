@@ -1,6 +1,6 @@
 # Tier-1 verify: `make test` == what CI runs (scripts/ci.sh).
-.PHONY: test test-fast bench-decode bench-serving check-docs list-backends \
-	analyze
+.PHONY: test test-fast stress bench-decode bench-serving check-docs \
+	list-backends analyze
 
 test:
 	bash scripts/ci.sh
@@ -8,6 +8,12 @@ test:
 # skip the slow multi-device subprocess tests
 test-fast:
 	PYTHONPATH=src python -m pytest -q --ignore=tests/distributed
+
+# tier-2 stress/fairness battery (tests/serving/test_stress.py): hundreds
+# of trace-driven requests through the real engine across scheduler /
+# layout / tier configurations; excluded from tier-1 by marker
+stress:
+	PYTHONPATH=src python -m pytest -q -m stress
 
 # decode-attention microbench (incl. fused-append sweep); writes BENCH_decode.json
 bench-decode:

@@ -39,6 +39,17 @@ KV tier, and the session row's ``resume_reprefill_chunks`` stays 0 —
 turn>=2 prefill work is the fresh turn only, independent of history
 length (asserted in ``--smoke``).
 
+Every row is **trace-addressed**: the ``trace`` column is the
+serving/workload.py ``trace_id`` of the exact workload the cell replayed
+(``--trace FILE`` replays a saved trace instead of generating one), so a
+measurement always names its load.  ``--tenants
+"name[:weight[:slo[:share]]],..."`` benches a multi-tenant mix — each
+cell then emits its aggregate row (tenant ``"*"``) plus one row per
+tenant with that tenant's TTFT/TTL/goodput split — and ``--slo-ttl-ms``
+arms the TTL governor (deterministic virtual clock), recording
+``goodput_tok_s`` / ``ttl_target_miss_rate`` / ``governor_sheds`` per
+row.
+
 On CPU the absolute times are dominated by XLA dispatch, not kernel work —
 the *relative* one-shot-vs-chunked TTL spread is the signal tracked across
 PRs; rerun on TPU for real latencies.  ``--smoke`` runs one tiny cell per
@@ -77,7 +88,32 @@ ROW_SCHEMA = {
     "turns": int, "session_kv": bool,
     "spills": int, "restores": int, "restore_p95_ms": float,
     "resume_reprefill_chunks": int, "turn2_ttft_s": float,
+    # multi-tenant SLO columns: the workload's trace_id (every row names
+    # its exact load), which tenant/SLO-class slice the row aggregates
+    # ("*" = all), SLO-goodput + interactive TTL-target miss rate, the
+    # governor's TTL target (0 = unarmed) and how many batch slots it
+    # shed to spill
+    "trace": str, "tenant": str, "slo_class": str,
+    "goodput_tok_s": float, "ttl_target_miss_rate": float,
+    "slo_ttl_ms": float, "governor_sheds": int,
 }
+
+
+def _latency_cols(agg: dict) -> dict:
+    """ROW_SCHEMA latency/volume columns from one metrics aggregate
+    (the whole-run summary or one per-tenant split)."""
+    return {
+        "ttft_p50_s": agg["ttft_s"]["p50"],
+        "ttft_p95_s": agg["ttft_s"]["p95"],
+        "ttl_p50_s": agg["ttl_s"]["p50"],
+        "ttl_p95_s": agg["ttl_s"]["p95"],
+        "queue_wait_p50_s": agg["queue_wait_s"]["p50"],
+        "throughput_tok_s": agg["throughput_tok_s"],
+        "goodput_tok_s": float(agg["goodput_tok_s"]),
+        "ttl_target_miss_rate": float(agg["ttl_target_miss_rate"]),
+        "n_finished": agg["n_finished"],
+        "n_tokens": agg["n_tokens"],
+    }
 
 
 def bench_cell(arch: str, *, load: float, chunk_tokens: int,
@@ -85,8 +121,12 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
                max_new: int, max_batch: int, seed: int = 0,
                paged_kv: bool = False, prefix_share: bool = False,
                shared_prefix_len: int = 0, turns: int = 1,
-               session_kv: bool = False) -> dict:
-    """One (load, chunk_tokens, paged_kv) sweep cell -> a ROW_SCHEMA row."""
+               session_kv: bool = False, trace=None, tenants=None,
+               slo_ttl_ms: float = 0.0, host_pages: int = 0,
+               virtual_clock: bool = False) -> list[dict]:
+    """One sweep cell -> ROW_SCHEMA rows: the aggregate row (tenant
+    ``"*"``) first, then one per-tenant split row when the cell ran a
+    multi-tenant mix — all addressed by the workload's ``trace_id``."""
     finished, summary = serve_demo(
         arch, reduced=True, n_requests=requests, prompt_len=prompt_len,
         max_new=max_new, max_batch=max_batch, chunk_tokens=chunk_tokens,
@@ -94,19 +134,14 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         paged_kv=True if paged_kv else None, prefix_share=prefix_share,
         shared_prefix_len=shared_prefix_len,
         turns=turns, session_kv=session_kv,
+        trace=trace, tenants=tenants, slo_ttl_ms=slo_ttl_ms,
+        host_pages=host_pages, virtual_clock=virtual_clock,
         seed=seed, log=lambda s: None)
-    return {
+    base = {
         "load": float(load),
         "chunk_tokens": int(chunk_tokens),
         "sched_policy": sched_policy,
-        "ttft_p50_s": summary["ttft_s"]["p50"],
-        "ttft_p95_s": summary["ttft_s"]["p95"],
-        "ttl_p50_s": summary["ttl_s"]["p50"],
-        "ttl_p95_s": summary["ttl_s"]["p95"],
-        "queue_wait_p50_s": summary["queue_wait_s"]["p50"],
-        "throughput_tok_s": summary["throughput_tok_s"],
-        "n_finished": summary["n_finished"],
-        "n_tokens": summary["n_tokens"],
+        **_latency_cols(summary),
         "paged_kv": bool(summary["paged_kv"]),
         "pool_occupancy_peak": float(summary["pool_occupancy_peak"]),
         "pool_frag_mean": float(summary["pool_frag_mean"]),
@@ -121,7 +156,22 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         "restore_p95_ms": float(summary["restore_s"]["p95"] * 1e3),
         "resume_reprefill_chunks": int(summary["resume_reprefill_chunks"]),
         "turn2_ttft_s": float(summary["turn2_ttft_s"]),
+        "trace": str(summary["trace_id"]),
+        "tenant": "*",
+        "slo_class": "*",
+        "slo_ttl_ms": float(slo_ttl_ms),
+        "governor_sheds": int(summary["governor_sheds"]),
     }
+    rows = [base]
+    if tenants:
+        # per-tenant split rows: same cell, same trace, one tenant's slice
+        slo_of = {r.tenant: r.slo_class for r in finished}
+        for name, agg in sorted(summary["per_tenant"].items()):
+            if not agg["n_finished"]:
+                continue
+            rows.append({**base, **_latency_cols(agg), "tenant": name,
+                         "slo_class": slo_of.get(name, "*")})
+    return rows
 
 
 def main():
@@ -157,10 +207,23 @@ def main():
                          "host-tier session KV, so turn>=2 restores history "
                          "instead of re-prefilling it (turn2_ttft_s / "
                          "spills / restores columns)")
+    ap.add_argument("--trace", default=None,
+                    help="replay a saved serving/workload.py JSONL trace in "
+                         "every cell instead of generating per-cell poisson "
+                         "load (rows stay trace-addressed either way)")
+    ap.add_argument("--tenants", default=None,
+                    help="tenant mix 'name[:weight[:slo[:share]]],...' for "
+                         "every cell; adds one split row per tenant next to "
+                         "each aggregate row")
+    ap.add_argument("--slo-ttl-ms", type=float, default=0.0,
+                    help="arm the TTL governor in a dedicated 2-tenant "
+                         "interactive+batch cell (virtual clock, host-tier "
+                         "spill) with this interactive TTL p95 target")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell: one load, 4 requests, short prompts"
-                         " (includes one paged + one prefix-share row and a"
-                         " session-KV multi-turn row pair)")
+                         " (includes one paged + one prefix-share row, a"
+                         " session-KV multi-turn row pair and a 2-tenant"
+                         " TTL-governor cell with per-tenant split rows)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -184,7 +247,7 @@ def main():
                           if args.prefix_share and paged and chunk
                           else (False,))
                 for share in shares:
-                    row = bench_cell(
+                    cell = bench_cell(
                         args.arch, load=load, chunk_tokens=chunk,
                         sched_policy=args.sched_policy,
                         requests=args.requests,
@@ -193,8 +256,10 @@ def main():
                         max_batch=args.max_batch, paged_kv=paged,
                         prefix_share=share,
                         shared_prefix_len=(args.shared_prefix_len
-                                           if share else 0))
-                    rows.append(row)
+                                           if share else 0),
+                        trace=args.trace, tenants=args.tenants)
+                    rows.extend(cell)
+                    row = cell[0]
                     print(f"load={load:<5} chunk={chunk:<4} "
                           f"paged={int(paged)} share={int(share)} "
                           f"ttft_p95={row['ttft_p95_s']*1e3:8.1f}ms "
@@ -214,7 +279,7 @@ def main():
                 sched_policy=args.sched_policy, requests=args.requests,
                 prompt_len=args.prompt_len, max_new=args.max_new,
                 max_batch=args.max_batch, paged_kv=True,
-                turns=args.turns, session_kv=skv)
+                turns=args.turns, session_kv=skv)[0]
             rows.append(row)
             print(f"turns={args.turns} session_kv={int(skv)} "
                   f"chunk={chunk:<4} "
@@ -228,6 +293,35 @@ def main():
                 # so prefill work per turn is the fresh tokens only
                 assert row["restores"] > 0, row
                 assert row["resume_reprefill_chunks"] == 0, row
+
+    if args.slo_ttl_ms or args.smoke:
+        # governor cell: a saturating 2-tenant interactive+batch mix under
+        # the deterministic virtual clock — sheds batch slots to spill
+        # (zero re-prefill) to hold the interactive TTL target; emits the
+        # aggregate row plus one split row per tenant
+        tenants = args.tenants or "chat:3:interactive,jobs:1:batch:3"
+        slo_ms = args.slo_ttl_ms or 2.2
+        cell = bench_cell(
+            args.arch, load=2.0, chunk_tokens=4,
+            sched_policy=args.sched_policy,
+            requests=max(args.requests, 10), prompt_len=args.prompt_len,
+            max_new=max(args.max_new, 6), max_batch=max(args.max_batch, 4),
+            paged_kv=True, host_pages=64, tenants=tenants,
+            slo_ttl_ms=slo_ms, virtual_clock=True, trace=args.trace)
+        rows.extend(cell)
+        row = cell[0]
+        print(f"governor slo_ttl={slo_ms}ms tenants={tenants}: "
+              f"sheds={row['governor_sheds']} "
+              f"goodput={row['goodput_tok_s']:.1f} tok/s "
+              f"miss={row['ttl_target_miss_rate']:.2f} "
+              f"reprefill_chunks={row['resume_reprefill_chunks']}")
+        if args.smoke:
+            # the SLO story, counted not timed: pressure sheds batch work
+            # through the spill tier (never re-prefilled), and both
+            # tenants' split rows made it out
+            assert row["governor_sheds"] >= 1, row
+            assert row["resume_reprefill_chunks"] == 0, row
+            assert {r["tenant"] for r in cell} >= {"*", "chat", "jobs"}, cell
 
     out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
                     "requests": args.requests, "prompt_len": args.prompt_len,

@@ -90,12 +90,31 @@ def check(path: pathlib.Path) -> list[str]:
             if not row.get("turn2_ttft_s", 0) > 0:
                 errors.append(f"row {i}: session_kv row needs "
                               "turn2_ttft_s > 0")
-        elif row.get("turns", 1) == 1:
+        elif row.get("turns", 1) == 1 and not row.get("slo_ttl_ms"):
+            # governor rows (slo_ttl_ms > 0) legitimately spill in a
+            # single-turn run — shedding batch work IS the spill path
             for key in ("spills", "restores", "turn2_ttft_s",
                         "restore_p95_ms"):
                 if row.get(key, 0) != 0:
                     errors.append(f"row {i}: single-turn row has nonzero "
                                   f"{key}: {row.get(key)}")
+        # multi-tenant SLO columns: every row is trace-addressed and
+        # names its tenant/class slice; governor rows carry a real
+        # goodput and a miss rate in [0, 1], unarmed rows a zero miss
+        # rate (no target to miss)
+        for key in ("trace", "tenant", "slo_class"):
+            if not (isinstance(row.get(key), str) and row.get(key)):
+                errors.append(f"row {i}: {key!r} must be a non-empty "
+                              f"string, got {row.get(key)!r}")
+        if not 0 <= row.get("ttl_target_miss_rate", -1) <= 1:
+            errors.append(f"row {i}: ttl_target_miss_rate out of [0, 1]")
+        if row.get("slo_ttl_ms", 0):
+            if not row.get("goodput_tok_s", 0) > 0:
+                errors.append(f"row {i}: governor row needs "
+                              "goodput_tok_s > 0")
+        elif row.get("ttl_target_miss_rate", 0) != 0:
+            errors.append(f"row {i}: unarmed row (slo_ttl_ms == 0) has "
+                          "nonzero ttl_target_miss_rate")
     return errors
 
 

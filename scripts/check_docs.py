@@ -69,7 +69,22 @@ def check_docstrings() -> None:
         ("repro.serving.scheduler", "Scheduler"),
         ("repro.serving.scheduler", "Request"),
         ("repro.serving.scheduler", "PrefixIndex"),
+        ("repro.serving.scheduler", "TenantConfig"),
         ("repro.serving.metrics", "EngineMetrics"),
+        ("repro.serving.metrics", "VirtualClock"),
+        ("repro.serving.governor", "TTLGovernor"),
+        ("repro.serving.governor", "GovernorConfig"),
+        ("repro.serving.workload", "TraceRow"),
+        ("repro.serving.workload", "TenantSpec"),
+        ("repro.serving.workload", "parse_tenants"),
+        ("repro.serving.workload", "generate_trace"),
+        ("repro.serving.workload", "poisson_arrival_steps"),
+        ("repro.serving.workload", "bursty_arrival_steps"),
+        ("repro.serving.workload", "save_trace"),
+        ("repro.serving.workload", "load_trace"),
+        ("repro.serving.workload", "trace_id"),
+        ("repro.serving.workload", "prompt_tokens"),
+        ("repro.serving.workload", "requests_from_trace"),
         ("repro.serving.pool", "BlockAllocator"),
         ("repro.serving.pool", "pages_for"),
         ("repro.serving.tier", "HostPageStore"),

@@ -47,6 +47,13 @@ python scripts/prefix_smoke.py
 # degrade to the counted re-prefill fallback, never to divergent tokens
 python scripts/chaos_smoke.py
 
+# multi-tenant SLO smoke: a 2-tenant interactive+batch trace must replay
+# bit-identically (streams AND metrics summaries, virtual clock), and the
+# TTL governor must shed batch slots through the spill path (zero
+# re-prefill) while improving the interactive TTL over the ungoverned
+# replay of the same trace
+python scripts/trace_smoke.py
+
 # serving smoke: scheduler-driven engine with chunked prefill under synthetic
 # Poisson traffic; writes BENCH_serving.json (incl. a --paged-kv row with
 # pool occupancy/fragmentation columns) whose schema is then asserted

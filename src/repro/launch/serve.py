@@ -31,6 +31,18 @@ chunks, ``--session-kv`` persists retired requests' pages per session so
 ``--fault-plan 'k=v,...'`` deterministically injects the tier's failure
 modes (every one degrades to re-prefill, never to divergent tokens —
 scripts/chaos_smoke.py asserts this in CI).
+
+Multi-tenant SLO front end (docs/serving.md): every run is driven by a
+serving/workload.py **trace** — ``--trace FILE`` replays a saved JSONL
+trace, otherwise one is generated from ``--traffic batch|poisson|bursty``
+(``--arrival-rate``, ``--burst``) and the ``--tenants
+"name[:weight[:slo[:share]]],..."`` mix.  ``--tenants`` arms
+deficit-weighted-fair admission across tenants; ``--slo-ttl-ms`` arms the
+TTL governor, which sheds batch-class slots through the spill path when
+the interactive TTL p95 drifts past target; ``--virtual-clock`` swaps the
+metrics clock for the deterministic cost model so two replays of the same
+trace produce identical latency summaries (scripts/trace_smoke.py asserts
+this in CI).
 """
 from __future__ import annotations
 
@@ -50,17 +62,14 @@ from repro.models.model_zoo import (build_serve_step, chunked_prefill_supported,
                                     make_chunk_prefill_step, make_prefill_step)
 from repro.models.transformer import init_params
 from repro.serving import DecodeEngine, Request
+from repro.serving.metrics import VirtualClock
 from repro.serving.scheduler import POLICIES
+# poisson_arrival_steps moved to (and is re-exported from) the workload
+# module so serve and bench replay the exact same arrival processes
+from repro.serving.workload import (TenantSpec, generate_trace, load_trace,
+                                    parse_tenants, poisson_arrival_steps,
+                                    requests_from_trace, trace_id)
 from repro.utils import make_mesh
-
-
-def poisson_arrival_steps(n: int, rate: float, seed: int = 0) -> list[int]:
-    """Synthetic Poisson traffic: the engine step at which each of ``n``
-    requests arrives, with exponential inter-arrival gaps of mean
-    ``1/rate`` steps (``rate`` = average arrivals per engine step)."""
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
-    return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
 def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
@@ -81,6 +90,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                fault_plan=None, turns: int = 1,
                chunk_tokens: int = 0, sched_policy: str = "fcfs",
                traffic: str = "batch", arrival_rate: float = 0.5,
+               burst: int = 4, trace=None, tenants=None,
+               slo_ttl_ms: float = 0.0, virtual_clock=False,
                seed: int = 0, log=print):
     """Run ``n_requests`` synthetic prompts through the continuous-batching
     engine and report throughput.  Returns (finished ``Request`` list,
@@ -116,6 +127,17 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     finishes — the summary's ``turn2_ttft_s`` isolates what the session
     restore buys (with ``session_kv`` it tracks the *new* turn length, not
     the ever-growing history).
+
+    Workload/tenancy (serving/workload.py, docs/serving.md): the run is
+    always trace-driven — ``trace`` (a path or a ``TraceRow`` list)
+    replays a saved workload, otherwise one is generated from ``traffic``
+    ("batch" | "poisson" | "bursty"), ``arrival_rate``/``burst`` and the
+    ``tenants`` mix (a ``parse_tenants`` spec string or ``TenantSpec``s);
+    the summary's ``trace_id`` names the exact workload either way.
+    ``tenants`` also arms weighted-fair admission, ``slo_ttl_ms`` > 0
+    arms the TTL governor (shed batch-to-spill when the interactive TTL
+    p95 exceeds the target), and ``virtual_clock`` (True or a
+    ``VirtualClock``) makes every latency in the summary deterministic.
     """
     cfg = get_config(arch)
     if reduced:
@@ -138,7 +160,6 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     if overrides:
         hx = dataclasses.replace(hx, **overrides)
     kvp = hx.kvp(mesh) if mesh else 1
-    max_seq = prompt_len + max_new + 1
 
     if mesh is None:
         # single-device: 1x1 trivial mesh keeps one code path
@@ -154,9 +175,27 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     if isinstance(fault_plan, str):
         from repro.serving.faults import FaultPlan
         fault_plan = FaultPlan.parse(fault_plan)
+    if isinstance(tenants, str):
+        tenants = parse_tenants(tenants)
+    if trace is not None:
+        rows = load_trace(trace) if isinstance(trace, str) else list(trace)
+    else:
+        rows = generate_trace(n_requests, arrival=traffic, rate=arrival_rate,
+                              burst=burst,
+                              tenants=tuple(tenants) if tenants
+                              else (TenantSpec("default"),),
+                              prompt_len=prompt_len, max_tokens=max_new,
+                              seed=seed)
+    rows = sorted(rows, key=lambda r: (r.arrival_step, r.rid))
+    p_max = max((r.prompt_len for r in rows), default=prompt_len)
+    m_max = max((r.max_tokens for r in rows), default=max_new)
+    max_seq = p_max + m_max + 1
     # a multi-turn workload without history reuse still grows context per
-    # turn; max_seq must cover the final turn's full conversation
-    turn_seq = turns * (prompt_len + max_new) + 1
+    # turn (each later turn adds ``prompt_len`` fresh tokens + its reply);
+    # max_seq must cover the final turn's full conversation
+    turn_seq = (p_max + m_max) + (turns - 1) * (prompt_len + m_max) + 1
+    if virtual_clock is True:
+        virtual_clock = VirtualClock()
     engine = DecodeEngine(cfg, params, serve_step, prefill_step,
                           max_batch=max_batch,
                           max_seq=max(max_seq, turn_seq), kvp=kvp,
@@ -167,21 +206,22 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                           pool_blocks=pool_blocks,
                           prefix_share=prefix_share,
                           host_pages=host_pages, session_kv=session_kv,
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan,
+                          tenants=({t.name: t.tenant_config()
+                                    for t in tenants} if tenants else None),
+                          slo_ttl_s=(slo_ttl_ms / 1e3) if slo_ttl_ms else None,
+                          clock=virtual_clock or time.monotonic)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
-    shared = rng.integers(0, cfg.vocab,
-                          min(shared_prefix_len, prompt_len)).tolist()
-    pending = [Request(rid=i,
-                       prompt=shared + rng.integers(
-                           0, cfg.vocab, prompt_len - len(shared)).tolist(),
-                       max_new_tokens=max_new,
-                       session_id=f"s{i}" if turns > 1 else None)
-               for i in range(n_requests)]
-    arrivals = ([0] * n_requests if traffic == "batch"
-                else poisson_arrival_steps(n_requests, arrival_rate, seed))
+    shared = rng.integers(0, cfg.vocab, shared_prefix_len).tolist()
+    pending = requests_from_trace(rows, cfg.vocab, shared_prefix=shared)
+    if turns > 1:
+        for r in pending:
+            if r.session_id is None:
+                r.session_id = f"s{r.rid}"
+    arrivals = [r.arrival_step for r in rows]
     turn_of = {r.rid: 1 for r in pending}
-    next_rid = n_requests
+    next_rid = max((r.rid for r in pending), default=-1) + 1
     finished: list[Request] = []
     t0 = time.time()
     steps = 0
@@ -201,7 +241,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                     rid=next_rid,
                     prompt=(list(r.prompt) + list(r.out_tokens)
                             + rng.integers(0, cfg.vocab, prompt_len).tolist()),
-                    max_new_tokens=max_new, session_id=r.session_id)
+                    max_new_tokens=max_new, session_id=r.session_id,
+                    tenant=r.tenant, slo_class=r.slo_class)
                 turn_of[next_rid] = t + 1
                 next_rid += 1
                 engine.submit(nxt)
@@ -211,6 +252,7 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     summary = engine.metrics.summary()
     summary.update(engine.pool_stats())
     summary.update(engine.tier_stats())
+    summary["trace_id"] = trace_id(rows)
     late = [engine.metrics.requests[r.rid].ttft for r in finished
             if turn_of.get(r.rid, 1) >= 2
             and engine.metrics.requests[r.rid].ttft is not None]
@@ -236,11 +278,33 @@ def main():
                     help="admission order: fcfs (arrival) or sjf (shortest "
                          "remaining prefill first)")
     ap.add_argument("--traffic", default="batch",
-                    choices=("batch", "poisson"),
+                    choices=("batch", "poisson", "bursty"),
                     help="batch: submit all requests up front; poisson: "
-                         "synthetic arrival process over engine steps")
+                         "synthetic arrival process over engine steps; "
+                         "bursty: closed flash-crowd bursts with poisson "
+                         "gaps (serving/workload.py)")
     ap.add_argument("--arrival-rate", type=float, default=0.5,
-                    help="poisson traffic: mean requests per engine step")
+                    help="poisson/bursty traffic: mean requests per engine "
+                         "step")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="bursty traffic: simultaneous arrivals per burst")
+    ap.add_argument("--trace", default=None,
+                    help="replay a saved serving/workload.py JSONL trace "
+                         "instead of generating one from --traffic (the "
+                         "summary's trace_id names the workload either way)")
+    ap.add_argument("--tenants", default=None,
+                    help="tenant mix 'name[:weight[:slo[:share]]],...' "
+                         "(e.g. 'chat:3:interactive,jobs:1:batch'); arms "
+                         "deficit-weighted-fair admission across tenants")
+    ap.add_argument("--slo-ttl-ms", type=float, default=0.0,
+                    help="interactive TTL p95 target in ms; > 0 arms the "
+                         "TTL governor, which sheds batch-class slots "
+                         "through the host-tier spill path when the target "
+                         "is exceeded (serving/governor.py)")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="use the deterministic cost-model metrics clock "
+                         "(VirtualClock) so replaying the same trace "
+                         "reproduces the latency summary bit-for-bit")
     ap.add_argument("--metrics", action="store_true",
                     help="print the TTFT/TTL/queue-wait summary JSON")
     ap.add_argument("--attn-backend", default=None, choices=BACKENDS,
@@ -333,7 +397,9 @@ def main():
         host_pages=args.host_pages, session_kv=args.session_kv,
         fault_plan=args.fault_plan, turns=args.turns,
         chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
-        traffic=args.traffic, arrival_rate=args.arrival_rate)
+        traffic=args.traffic, arrival_rate=args.arrival_rate,
+        burst=args.burst, trace=args.trace, tenants=args.tenants,
+        slo_ttl_ms=args.slo_ttl_ms, virtual_clock=args.virtual_clock)
     if args.metrics:
         print(json.dumps(summary, indent=2, default=float))
 

@@ -1,7 +1,17 @@
 from repro.serving.engine import DecodeEngine, Request
-from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.governor import GovernorConfig, TTLGovernor
+from repro.serving.metrics import EngineMetrics, RequestMetrics, VirtualClock
 from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
-                                     Scheduler)
+                                     SLO_BATCH, SLO_CLASSES,
+                                     SLO_INTERACTIVE, Scheduler,
+                                     TenantConfig)
+from repro.serving.workload import (TenantSpec, TraceRow, generate_trace,
+                                    load_trace, requests_from_trace,
+                                    save_trace, trace_id)
 
 __all__ = ["DecodeEngine", "Request", "Scheduler", "EngineMetrics",
-           "RequestMetrics", "QUEUED", "PREFILL", "DECODE", "DONE"]
+           "RequestMetrics", "VirtualClock", "TenantConfig", "TenantSpec",
+           "TraceRow", "GovernorConfig", "TTLGovernor", "generate_trace",
+           "load_trace", "save_trace", "trace_id", "requests_from_trace",
+           "QUEUED", "PREFILL", "DECODE", "DONE",
+           "SLO_INTERACTIVE", "SLO_BATCH", "SLO_CLASSES"]

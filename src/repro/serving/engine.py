@@ -40,10 +40,12 @@ from repro.core.kvcache import (cache_capacity, cache_to_pages,
                                 page_positions, quantize_decode_state,
                                 scatter_pool_pages)
 from repro.core.sharding import HelixConfig
-from repro.serving.metrics import EngineMetrics
+from repro.serving.governor import GovernorConfig, TTLGovernor
+from repro.serving.metrics import EngineMetrics, VirtualClock
 from repro.serving.pool import BlockAllocator
 from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
-                                     RESTORING, Request, Scheduler)
+                                     RESTORING, SLO_BATCH, Request,
+                                     Scheduler)
 from repro.serving.tier import HostPageStore
 
 __all__ = ["DecodeEngine", "Request"]
@@ -83,6 +85,17 @@ class DecodeEngine:
     backend or pruning off, whose per-request cost scales with the table
     width).  Token streams are bit-exact vs the fixed layout
     (tests/serving/test_paged_engine.py).
+
+    Multi-tenant SLO front end (docs/serving.md): ``tenants`` (a
+    ``TenantConfig`` dict or iterable) layers deficit-weighted-fair
+    admission over the scheduler policy; ``slo_ttl_s`` (or a full
+    ``GovernorConfig`` via ``governor``) arms the TTL governor — per step
+    it reads the windowed interactive TTL p95 and sheds the youngest
+    decoding batch-class request through the spill path (resume: zero
+    re-prefill chunks) when the target is missed, raising the dynamic
+    batch cap back once latency recovers.  Pair with a ``VirtualClock``
+    metrics clock for deterministic, replayable latency summaries
+    (scripts/trace_smoke.py).
     """
 
     def __init__(self, cfg: ArchConfig, params, serve_step: Callable,
@@ -98,7 +111,10 @@ class DecodeEngine:
                  prefix_share: bool = False,
                  host_pages: int = 0,
                  session_kv: bool = False,
-                 fault_plan=None):
+                 fault_plan=None,
+                 tenants=None,
+                 slo_ttl_s: float | None = None,
+                 governor: GovernorConfig | None = None):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -212,11 +228,26 @@ class DecodeEngine:
                                             store=self.store)
         self._prefix_admits = 0
         self._prefix_hits = 0
+        # multi-tenant SLO-aware front end (docs/serving.md): ``tenants``
+        # (TenantConfig dict/iterable) turns on DWFQ admission; ``slo_ttl_s``
+        # (or a full GovernorConfig) arms the TTL governor, which replaces
+        # the static batch cap with measured-TTL feedback — batch-class
+        # work sheds through the spill path when interactive p95 TTL
+        # drifts past target (serving/governor.py).
+        if governor is None and slo_ttl_s is not None:
+            governor = GovernorConfig(ttl_target_s=slo_ttl_s)
+        self.governor = (TTLGovernor(governor, max_batch)
+                         if governor is not None else None)
         self.sched = Scheduler(max_batch=max_batch, cap=self.cap,
                                policy=sched_policy, pool=self.pool,
                                max_pages=self.max_pages,
-                               prefix_index=self.prefix_index)
-        self.metrics = EngineMetrics(clock=clock)
+                               prefix_index=self.prefix_index,
+                               tenants=tenants,
+                               slo_aware=(True if (tenants or governor)
+                                          else None))
+        self.metrics = EngineMetrics(
+            clock=clock,
+            ttl_target_s=governor.ttl_target_s if governor else None)
         self._admission_retired: list[Request] = []
         self._frag_samples: list[float] = []
 
@@ -224,7 +255,8 @@ class DecodeEngine:
     def submit(self, req: Request) -> None:
         """Queue ``req`` for scheduled admission (the chunked-prefill
         path); ``step()`` admits it when a slot frees up."""
-        self.metrics.on_submit(req.rid)
+        self.metrics.on_submit(req.rid, tenant=req.tenant,
+                               slo_class=req.slo_class)
         self.sched.submit(req)
 
     def pending(self) -> bool:
@@ -240,7 +272,8 @@ class DecodeEngine:
         (True) but retired immediately with ``finish_reason="rejected"``
         and reported by the next ``step()``."""
         if req.rid not in self.metrics.requests:
-            self.metrics.on_submit(req.rid)
+            self.metrics.on_submit(req.rid, tenant=req.tenant,
+                                   slo_class=req.slo_class)
         slot = self.sched.assign_direct(req)
         if slot is None:
             if self.sched.rejected and self.sched.rejected[-1] is req:
@@ -320,14 +353,46 @@ class DecodeEngine:
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:
         """One bounded engine iteration: admission, at most one prefill
-        chunk, one decode step for every decoding slot.  Returns the
-        requests retired this step."""
+        chunk, one decode step for every decoding slot, then the TTL
+        governor's control decision (when armed).  Returns the requests
+        retired this step."""
+        self._tick(steps=1)
         self._advance_restores()
         finished = self._admission_retired + self._admit()
         self._admission_retired = []
         finished += self._prefill_chunk()
         finished += self._decode_step()
+        self._govern()
         return finished
+
+    def _tick(self, **work) -> None:
+        """Advance a ``VirtualClock`` metrics clock by one tranche of
+        modeled work (no-op on wall clocks): the base step cost, then
+        each phase's decode-slot / prefill-token contribution as it
+        happens — so TTFT/TTL samples taken inside a phase already
+        include that phase's modeled cost."""
+        if isinstance(self.metrics.clock, VirtualClock):
+            self.metrics.clock.advance(**work)
+
+    def _govern(self) -> None:
+        """One TTL-governor decision per step: feed it the decoding
+        batch-class requests youngest-first and execute the shed it
+        returns through ``preempt`` — the host-tier spill path, so shed
+        work resumes with zero re-prefill chunks."""
+        if self.governor is None:
+            return
+        batch = sorted(
+            ((r.admit_seq, r.rid) for r in self.slots
+             if r is not None and r.state == DECODE
+             and r.slo_class == SLO_BATCH),
+            reverse=True)                       # youngest (newest) first
+        rid = self.governor.step(self.metrics, self.sched,
+                                 [b[1] for b in batch])
+        if rid is not None:
+            self.preempt(rid)
+        self.metrics.set_counter("governor_sheds", self.governor.sheds)
+        self.metrics.set_counter("governor_cap_raises",
+                                 self.governor.cap_raises)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         """Step until queue and slots drain (or ``max_steps`` elapses)."""
@@ -578,6 +643,7 @@ class DecodeEngine:
         first = min(pre, key=lambda sr: sr[1].admit_seq)[1]
         c = width(first)
         group = [(s, r) for s, r in pre if width(r) == c]
+        self._tick(prefill_tokens=c * len(group))
         for _, r in group:
             if self._is_resume(r):
                 # a prefill chunk that reruns known context — zero on the
@@ -659,6 +725,7 @@ class DecodeEngine:
         self.cur_tokens = self.cur_tokens.at[slot].set(token)
         req.state = DECODE
         self.metrics.on_token(req.rid)
+        self.sched.record_served(slot)
         # the prefill token itself may already retire the request
         if (req.eos_id is not None and token == req.eos_id):
             return [self._retire(req, slot, "eos")]
@@ -838,6 +905,7 @@ class DecodeEngine:
                   if r is not None and r.state == DECODE]
         if not active:
             return []
+        self._tick(decode_slots=len(active))
         if self.paged and self.prefix_index is not None:
             self._cow_guard(active)
         if self.grouped:
@@ -878,6 +946,7 @@ class DecodeEngine:
             tok = int(toks_np[i])
             req.out_tokens.append(tok)
             self.sched.on_token(i)
+            self.sched.record_served(i)
             self.metrics.on_token(req.rid)
             if req.eos_id is not None and tok == req.eos_id:
                 finished.append(self._retire(req, i, "eos"))

@@ -1,0 +1,109 @@
+"""Adaptive TTL governor: trades batch-class concurrency for interactive
+latency.
+
+The paper's whole premise is a hard interactive TTL budget while batch
+size grows (PAPER.md §1); a *static* batch cap either wastes slots when
+interactive traffic is light or blows the budget when it isn't.  The
+governor replaces it with measured-TTL feedback: each engine step it
+reads the windowed interactive TTL p95 estimator
+(``EngineMetrics.recent_ttl_p95``) and
+
+  * **sheds** when p95 drifts past target — lowers the scheduler's
+    dynamic ``batch_cap`` below the running batch-slot count and picks
+    the *youngest* running batch-class request to preempt (youngest =
+    least sunk work; seniors keep their progress).  The engine routes the
+    preemption through the PR 8 spill path, so shed work resumes later
+    via a host-tier page restore with **zero re-prefill chunks** —
+    graceful degradation, not wasted compute;
+  * **recovers** after ``recover_steps`` consecutive healthy steps —
+    raises ``batch_cap`` one slot at a time back toward ``max_batch``
+    (hysteresis: one shed cannot ping-pong with one raise);
+  * **holds still** when the estimator has no fresh interactive samples
+    (none yet, or none for ``recover_steps`` steps): no interactive
+    traffic means nothing to protect, so batch keeps full throughput and
+    a stale window can never pin the cap down after interactive drains.
+
+Cooldown (``cooldown_steps``) spaces shed actions so one TTL spike sheds
+one slot, not the whole batch tier at once.  All decisions read only
+host-side metrics/scheduler state — nothing here touches the device.
+
+Regression suite: tests/serving/test_governor.py; end-to-end acceptance:
+scripts/trace_smoke.py (CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.scheduler import SLO_INTERACTIVE
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """TTL-governor tuning: the interactive p95 TTL target (seconds,
+    engine clock — use a ``VirtualClock`` for deterministic replays), the
+    estimator window / warm-up sample floor, the shed cooldown, the
+    healthy-streak length before the batch cap recovers a slot, and the
+    floor the cap never sheds below."""
+    ttl_target_s: float
+    window: int = 32
+    min_samples: int = 8
+    cooldown_steps: int = 4
+    recover_steps: int = 12
+    min_batch_slots: int = 0
+
+
+class TTLGovernor:
+    """Per-step TTL feedback controller over the scheduler's dynamic
+    ``batch_cap`` (see module docstring for the shed / recover / hold
+    policy).  The engine owns the actual preemption; ``step`` only
+    returns the victim rid."""
+
+    def __init__(self, cfg: GovernorConfig, max_batch: int):
+        assert cfg.ttl_target_s > 0, cfg
+        assert 0 <= cfg.min_batch_slots <= max_batch, cfg
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.sheds = 0                 # batch slots preempted-to-spill
+        self.cap_raises = 0            # recovery steps of the cap
+        self._steps = 0
+        self._last_action = -10**9
+        self._healthy_streak = 0
+        self._stale_steps = 0
+        self._last_seen = 0
+
+    def step(self, metrics, sched, batch_rids: list[int]) -> int | None:
+        """One control decision.  ``batch_rids`` are the currently
+        *decoding* batch-class requests, youngest first (the shed
+        order).  Returns the rid to preempt-to-spill this step, or None;
+        adjusts ``sched.batch_cap`` either way."""
+        self._steps += 1
+        cfg = self.cfg
+        seen = metrics.class_samples(SLO_INTERACTIVE)
+        self._stale_steps = 0 if seen > self._last_seen \
+            else self._stale_steps + 1
+        self._last_seen = seen
+        p95 = metrics.recent_ttl_p95(SLO_INTERACTIVE, window=cfg.window,
+                                     min_samples=cfg.min_samples)
+        # stale estimator = interactive stopped producing tokens; its old
+        # samples must not keep batch throttled (the no-thrash contract)
+        healthy = (p95 is None or p95 <= cfg.ttl_target_s
+                   or self._stale_steps >= cfg.recover_steps)
+        if not healthy:
+            self._healthy_streak = 0
+            if self._steps - self._last_action < cfg.cooldown_steps:
+                return None
+            self._last_action = self._steps
+            n_batch = len(batch_rids)
+            sched.batch_cap = max(cfg.min_batch_slots,
+                                  min(sched.batch_cap, n_batch) - 1)
+            if n_batch > cfg.min_batch_slots:
+                self.sheds += 1
+                return batch_rids[0]
+            return None
+        self._healthy_streak += 1
+        if (self._healthy_streak >= cfg.recover_steps
+                and sched.batch_cap < self.max_batch):
+            sched.batch_cap += 1
+            self.cap_raises += 1
+            self._healthy_streak = 0
+        return None

@@ -4,18 +4,65 @@ Tracks, per request: queue wait (submit -> admission), TTFT (submit ->
 first generated token, i.e. end of prefill) and the per-step TTL samples
 (gap between consecutive generated tokens — the latency the paper holds
 steady while batch size grows, PAPER.md §1).  ``summary()`` aggregates
-p50/p95/mean across finished requests plus engine throughput.
+p50/p95/mean across finished requests plus engine throughput, split
+per tenant and per SLO class when requests are tagged
+(serving/workload.py traces tag every row).
 
 The clock is injectable (any monotonic ``() -> float`` in seconds) so
-tests can drive it deterministically; the default is
-``time.monotonic``.
+tests can drive it deterministically; the default is ``time.monotonic``.
+``VirtualClock`` is the deterministic alternative serving replays use: a
+cost-model clock the engine advances by modeled per-step work, so two
+runs of the same trace produce *identical* latency summaries — and so
+shedding batch work genuinely lowers the modeled interactive TTL, which
+is what gives the TTL governor (serving/governor.py) a load-responsive,
+replayable signal.
+
+``recent_ttl_p95`` is the governor's windowed estimator: p95 over the
+last ``window`` TTL samples of one SLO class, None until ``min_samples``
+accumulate (no interactive traffic -> no governor action, by design).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 
 import numpy as np
+
+
+class VirtualClock:
+    """Deterministic cost-model clock for replayable serving runs.
+
+    Wall clocks make every latency summary run-unique; a step counter is
+    load-blind (all slots decode in lockstep, so per-request TTL would be
+    a constant one step).  This clock models per-step time instead: the
+    engine calls ``advance`` with the step's composition and modeled time
+    moves by
+
+        base_s * steps + decode_slot_s * decode_slots
+                       + prefill_token_s * prefill_tokens
+
+    so a heavily batched step *costs more modeled time* — shedding batch
+    slots measurably lowers interactive TTL, deterministically.  The
+    default coefficients are CPU-ish milliseconds; tests pass explicit
+    ones to pin exact arithmetic."""
+
+    def __init__(self, base_s: float = 1e-3, decode_slot_s: float = 5e-4,
+                 prefill_token_s: float = 1e-4):
+        self.base_s = base_s
+        self.decode_slot_s = decode_slot_s
+        self.prefill_token_s = prefill_token_s
+        self._t = 0.0
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, *, steps: int = 0, decode_slots: int = 0,
+                prefill_tokens: int = 0) -> None:
+        """Advance modeled time by one tranche of engine work."""
+        self._t += (self.base_s * steps
+                    + self.decode_slot_s * decode_slots
+                    + self.prefill_token_s * prefill_tokens)
 
 
 @dataclasses.dataclass
@@ -23,6 +70,8 @@ class RequestMetrics:
     """Raw per-request timeline (seconds, engine clock)."""
     rid: int
     submit_t: float
+    tenant: str = "default"
+    slo_class: str = "interactive"
     admit_t: float | None = None
     first_token_t: float | None = None
     last_token_t: float | None = None
@@ -53,7 +102,6 @@ class RequestMetrics:
 def _pct(vals, q) -> float:
     return float(np.percentile(np.asarray(vals, np.float64), q))
 
-
 def _stats(vals) -> dict[str, float]:
     if not vals:
         return {"p50": 0.0, "p95": 0.0, "mean": 0.0, "n": 0}
@@ -69,17 +117,32 @@ class EngineMetrics:
     TIER_COUNTERS = ("spills", "restores", "restores_failed",
                      "checksum_mismatches", "store_evictions",
                      "resume_reprefill_chunks")
+    # TTL-governor counters (serving/governor.py), same always-present
+    # contract: batch slots shed to spill, and cap recoveries
+    GOVERNOR_COUNTERS = ("governor_sheds", "governor_cap_raises")
 
-    def __init__(self, clock=time.monotonic):
+    def __init__(self, clock=time.monotonic, ttl_target_s: float | None = None,
+                 recent_window: int = 256):
         self.clock = clock
+        self.ttl_target_s = ttl_target_s
         self.requests: dict[int, RequestMetrics] = {}
         self.start_t = clock()
-        self.counters: dict[str, int] = {k: 0 for k in self.TIER_COUNTERS}
+        self.counters: dict[str, int] = {
+            k: 0 for k in self.TIER_COUNTERS + self.GOVERNOR_COUNTERS}
+        # rolling (slo_class, ttl_sample) ring for the governor's windowed
+        # estimator; bounded so a long run never grows it
+        self._recent: deque[tuple[str, float]] = deque(maxlen=recent_window)
+        self._class_samples: dict[str, int] = {}
 
     # ------------------------------------------------------------ events
-    def on_submit(self, rid: int) -> None:
-        """Request entered the engine (queue or direct admission)."""
-        self.requests[rid] = RequestMetrics(rid=rid, submit_t=self.clock())
+    def on_submit(self, rid: int, tenant: str = "default",
+                  slo_class: str = "interactive") -> None:
+        """Request entered the engine (queue or direct admission),
+        tagged with its tenant and SLO class for the per-tenant /
+        per-class summary splits."""
+        self.requests[rid] = RequestMetrics(rid=rid, submit_t=self.clock(),
+                                            tenant=tenant,
+                                            slo_class=slo_class)
 
     def on_admit(self, rid: int) -> None:
         """Request placed into a slot (first admission only counts for
@@ -90,13 +153,17 @@ class EngineMetrics:
 
     def on_token(self, rid: int) -> None:
         """One token generated: records TTFT on the first, a TTL sample
-        on each subsequent one."""
+        on each subsequent one (also fed to the per-class recent ring)."""
         m = self.requests[rid]
         now = self.clock()
         if m.first_token_t is None:
             m.first_token_t = now
         else:
-            m.ttl_samples.append(now - m.last_token_t)
+            ttl = now - m.last_token_t
+            m.ttl_samples.append(ttl)
+            self._recent.append((m.slo_class, ttl))
+            self._class_samples[m.slo_class] = \
+                self._class_samples.get(m.slo_class, 0) + 1
         m.last_token_t = now
         m.n_tokens += 1
 
@@ -132,27 +199,87 @@ class EngineMetrics:
         m.finish_t = self.clock()
         m.finish_reason = reason
 
+    # --------------------------------------------------- TTL estimation
+    def class_samples(self, slo_class: str) -> int:
+        """Total TTL samples ever recorded for ``slo_class`` — the
+        governor's freshness signal (an unchanged count means that class
+        produced no tokens lately, so its stale window must not keep the
+        batch cap pinned down)."""
+        return self._class_samples.get(slo_class, 0)
+
+    def recent_ttl_p95(self, slo_class: str = "interactive",
+                       window: int | None = None,
+                       min_samples: int = 8) -> float | None:
+        """p95 TTL over the last ``window`` recent samples of one SLO
+        class (None until ``min_samples`` accumulate) — the per-step
+        estimator the TTL governor steers on."""
+        vals = [s for cls, s in self._recent if cls == slo_class]
+        if window is not None:
+            vals = vals[-window:]
+        if len(vals) < min_samples:
+            return None
+        return _pct(vals, 95)
+
     # ----------------------------------------------------------- summary
-    def summary(self) -> dict:
-        """Aggregate p50/p95/mean of TTFT / TTL / queue wait (seconds)
-        over finished requests, plus token throughput since construction."""
-        fin = [m for m in self.requests.values() if m.finish_t is not None]
+    def _good_tokens(self, m: RequestMetrics) -> int:
+        """Tokens of ``m`` that count toward goodput: all of them for
+        batch work (throughput-bound) or when no TTL target is set;
+        interactive tokens count when their TTL sample met the target
+        (the first token always does — TTFT has no target here)."""
+        if self.ttl_target_s is None or m.slo_class != "interactive":
+            return m.n_tokens
+        ok = sum(1 for s in m.ttl_samples if s <= self.ttl_target_s)
+        return ok + (1 if m.first_token_t is not None else 0)
+
+    def _agg(self, fin: list[RequestMetrics], dt: float) -> dict:
+        """Latency/goodput aggregate over one subset of finished
+        requests (the whole run, one tenant, or one SLO class)."""
         ttls = [s for m in fin for s in m.ttl_samples]
         toks = sum(m.n_tokens for m in fin)
-        dt = max(self.clock() - self.start_t, 1e-9)
+        misses = (0 if self.ttl_target_s is None else
+                  sum(1 for m in fin if m.slo_class == "interactive"
+                      for s in m.ttl_samples if s > self.ttl_target_s))
+        inter_ttls = sum(len(m.ttl_samples) for m in fin
+                         if m.slo_class == "interactive")
         return {
             "n_finished": len(fin),
             "n_tokens": toks,
             "throughput_tok_s": toks / dt,
+            "goodput_tok_s": sum(self._good_tokens(m) for m in fin) / dt,
+            "ttl_target_miss_rate": misses / max(inter_ttls, 1),
             "ttft_s": _stats([m.ttft for m in fin if m.ttft is not None]),
             "ttl_s": _stats(ttls),
             "queue_wait_s": _stats([m.queue_wait for m in fin
                                     if m.queue_wait is not None]),
+        }
+
+    def summary(self) -> dict:
+        """Aggregate p50/p95/mean of TTFT / TTL / queue wait (seconds)
+        over finished requests, token throughput and SLO goodput since
+        construction, per-tenant and per-SLO-class splits of the same,
+        the recent per-class TTL p95 the governor last saw, and the
+        tier/governor counters."""
+        fin = [m for m in self.requests.values() if m.finish_t is not None]
+        dt = max(self.clock() - self.start_t, 1e-9)
+        out = self._agg(fin, dt)
+        out.update({
+            "ttl_target_s": self.ttl_target_s or 0.0,
+            "ttl_recent_p95_s": {
+                cls: (self.recent_ttl_p95(cls, min_samples=1) or 0.0)
+                for cls in ("interactive", "batch")},
+            "per_tenant": {t: self._agg([m for m in fin if m.tenant == t],
+                                        dt)
+                           for t in sorted({m.tenant for m in fin})},
+            "per_class": {c: self._agg([m for m in fin if m.slo_class == c],
+                                       dt)
+                          for c in sorted({m.slo_class for m in fin})},
             "preempts": sum(m.n_preempts for m in fin),
             "preempt_spills": sum(m.n_preempt_spills for m in fin),
             "preempt_drops": sum(m.n_preempt_drops for m in fin),
             "restore_s": _stats([s for m in fin for s in m.restore_samples]),
-            **{k: self.counters.get(k, 0) for k in self.TIER_COUNTERS},
+            **{k: self.counters.get(k, 0)
+               for k in self.TIER_COUNTERS + self.GOVERNOR_COUNTERS},
             "finish_reasons": {r: sum(1 for m in fin if m.finish_reason == r)
                                for r in {m.finish_reason for m in fin}},
-        }
+        })
+        return out

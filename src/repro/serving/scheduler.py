@@ -19,6 +19,29 @@ load).  Both apply the cache-pressure gate: a request whose prefill alone
 cannot fit the per-slot cache capacity is rejected up front instead of
 being admitted and immediately capacity-retired.  Preempted requests
 re-enter at the front of the queue so they resume promptly.
+
+Tenancy (``tenants=`` / ``slo_aware=``, docs/serving.md): every request
+carries a ``tenant`` name and an SLO class (``interactive`` — TTL-bound,
+``batch`` — throughput-bound).  With tenancy on, ``_pick`` layers a
+deficit-weighted-fair-queueing admission filter over the base policy:
+
+  * eligibility — a tenant at its slot quota, or a batch-class request
+    while ``batch_cap`` batch slots already run, is skipped (never
+    blocking an eligible interactive request behind it);
+  * class priority — eligible interactive requests admit before eligible
+    batch ones;
+  * weighted fairness — among the eligible class, the tenant with the
+    least *normalized service* (served tokens / weight) goes first, so
+    backlogged tenants' served-token shares converge to their weight
+    shares (tests/serving/test_tenant_props.py);
+  * bounded credit — a tenant returning from idle has its service floored
+    to the least-served active tenant's, so idle time never banks an
+    unbounded catch-up burst.
+
+``batch_cap`` (default ``max_batch``) is the dynamic ceiling on running
+batch-class slots the TTL governor (serving/governor.py) trades against
+interactive latency.  Without tenancy every knob is inert and admission
+is byte-for-byte the legacy FCFS/SJF behavior.
 """
 from __future__ import annotations
 
@@ -38,6 +61,26 @@ DECODE = "decode"
 DONE = "done"
 
 POLICIES = ("fcfs", "sjf")
+
+# SLO classes (serving/workload.py traces tag every request with one):
+# interactive work is TTL-bound (the paper's budget), batch work is
+# throughput-bound and the first to be shed under TTL pressure
+SLO_INTERACTIVE = "interactive"
+SLO_BATCH = "batch"
+SLO_CLASSES = (SLO_INTERACTIVE, SLO_BATCH)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """Per-tenant admission knobs for the DWFQ layer.
+
+    ``weight`` sets the tenant's fair share of served tokens while
+    backlogged (normalized service = served / weight; the least-served
+    tenant admits first).  ``max_slots`` > 0 caps the tenant's concurrent
+    engine slots (0 = no quota)."""
+    name: str
+    weight: float = 1.0
+    max_slots: int = 0
 
 
 @dataclasses.dataclass
@@ -59,6 +102,8 @@ class Request:
     preempted: bool = False                   # awaiting resume (front of queue)
     admit_seq: int = -1                       # admission order stamp
     session_id: str | None = None             # multi-turn session KV key
+    tenant: str = "default"                   # DWFQ accounting bucket
+    slo_class: str = SLO_INTERACTIVE          # interactive (TTL) | batch
     # --- chunked-prefill bookkeeping (engine-internal) ---
     prefill_tokens: list[int] | None = None   # prompt (+ generated on resume)
     prefill_pos: int = 0                      # next chunk offset
@@ -278,7 +323,8 @@ class Scheduler:
     per-slot ``cap`` gate (always-admissible once a slot is free)."""
 
     def __init__(self, max_batch: int, cap: int, policy: str = "fcfs",
-                 pool=None, max_pages: int = 0, prefix_index=None):
+                 pool=None, max_pages: int = 0, prefix_index=None,
+                 tenants=None, slo_aware: bool | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown sched policy {policy!r}; "
                              f"choose from {POLICIES}")
@@ -293,27 +339,112 @@ class Scheduler:
         self.slot_len: list[int] = [0] * max_batch
         self.rejected: list[Request] = []
         self._admit_seq = 0
+        # --- tenancy / DWFQ state (inert unless slo_aware) ---
+        if tenants is not None and not isinstance(tenants, dict):
+            tenants = {t.name: t for t in tenants}
+        self.tenants: dict[str, TenantConfig] | None = tenants
+        # slo_aware turns on class priority + DWFQ + batch_cap in _pick;
+        # default: on iff tenants are configured (the TTL governor turns it
+        # on without tenant configs — every tenant then weighs 1.0)
+        self.slo_aware = bool(tenants) if slo_aware is None else slo_aware
+        self.batch_cap = max_batch              # governor-adjusted ceiling
+        self.slot_tenant: list[str | None] = [None] * max_batch
+        self.slot_slo: list[str | None] = [None] * max_batch
+        self.served_tokens: dict[str, int] = {}
+        self._service: dict[str, float] = {}    # served / weight per tenant
+
+    # ----------------------------------------------------------- tenancy
+    def _weight(self, tenant: str) -> float:
+        cfg = (self.tenants or {}).get(tenant)
+        return max(cfg.weight, 1e-9) if cfg is not None else 1.0
+
+    def _running(self, tenant: str | None = None,
+                 slo_class: str | None = None) -> int:
+        return sum(1 for s, r in enumerate(self.slot_rids)
+                   if r is not None
+                   and (tenant is None or self.slot_tenant[s] == tenant)
+                   and (slo_class is None or self.slot_slo[s] == slo_class))
+
+    def _eligible(self, req: Request) -> bool:
+        """DWFQ admission filter: the tenant's slot quota and the dynamic
+        batch-class cap.  Ineligible requests are *skipped* by ``_pick``
+        (they stay queued), never head-of-line blocking eligible work —
+        in particular an interactive request is never stuck behind an
+        over-cap batch one."""
+        if not self.slo_aware:
+            return True
+        cfg = (self.tenants or {}).get(req.tenant)
+        if cfg is not None and cfg.max_slots > 0 \
+                and self._running(tenant=req.tenant) >= cfg.max_slots:
+            return False
+        if req.slo_class == SLO_BATCH \
+                and self._running(slo_class=SLO_BATCH) >= self.batch_cap:
+            return False
+        return True
+
+    def record_served(self, slot: int, n: int = 1) -> None:
+        """Charge ``n`` generated tokens to ``slot``'s tenant — the DWFQ
+        service accounting ``_pick`` balances against tenant weights."""
+        t = self.slot_tenant[slot]
+        if t is None:
+            return
+        self.served_tokens[t] = self.served_tokens.get(t, 0) + n
+        self._service[t] = self._service.get(t, 0.0) + n / self._weight(t)
 
     # ------------------------------------------------------------- queue
     def submit(self, req: Request, front: bool = False) -> None:
-        """Enqueue ``req`` (``front=True`` = preemption resume priority)."""
+        """Enqueue ``req`` (``front=True`` = preemption resume priority).
+
+        With tenancy on, a tenant returning from idle (no queued or
+        running work) has its normalized service floored to the
+        least-served *active* tenant's: idle time banks no catch-up
+        credit, so the returning tenant re-enters the fair rotation at
+        the current frontier instead of monopolizing admissions."""
+        if self.slo_aware and not req.preempted:
+            active = ({r.tenant for r in self.queue}
+                      | {t for t in self.slot_tenant if t is not None})
+            if req.tenant not in active:
+                floor = min((self._service.get(t, 0.0) for t in active),
+                            default=0.0)
+                self._service[req.tenant] = max(
+                    self._service.get(req.tenant, 0.0), floor)
         req.state = QUEUED
         if front:
             self.queue.insert(0, req)
         else:
             self.queue.append(req)
 
-    def _pick(self) -> Request:
+    def _pick(self) -> Request | None:
         # preempted requests resume first under EVERY policy — their
         # already-spent prefill/decode work must not be stranded behind a
         # stream of fresh short arrivals (they sit at the queue front)
-        for r in self.queue:
+        if not self.slo_aware:
+            for r in self.queue:
+                if r.preempted:
+                    return r
+            if self.policy == "sjf":
+                # min() is stable: earliest-queued wins among equal lengths
+                return min(self.queue, key=lambda r: len(r.resume_tokens()))
+            return self.queue[0]
+        # DWFQ layer: same preempted-first / fcfs / sjf skeleton, but only
+        # over *eligible* requests (quota + batch_cap), interactive before
+        # batch, and the least-normalized-service tenant first.  None when
+        # nothing is eligible (the admit loop stops; queued work waits for
+        # slots to free or the governor to raise the cap).
+        elig = [r for r in self.queue if self._eligible(r)]
+        if not elig:
+            return None
+        for r in elig:
             if r.preempted:
                 return r
+        inter = [r for r in elig if r.slo_class != SLO_BATCH]
+        pool = inter or elig
+        tenant = min({r.tenant for r in pool},
+                     key=lambda t: (self._service.get(t, 0.0), t))
+        cand = [r for r in pool if r.tenant == tenant]
         if self.policy == "sjf":
-            # min() is stable: earliest-queued wins among equal lengths
-            return min(self.queue, key=lambda r: len(r.resume_tokens()))
-        return self.queue[0]
+            return min(cand, key=lambda r: len(r.resume_tokens()))
+        return cand[0]
 
     def _stamp(self, req: Request) -> None:
         # first admission only: a preempted request keeps its original
@@ -461,6 +592,8 @@ class Scheduler:
             if slot is None:
                 break
             req = self._pick()
+            if req is None:                   # nothing eligible (DWFQ)
+                break
             if not self.fits(req):            # can't even hold one new token
                 self.queue.remove(req)
                 self.reject(req)
@@ -482,6 +615,8 @@ class Scheduler:
             self._stamp(req)
             self.slot_rids[slot] = req.rid
             self.slot_len[slot] = need
+            self.slot_tenant[slot] = req.tenant
+            self.slot_slo[slot] = req.slo_class
             placed.append((req, slot))
         return placed
 
@@ -509,6 +644,8 @@ class Scheduler:
         self._stamp(req)
         self.slot_rids[slot] = req.rid
         self.slot_len[slot] = need
+        self.slot_tenant[slot] = req.tenant
+        self.slot_slo[slot] = req.slo_class
         return slot
 
     # ----------------------------------------------------------- running
@@ -537,6 +674,8 @@ class Scheduler:
             self.pool.free(rid)
         self.slot_rids[slot] = None
         self.slot_len[slot] = 0
+        self.slot_tenant[slot] = None
+        self.slot_slo[slot] = None
 
     def preempt(self, slot: int, req: Request) -> None:
         """Release ``slot`` and requeue ``req`` at the front; ``_pick``
@@ -552,9 +691,20 @@ class Scheduler:
         """Assert the scheduling invariants the property suite pins:
         no rid in two slots, queue and slots disjoint, committed lengths
         within capacity; paged mode additionally checks page conservation
-        and that every slot's reservation covers its committed length."""
+        and that every slot's reservation covers its committed length;
+        tenancy adds slot tenant/SLO tag consistency and non-negative
+        service accounting."""
         live = [r for r in self.slot_rids if r is not None]
         assert len(live) == len(set(live)), f"slot double-assignment: {live}"
+        for s, rid in enumerate(self.slot_rids):
+            assert (rid is None) == (self.slot_tenant[s] is None), \
+                f"slot {s} tenant tag out of sync with its rid"
+            assert (rid is None) == (self.slot_slo[s] is None), \
+                f"slot {s} slo tag out of sync with its rid"
+        assert all(v >= 0 for v in self.served_tokens.values()), \
+            self.served_tokens
+        assert all(v >= 0.0 for v in self._service.values()), self._service
+        assert 0 <= self.batch_cap <= self.max_batch, self.batch_cap
         qrids = [r.rid for r in self.queue]
         assert len(qrids) == len(set(qrids)), f"queue duplicates: {qrids}"
         assert not set(qrids) & set(live), "request both queued and placed"

@@ -1,0 +1,271 @@
+"""Trace-driven workload model: schema-versioned request traces + generators.
+
+Serving-system claims only hold up under reproducible, production-shaped
+load — not hand-picked request sets.  This module is the single arrival
+process for the whole repo (launch/serve.py and benchmarks/bench_serving.py
+both route through it): a **trace** is a list of ``TraceRow``s, one per
+request, each pinning
+
+    (arrival_step, tenant, slo_class, prompt_len, max_tokens,
+     session_id, seed)
+
+so the same file replays bit-identically through any engine configuration
+(tests/serving/test_trace_replay.py, scripts/trace_smoke.py).  Prompts are
+*materialized* from the per-row ``seed`` (``prompt_tokens``), never stored,
+which keeps multi-million-token traces a few bytes per request.
+
+On disk a trace is JSONL: a header line ``{"schema": 1, "kind":
+"helix-trace", "meta": {...}}`` followed by one row object per line
+(``save_trace`` / ``load_trace``; unknown schema versions refuse to load
+rather than misparse).
+
+Generators: ``poisson_arrival_steps`` (exponential inter-arrival gaps —
+absorbed from launch/serve.py, which re-exports it) and
+``bursty_arrival_steps`` (closed bursts separated by Poisson gaps) shape
+arrivals; ``generate_trace`` mixes tenants per ``TenantSpec`` shares and
+draws per-row prompt/output lengths from each tenant's ranges.  With the
+default single-tenant spec and ``arrival="poisson"`` the arrival steps are
+exactly ``poisson_arrival_steps(n, rate, seed)`` — the regression pin that
+keeps old ``--traffic poisson --arrival-rate`` behavior reproducible
+(tests/serving/test_workload.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.serving.scheduler import (SLO_CLASSES, SLO_INTERACTIVE,
+                                     Request, TenantConfig)
+
+TRACE_SCHEMA = 1
+TRACE_KIND = "helix-trace"
+
+# row fields in canonical serialization order (schema version 1)
+_ROW_FIELDS = ("rid", "arrival_step", "tenant", "slo_class", "prompt_len",
+               "max_tokens", "session_id", "seed")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRow:
+    """One trace request: arrival time (in engine steps), tenancy/SLO
+    tags, prompt/output lengths, optional multi-turn session id, and the
+    per-row ``seed`` its synthetic prompt tokens are materialized from
+    (``prompt_tokens``) — everything a replay needs, nothing more."""
+    rid: int
+    arrival_step: int
+    tenant: str = "default"
+    slo_class: str = SLO_INTERACTIVE
+    prompt_len: int = 32
+    max_tokens: int = 16
+    session_id: str | None = None
+    seed: int = 0
+
+    def validate(self) -> None:
+        """Assert the row is well-formed (schema v1 value constraints)."""
+        assert self.rid >= 0, f"rid must be >= 0: {self}"
+        assert self.arrival_step >= 0, f"arrival_step must be >= 0: {self}"
+        assert self.tenant, f"empty tenant name: {self}"
+        assert self.slo_class in SLO_CLASSES, \
+            f"slo_class {self.slo_class!r} not in {SLO_CLASSES}"
+        assert self.prompt_len >= 1, f"prompt_len must be >= 1: {self}"
+        assert self.max_tokens >= 1, f"max_tokens must be >= 1: {self}"
+        assert self.seed >= 0, f"seed must be >= 0: {self}"
+
+    def to_json(self) -> str:
+        """Canonical one-line JSON for the trace file (fixed key order,
+        so byte-identical rows hash identically in ``trace_id``)."""
+        return json.dumps({k: getattr(self, k) for k in _ROW_FIELDS})
+
+    @classmethod
+    def from_json(cls, line: str) -> "TraceRow":
+        """Parse one trace-file row line (inverse of ``to_json``)."""
+        d = json.loads(line)
+        unknown = set(d) - set(_ROW_FIELDS)
+        assert not unknown, f"unknown trace row fields: {sorted(unknown)}"
+        row = cls(**d)
+        row.validate()
+        return row
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's slice of a generated workload: its DWFQ ``weight``,
+    SLO class, ``share`` of arrivals, and per-request prompt/output
+    length ranges (inclusive; ``None`` = the driver's defaults)."""
+    name: str
+    weight: float = 1.0
+    slo_class: str = SLO_INTERACTIVE
+    share: float = 1.0
+    prompt_len: tuple[int, int] | None = None
+    max_tokens: tuple[int, int] | None = None
+
+    def tenant_config(self) -> TenantConfig:
+        """The scheduler-side ``TenantConfig`` this spec implies."""
+        return TenantConfig(name=self.name, weight=self.weight)
+
+
+def parse_tenants(spec: str) -> tuple[TenantSpec, ...]:
+    """Parse the CLI tenant-mix spec ``"name[:weight[:slo[:share]]],..."``
+    (e.g. ``"chat:3:interactive,jobs:1:batch"``) into ``TenantSpec``s.
+    Omitted fields default to weight 1.0, class interactive, share =
+    weight (heavier tenants also send proportionally more traffic)."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        assert len(bits) <= 4, f"bad tenant spec {part!r}"
+        name = bits[0]
+        weight = float(bits[1]) if len(bits) > 1 and bits[1] else 1.0
+        slo = bits[2] if len(bits) > 2 and bits[2] else SLO_INTERACTIVE
+        assert slo in SLO_CLASSES, \
+            f"tenant {name!r}: slo {slo!r} not in {SLO_CLASSES}"
+        share = float(bits[3]) if len(bits) > 3 and bits[3] else weight
+        out.append(TenantSpec(name=name, weight=weight, slo_class=slo,
+                              share=share))
+    assert out, f"no tenants in spec {spec!r}"
+    return tuple(out)
+
+
+# ------------------------------------------------------------- arrivals
+def poisson_arrival_steps(n: int, rate: float, seed: int = 0) -> list[int]:
+    """Synthetic Poisson traffic: the engine step at which each of ``n``
+    requests arrives, with exponential inter-arrival gaps of mean
+    ``1/rate`` steps (``rate`` = average arrivals per engine step)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+
+def bursty_arrival_steps(n: int, rate: float, burst: int = 4,
+                         seed: int = 0) -> list[int]:
+    """Bursty traffic: requests arrive in closed bursts of ``burst``
+    simultaneous arrivals, with Poisson gaps between bursts sized so the
+    long-run average stays ``rate`` requests per step — the flash-crowd
+    shape that stresses admission fairness harder than smooth Poisson."""
+    assert burst >= 1, burst
+    rng = np.random.default_rng(seed)
+    n_bursts = -(-n // burst)
+    gaps = rng.exponential(burst / max(rate, 1e-9), size=n_bursts)
+    starts = np.floor(np.cumsum(gaps)).astype(int)
+    return [int(starts[i // burst]) for i in range(n)]
+
+
+# ------------------------------------------------------------ generator
+def generate_trace(n: int, *, arrival: str = "poisson", rate: float = 0.5,
+                   burst: int = 4,
+                   tenants: tuple[TenantSpec, ...] = (TenantSpec("default"),),
+                   prompt_len: int = 32, max_tokens: int = 16,
+                   seed: int = 0) -> list[TraceRow]:
+    """Generate an ``n``-request trace: arrivals per ``arrival`` shape
+    (``"poisson"`` | ``"bursty"`` | ``"batch"`` — all at step 0), tenants
+    assigned by normalized ``share``, and per-row prompt/output lengths
+    drawn uniformly from each tenant's ranges (``prompt_len`` /
+    ``max_tokens`` fill in for specs that leave them ``None``).
+
+    Arrival steps use the base ``seed`` directly, so a single-tenant
+    Poisson trace arrives exactly at ``poisson_arrival_steps(n, rate,
+    seed)`` (the old ``--traffic poisson`` behavior); tenant assignment
+    and lengths draw from a derived stream so adding tenants never
+    perturbs the arrival process."""
+    if arrival == "poisson":
+        steps = poisson_arrival_steps(n, rate, seed)
+    elif arrival == "bursty":
+        steps = bursty_arrival_steps(n, rate, burst, seed)
+    elif arrival == "batch":
+        steps = [0] * n
+    else:
+        raise ValueError(f"unknown arrival shape {arrival!r}; choose from "
+                         "('poisson', 'bursty', 'batch')")
+    rng = np.random.default_rng([seed, 0xC0FFEE])
+    shares = np.asarray([max(t.share, 0.0) for t in tenants], np.float64)
+    assert shares.sum() > 0, "all tenant shares are zero"
+    shares = shares / shares.sum()
+    rows = []
+    for rid in range(n):
+        t = tenants[int(rng.choice(len(tenants), p=shares))]
+        plo, phi = t.prompt_len or (prompt_len, prompt_len)
+        mlo, mhi = t.max_tokens or (max_tokens, max_tokens)
+        rows.append(TraceRow(
+            rid=rid, arrival_step=int(steps[rid]), tenant=t.name,
+            slo_class=t.slo_class,
+            prompt_len=int(rng.integers(plo, phi + 1)),
+            max_tokens=int(rng.integers(mlo, mhi + 1)),
+            seed=int(rng.integers(0, 2**31 - 1))))
+    for r in rows:
+        r.validate()
+    return rows
+
+
+# ------------------------------------------------------------ trace I/O
+def save_trace(path, rows, meta: dict | None = None) -> None:
+    """Write ``rows`` as a schema-versioned JSONL trace file: one header
+    line (schema version + kind + optional ``meta``) then one canonical
+    row object per line."""
+    with open(path, "w") as f:
+        f.write(json.dumps({"schema": TRACE_SCHEMA, "kind": TRACE_KIND,
+                            "meta": meta or {}}) + "\n")
+        for r in rows:
+            r.validate()
+            f.write(r.to_json() + "\n")
+
+
+def load_trace(path) -> list[TraceRow]:
+    """Load a JSONL trace written by ``save_trace``, validating the
+    header (kind + supported schema version — unknown versions raise
+    instead of misparsing) and every row."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    assert lines, f"empty trace file: {path}"
+    head = json.loads(lines[0])
+    if head.get("kind") != TRACE_KIND:
+        raise ValueError(f"{path}: not a {TRACE_KIND} file "
+                         f"(header {head!r})")
+    if head.get("schema") != TRACE_SCHEMA:
+        raise ValueError(f"{path}: unsupported trace schema "
+                         f"{head.get('schema')!r} (this reader speaks "
+                         f"{TRACE_SCHEMA})")
+    rows = [TraceRow.from_json(ln) for ln in lines[1:]]
+    rids = [r.rid for r in rows]
+    assert len(rids) == len(set(rids)), "duplicate rids in trace"
+    return rows
+
+
+def trace_id(rows) -> str:
+    """Short stable content hash of a trace (canonical row JSON) — the
+    reproducible address bench rows carry so a measurement always names
+    the exact workload that produced it."""
+    h = hashlib.sha256()
+    for r in rows:
+        h.update(r.to_json().encode())
+        h.update(b"\n")
+    return h.hexdigest()[:12]
+
+
+# ------------------------------------------------------- materialization
+def prompt_tokens(row: TraceRow, vocab: int,
+                  shared_prefix=()) -> list[int]:
+    """Materialize ``row``'s synthetic prompt: the workload-wide
+    ``shared_prefix`` (truncated to the row's length) plus a suffix drawn
+    deterministically from the row's own ``seed`` — same row, same
+    tokens, on every replay."""
+    shared = list(shared_prefix)[:row.prompt_len]
+    rng = np.random.default_rng(row.seed)
+    suffix = rng.integers(0, vocab, row.prompt_len - len(shared)).tolist()
+    return shared + suffix
+
+
+def requests_from_trace(rows, vocab: int, *, eos_id: int | None = None,
+                        shared_prefix=()) -> list[Request]:
+    """Build engine ``Request``s from trace rows (prompts materialized
+    via ``prompt_tokens``), carrying each row's tenant / SLO class /
+    session id into the scheduler's tenancy layer."""
+    return [Request(rid=r.rid, prompt=prompt_tokens(r, vocab, shared_prefix),
+                    max_new_tokens=r.max_tokens, eos_id=eos_id,
+                    session_id=r.session_id, tenant=r.tenant,
+                    slo_class=r.slo_class)
+            for r in rows]

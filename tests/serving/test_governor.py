@@ -1,0 +1,247 @@
+"""TTL-governor regression suite (serving/governor.py + engine wiring).
+
+Unit level: the shed / cooldown / recover / stale-hold control law over a
+fake metrics source.  Engine level, on the real paged engine with an
+explicit-coefficient ``VirtualClock`` (synthetic, injectable TTL
+inflation): saturating batch pressure triggers batch preemption *through
+the host-tier spill path* (``resume_reprefill_chunks`` stays 0 — shed
+work resumes without re-prefill), the batch cap recovers after
+interactive drains, and batch-only traffic never sheds (no thrash)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import (build_serve_step, make_chunk_prefill_step,
+                                    make_prefill_step)
+from repro.models.transformer import init_params
+from repro.serving import DecodeEngine, Request
+from repro.serving.governor import GovernorConfig, TTLGovernor
+from repro.serving.metrics import EngineMetrics, VirtualClock
+from repro.serving.scheduler import SLO_BATCH, SLO_INTERACTIVE
+from repro.utils import make_mesh, set_mesh
+
+CFG = get_config("granite-3-2b").reduced()
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+MESH = make_mesh((1, 1), ("data", "model"))
+HX = HelixConfig(kvp_axes=(), tpa_axis=None, attn_block_s=16,
+                 paged_kv=True)
+
+
+# -------------------------------------------------------------- unit level
+class _FakeMetrics:
+    """Injectable TTL estimator: tests script the p95/sample curve."""
+
+    def __init__(self):
+        self.p95 = None
+        self.samples = 0
+
+    def class_samples(self, slo_class):
+        return self.samples
+
+    def recent_ttl_p95(self, slo_class, window=None, min_samples=8):
+        return self.p95
+
+
+class _FakeSched:
+    def __init__(self, max_batch):
+        self.batch_cap = max_batch
+        self.max_batch = max_batch
+
+
+def test_virtual_clock_cost_model():
+    clk = VirtualClock(base_s=1.0, decode_slot_s=0.5, prefill_token_s=0.25)
+    assert clk() == 0.0
+    clk.advance(steps=1)
+    clk.advance(decode_slots=2, prefill_tokens=4)
+    assert clk() == pytest.approx(1.0 + 2 * 0.5 + 4 * 0.25)
+    clk.advance()                               # no work, no time
+    assert clk() == pytest.approx(3.0)
+
+
+def test_governor_shed_cooldown_and_floor():
+    cfg = GovernorConfig(ttl_target_s=1.0, cooldown_steps=3,
+                         min_samples=1, min_batch_slots=1)
+    gov = TTLGovernor(cfg, max_batch=4)
+    met, sched = _FakeMetrics(), _FakeSched(4)
+    met.p95 = 2.0                               # over target from step one
+
+    met.samples += 1
+    assert gov.step(met, sched, [7, 5, 3]) == 7     # youngest-first victim
+    assert sched.batch_cap == 2 and gov.sheds == 1
+    for _ in range(cfg.cooldown_steps - 1):         # cooldown: hold fire
+        met.samples += 1
+        assert gov.step(met, sched, [5, 3]) is None
+    assert sched.batch_cap == 2
+    met.samples += 1
+    assert gov.step(met, sched, [5, 3]) == 5        # cooldown expired
+    assert sched.batch_cap == 1 and gov.sheds == 2
+    # the floor: min_batch_slots batch slots are never shed
+    for _ in range(3 * cfg.cooldown_steps):
+        met.samples += 1
+        assert gov.step(met, sched, [3]) is None
+    assert sched.batch_cap == 1 and gov.sheds == 2
+
+
+def test_governor_recovers_after_healthy_streak():
+    cfg = GovernorConfig(ttl_target_s=1.0, cooldown_steps=1,
+                         min_samples=1, recover_steps=4)
+    gov = TTLGovernor(cfg, max_batch=3)
+    met, sched = _FakeMetrics(), _FakeSched(3)
+    met.p95 = 5.0
+    met.samples += 1
+    assert gov.step(met, sched, [9, 8]) == 9
+    assert sched.batch_cap == 1
+    met.p95 = 0.5                                   # back under target
+    raises = 0
+    for _ in range(2 * cfg.recover_steps):
+        met.samples += 1
+        assert gov.step(met, sched, [8]) is None
+        raises += 1
+    # hysteresis: one raise per recover_steps healthy steps, capped at max
+    assert sched.batch_cap == 3 and gov.cap_raises == 2
+
+
+def test_governor_stale_window_cannot_pin_cap_down():
+    """Interactive stops producing tokens while its last samples were
+    bad: after recover_steps sample-free steps the estimator is treated
+    as stale and the cap recovers — a drained class can't throttle batch
+    forever."""
+    cfg = GovernorConfig(ttl_target_s=1.0, cooldown_steps=1,
+                         min_samples=1, recover_steps=3)
+    gov = TTLGovernor(cfg, max_batch=2)
+    met, sched = _FakeMetrics(), _FakeSched(2)
+    met.p95 = 9.0
+    met.samples = 1
+    assert gov.step(met, sched, [4]) == 4
+    assert sched.batch_cap == 0
+    # p95 stays bad but samples stop growing -> stale -> healthy -> raise
+    sheds_before = gov.sheds
+    for _ in range(3 * cfg.recover_steps):
+        gov.step(met, sched, [])
+    assert sched.batch_cap == 2 and gov.sheds == sheds_before
+
+
+def test_governor_no_interactive_samples_never_sheds():
+    gov = TTLGovernor(GovernorConfig(ttl_target_s=0.001), max_batch=4)
+    met, sched = _FakeMetrics(), _FakeSched(4)
+    for _ in range(50):
+        assert gov.step(met, sched, [1, 2, 3]) is None   # p95 None = healthy
+    assert gov.sheds == 0 and sched.batch_cap == 4
+
+
+def test_governor_config_validation():
+    with pytest.raises(AssertionError):
+        TTLGovernor(GovernorConfig(ttl_target_s=0.0), max_batch=2)
+    with pytest.raises(AssertionError):
+        TTLGovernor(GovernorConfig(ttl_target_s=1.0, min_batch_slots=3),
+                    max_batch=2)
+
+
+# ------------------------------------------------------------ engine level
+def _engine(*, governor=None, slo_ttl_s=None, clock=None, max_batch=4,
+            host_pages=64):
+    with set_mesh(MESH):
+        return DecodeEngine(
+            CFG, PARAMS, build_serve_step(CFG, MESH, HX),
+            make_prefill_step(CFG, MESH, HX),
+            max_batch=max_batch, max_seq=64, hx=HX, chunk_tokens=4,
+            chunk_prefill_step=make_chunk_prefill_step(CFG, MESH, HX),
+            tp_width=1, host_pages=host_pages,
+            governor=governor, slo_ttl_s=slo_ttl_s,
+            clock=clock if clock is not None else VirtualClock(
+                base_s=1.0, decode_slot_s=1.0, prefill_token_s=0.0))
+
+
+def _requests(n_inter, n_batch, *, max_new=8, seed=11):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_inter + n_batch):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, CFG.vocab, 10).tolist(),
+            max_new_tokens=max_new, tenant="c" if i < n_inter else "j",
+            slo_class=SLO_INTERACTIVE if i < n_inter else SLO_BATCH))
+    return reqs
+
+
+def _drain(eng, reqs, limit=400):
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(limit):
+        if not eng.pending():
+            break
+        eng.step()
+        eng.sched.check_invariants()
+    assert not eng.pending()
+
+
+def test_engine_sheds_batch_to_spill_under_ttl_pressure():
+    """Cost-model clock: 4 decode slots cost 5s/step, 3 cost 4s.  Target
+    4.5s is violated exactly while all 4 slots run -> the governor must
+    shed batch work via the spill path, interactive TTL must recover to
+    the post-shed cost, and shed work must resume with zero re-prefill."""
+    gov = GovernorConfig(ttl_target_s=4.5, min_samples=2, window=8,
+                         cooldown_steps=2, recover_steps=50)
+    eng = _engine(governor=gov)
+    reqs = _requests(2, 2, max_new=12)
+    _drain(eng, reqs)
+    s = eng.metrics.summary()
+    assert s["governor_sheds"] >= 1, s
+    assert s["preempt_spills"] >= s["governor_sheds"], s
+    assert s["resume_reprefill_chunks"] == 0, s
+    assert eng.governor.sheds == s["governor_sheds"]
+    # every request, shed included, finished in full
+    assert all(r.done and len(r.out_tokens) == 12 for r in reqs)
+    # interactive's tail TTL samples reflect the governed (shed) batch:
+    # strictly cheaper than the 4-slot saturated step cost
+    inter = [m for m in eng.metrics.requests.values()
+             if m.slo_class == SLO_INTERACTIVE]
+    assert min(s for m in inter for s in m.ttl_samples) <= 4.0 + 1e-9, \
+        "no interactive step ever ran below saturated cost"
+
+
+def test_engine_batch_only_never_thrashes():
+    """No interactive traffic: the estimator has no samples, the governor
+    holds, batch keeps every slot."""
+    eng = _engine(slo_ttl_s=0.5)               # absurdly tight target
+    reqs = _requests(0, 4, max_new=10)
+    _drain(eng, reqs)
+    s = eng.metrics.summary()
+    assert s["governor_sheds"] == 0 and s["preempts"] == 0, s
+    assert eng.sched.batch_cap == eng.sched.max_batch
+    assert all(r.done and len(r.out_tokens) == 10 for r in reqs)
+
+
+def test_engine_cap_recovers_after_interactive_drains():
+    """Short interactive burst sheds batch; once interactive drains, the
+    stale-window rule must lift the cap back to max_batch while the
+    (long) batch work is still running."""
+    gov = GovernorConfig(ttl_target_s=4.5, min_samples=2, window=8,
+                         cooldown_steps=1, recover_steps=4)
+    eng = _engine(governor=gov)
+    reqs = _requests(2, 2, max_new=6)
+    long_batch = Request(rid=99, prompt=list(range(1, 11)),
+                         max_new_tokens=40, tenant="j",
+                         slo_class=SLO_BATCH)
+    _drain(eng, reqs + [long_batch])
+    s = eng.metrics.summary()
+    assert s["governor_sheds"] >= 1, s
+    assert s["governor_cap_raises"] >= 1, s
+    assert eng.sched.batch_cap == eng.sched.max_batch
+    assert long_batch.done and len(long_batch.out_tokens) == 40
+
+
+def test_governed_run_is_replay_deterministic():
+    """Same requests + fresh VirtualClock twice: identical streams AND
+    identical governor decisions."""
+    def run():
+        gov = GovernorConfig(ttl_target_s=4.5, min_samples=2, window=8,
+                             cooldown_steps=2)
+        eng = _engine(governor=gov)
+        reqs = _requests(2, 2, max_new=12)
+        _drain(eng, reqs)
+        return ([tuple(r.out_tokens) for r in reqs],
+                eng.governor.sheds, eng.governor.cap_raises,
+                eng.metrics.summary()["ttl_s"])
+    assert run() == run()

@@ -1,0 +1,194 @@
+"""Trace-driven workload model (serving/workload.py): row validation,
+JSONL round-trip + schema versioning, arrival-process generators (incl.
+the pin that keeps legacy ``--traffic poisson`` behavior reproducible),
+tenant-mix parsing, deterministic prompt materialization, and the
+trace -> engine ``Request`` bridge.  Pure host python — no engine."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.workload import (TenantSpec, TraceRow,
+                                    bursty_arrival_steps, generate_trace,
+                                    load_trace, parse_tenants,
+                                    poisson_arrival_steps, prompt_tokens,
+                                    requests_from_trace, save_trace,
+                                    trace_id)
+
+
+# ------------------------------------------------------------------ rows
+def test_row_json_roundtrip_is_identity():
+    row = TraceRow(rid=3, arrival_step=7, tenant="chat",
+                   slo_class="batch", prompt_len=40, max_tokens=9,
+                   session_id="s3", seed=12345)
+    assert TraceRow.from_json(row.to_json()) == row
+
+
+def test_row_rejects_unknown_fields_and_bad_values():
+    with pytest.raises(AssertionError, match="unknown trace row fields"):
+        TraceRow.from_json(json.dumps({"rid": 0, "arrival_step": 0,
+                                       "surprise": 1}))
+    for bad in (dict(rid=-1), dict(arrival_step=-2), dict(tenant=""),
+                dict(slo_class="gold"), dict(prompt_len=0),
+                dict(max_tokens=0), dict(seed=-1)):
+        with pytest.raises(AssertionError):
+            TraceRow(**{"rid": 0, "arrival_step": 0, **bad}).validate()
+
+
+# ------------------------------------------------------------- trace I/O
+def test_save_load_roundtrip(tmp_path):
+    rows = generate_trace(17, arrival="bursty", rate=1.0, seed=3)
+    path = tmp_path / "t.jsonl"
+    save_trace(path, rows, meta={"note": "test"})
+    loaded = load_trace(path)
+    assert loaded == rows
+    assert trace_id(loaded) == trace_id(rows)
+
+
+def test_load_refuses_unknown_schema_and_kind(tmp_path):
+    rows = generate_trace(3, seed=0)
+    path = tmp_path / "t.jsonl"
+    save_trace(path, rows)
+    lines = path.read_text().splitlines()
+
+    head = json.loads(lines[0])
+    head["schema"] = 99
+    path.write_text("\n".join([json.dumps(head)] + lines[1:]) + "\n")
+    with pytest.raises(ValueError, match="unsupported trace schema"):
+        load_trace(path)
+
+    head = json.loads(lines[0])
+    head["kind"] = "not-a-trace"
+    path.write_text("\n".join([json.dumps(head)] + lines[1:]) + "\n")
+    with pytest.raises(ValueError, match="not a helix-trace"):
+        load_trace(path)
+
+
+def test_load_refuses_duplicate_rids(tmp_path):
+    rows = generate_trace(2, seed=0)
+    dup = dataclasses.replace(rows[1], rid=rows[0].rid)
+    path = tmp_path / "t.jsonl"
+    save_trace(path, [rows[0], dup])
+    with pytest.raises(AssertionError, match="duplicate rids"):
+        load_trace(path)
+
+
+def test_trace_id_stable_and_content_sensitive():
+    rows = generate_trace(5, seed=7)
+    assert trace_id(rows) == trace_id(list(rows))
+    bumped = [dataclasses.replace(rows[0], max_tokens=rows[0].max_tokens + 1),
+              *rows[1:]]
+    assert trace_id(bumped) != trace_id(rows)
+
+
+# -------------------------------------------------------------- arrivals
+def test_generated_poisson_arrivals_pin_legacy_process():
+    """The regression pin for satellite #5: a default single-tenant
+    poisson trace arrives at exactly the steps the old serve.py helper
+    produced — and serve.py still re-exports that helper."""
+    from repro.launch.serve import poisson_arrival_steps as serve_reexport
+    assert serve_reexport is poisson_arrival_steps
+    for n, rate, seed in ((1, 0.25, 0), (16, 0.5, 0), (32, 2.0, 9)):
+        rows = generate_trace(n, arrival="poisson", rate=rate, seed=seed)
+        assert [r.arrival_step for r in rows] == \
+            poisson_arrival_steps(n, rate, seed)
+
+
+def test_poisson_arrivals_sorted_and_seeded():
+    a = poisson_arrival_steps(64, 0.5, seed=1)
+    assert a == sorted(a) and len(a) == 64
+    assert a == poisson_arrival_steps(64, 0.5, seed=1)
+    assert a != poisson_arrival_steps(64, 0.5, seed=2)
+
+
+def test_bursty_arrivals_form_closed_bursts():
+    steps = bursty_arrival_steps(20, rate=1.0, burst=4, seed=0)
+    assert len(steps) == 20 and steps == sorted(steps)
+    # requests land in groups of exactly `burst` sharing one step value
+    # (closed bursts), except possibly the final partial burst
+    for i in range(0, 20, 4):
+        assert len(set(steps[i:i + 4])) == 1, steps
+    assert steps == bursty_arrival_steps(20, rate=1.0, burst=4, seed=0)
+
+
+def test_generate_trace_rejects_unknown_arrival():
+    with pytest.raises(ValueError, match="unknown arrival shape"):
+        generate_trace(4, arrival="diurnal")
+
+
+# ----------------------------------------------------------- tenant mix
+def test_parse_tenants_full_and_defaulted_fields():
+    specs = parse_tenants("chat:3:interactive,jobs:1:batch:5, solo")
+    assert [t.name for t in specs] == ["chat", "jobs", "solo"]
+    assert specs[0] == TenantSpec("chat", weight=3.0,
+                                  slo_class="interactive", share=3.0)
+    assert specs[1].slo_class == "batch" and specs[1].share == 5.0
+    # omitted fields: weight 1.0, interactive, share = weight
+    assert specs[2] == TenantSpec("solo")
+    with pytest.raises(AssertionError, match="slo"):
+        parse_tenants("chat:1:gold")
+    with pytest.raises(AssertionError, match="no tenants"):
+        parse_tenants(" , ")
+
+
+def test_generate_trace_tenant_mix_and_length_ranges():
+    tenants = (TenantSpec("a", share=3.0, prompt_len=(8, 16),
+                          max_tokens=(2, 4)),
+               TenantSpec("b", slo_class="batch", share=1.0))
+    rows = generate_trace(400, arrival="batch", tenants=tenants,
+                          prompt_len=32, max_tokens=6, seed=0)
+    by = {"a": [r for r in rows if r.tenant == "a"],
+          "b": [r for r in rows if r.tenant == "b"]}
+    assert len(by["a"]) + len(by["b"]) == 400
+    # shares 3:1 -> tenant a gets ~75% of arrivals
+    assert 0.65 < len(by["a"]) / 400 < 0.85
+    assert all(8 <= r.prompt_len <= 16 and 2 <= r.max_tokens <= 4
+               and r.slo_class == "interactive" for r in by["a"])
+    # spec leaves lengths None -> the driver defaults fill in, degenerate
+    # (lo == hi) ranges stay exact
+    assert all(r.prompt_len == 32 and r.max_tokens == 6
+               and r.slo_class == "batch" for r in by["b"])
+
+
+def test_tenant_mix_never_perturbs_arrival_process():
+    """Adding tenants redraws assignment/lengths but the arrival steps
+    come from the base seed — identical with 1 or N tenants."""
+    solo = generate_trace(25, arrival="poisson", rate=0.7, seed=4)
+    duo = generate_trace(25, arrival="poisson", rate=0.7, seed=4,
+                         tenants=parse_tenants("x:2,y:1:batch"))
+    assert ([r.arrival_step for r in solo]
+            == [r.arrival_step for r in duo])
+
+
+# -------------------------------------------------- prompts -> requests
+def test_prompt_tokens_deterministic_per_row_seed():
+    row = TraceRow(rid=0, arrival_step=0, prompt_len=24, seed=99)
+    a = prompt_tokens(row, vocab=1000)
+    assert a == prompt_tokens(row, vocab=1000)
+    assert len(a) == 24 and all(0 <= t < 1000 for t in a)
+    other = prompt_tokens(dataclasses.replace(row, seed=100), vocab=1000)
+    assert a != other
+
+
+def test_prompt_tokens_shared_prefix_truncates():
+    shared = list(range(10))
+    row = TraceRow(rid=0, arrival_step=0, prompt_len=16, seed=1)
+    toks = prompt_tokens(row, vocab=50, shared_prefix=shared)
+    assert toks[:10] == shared and len(toks) == 16
+    short = TraceRow(rid=1, arrival_step=0, prompt_len=6, seed=1)
+    assert prompt_tokens(short, vocab=50, shared_prefix=shared) == shared[:6]
+
+
+def test_requests_from_trace_carries_tenancy():
+    rows = generate_trace(6, tenants=parse_tenants("u:2,v:1:batch"),
+                          prompt_len=9, max_tokens=3, seed=2)
+    rows = [dataclasses.replace(r, session_id=f"s{r.rid}") for r in rows]
+    reqs = requests_from_trace(rows, vocab=128, eos_id=0)
+    assert [q.rid for q in reqs] == [r.rid for r in rows]
+    for q, r in zip(reqs, rows):
+        assert (q.tenant, q.slo_class, q.session_id) == \
+            (r.tenant, r.slo_class, r.session_id)
+        assert q.max_new_tokens == r.max_tokens and q.eos_id == 0
+        assert q.prompt == prompt_tokens(r, 128)
+        assert len(q.prompt) == r.prompt_len
