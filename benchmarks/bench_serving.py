@@ -50,6 +50,13 @@ arms the TTL governor (deterministic virtual clock), recording
 ``goodput_tok_s`` / ``ttl_target_miss_rate`` / ``governor_sheds`` per
 row.
 
+``--decode-window N`` runs every cell with N decode steps per device
+dispatch (``--sampling`` picks the on-device sampling kind); each row's
+``decode_window`` / ``syncs_per_token`` / ``sampling`` columns record the
+measured host-sync rate (1.0 single-step, ~1/N windowed), and ``--smoke``
+appends a window-1 vs window-4 row pair asserting the rate actually
+dropped on the same workload.
+
 On CPU the absolute times are dominated by XLA dispatch, not kernel work —
 the *relative* one-shot-vs-chunked TTL spread is the signal tracked across
 PRs; rerun on TPU for real latencies.  ``--smoke`` runs one tiny cell per
@@ -96,6 +103,11 @@ ROW_SCHEMA = {
     "trace": str, "tenant": str, "slo_class": str,
     "goodput_tok_s": float, "ttl_target_miss_rate": float,
     "slo_ttl_ms": float, "governor_sheds": int,
+    # windowed decode + on-device sampling: decode steps per device
+    # dispatch, blocking host syncs per decoded token (1.0 single-step,
+    # ~1/N under --decode-window N) and the sampling kind ("greedy" =
+    # the device argmax default)
+    "decode_window": int, "syncs_per_token": float, "sampling": str,
 }
 
 
@@ -123,7 +135,8 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
                shared_prefix_len: int = 0, turns: int = 1,
                session_kv: bool = False, trace=None, tenants=None,
                slo_ttl_ms: float = 0.0, host_pages: int = 0,
-               virtual_clock: bool = False) -> list[dict]:
+               virtual_clock: bool = False, decode_window: int = 1,
+               sampling: str | None = None) -> list[dict]:
     """One sweep cell -> ROW_SCHEMA rows: the aggregate row (tenant
     ``"*"``) first, then one per-tenant split row when the cell ran a
     multi-tenant mix — all addressed by the workload's ``trace_id``."""
@@ -136,6 +149,7 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         turns=turns, session_kv=session_kv,
         trace=trace, tenants=tenants, slo_ttl_ms=slo_ttl_ms,
         host_pages=host_pages, virtual_clock=virtual_clock,
+        decode_window=decode_window, sampling=sampling,
         seed=seed, log=lambda s: None)
     base = {
         "load": float(load),
@@ -161,6 +175,9 @@ def bench_cell(arch: str, *, load: float, chunk_tokens: int,
         "slo_class": "*",
         "slo_ttl_ms": float(slo_ttl_ms),
         "governor_sheds": int(summary["governor_sheds"]),
+        "decode_window": int(summary["decode_window"]),
+        "syncs_per_token": float(summary["syncs_per_token"]),
+        "sampling": str(sampling or "greedy"),
     }
     rows = [base]
     if tenants:
@@ -219,11 +236,20 @@ def main():
                     help="arm the TTL governor in a dedicated 2-tenant "
                          "interactive+batch cell (virtual clock, host-tier "
                          "spill) with this interactive TTL p95 target")
+    ap.add_argument("--decode-window", type=int, default=1,
+                    help="decode steps per device dispatch for every sweep "
+                         "cell (rows record it with their measured "
+                         "syncs_per_token)")
+    ap.add_argument("--sampling", default=None,
+                    help="on-device sampling kind for every sweep cell "
+                         "(greedy|temperature|top_k|top_p; default device "
+                         "argmax)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell: one load, 4 requests, short prompts"
                          " (includes one paged + one prefix-share row, a"
-                         " session-KV multi-turn row pair and a 2-tenant"
-                         " TTL-governor cell with per-tenant split rows)")
+                         " session-KV multi-turn row pair, a 2-tenant"
+                         " TTL-governor cell with per-tenant split rows and"
+                         " a decode-window-4 sampling row pair)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -257,7 +283,9 @@ def main():
                         prefix_share=share,
                         shared_prefix_len=(args.shared_prefix_len
                                            if share else 0),
-                        trace=args.trace, tenants=args.tenants)
+                        trace=args.trace, tenants=args.tenants,
+                        decode_window=args.decode_window,
+                        sampling=args.sampling)
                     rows.extend(cell)
                     row = cell[0]
                     print(f"load={load:<5} chunk={chunk:<4} "
@@ -322,6 +350,33 @@ def main():
             assert row["governor_sheds"] >= 1, row
             assert row["resume_reprefill_chunks"] == 0, row
             assert {r["tenant"] for r in cell} >= {"*", "chat", "jobs"}, cell
+
+    if args.smoke or args.decode_window > 1:
+        # windowed-decode pair: the same sampled workload single-step and
+        # with N steps per dispatch — columns carry the sync-rate story
+        # (1.0 vs ~1/N); stream identity itself is asserted token-by-token
+        # in scripts/decode_window_smoke.py
+        win = args.decode_window if args.decode_window > 1 else 4
+        pair = []
+        for w in (1, win):
+            row = bench_cell(
+                args.arch, load=args.loads[0], chunk_tokens=4,
+                sched_policy=args.sched_policy, requests=args.requests,
+                prompt_len=args.prompt_len, max_new=args.max_new,
+                max_batch=args.max_batch, decode_window=w,
+                sampling=args.sampling or "top_p")[0]
+            pair.append(row)
+            rows.append(row)
+            print(f"decode_window={w} sampling={row['sampling']}: "
+                  f"syncs_per_token={row['syncs_per_token']:.3f} "
+                  f"ttl_p95={row['ttl_p95_s']*1e3:8.1f}ms "
+                  f"tput={row['throughput_tok_s']:7.1f} tok/s")
+        if args.smoke:
+            # same workload, same token volume, strictly fewer host syncs
+            assert pair[0]["n_tokens"] == pair[1]["n_tokens"], pair
+            assert pair[1]["syncs_per_token"] < pair[0]["syncs_per_token"], \
+                pair
+            assert pair[1]["decode_window"] == win, pair
 
     out = {"meta": {"arch": args.arch, "device": jax.devices()[0].platform,
                     "requests": args.requests, "prompt_len": args.prompt_len,

@@ -115,6 +115,25 @@ def check(path: pathlib.Path) -> list[str]:
         elif row.get("ttl_target_miss_rate", 0) != 0:
             errors.append(f"row {i}: unarmed row (slo_ttl_ms == 0) has "
                           "nonzero ttl_target_miss_rate")
+        # windowed decode + sampling columns: the window is a positive
+        # step count, the sync rate is a real rate in (0, 1] whenever the
+        # row decoded anything, and the sampling kind is a known name.
+        # session-KV rows are exempt from the upper bound: teacher-forced
+        # history catch-up steps each sync without emitting a token, so
+        # their sync rate legitimately exceeds 1 per *emitted* token
+        if not row.get("decode_window", 0) >= 1:
+            errors.append(f"row {i}: decode_window must be >= 1, got "
+                          f"{row.get('decode_window')}")
+        if row.get("n_tokens", 0) > 0:
+            spt = row.get("syncs_per_token", 0)
+            cap = None if row.get("session_kv") else 1
+            if not spt > 0 or (cap is not None and spt > cap):
+                errors.append(f"row {i}: syncs_per_token must be in (0, 1] "
+                              f"when tokens were decoded, got {spt}")
+        from repro.serving.sampling import SAMPLING_KINDS
+        if row.get("sampling") not in SAMPLING_KINDS:
+            errors.append(f"row {i}: sampling must be one of "
+                          f"{SAMPLING_KINDS}, got {row.get('sampling')!r}")
     return errors
 
 

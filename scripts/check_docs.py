@@ -57,6 +57,7 @@ def check_docstrings() -> None:
         ("repro.core.helix", "append_kv"),
         ("repro.core.helix", "fuse_append_applicable"),
         ("repro.models.decode_model", "build_serve_step"),
+        ("repro.models.decode_model", "build_serve_multistep"),
         ("repro.models.model_zoo", "make_train_step"),
         ("repro.models.model_zoo", "make_prefill_step"),
         ("repro.models.model_zoo", "make_chunk_prefill_step"),
@@ -71,6 +72,11 @@ def check_docstrings() -> None:
         ("repro.serving.scheduler", "PrefixIndex"),
         ("repro.serving.scheduler", "TenantConfig"),
         ("repro.serving.metrics", "EngineMetrics"),
+        ("repro.serving.sampling", "SamplingParams"),
+        ("repro.serving.sampling", "sample_tokens"),
+        ("repro.serving.sampling", "sample_oracle"),
+        ("repro.serving.sampling", "request_seed"),
+        ("repro.serving.sampling", "gumbel_noise"),
         ("repro.serving.metrics", "VirtualClock"),
         ("repro.serving.governor", "TTLGovernor"),
         ("repro.serving.governor", "GovernorConfig"),

@@ -54,6 +54,12 @@ python scripts/chaos_smoke.py
 # replay of the same trace
 python scripts/trace_smoke.py
 
+# windowed-decode smoke: --decode-window N token streams must be
+# bit-identical to single-step across window sizes (fixed AND
+# paged+prefix+tier configs, top-p sampling) while blocking host syncs
+# drop to exactly 1/N per decoded token
+python scripts/decode_window_smoke.py
+
 # serving smoke: scheduler-driven engine with chunked prefill under synthetic
 # Poisson traffic; writes BENCH_serving.json (incl. a --paged-kv row with
 # pool occupancy/fragmentation columns) whose schema is then asserted

@@ -27,6 +27,12 @@ Check catalog (id -> default severity); docs/analysis.md documents each:
   sync.device-get         warning  jax.device_get D2H transfer (sanctioned
                                    batched spill sites are baselined)
   sync.device-get-loop    error    per-page jax.device_get inside a loop
+  sync.per-token          warning  blocking transfer inside a multi-step
+                                   decode-window hot function; symbols
+                                   carry a ``#ordinal`` so the baseline
+                                   pins EXACTLY the one per-window
+                                   transfer — a second transfer gets a new
+                                   ordinal and fails ``--strict``
 """
 from __future__ import annotations
 
@@ -50,6 +56,7 @@ CHECKS: dict[str, str] = {
     "sync.block-until-ready": "error",
     "sync.device-get": "warning",
     "sync.device-get-loop": "error",
+    "sync.per-token": "warning",
 }
 
 SEVERITIES = ("error", "warning")

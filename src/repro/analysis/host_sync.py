@@ -21,6 +21,16 @@ pass walks the ``serving/`` and ``launch/`` sources and flags:
   sync.device-get-loop    the same inside a loop body — the per-page spill
                           anti-pattern (N blocking transfers where one
                           batched tree transfer works)
+  sync.per-token          any of the above inside a multi-step decode
+                          window hot function (``WINDOW_HOT_FNS`` — the
+                          engine's ``_decode_window``): the whole point of
+                          ``--decode-window N`` is ONE host sync per
+                          window, so each transfer there additionally
+                          gets an ordinal-stamped ``fn#k`` finding.  The
+                          baseline pins exactly ``_decode_window#1`` (the
+                          batched [B, N] token-block read); a second
+                          transfer lands as ``#2``, matches nothing, and
+                          fails ``--strict``
 
 Device provenance is tracked per function with a small forward dataflow:
 values returned by ``jnp.*``/``jax.*`` calls, by names bound to
@@ -38,6 +48,12 @@ import os
 from repro.analysis.findings import Finding
 
 DEFAULT_LINT_ROOTS = ("src/repro/serving", "src/repro/launch")
+
+# Functions forming the multi-step decode window's host side: every
+# blocking transfer inside them gets an ordinal-stamped ``sync.per-token``
+# finding on top of its base check, so the baseline can pin the exact
+# transfer *count* (one per window), not just the set of transfer sites.
+WINDOW_HOT_FNS = ("_decode_window",)
 
 
 def _attr_root(node):
@@ -78,6 +94,8 @@ class _FnLinter(ast.NodeVisitor):
         self.device_names: set[str] = set()
         self.loop_depth = 0
         self.findings: list[Finding] = []
+        self.window_hot = fn_name in WINDOW_HOT_FNS
+        self._transfers = 0  # per-token ordinal within a window-hot fn
 
     # --- provenance ---------------------------------------------------
 
@@ -165,6 +183,17 @@ class _FnLinter(ast.NodeVisitor):
         self.findings.append(Finding(
             check=check, path=self.path, symbol=self.fn,
             line=node.lineno, message=message))
+        if self.window_hot:
+            # ordinal-stamped symbol: the baseline names the exact k-th
+            # transfer, so ADDING a transfer to the window hot path makes
+            # a fresh, unbaselined finding instead of silently matching
+            self._transfers += 1
+            self.findings.append(Finding(
+                check="sync.per-token", path=self.path,
+                symbol=f"{self.fn}#{self._transfers}", line=node.lineno,
+                message=f"blocking transfer #{self._transfers} inside the "
+                        f"multi-step decode window ({check}); the window "
+                        f"contract is ONE host sync per {self.fn} call"))
 
     def visit_Call(self, node):
         func = node.func

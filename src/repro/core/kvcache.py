@@ -163,12 +163,30 @@ def state_to_paged(state: dict[str, Any], tables, n_blocks: int, kvp: int,
     return out
 
 
+def sampling_leaf_shapes(batch: int) -> dict[str, Any]:
+    """ShapeDtypeStructs for the on-device sampling leaves (one value per
+    batch row, carried in the decode state so the sampler epilogue stays a
+    pure function of ``(params, state, tokens)``): ``sample_temp``/
+    ``sample_topp`` f32, ``sample_topk`` i32, ``sample_seed`` u32 (the
+    per-request PRNG seed) and ``sample_idx`` i32 (tokens sampled so far —
+    the ``fold_in`` counter; see serving/sampling.py).  Presence of
+    ``sample_seed`` in a state is what switches ``serve_step`` from the
+    argmax epilogue to the sampler."""
+    b = (batch,)
+    return {"sample_temp": jax.ShapeDtypeStruct(b, jnp.float32),
+            "sample_topk": jax.ShapeDtypeStruct(b, jnp.int32),
+            "sample_topp": jax.ShapeDtypeStruct(b, jnp.float32),
+            "sample_seed": jax.ShapeDtypeStruct(b, jnp.uint32),
+            "sample_idx": jax.ShapeDtypeStruct(b, jnp.int32)}
+
+
 def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
                         kvp: int, rr_block: int = 16,
                         dtype=jnp.bfloat16, kv_bits: int = 16,
                         pool_blocks: int = 0,
                         max_pages: int = 0,
-                        grouped: bool = False) -> dict[str, Any]:
+                        grouped: bool = False,
+                        sampling: bool = False) -> dict[str, Any]:
     """ShapeDtypeStructs for every decode-state leaf (dry-run input_specs).
 
     ``pool_blocks > 0`` switches the attention K/V leaves to the shared-pool
@@ -179,8 +197,11 @@ def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
     ``pool_blocks`` — any request may take the whole pool).  ``grouped``
     (paged only) adds the grouped shared-prefix decode's ``group_id``/
     ``group_np`` ``[batch]`` int32 leaves (``HelixConfig.grouped_decode``;
-    the serving engine recomputes them each step)."""
+    the serving engine recomputes them each step).  ``sampling`` adds the
+    per-row on-device sampling leaves (``sampling_leaf_shapes``)."""
     s: dict[str, Any] = {"total_len": jax.ShapeDtypeStruct((), jnp.int32)}
+    if sampling:
+        s.update(sampling_leaf_shapes(batch))
     L = cfg.n_layers
     if cfg.has_attention:
         kv_dtype = jnp.int8 if kv_bits == 8 else dtype
@@ -224,15 +245,19 @@ def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int,
 
 def decode_state_specs(cfg: ArchConfig, hx: HelixConfig,
                        batch: int | None = None,
-                       mesh=None) -> dict[str, Any]:
+                       mesh=None, sampling: bool = False) -> dict[str, Any]:
     """PartitionSpecs matching decode_state_shapes.
 
     The paged pool planes ``[L, n_blocks, Kh, block_s, hsz]`` reuse the
     fixed layout's spec: the sequence-ish axis (dim 3 — ``block_s`` for
     paged, ``S_cap`` for fixed) shards over the kvp axes, heads over tpa.
-    ``block_tables`` is replicated (tiny int32)."""
+    ``block_tables`` is replicated (tiny int32), as are the ``sampling``
+    leaves (per-row scalars)."""
     tpa, kvp = hx.tpa_axis, hx.kvp_axes
     s: dict[str, Any] = {"total_len": P()}
+    if sampling:
+        for key in sampling_leaf_shapes(1):
+            s[key] = P(None)
     if cfg.has_attention:
         s["kcache"] = s["vcache"] = P(None, None, tpa, kvp, None)
         if hx.paged_kv:
@@ -261,7 +286,8 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, kvp: int,
                       total_len: int | jax.Array = 0,
                       kv_bits: int = 16, pool_blocks: int = 0,
                       max_pages: int = 0,
-                      grouped: bool = False) -> dict[str, Any]:
+                      grouped: bool = False,
+                      sampling: bool = False) -> dict[str, Any]:
     """Zero-initialised decode state (concrete arrays, small/test use).
 
     ``kv_bits=8`` allocates int8 K/V payloads plus per-slot f32 scale
@@ -270,10 +296,13 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, kvp: int,
     ``block_tables`` — every row starts parked on the sink page 0).
     ``grouped`` adds zeroed ``group_id``/``group_np`` leaves (all rows
     singleton groups under group 0 with no shared prefix, which decodes
-    identically to ungrouped)."""
+    identically to ungrouped).  ``sampling`` adds zeroed per-row sampling
+    leaves (all rows greedy — temp 0 — until the engine installs a
+    request's policy at commit/restore time)."""
     shapes = decode_state_shapes(cfg, batch, seq_len, kvp, rr_block, dtype,
                                  kv_bits=kv_bits, pool_blocks=pool_blocks,
-                                 max_pages=max_pages, grouped=grouped)
+                                 max_pages=max_pages, grouped=grouped,
+                                 sampling=sampling)
     state = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
     tl = jnp.asarray(total_len, jnp.int32)
     state["total_len"] = tl

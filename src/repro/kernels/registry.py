@@ -137,7 +137,8 @@ FAMILIES: dict[str, KernelFamily] = {
             ref="repro.kernels.w8a16_matmul.ref:w8a16_matmul_ref",
             kernel="repro.kernels.w8a16_matmul.ops:w8a16_matmul",
             used_by="int8-weight lm_head matmul (decode_model, "
-                    "HelixConfig.lm_head_w8)",
+                    "HelixConfig.lm_head_w8); its logits feed the fused "
+                    "on-device sampling epilogue (serving/sampling.py)",
             grad="none",
             contract="repro.kernels.w8a16_matmul.ops:"
                      "w8a16_matmul_contract"),

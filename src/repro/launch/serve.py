@@ -43,6 +43,16 @@ the interactive TTL p95 drifts past target; ``--virtual-clock`` swaps the
 metrics clock for the deterministic cost model so two replays of the same
 trace produce identical latency summaries (scripts/trace_smoke.py asserts
 this in CI).
+
+On-device sampling + multi-step decode (docs/serving.md): ``--sampling
+greedy|temperature|top_k|top_p`` (with ``--temperature``, ``--top-k``,
+``--top-p``, ``--seed``) moves token selection onto the device as a fused
+epilogue over the lm_head logits, and ``--decode-window N`` runs N decode
+steps per device dispatch via a ``lax.scan`` so the host blocks on ONE
+[batch, N] token-block transfer per window instead of one sync per token
+— token streams stay bit-identical to ``--decode-window 1``
+(scripts/decode_window_smoke.py asserts streams and the 1/N sync rate in
+CI); the summary gains ``engine.sync_stats()``'s ``syncs_per_token``.
 """
 from __future__ import annotations
 
@@ -58,10 +68,12 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.sharding import HelixConfig
 from repro.kernels.registry import BACKENDS, backend_table
-from repro.models.model_zoo import (build_serve_step, chunked_prefill_supported,
+from repro.models.model_zoo import (build_serve_multistep, build_serve_step,
+                                    chunked_prefill_supported,
                                     make_chunk_prefill_step, make_prefill_step)
 from repro.models.transformer import init_params
 from repro.serving import DecodeEngine, Request
+from repro.serving.sampling import SAMPLING_KINDS, SamplingParams
 from repro.serving.metrics import VirtualClock
 from repro.serving.scheduler import POLICIES
 # poisson_arrival_steps moved to (and is re-exported from) the workload
@@ -92,6 +104,8 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                traffic: str = "batch", arrival_rate: float = 0.5,
                burst: int = 4, trace=None, tenants=None,
                slo_ttl_ms: float = 0.0, virtual_clock=False,
+               decode_window: int = 1, sampling: str | None = None,
+               temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
                seed: int = 0, log=print):
     """Run ``n_requests`` synthetic prompts through the continuous-batching
     engine and report throughput.  Returns (finished ``Request`` list,
@@ -138,6 +152,15 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     arms the TTL governor (shed batch-to-spill when the interactive TTL
     p95 exceeds the target), and ``virtual_clock`` (True or a
     ``VirtualClock``) makes every latency in the summary deterministic.
+
+    ``sampling`` (a ``SAMPLING_KINDS`` name) arms the engine's on-device
+    sampler — token selection happens on device with per-request PRNG
+    streams (``serving/sampling.py``; ``temperature``/``top_k``/``top_p``
+    parameterize it, ``seed`` keys the streams) — and ``decode_window``
+    > 1 runs that many decode steps per device dispatch
+    (``build_serve_multistep``), syncing one [batch, N] token block per
+    window; streams are bit-identical to ``decode_window=1`` and the
+    summary reports ``syncs_per_token``.
     """
     cfg = get_config(arch)
     if reduced:
@@ -164,10 +187,18 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     if mesh is None:
         # single-device: 1x1 trivial mesh keeps one code path
         mesh = make_mesh((1, 1), ("data", "model"))
+    sp = None
+    if sampling is not None:
+        sp = SamplingParams(kind=sampling, temperature=temperature,
+                            top_k=top_k, top_p=top_p, seed=seed)
     serve_step = build_serve_step(cfg, mesh, hx)
+    multistep = (build_serve_multistep(cfg, mesh, hx, window=decode_window)
+                 if decode_window > 1 else None)
     prefill_step = make_prefill_step(cfg, mesh, hx)
     chunked = chunk_tokens > 0 and chunked_prefill_supported(cfg)
-    chunk_step = make_chunk_prefill_step(cfg, mesh, hx) if chunked else None
+    chunk_step = (make_chunk_prefill_step(
+        cfg, mesh, hx, return_last_logits=sp is not None)
+        if chunked else None)
     if chunk_tokens > 0 and not chunked:
         log(f"[serve] {cfg.name}: chunked prefill unsupported for this "
             "family; falling back to one-shot prefill")
@@ -210,7 +241,9 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
                           tenants=({t.name: t.tenant_config()
                                     for t in tenants} if tenants else None),
                           slo_ttl_s=(slo_ttl_ms / 1e3) if slo_ttl_ms else None,
-                          clock=virtual_clock or time.monotonic)
+                          clock=virtual_clock or time.monotonic,
+                          sampling=sp, decode_window=decode_window,
+                          serve_multistep=multistep)
     log(f"[serve] backends: {engine.describe_backends()}")
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab, shared_prefix_len).tolist()
@@ -252,6 +285,7 @@ def serve_demo(arch: str, *, reduced: bool, n_requests: int, prompt_len: int,
     summary = engine.metrics.summary()
     summary.update(engine.pool_stats())
     summary.update(engine.tier_stats())
+    summary.update(engine.sync_stats())
     summary["trace_id"] = trace_id(rows)
     late = [engine.metrics.requests[r.rid].ttft for r in finished
             if turn_of.get(r.rid, 1) >= 2
@@ -370,6 +404,31 @@ def main():
                          "whose turn t+1 resubmits its full context plus "
                          "fresh tokens (pairs with --session-kv; the "
                          "summary's turn2_ttft_s isolates the benefit)")
+    ap.add_argument("--decode-window", type=int, default=1,
+                    help="decode steps per device dispatch: the lax.scan "
+                         "multi-step path syncs ONE [batch, N] token block "
+                         "per window instead of one transfer per token "
+                         "(streams bit-identical to N=1; "
+                         "scripts/decode_window_smoke.py)")
+    ap.add_argument("--sampling", default=None, choices=SAMPLING_KINDS,
+                    help="on-device token sampling kind (default: host-free "
+                         "greedy argmax on device, same as 'greedy'); "
+                         "temperature/top_k/top_p read the flags below; "
+                         "per-request PRNG streams are keyed by --seed + "
+                         "request id (serving/sampling.py)")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --sampling temperature/"
+                         "top_k/top_p (> 0; <= 0 would mean greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep the k highest logits before sampling "
+                         "(--sampling top_k; 0 = no truncation)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass for --sampling top_p "
+                         "(in (0, 1]; 1.0 = no truncation)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed: model init and the per-request "
+                         "sampling streams (request rid folds in, so "
+                         "streams are independent and replayable)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the kernel registry's per-family backend "
                          "availability matrix and exit")
@@ -399,7 +458,10 @@ def main():
         chunk_tokens=args.chunk_tokens, sched_policy=args.sched_policy,
         traffic=args.traffic, arrival_rate=args.arrival_rate,
         burst=args.burst, trace=args.trace, tenants=args.tenants,
-        slo_ttl_ms=args.slo_ttl_ms, virtual_clock=args.virtual_clock)
+        slo_ttl_ms=args.slo_ttl_ms, virtual_clock=args.virtual_clock,
+        decode_window=args.decode_window, sampling=args.sampling,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed)
     if args.metrics:
         print(json.dumps(summary, indent=2, default=float))
 

@@ -14,6 +14,13 @@ implementing the paper's per-layer temporal pipeline:
   FFN phase — the *same* device pool re-provisioned via GSPMD sharding
   constraints: dense FFN with TPF = N, or MoE with EP×TPF (§2.2).
 
+``build_serve_multistep(cfg, mesh, hx, window=N)`` wraps the same forward
+core in a ``lax.scan`` over N tokens — sample (serving/sampling.py fused
+epilogue) -> fused KV append -> next step — entirely on device, with
+per-row EOS / budget / forced-token control carried as masks, so the
+serving engine's host round-trip drops from once per token to once per
+window (``DecodeEngine --decode-window``).
+
 Everything outside helix_attention is GSPMD (pjit constraints); that is the
 TPU-idiomatic equivalent of the paper's GPU-pool reconfiguration.
 """
@@ -74,59 +81,45 @@ def _constrainer(mesh: Mesh):
     return c
 
 
-def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
-                     hopb_chunks: int = 4, return_logits: bool = False,
-                     unroll: bool = False, attn_backend: str | None = None,
-                     fuse_append: bool | None = None,
-                     prune_blocks: bool | None = None,
-                     matmul_backend: str | None = None,
-                     lm_head_w8: bool | None = None,
-                     paged_kv: bool | None = None):
-    """Build one autoregressive Helix decode step for ``cfg`` on ``mesh``.
-
-    Returns ``serve_step(params, state, tokens) -> (next_tokens, new_state)``
-    (jit-able; ``state`` from ``make_prefill_step`` or
-    ``core/kvcache.init_decode_state``).
-
-    Args:
-      hopb_chunks: HOP-B batch chunking inside helix_attention (§2.1.3);
-        degrades to 1 automatically when the batch doesn't divide.
-      return_logits: also return the full next-token logits.
-      unroll: unroll the layer-period scan (dry-run cost analysis).
-      attn_backend: overrides ``hx.attn_backend`` (``ref`` |
-        ``pallas-interpret`` | ``pallas``) — the flash_decode kernel family
-        backend used inside helix_attention (kernels/registry.py).
-      fuse_append: overrides ``hx.fuse_append`` — fuse the rr-slot KV append
-        into the decode kernel epilogue (Pallas backends only).
-      prune_blocks: overrides ``hx.prune_blocks`` — length/causality-aware
-        K/V block pruning inside the Pallas decode kernel (bit-exact).
-      matmul_backend: overrides ``hx.matmul_backend`` — the w8a16_matmul
-        family backend for the quantized lm_head matmul.
-      lm_head_w8: overrides ``hx.lm_head_w8`` — int8-quantize the lm_head
-        weights and route the logits matmul through w8a16_matmul.
-      paged_kv: overrides ``hx.paged_kv`` — shared-pool paged KV cache: the
-        state carries pool planes ``[L, n_blocks, Kh, block_s, hsz]`` plus a
-        ``block_tables`` [B, max_pages] leaf instead of fixed per-slot rows
-        (core/kvcache.py paged layout; bit-exact vs fixed at the same
-        ``attn_block_s`` partition).
-    """
+def _resolve_overrides(hx: HelixConfig, **overrides_in) -> HelixConfig:
+    """Apply the per-builder HelixConfig field overrides (None = keep)."""
     import dataclasses
+    overrides = {field: val for field, val in overrides_in.items()
+                 if val is not None and val != getattr(hx, field)}
+    return dataclasses.replace(hx, **overrides) if overrides else hx
+
+
+def _next_token(logits, state):
+    """The decode epilogue's token decision: the on-device sampler
+    (serving/sampling.py — greedy/temperature/top-k/top-p from the per-row
+    ``sample_*`` state leaves) when the state carries sampling leaves,
+    otherwise the historical plain argmax.  Structural gating on
+    ``sample_seed`` mirrors the grouped-decode ``group_id`` pattern: engines
+    built without sampling never pay for (or trace) the sampler."""
+    if "sample_seed" in state:
+        from repro.serving.sampling import sample_tokens
+        return sample_tokens(logits, state["sample_temp"],
+                             state["sample_topk"], state["sample_topp"],
+                             state["sample_seed"], state["sample_idx"])
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _build_step_logits(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
+                       hopb_chunks: int = 4, unroll: bool = False):
+    """The shared forward core behind ``build_serve_step`` and
+    ``build_serve_multistep``: returns
+
+        step_logits(params, state, tokens) -> (logits, new_caches)
+
+    one full decode forward pass — embed, layer-period scan (attention /
+    SSM / FFN phases), final norm, (w8a16) lm_head matmul, softcap and
+    vocab pad mask — *without* the token decision or state-dict rebuild, so
+    the two builders can attach their own epilogues (single-step sampler vs
+    the windowed ``lax.scan``)."""
     import math
 
     from repro.core.helix import helix_out_dim
     from repro.core.sharding import dense_ffn_mode
-
-    overrides = {}
-    for field, val in (("attn_backend", attn_backend),
-                       ("fuse_append", fuse_append),
-                       ("prune_blocks", prune_blocks),
-                       ("matmul_backend", matmul_backend),
-                       ("lm_head_w8", lm_head_w8),
-                       ("paged_kv", paged_kv)):
-        if val is not None and val != getattr(hx, field):
-            overrides[field] = val
-    if overrides:
-        hx = dataclasses.replace(hx, **overrides)
 
     kvp = hx.kvp(mesh)
     tpa_ax = hx.tpa_axis
@@ -307,8 +300,8 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
             x = x + ffn_phase(lp.get("ffn"), lp.get("moe"), h2)
         return x, new_caches
 
-    def serve_step(params, state, tokens):
-        """tokens [B] int32 -> (next_tokens [B], new state)."""
+    def step_logits(params, state, tokens):
+        """tokens [B] int32 -> (logits [B, padded_vocab], new_caches)."""
         tl = state["total_len"]
         tl_attn = tl + 1                                # includes new token
         # paged pool: the [B, max_pages] block table rides in the state and
@@ -375,11 +368,70 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         vmask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab,
                           0.0, -1e30)
         logits = logits + vmask.astype(logits.dtype)
-        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, new_caches
 
+    return step_logits
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
+                     hopb_chunks: int = 4, return_logits: bool = False,
+                     unroll: bool = False, attn_backend: str | None = None,
+                     fuse_append: bool | None = None,
+                     prune_blocks: bool | None = None,
+                     matmul_backend: str | None = None,
+                     lm_head_w8: bool | None = None,
+                     paged_kv: bool | None = None):
+    """Build one autoregressive Helix decode step for ``cfg`` on ``mesh``.
+
+    Returns ``serve_step(params, state, tokens) -> (next_tokens, new_state)``
+    (jit-able; ``state`` from ``make_prefill_step`` or
+    ``core/kvcache.init_decode_state``).
+
+    The token decision is the fused on-device epilogue ``_next_token``:
+    plain argmax normally, or the serving/sampling.py sampler when the
+    state carries the per-row ``sample_*`` leaves
+    (``core/kvcache.sampling_leaf_shapes``) — in which case
+    ``sample_idx`` also advances by one per step.
+
+    Args:
+      hopb_chunks: HOP-B batch chunking inside helix_attention (§2.1.3);
+        degrades to 1 automatically when the batch doesn't divide.
+      return_logits: also return the full next-token logits.
+      unroll: unroll the layer-period scan (dry-run cost analysis).
+      attn_backend: overrides ``hx.attn_backend`` (``ref`` |
+        ``pallas-interpret`` | ``pallas``) — the flash_decode kernel family
+        backend used inside helix_attention (kernels/registry.py).
+      fuse_append: overrides ``hx.fuse_append`` — fuse the rr-slot KV append
+        into the decode kernel epilogue (Pallas backends only).
+      prune_blocks: overrides ``hx.prune_blocks`` — length/causality-aware
+        K/V block pruning inside the Pallas decode kernel (bit-exact).
+      matmul_backend: overrides ``hx.matmul_backend`` — the w8a16_matmul
+        family backend for the quantized lm_head matmul.
+      lm_head_w8: overrides ``hx.lm_head_w8`` — int8-quantize the lm_head
+        weights and route the logits matmul through w8a16_matmul.
+      paged_kv: overrides ``hx.paged_kv`` — shared-pool paged KV cache: the
+        state carries pool planes ``[L, n_blocks, Kh, block_s, hsz]`` plus a
+        ``block_tables`` [B, max_pages] leaf instead of fixed per-slot rows
+        (core/kvcache.py paged layout; bit-exact vs fixed at the same
+        ``attn_block_s`` partition).
+    """
+    hx = _resolve_overrides(hx, attn_backend=attn_backend,
+                            fuse_append=fuse_append,
+                            prune_blocks=prune_blocks,
+                            matmul_backend=matmul_backend,
+                            lm_head_w8=lm_head_w8, paged_kv=paged_kv)
+    step_logits = _build_step_logits(cfg, mesh, hx, hopb_chunks=hopb_chunks,
+                                     unroll=unroll)
+
+    def serve_step(params, state, tokens):
+        """tokens [B] int32 -> (next_tokens [B], new state)."""
+        logits, new_caches = step_logits(params, state, tokens)
+        next_tokens = _next_token(logits, state)
         new_state = dict(state)
         new_state.update(new_caches)
-        new_state["total_len"] = tl + 1
+        new_state["total_len"] = state["total_len"] + 1
+        if "sample_idx" in state:
+            new_state["sample_idx"] = state["sample_idx"] + 1
         if cfg.is_encdec:                               # static cross KV
             new_state["xk"], new_state["xv"] = state["xk"], state["xv"]
         if return_logits:
@@ -387,3 +439,113 @@ def build_serve_step(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
         return next_tokens, new_state
 
     return serve_step
+
+
+def build_serve_multistep(cfg: ArchConfig, mesh: Mesh, hx: HelixConfig, *,
+                          window: int, hopb_chunks: int = 4,
+                          unroll: bool = False,
+                          attn_backend: str | None = None,
+                          fuse_append: bool | None = None,
+                          prune_blocks: bool | None = None,
+                          matmul_backend: str | None = None,
+                          lm_head_w8: bool | None = None,
+                          paged_kv: bool | None = None):
+    """Build the windowed decode inner loop: ``window`` tokens per call
+    entirely on device (sample -> fused KV append -> next step via
+    ``lax.scan``), so the host only intervenes — one blocking transfer,
+    scheduling, admission — once per window instead of once per token.
+
+    Returns
+
+        serve_multistep(params, state, tokens, budgets, eos_ids,
+                        forced, n_forced)
+            -> (out_block [B, window], cur_tokens [B], new_state)
+
+    with per-row control carried as data (no host round-trips inside the
+    window):
+
+      * ``budgets`` [B] i32 — device steps this row may take (its page /
+        capacity grant from ``Scheduler.grow_for_window``; 0 freezes the
+        row for the whole window, e.g. idle slots).
+      * ``eos_ids`` [B] i32 — per-row EOS token (< 0 = none).  A row that
+        *emits* EOS freezes for the rest of the window: state stops
+        advancing (``total_len`` and the SSM recurrences hold; KV appends
+        degenerate to masked-off rewrites of the frozen position) and its
+        remaining ``out_block`` entries are the pad value ``-1``.
+      * ``forced`` [B, window] + ``n_forced`` [B] — restore/session-KV
+        catch-up tokens fed *instead of* the sampled token for the first
+        ``n_forced[b]`` active steps of row ``b`` (they consume budget but
+        emit pad and do not advance ``sample_idx``, exactly like the
+        single-step engine's host-side forced replay).
+
+    ``out_block[b, j]`` is the token row ``b`` emitted at in-window step
+    ``j`` (pad ``-1`` where frozen/forced) — EOS itself is emitted so the
+    host replay can observe it.  ``total_len`` must be per-row [B].
+    Rows frozen mid-window (EOS / exhausted budget < window) must be
+    retired by the caller at the window boundary — their in-flight
+    activations are discarded, which is what makes windowed streams
+    bit-identical to ``window`` single steps.
+
+    Same builder knobs as ``build_serve_step``; grouped shared-prefix
+    decode is rejected (the [B] group leaves are host-recomputed per token
+    and would go stale mid-window)."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1 (got {window})")
+    hx = _resolve_overrides(hx, attn_backend=attn_backend,
+                            fuse_append=fuse_append,
+                            prune_blocks=prune_blocks,
+                            matmul_backend=matmul_backend,
+                            lm_head_w8=lm_head_w8, paged_kv=paged_kv)
+    if hx.grouped_decode:
+        raise ValueError("serve_multistep is incompatible with "
+                         "grouped_decode: group_id/group_np are recomputed "
+                         "by the host every token and would go stale inside "
+                         "a multi-token window")
+    step_logits = _build_step_logits(cfg, mesh, hx, hopb_chunks=hopb_chunks,
+                                     unroll=unroll)
+
+    def serve_multistep(params, state, tokens, budgets, eos_ids,
+                        forced, n_forced):
+        b = tokens.shape[0]
+        sampling = "sample_seed" in state
+        # SSM recurrences have no total_len masking protecting them, so
+        # frozen rows must explicitly hold their previous value
+        ssm_keys = [k for k in ("ssm_conv", "ssm_state") if k in state]
+
+        def body(carry, j):
+            st, cur, fpos, eos_seen = carry
+            active = (j < budgets) & ~eos_seen
+            logits, new_caches = step_logits(params, st, cur)
+            sampled = _next_token(logits, st)
+            is_forced = fpos < n_forced
+            fvals = jnp.take_along_axis(
+                forced, jnp.minimum(fpos, forced.shape[1] - 1)[:, None],
+                axis=1)[:, 0]
+            emit = active & ~is_forced
+            out_j = jnp.where(emit, sampled, -1)
+            new_state = dict(st)
+            new_state.update(new_caches)
+            for key in ssm_keys:
+                sel = active.reshape((1, b) + (1,) * (st[key].ndim - 2))
+                new_state[key] = jnp.where(sel, new_state[key], st[key])
+            new_state["total_len"] = st["total_len"] + active.astype(jnp.int32)
+            if sampling:
+                new_state["sample_idx"] = (st["sample_idx"]
+                                           + emit.astype(jnp.int32))
+            if cfg.is_encdec:                           # static cross KV
+                new_state["xk"], new_state["xv"] = st["xk"], st["xv"]
+            eos_hit = emit & (eos_ids >= 0) & (sampled == eos_ids)
+            nxt = jnp.where(is_forced, fvals, sampled)
+            carry2 = (new_state,
+                      jnp.where(active, nxt, cur),
+                      fpos + (active & is_forced).astype(jnp.int32),
+                      eos_seen | eos_hit)
+            return carry2, out_j
+
+        init = (state, tokens, jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b,), bool))
+        (new_state, cur, _, _), outs = jax.lax.scan(
+            body, init, jnp.arange(window))
+        return outs.T, cur, new_state
+
+    return serve_multistep

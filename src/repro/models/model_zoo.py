@@ -19,13 +19,15 @@ from repro.configs.base import ArchConfig, ShapeCell
 from repro.core.helix import prefill_to_rr_layout
 from repro.core.kvcache import cache_capacity
 from repro.core.sharding import HelixConfig, MeshPolicy, train_roles
-from repro.models.decode_model import build_serve_step  # noqa: F401 re-export
+from repro.models.decode_model import (  # noqa: F401 re-export
+    build_serve_multistep, build_serve_step)
 from repro.models.transformer import (NO_POLICY, chunked_prefill_supported,
                                       forward, init_params, lm_loss)
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.utils import round_up
 
 __all__ = ["make_train_step", "make_prefill_step", "build_serve_step",
+           "build_serve_multistep",
            "make_chunk_prefill_step", "init_prefill_buffers",
            "finalize_chunked_prefill", "chunked_prefill_supported",
            "data_specs", "data_partition_specs", "init_params", "adamw_init"]
@@ -170,7 +172,8 @@ def init_prefill_buffers(cfg: ArchConfig, batch: int, t: int, *,
 
 def make_chunk_prefill_step(cfg: ArchConfig, mesh: Mesh | None,
                             hx: HelixConfig, chunk_q: int = 512,
-                            unroll: bool = False):
+                            unroll: bool = False,
+                            return_last_logits: bool = False):
     """Build the prefix-aware chunked-prefill step (docs/serving.md).
 
     Returns ``chunk_step(params, tokens, buffers, q_offset) ->
@@ -186,7 +189,14 @@ def make_chunk_prefill_step(cfg: ArchConfig, mesh: Mesh | None,
     flash_prefill masking), so requests at different (offset, length) pack
     into one call bit-exactly.  Jit-able; ``q_offset`` may be traced so
     every chunk of a prefill shares one trace.  Only
-    ``chunked_prefill_supported`` archs are accepted."""
+    ``chunked_prefill_supported`` archs are accepted.
+
+    ``return_last_logits`` makes the step return a 3-tuple
+    ``(next_tokens, last_logits, new_buffers)`` where ``last_logits`` is
+    the full ``[B, padded_vocab]`` logits row of each request's final chunk
+    position (already softcapped + vocab-masked by ``forward``) — the
+    serving engine's on-device first-token sampler consumes these instead
+    of the greedy ``next_tokens``."""
     assert chunked_prefill_supported(cfg), \
         f"chunked prefill unsupported for {cfg.name} ({cfg.family})"
     policy = MeshPolicy(mesh, train_roles(mesh)) if mesh else NO_POLICY
@@ -200,8 +210,11 @@ def make_chunk_prefill_step(cfg: ArchConfig, mesh: Mesh | None,
             tp_width=mesh.shape["model"] if mesh else 1)
         next_tokens = jnp.argmax(logits[:, :, :cfg.vocab],
                                  axis=-1).astype(jnp.int32)
-        return next_tokens, {"kcache": extras["kcache"],
-                             "vcache": extras["vcache"]}
+        new_buffers = {"kcache": extras["kcache"],
+                       "vcache": extras["vcache"]}
+        if return_last_logits:
+            return next_tokens, logits[:, -1], new_buffers
+        return next_tokens, new_buffers
 
     return chunk_step
 

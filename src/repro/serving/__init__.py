@@ -1,6 +1,9 @@
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.governor import GovernorConfig, TTLGovernor
 from repro.serving.metrics import EngineMetrics, RequestMetrics, VirtualClock
+from repro.serving.sampling import (SAMPLING_KINDS, SamplingParams,
+                                    request_seed, sample_oracle,
+                                    sample_tokens)
 from repro.serving.scheduler import (DECODE, DONE, PREFILL, QUEUED,
                                      SLO_BATCH, SLO_CLASSES,
                                      SLO_INTERACTIVE, Scheduler,
@@ -10,6 +13,8 @@ from repro.serving.workload import (TenantSpec, TraceRow, generate_trace,
                                     save_trace, trace_id)
 
 __all__ = ["DecodeEngine", "Request", "Scheduler", "EngineMetrics",
+           "SamplingParams", "SAMPLING_KINDS", "request_seed",
+           "sample_tokens", "sample_oracle",
            "RequestMetrics", "VirtualClock", "TenantConfig", "TenantSpec",
            "TraceRow", "GovernorConfig", "TTLGovernor", "generate_trace",
            "load_trace", "save_trace", "trace_id", "requests_from_trace",

@@ -114,7 +114,10 @@ class DecodeEngine:
                  fault_plan=None,
                  tenants=None,
                  slo_ttl_s: float | None = None,
-                 governor: GovernorConfig | None = None):
+                 governor: GovernorConfig | None = None,
+                 sampling=None,
+                 decode_window: int = 1,
+                 serve_multistep: Callable | None = None):
         # ``hx`` (when given) wins over the bare rr_block arg so engine and
         # serve_step can't disagree on the round-robin block size.  kvp still
         # depends on the mesh (hx.kvp(mesh)), which the engine never sees —
@@ -138,6 +141,38 @@ class DecodeEngine:
         self.params = prepare_decode_params(params, hx)
         self.serve_step = jax.jit(serve_step)
         self.prefill_step = jax.jit(prefill_step)
+        # on-device sampling (serving/sampling.py): ``sampling`` is the
+        # engine-default SamplingParams; per-request policies ride
+        # Request.sampling.  None keeps the historical pure-argmax path
+        # (no sampling leaves in the state, nothing new traced).
+        if sampling is not None:
+            sampling.validate()
+        self.sampling = sampling
+        # windowed decode (--decode-window): N tokens per device dispatch
+        # through serve_multistep (build_serve_multistep), ONE [B, N]
+        # blocking transfer per window.  window=1 keeps the single-step
+        # path bit-exactly.
+        if decode_window < 1:
+            raise ValueError(f"decode_window must be >= 1 ({decode_window})")
+        if decode_window > 1 and serve_multistep is None:
+            raise ValueError("decode_window > 1 needs serve_multistep "
+                             "(build one with build_serve_multistep)")
+        self.decode_window = decode_window
+        if serve_multistep is not None:
+            # donate the decode state: the multi-GB KV pool must not be
+            # double-buffered across a window dispatch (CPU backends don't
+            # implement donation and warn, so gate on the platform)
+            if jax.default_backend() != "cpu":
+                self.serve_multistep = jax.jit(serve_multistep,
+                                               donate_argnums=(1,))
+            else:
+                self.serve_multistep = jax.jit(serve_multistep)
+        else:
+            self.serve_multistep = None
+        # host-sync accounting for sync_stats(): blocking decode-loop
+        # device->host transfers vs decode tokens emitted
+        self.decode_syncs = 0
+        self.decoded_tokens = 0
         self.max_batch = max_batch
         self.cap = cache_capacity(max_seq, kvp, rr_block)
         self.kvp, self.rr = kvp, rr_block
@@ -169,11 +204,17 @@ class DecodeEngine:
         # instead of once per request; _set_groups refreshes the
         # group_id/group_np leaves from the pool's refcounts each step.
         self.grouped = self.paged and hx is not None and hx.grouped_decode
+        if self.grouped and decode_window > 1:
+            raise ValueError("decode_window > 1 is incompatible with "
+                             "hx.grouped_decode: group_id/group_np are "
+                             "host-recomputed every token and would go "
+                             "stale mid-window")
         self.state = init_decode_state(
             cfg, max_batch, self.cap, kvp, rr_block, dtype=dtype,
             kv_bits=8 if self.kv8 else 16,
             pool_blocks=self.pool_blocks if self.paged else 0,
-            max_pages=self.max_pages, grouped=self.grouped)
+            max_pages=self.max_pages, grouped=self.grouped,
+            sampling=self.sampling is not None)
         # per-request lengths: [B]; empty slots keep 0
         self.state["total_len"] = jnp.zeros((max_batch,), jnp.int32)
         self.slots: list[Request | None] = [None] * max_batch
@@ -255,6 +296,10 @@ class DecodeEngine:
     def submit(self, req: Request) -> None:
         """Queue ``req`` for scheduled admission (the chunked-prefill
         path); ``step()`` admits it when a slot frees up."""
+        if req.sampling is not None and self.sampling is None:
+            raise ValueError("request carries SamplingParams but the "
+                             "engine was built without sampling= (the "
+                             "decode state has no sampling leaves)")
         self.metrics.on_submit(req.rid, tenant=req.tenant,
                                slo_class=req.slo_class)
         self.sched.submit(req)
@@ -274,6 +319,10 @@ class DecodeEngine:
         if req.rid not in self.metrics.requests:
             self.metrics.on_submit(req.rid, tenant=req.tenant,
                                    slo_class=req.slo_class)
+        if req.sampling is not None and self.sampling is None:
+            raise ValueError("request carries SamplingParams but the "
+                             "engine was built without sampling= (the "
+                             "decode state has no sampling leaves)")
         slot = self.sched.assign_direct(req)
         if slot is None:
             if self.sched.rejected and self.sched.rejected[-1] is req:
@@ -361,7 +410,10 @@ class DecodeEngine:
         finished = self._admission_retired + self._admit()
         self._admission_retired = []
         finished += self._prefill_chunk()
-        finished += self._decode_step()
+        if self.decode_window > 1:
+            finished += self._decode_window()
+        else:
+            finished += self._decode_step()
         self._govern()
         return finished
 
@@ -430,6 +482,10 @@ class DecodeEngine:
     # -------------------------------------------------------------- phases
     def _admit(self) -> list[Request]:
         retired = []
+        # one-shot prefills defer their first-token device value so ALL
+        # admissions this step share ONE batched device->host transfer
+        # (instead of one blocking int(np.asarray(...)) per prefill)
+        deferred: list[tuple[Request, int, Any]] = []
         for req, slot in self.sched.admit():
             self.metrics.on_admit(req.rid)
             self.slots[slot] = req
@@ -448,7 +504,11 @@ class DecodeEngine:
                         self._prefix_hits += 1
                         self._restore_prefix(req)
             else:
-                retired += self._oneshot_prefill(req, slot)
+                retired += self._oneshot_prefill(req, slot, defer=deferred)
+        if deferred:
+            vals = np.asarray(jnp.stack([d for _, _, d in deferred]))
+            for (req, slot, _), v in zip(deferred, vals):
+                retired += self._commit_first_token(req, slot, int(v))
         # cache-pressure rejections retire without ever holding a slot
         while self.sched.rejected:
             req = self.sched.rejected.pop()
@@ -562,6 +622,7 @@ class DecodeEngine:
         req.forced_tokens = list(resume[committed + 1:])
         req.shared_kv = None
         req.state = DECODE
+        self._install_sampling(req, slot)
         if req.spill_key is not None:
             # one-shot: the entry is stale the moment decode continues
             self.store.drop(req.spill_key)
@@ -667,18 +728,35 @@ class DecodeEngine:
                                             axis=1),
             *[r.buffers for _, r in group])
         offs = jnp.asarray([r.prefill_pos for _, r in group], jnp.int32)
-        next_toks, bufs = self.chunk_step(self.params, tokens, bufs, offs)
+        if self.sampling is not None:
+            # sampling engines build their chunk step with
+            # return_last_logits=True: the done rows' final-position logits
+            # feed the on-device first-token sampler
+            next_toks, last_logits, bufs = self.chunk_step(
+                self.params, tokens, bufs, offs)
+        else:
+            next_toks, bufs = self.chunk_step(self.params, tokens, bufs, offs)
         finished = []
         done = [r.prefill_pos + c >= len(r.prefill_tokens)
                 for _, r in group]
-        toks_np = np.asarray(next_toks) if any(done) else None
+        # one batched transfer for every request finishing this chunk
+        first_np = None
+        if any(done):
+            di = [i for i, d in enumerate(done) if d]
+            if self.sampling is not None:
+                dev = self._first_token_dev(
+                    last_logits[jnp.asarray(di)],
+                    [group[i][1] for i in di])
+            else:
+                dev = next_toks[jnp.asarray(di), c - 1]
+            first_np = {i: v for i, v in zip(di, np.asarray(dev))}
         for i, (slot, req) in enumerate(group):
             t_i = len(req.prefill_tokens)
             req.buffers = jax.tree.map(lambda a: a[:, i:i + 1, :t_i], bufs)
             req.prefill_pos += c
             if done[i]:
                 finished += self._finish_prefill(req, slot,
-                                                 int(toks_np[i, c - 1]))
+                                                 int(first_np[i]))
         return finished
 
     def _finish_prefill(self, req: Request, slot: int,
@@ -705,7 +783,8 @@ class DecodeEngine:
         return bool((m is not None and m.n_preempts > 0)
                     or req.resume_fallback)
 
-    def _oneshot_prefill(self, req: Request, slot: int) -> list[Request]:
+    def _oneshot_prefill(self, req: Request, slot: int,
+                         defer: list | None = None) -> list[Request]:
         toks_list = req.resume_tokens()
         if self._is_resume(req):
             # the whole one-shot prefill is one "chunk" of redone work
@@ -713,17 +792,66 @@ class DecodeEngine:
         toks = jnp.asarray(toks_list, jnp.int32)[None, :]
         last_logits, pstate = self.prefill_step(self.params, {"tokens": toks})
         self._scatter_state(pstate, slot, len(toks_list), req)
-        # device-side argmax, then the same batched host transfer as
-        # step(): one np.asarray per prefill, never a per-token int(jnp)
-        nxt_dev = jnp.argmax(last_logits[:, :self.cfg.vocab], axis=-1)
-        nxt = int(np.asarray(nxt_dev)[0])
+        # device-side first-token decision (argmax, or the sampler when
+        # the engine samples — prefill logits come out of ``forward``
+        # already softcapped + vocab-masked, so they feed it directly)
+        nxt_dev = self._first_token_dev(last_logits, [req])[0]
+        if defer is not None:
+            # scheduled admission: _admit batches every prefill's token
+            # into ONE host transfer per engine step
+            defer.append((req, slot, nxt_dev))
+            return []
+        nxt = int(np.asarray(nxt_dev))
         return self._commit_first_token(req, slot, nxt)
+
+    def _first_token_dev(self, last_logits, reqs: list[Request]):
+        """Device-side first-token decision for freshly prefilled rows:
+        ``last_logits`` [G, padded_vocab] (vocab-masked by ``forward``),
+        one row per request.  Greedy engines take the plain argmax;
+        sampling engines run the serving/sampling.py sampler at
+        ``sample_idx = 0`` — the first point of each request's PRNG
+        stream, so prefill-time sampling and a decode-step sample of the
+        same position agree bit-exactly."""
+        if self.sampling is None:
+            return jnp.argmax(last_logits[:, :self.cfg.vocab],
+                              axis=-1).astype(jnp.int32)
+        from repro.serving.sampling import request_seed, sample_tokens
+        pols = [(r.sampling or self.sampling) for r in reqs]
+        rows = [p.row() for p in pols]
+        return sample_tokens(
+            last_logits,
+            jnp.asarray([v[0] for v in rows], jnp.float32),
+            jnp.asarray([v[1] for v in rows], jnp.int32),
+            jnp.asarray([v[2] for v in rows], jnp.float32),
+            jnp.asarray([request_seed(p.seed, r.rid)
+                         for p, r in zip(pols, reqs)], jnp.uint32),
+            jnp.zeros((len(reqs),), jnp.int32))
+
+    def _install_sampling(self, req: Request, slot: int) -> None:
+        """Install ``req``'s sampling policy into ``slot``'s per-row state
+        leaves.  ``sample_idx`` resumes at ``len(out_tokens)`` — the count
+        of tokens already sampled — so a restored/preempted request
+        continues the exact PRNG stream it left (forced catch-up tokens
+        do not advance it, on either decode path)."""
+        if self.sampling is None:
+            return
+        from repro.serving.sampling import request_seed
+        sp = req.sampling or self.sampling
+        t, k, p = sp.row()
+        st = self.state
+        st["sample_temp"] = st["sample_temp"].at[slot].set(t)
+        st["sample_topk"] = st["sample_topk"].at[slot].set(k)
+        st["sample_topp"] = st["sample_topp"].at[slot].set(p)
+        st["sample_seed"] = st["sample_seed"].at[slot].set(
+            request_seed(sp.seed, req.rid))
+        st["sample_idx"] = st["sample_idx"].at[slot].set(len(req.out_tokens))
 
     def _commit_first_token(self, req: Request, slot: int,
                             token: int) -> list[Request]:
         req.out_tokens.append(token)
         self.cur_tokens = self.cur_tokens.at[slot].set(token)
         req.state = DECODE
+        self._install_sampling(req, slot)
         self.metrics.on_token(req.rid)
         self.sched.record_served(slot)
         # the prefill token itself may already retire the request
@@ -926,6 +1054,7 @@ class DecodeEngine:
         # one batched device->host transfer per step (per-slot int() calls
         # would each block on the device queue — B syncs instead of 1)
         toks_np = np.asarray(next_tokens)
+        self.decode_syncs += 1
         finished = []
         forced: list[tuple[int, int]] = []
         for i in active:
@@ -948,6 +1077,7 @@ class DecodeEngine:
             self.sched.on_token(i)
             self.sched.record_served(i)
             self.metrics.on_token(req.rid)
+            self.decoded_tokens += 1
             if req.eos_id is not None and tok == req.eos_id:
                 finished.append(self._retire(req, i, "eos"))
             elif len(req.out_tokens) >= req.max_new_tokens:
@@ -960,9 +1090,146 @@ class DecodeEngine:
             idx = jnp.asarray([i for i, _ in forced], jnp.int32)
             val = jnp.asarray([t for _, t in forced], jnp.int32)
             self.cur_tokens = self.cur_tokens.at[idx].set(val)
+            if self.sampling is not None:
+                # forced catch-up consumed no sample: rewind the PRNG
+                # counter serve_step advanced for those rows, so the
+                # post-catch-up stream re-joins the original exactly
+                self.state["sample_idx"] = \
+                    self.state["sample_idx"].at[idx].add(-1)
         if self.paged:
             self._sample_pool()
         return finished
+
+    def _decode_window(self) -> list[Request]:
+        """N decode steps for every DECODE slot in ONE device dispatch.
+
+        The windowed inner loop (``--decode-window N`` > 1): the scheduler
+        pre-reserves each slot's page/capacity budget for the whole window
+        (``grow_for_window`` — one atomic extend, so nothing allocates
+        mid-window), ``serve_multistep`` runs N sample->append->step
+        iterations entirely on device with per-row EOS/budget/forced masks,
+        and the host blocks exactly once on the ``[B, N]`` token block —
+        syncs per decoded token drop from 1 to 1/N.  The transfer is
+        started async (``copy_to_host_async``) and the window's host-side
+        bookkeeping overlaps the copy; the donated state means the next
+        window's dispatch can be enqueued as soon as the replay finishes,
+        overlapping host scheduling of window k+1 with device compute
+        still in flight.
+
+        The replay is j-major (in-window step order) so scheduler token
+        accounting, retirement order and VirtualClock TTL attribution all
+        match the single-step engine event for event; rows that freeze
+        mid-window (EOS, max-tokens, capacity-limited budget) retire at
+        the boundary, which keeps windowed streams bit-identical to
+        window=1 (tests/serving/test_decode_window.py)."""
+        n = self.decode_window
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and r.state == DECODE]
+        if not active:
+            return []
+        finished = []
+        budgets = np.zeros((self.max_batch,), np.int32)
+        wants = np.zeros((self.max_batch,), np.int32)
+        eos = np.full((self.max_batch,), -1, np.int32)
+        forced = np.zeros((self.max_batch, n), np.int32)
+        nforced = np.zeros((self.max_batch,), np.int32)
+        stepping = []
+        for i in active:
+            req = self.slots[i]
+            nf = min(len(req.forced_tokens or ()), n)
+            emit_max = max(req.max_new_tokens - len(req.out_tokens), 0)
+            want = min(n, nf + emit_max)
+            grant = self.sched.grow_for_window(i, want)
+            if self.paged and grant:
+                self._mirror_table(i)
+            if grant == 0:
+                # can't take a single step: the capacity retire the
+                # single-step engine's grow_for_next_token would have hit
+                finished.append(self._retire(req, i, "capacity"))
+                continue
+            budgets[i], wants[i] = grant, want
+            if req.eos_id is not None:
+                eos[i] = req.eos_id
+            if nf:
+                forced[i, :nf] = req.forced_tokens[:nf]
+                nforced[i] = nf
+            stepping.append(i)
+        if not stepping:
+            return finished
+        if self.paged and self.prefix_index is not None:
+            self._cow_guard(stepping)
+        t0 = time.monotonic()
+        out_block, cur, self.state = self.serve_multistep(
+            self.params, self.state, self.cur_tokens,
+            jnp.asarray(budgets), jnp.asarray(eos),
+            jnp.asarray(forced), jnp.asarray(nforced))
+        self.cur_tokens = cur
+        # kick off the D2H copy, overlap host bookkeeping with it, then
+        # block ONCE on the whole window's token block
+        if hasattr(out_block, "copy_to_host_async"):
+            out_block.copy_to_host_async()
+        if self.paged:
+            self._sample_pool()
+        toks_np = np.asarray(out_block)
+        self.decode_syncs += 1
+        t1 = time.monotonic()
+        # j-major replay: the same scheduler/metrics/retirement events the
+        # single-step engine would emit, in the same order.  TTL samples
+        # get in-window timestamps — VirtualClock ticks per replayed step,
+        # wall clocks interpolate the measured window time over N.
+        virtual = isinstance(self.metrics.clock, VirtualClock)
+        nsteps = int(max(budgets[i] for i in stepping))
+        retired: set[int] = set()
+        for j in range(nsteps):
+            rows = [i for i in stepping
+                    if i not in retired and budgets[i] > j]
+            if not rows:
+                break
+            at = None
+            if virtual:
+                self._tick(decode_slots=len(rows))
+            else:
+                at = t0 + (t1 - t0) * (j + 1) / nsteps
+            for i in rows:
+                req = self.slots[i]
+                if req.forced_tokens:
+                    # device fed the forced token in place of its sample
+                    # (emitting pad); only the committed length advances
+                    req.forced_tokens.pop(0)
+                    self.sched.on_token(i)
+                    continue
+                tok = int(toks_np[i, j])
+                req.out_tokens.append(tok)
+                self.sched.on_token(i)
+                self.sched.record_served(i)
+                self.metrics.on_token(req.rid, at=at)
+                self.decoded_tokens += 1
+                if req.eos_id is not None and tok == req.eos_id:
+                    finished.append(self._retire(req, i, "eos"))
+                    retired.add(i)
+                elif len(req.out_tokens) >= req.max_new_tokens:
+                    finished.append(self._retire(req, i, "max_tokens"))
+                    retired.add(i)
+        # a capacity-limited grant the in-window EOS/max replay didn't
+        # consume means the pool/cap wall sits exactly where the
+        # single-step engine would retire with "capacity"
+        for i in stepping:
+            if i not in retired and budgets[i] < wants[i]:
+                finished.append(self._retire(self.slots[i], i, "capacity"))
+        return finished
+
+    def sync_stats(self) -> dict[str, Any]:
+        """Host-sync accounting for the decode loop: how many blocking
+        device->host transfers the engine performed per decoded token.
+        ``syncs_per_token`` is 1.0 for the single-step engine and 1/N
+        under ``--decode-window N`` — the headline number of this
+        optimization, asserted by scripts/decode_window_smoke.py and
+        surfaced as a bench_serving column."""
+        return {"decode_window": self.decode_window,
+                "decode_syncs": self.decode_syncs,
+                "decoded_tokens": self.decoded_tokens,
+                "syncs_per_token":
+                    self.decode_syncs / max(self.decoded_tokens, 1)}
 
     def _sample_pool(self) -> None:
         """Record one pool-health sample (occupancy / internal

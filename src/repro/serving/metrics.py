@@ -151,11 +151,19 @@ class EngineMetrics:
         if m.admit_t is None:
             m.admit_t = self.clock()
 
-    def on_token(self, rid: int) -> None:
+    def on_token(self, rid: int, at: float | None = None) -> None:
         """One token generated: records TTFT on the first, a TTL sample
-        on each subsequent one (also fed to the per-class recent ring)."""
+        on each subsequent one (also fed to the per-class recent ring).
+
+        ``at`` overrides the clock read for windowed decode
+        (``--decode-window N``): the engine replays a window's N tokens
+        after one device call, attributing each an in-window timestamp
+        (VirtualClock ticks per in-window step, or wall-clock window time
+        / N) so TTL percentiles — and the governor's p95 control loop —
+        stay per-token-meaningful instead of seeing N-1 zero gaps and one
+        window-sized spike."""
         m = self.requests[rid]
-        now = self.clock()
+        now = self.clock() if at is None else at
         if m.first_token_t is None:
             m.first_token_t = now
         else:

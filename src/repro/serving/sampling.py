@@ -1,0 +1,185 @@
+"""On-device token sampling: the fused epilogue over the lm_head logits.
+
+``sample_tokens`` is the device half — a pure-jnp epilogue
+``build_serve_step`` fuses after the (optionally w8a16) lm_head matmul, so
+sampled tokens never leave the device except at scheduling boundaries (the
+engine's single ``[B, window]`` transfer per decode window).
+``sample_oracle`` is the host numpy reference the test suite pins it
+against bit-exactly (tests/serving/test_sampling.py).
+
+Semantics (per batch row, fully vectorized — every row carries its own
+``(temp, top_k, top_p, seed, idx)``, so one batch mixes greedy and sampled
+requests freely):
+
+  * ``temp <= 0``    — greedy: plain argmax over the (vocab-masked)
+    logits; bit-identical to the pre-sampling engine's device argmax.
+  * ``temp > 0``     — Gumbel-max categorical sample over
+    ``logits / temp`` restricted by the top-k and/or top-p masks.
+  * top-k (``0 < k < V``) keeps entries >= the k-th largest scaled logit
+    (ties at the threshold all stay in).
+  * top-p (``0 < p < 1``) keeps the smallest nucleus of
+    highest-probability tokens whose *preceding* cumulative probability is
+    ``< p`` (the most probable token always stays in).
+
+Randomness: row ``b`` draws its Gumbel noise from
+``jax.random.fold_in(jax.random.PRNGKey(seed[b]), idx[b])`` where ``idx``
+counts the tokens already sampled for that request.  Every request's token
+stream is therefore a pure function of (prompt, params, per-request seed) —
+independent of batch composition, slot assignment, decode-window size,
+preemption and restore, which is what makes the engine's
+``--decode-window N`` streams bit-identical to ``N=1``.  The oracle reuses
+the same jax PRNG stream (the noise *is* the spec); the
+masking/temperature/argmax decision math is reimplemented independently in
+numpy float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SAMPLING_KINDS", "SamplingParams", "request_seed",
+           "gumbel_noise", "sample_tokens", "sample_oracle"]
+
+SAMPLING_KINDS = ("greedy", "temperature", "top_k", "top_p")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request (or engine-default) sampling policy.
+
+    ``kind`` picks the decision rule (``SAMPLING_KINDS``); ``temperature``
+    applies to every non-greedy kind; ``top_k``/``top_p`` only to their
+    kinds.  ``seed`` is the base PRNG seed — the engine decorrelates
+    requests sharing one ``SamplingParams`` via ``request_seed``.
+    """
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Fail fast on out-of-domain knobs (the engine constructs device
+        leaves from these values; a bad row would sample garbage)."""
+        if self.kind not in SAMPLING_KINDS:
+            raise ValueError(f"kind {self.kind!r} not in {SAMPLING_KINDS}")
+        if self.kind != "greedy" and self.temperature <= 0.0:
+            raise ValueError("non-greedy sampling needs temperature > 0 "
+                             f"(got {self.temperature}); use kind='greedy' "
+                             "for argmax")
+        if self.kind == "top_k" and self.top_k < 1:
+            raise ValueError(f"top_k kind needs top_k >= 1 ({self.top_k})")
+        if self.kind == "top_p" and not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1] ({self.top_p})")
+
+    def row(self) -> tuple[float, int, float]:
+        """The ``(temp, top_k, top_p)`` device-leaf values for one request
+        row.  Greedy encodes as ``temp = 0`` (the device's argmax branch);
+        knobs foreign to ``kind`` collapse to their no-op values so the
+        device never applies a mask the policy didn't ask for."""
+        if self.kind == "greedy":
+            return 0.0, 0, 1.0
+        if self.kind == "temperature":
+            return float(self.temperature), 0, 1.0
+        if self.kind == "top_k":
+            return float(self.temperature), int(self.top_k), 1.0
+        return float(self.temperature), 0, float(self.top_p)
+
+
+def request_seed(seed: int, rid: int) -> int:
+    """Per-request PRNG seed derived from the policy ``seed`` and the
+    request id: decorrelates requests that share one engine-level
+    ``SamplingParams`` while staying a pure function of ``(seed, rid)`` —
+    the same request replays the same stream across engine configurations,
+    decode windows and restores."""
+    return (int(seed) * 1_000_003 + int(rid) * 7_919) % (2**31 - 1)
+
+
+def gumbel_noise(seed, idx, n: int):
+    """Per-row Gumbel(0, 1) noise ``[B, n]``: row ``b`` uses the key
+    ``fold_in(PRNGKey(seed[b]), idx[b])``.  Shared verbatim by the device
+    sampler and the numpy oracle — the PRNG stream is part of the sampling
+    spec, only the decision math differs between the two."""
+    def row(s, i):
+        key = jax.random.fold_in(jax.random.PRNGKey(s), i)
+        return jax.random.gumbel(key, (n,), jnp.float32)
+    return jax.vmap(row)(jnp.asarray(seed, jnp.uint32),
+                         jnp.asarray(idx, jnp.int32))
+
+
+def sample_tokens(logits, temp, top_k, top_p, seed, idx):
+    """Fused on-device sampling epilogue (see module doc for semantics).
+
+    ``logits`` ``[B, V]`` must already be vocab-masked (pad lanes at
+    ``-1e30`` — both ``serve_step`` and the prefill ``forward`` emit
+    logits that way); ``temp``/``top_p`` are ``[B]`` f32, ``top_k``/``idx``
+    ``[B]`` int32, ``seed`` ``[B]`` uint32.  Returns ``[B]`` int32 tokens.
+    Rows with ``temp <= 0`` return the plain argmax (bit-identical to the
+    argmax-only epilogue)."""
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy = temp <= 0.0
+    t = jnp.where(greedy, 1.0, temp)
+    scaled = logits / t[:, None]
+    # top-k: keep entries >= the k-th largest (k outside (0, V) keeps all)
+    k_eff = jnp.where((top_k > 0) & (top_k < v), top_k, v)
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(desc, (k_eff - 1)[:, None], axis=-1)
+    masked = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    # top-p nucleus over the (top-k-restricted) softmax: keep sorted
+    # entries whose preceding cumulative probability is < p, then lift the
+    # per-row probability threshold back to vocab order
+    p_eff = jnp.where((top_p > 0.0) & (top_p < 1.0), top_p, 1.0)
+    probs = jax.nn.softmax(masked, axis=-1)
+    sp = jnp.sort(probs, axis=-1)[:, ::-1]
+    before = jnp.cumsum(sp, axis=-1) - sp
+    nkeep = jnp.maximum(jnp.sum(before < p_eff[:, None], axis=-1), 1)
+    thresh = jnp.take_along_axis(sp, (nkeep - 1)[:, None], axis=-1)
+    final = jnp.where(probs >= thresh, masked, -jnp.inf)
+    g = gumbel_noise(seed, idx, v)
+    sampled = jnp.argmax(final + g, axis=-1)
+    out = jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+    return out.astype(jnp.int32)
+
+
+def sample_oracle(logits, temp, top_k, top_p, seed, idx):
+    """Host numpy reference for ``sample_tokens`` (bit-exact at a fixed
+    seed).  Same arguments as numpy arrays; the Gumbel noise comes from
+    the shared ``gumbel_noise`` stream (the PRNG is part of the spec), the
+    temperature/top-k/top-p/argmax decision math is independent numpy
+    float32."""
+    logits = np.asarray(logits, np.float32)
+    b, v = logits.shape
+    g = np.asarray(gumbel_noise(seed, idx, v))
+    out = np.zeros((b,), np.int32)
+    for r in range(b):
+        row = logits[r]
+        if float(temp[r]) <= 0.0:
+            out[r] = int(np.argmax(row))
+            continue
+        scaled = (row / np.float32(temp[r])).astype(np.float32)
+        k = int(top_k[r])
+        if 0 < k < v:
+            kth = np.sort(scaled)[::-1][k - 1]
+            masked = np.where(scaled >= kth, scaled, -np.inf)
+        else:
+            masked = scaled
+        p = float(top_p[r])
+        e = np.exp((masked - masked.max()).astype(np.float32))
+        probs = (e / e.sum(dtype=np.float32)).astype(np.float32)
+        if 0.0 < p < 1.0:
+            sp = np.sort(probs)[::-1]
+            before = (np.cumsum(sp, dtype=np.float32) - sp).astype(np.float32)
+            nkeep = max(int(np.sum(before < np.float32(p))), 1)
+            thresh = sp[nkeep - 1]
+            final = np.where(probs >= thresh, masked, -np.inf)
+        else:
+            final = masked
+        out[r] = int(np.argmax(final + g[r]))
+    return out

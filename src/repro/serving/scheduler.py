@@ -104,6 +104,8 @@ class Request:
     session_id: str | None = None             # multi-turn session KV key
     tenant: str = "default"                   # DWFQ accounting bucket
     slo_class: str = SLO_INTERACTIVE          # interactive (TTL) | batch
+    sampling: Any = None                      # per-request SamplingParams
+                                              # (None = engine default)
     # --- chunked-prefill bookkeeping (engine-internal) ---
     prefill_tokens: list[int] | None = None   # prompt (+ generated on resume)
     prefill_pos: int = 0                      # next chunk offset
@@ -534,6 +536,41 @@ class Scheduler:
         if need > self.max_pages:
             return None
         return self.pool.extend(rid, need - have)
+
+    def grow_for_window(self, slot: int, want: int) -> int:
+        """Reserve capacity for up to ``want`` more decode tokens of
+        ``slot`` in one shot — the multi-token twin of
+        ``grow_for_next_token`` for the windowed decode path
+        (``DecodeEngine --decode-window``).
+
+        Returns the granted step budget ``g <= want`` (0 = the slot cannot
+        take a single step; the engine retires it with
+        ``finish_reason="capacity"`` before dispatch).  Fixed layout:
+        bounded by the per-slot ``cap`` exactly like
+        ``grow_for_next_token``'s ``slot_len + 1 >= cap`` retire rule.
+        Paged: bounded by ``max_pages`` and the pool free list, with every
+        needed page taken in ONE atomic ``extend`` *before* the device
+        window launches — no allocation can happen mid-window, so a
+        concurrent admission at the next boundary sees an exact free
+        list.  A grant ``g < want`` that the in-window EOS / max-tokens
+        replay doesn't consume means the request hit capacity, matching
+        the single-step engine's retire point to the token."""
+        if want <= 0:
+            return 0
+        if self.pool is None:
+            return max(0, min(want, self.cap - 1 - self.slot_len[slot]))
+        rid = self.slot_rids[slot]
+        assert rid is not None, slot
+        have = len(self.pool.pages(rid))
+        grantable = min(self.max_pages, have + self.pool.free_count)
+        g = min(want, grantable * self.pool.block_s - self.slot_len[slot])
+        if g <= 0:
+            return 0
+        need = self.pool.pages_for(self.slot_len[slot] + g)
+        if need > have:
+            got = self.pool.extend(rid, need - have)
+            assert got is not None, "free_count lied"
+        return g
 
     def _reserve(self, req: Request) -> None:
         """Perform the paged admission reservation ``can_admit_now`` just

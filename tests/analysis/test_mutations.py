@@ -307,6 +307,58 @@ def test_batched_device_get_is_warning_not_error():
     assert all(f.severity == "warning" for f in findings)
 
 
+def test_second_window_transfer_is_new_per_token_ordinal():
+    """The decode-window sync budget: ONE transfer inside _decode_window
+    is the contract (ordinal #1, baselined); a mutant adding a second
+    blocking read gets ordinal #2 — a symbol no baseline entry matches,
+    so --strict fails.  This pins the transfer COUNT, not the site set."""
+    one = (
+        "import numpy as np\n"
+        "import jax\n"
+        "class E:\n"
+        "    def __init__(self):\n"
+        "        self.serve_multistep = jax.jit(lambda s: s)\n"
+        "    def _decode_window(self):\n"
+        "        blk = self.serve_multistep(0)\n"
+        "        return np.asarray(blk)\n"
+    )
+    two = one + "        # mutant: a second blocking read\n"
+    two = one.replace(
+        "        return np.asarray(blk)\n",
+        "        toks = np.asarray(blk)\n"
+        "        lens = np.asarray(self.serve_multistep(1))\n"
+        "        return toks, lens\n")
+    syms = {f.symbol for f in lint_source(one, "engine.py")
+            if f.check == "sync.per-token"}
+    assert syms == {"_decode_window#1"}
+    syms2 = {f.symbol for f in lint_source(two, "engine.py")
+             if f.check == "sync.per-token"}
+    assert syms2 == {"_decode_window#1", "_decode_window#2"}
+    baseline = [{"check": "sync.per-token", "path": "engine.py",
+                 "symbol": "_decode_window#1", "reason": "the window read"},
+                {"check": "sync.asarray", "path": "engine.py",
+                 "symbol": "_decode_window", "reason": "the window read"}]
+    r = Report()
+    r.extend(lint_source(two, "engine.py"))
+    r.apply_baseline(baseline)
+    left = r.unsuppressed()
+    assert {f.symbol for f in left if f.check == "sync.per-token"} \
+        == {"_decode_window#2"}
+
+
+def test_transfers_outside_window_fns_get_no_per_token():
+    """Ordinal stamping applies only to WINDOW_HOT_FNS — ordinary engine
+    methods keep exactly their base sync findings."""
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "def _decode_step(self, toks):\n"
+        "    return np.asarray(jnp.asarray(toks))\n"
+    )
+    found = _checks(lint_source(src, "engine.py"))
+    assert found == {"sync.asarray"}
+
+
 def test_jitted_self_attr_provenance():
     """Calls of self.<attr> bound to jax.jit anywhere in the module are
     device values — the engine's serve_step pattern."""

@@ -1,0 +1,307 @@
+"""Windowed multi-step decode: N on-device steps == N single steps.
+
+``build_serve_multistep`` runs N sample -> fused-KV-append -> step
+iterations in one ``lax.scan`` so the engine syncs one [B, N] token block
+per window instead of once per token.  That is only admissible if the
+window is invisible in every observable: these tests pin
+
+  * the raw scan against N sequential ``serve_step`` calls — outputs,
+    fed-back tokens AND the full state tree, bit for bit;
+  * mid-window EOS freezing (finished rows emit pad, stop appending KV,
+    and their state freezes at the stop position);
+  * teacher-forced catch-up tokens inside a window (restore/session-KV
+    replay: forced steps emit pad, consume no PRNG sample);
+  * engine-level stream identity window=1 vs window=4 across
+    {fixed, paged, prefix-share, host-tier} with top-p sampling, and
+    with an explicit preemption at a window boundary;
+  * windowed TTL attribution (VirtualClock gives every in-window token a
+    real per-step timestamp) and governed-replay determinism under
+    ``decode_window=4``.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.sharding import HelixConfig
+from repro.models.model_zoo import (build_serve_multistep, build_serve_step,
+                                    make_chunk_prefill_step,
+                                    make_prefill_step)
+from repro.models.transformer import init_params
+from repro.serving import DECODE, DecodeEngine, Request
+from repro.serving.metrics import VirtualClock
+from repro.serving.sampling import SamplingParams
+from repro.utils import make_mesh, set_mesh
+
+CFG = get_config("granite-3-2b").reduced()
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+MESH = make_mesh((1, 1), ("data", "model"))
+SP = SamplingParams(kind="top_p", temperature=0.9, top_p=0.85, seed=7)
+
+
+def _hx(paged=False):
+    return HelixConfig(kvp_axes=(), tpa_axis=None, attn_block_s=16,
+                       paged_kv=paged)
+
+
+def _engine(hx, *, window=1, chunk=0, sampling=SP, **kw):
+    with set_mesh(MESH):
+        serve = build_serve_step(CFG, MESH, hx)
+        ms = (build_serve_multistep(CFG, MESH, hx, window=window)
+              if window > 1 else None)
+        prefill = make_prefill_step(CFG, MESH, hx)
+        cs = (make_chunk_prefill_step(CFG, MESH, hx,
+                                      return_last_logits=sampling is not None)
+              if chunk else None)
+        return DecodeEngine(CFG, PARAMS, serve, prefill, max_batch=2,
+                            max_seq=64, hx=hx, chunk_tokens=chunk or None,
+                            chunk_prefill_step=cs, tp_width=1,
+                            sampling=sampling, decode_window=window,
+                            serve_multistep=ms, **kw)
+
+
+def _mid_decode(hx, *, max_new=24):
+    """An engine with both slots actively decoding (nothing retired)."""
+    rng = np.random.default_rng(5)
+    eng = _engine(hx)
+    reqs = [Request(rid=i, prompt=rng.integers(0, CFG.vocab, 9).tolist(),
+                    max_new_tokens=max_new) for i in range(2)]
+    with set_mesh(MESH):
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(2):
+            eng.step()
+    assert all(r.state == DECODE for r in reqs)
+    return eng
+
+
+def _ms_args(window, *, budgets=None, eos=(-1, -1), forced=None,
+             nforced=(0, 0)):
+    f = np.zeros((2, window), np.int32)
+    if forced:
+        for i, row in forced.items():
+            f[i, :len(row)] = row
+    return (jnp.asarray(budgets if budgets is not None
+                        else [window, window], dtype=jnp.int32),
+            jnp.asarray(eos, jnp.int32), jnp.asarray(f),
+            jnp.asarray(nforced, jnp.int32))
+
+
+def _single_steps(eng, serve_step, n, *, forced=None):
+    """n sequential single steps from the engine's current state, with
+    the engine's own teacher-forcing semantics (forced token replaces
+    the sample, nothing emitted, PRNG index rewound)."""
+    forced = {i: list(v) for i, v in (forced or {}).items()}
+    st, cur = eng.state, eng.cur_tokens
+    cols = []
+    with set_mesh(MESH):
+        for _ in range(n):
+            nxt, st = serve_step(eng.params, st, cur)
+            out = np.asarray(nxt).copy()
+            over = {i: q.pop(0) for i, q in forced.items() if q}
+            if over:
+                idx = jnp.asarray(sorted(over), jnp.int32)
+                val = jnp.asarray([over[i] for i in sorted(over)], jnp.int32)
+                nxt = nxt.at[idx].set(val)
+                st["sample_idx"] = st["sample_idx"].at[idx].add(-1)
+                out[np.asarray(sorted(over))] = -1        # emitted pad
+            cols.append(out)
+            cur = nxt
+    return np.stack(cols, axis=1), np.asarray(cur), st
+
+
+# ----------------------------------------------------- raw scan vs N steps
+def test_multistep_matches_n_single_steps():
+    hx = _hx()
+    eng = _mid_decode(hx)
+    w = 5
+    with set_mesh(MESH):
+        serve = jax.jit(build_serve_step(CFG, MESH, hx))
+        ms = jax.jit(build_serve_multistep(CFG, MESH, hx, window=w))
+        want_out, want_cur, want_st = _single_steps(eng, serve, w)
+        out, cur, st = ms(eng.params, eng.state, eng.cur_tokens,
+                          *_ms_args(w))
+    assert np.array_equal(np.asarray(out), want_out)
+    assert np.array_equal(np.asarray(cur), want_cur)
+    # the full state tree, bit for bit (caches, lengths, PRNG counters)
+    assert set(st) == set(want_st)
+    for k in st:
+        assert np.array_equal(np.asarray(st[k]), np.asarray(want_st[k])), k
+
+
+def test_multistep_mid_window_eos_freezes_row():
+    hx = _hx()
+    eng = _mid_decode(hx)
+    w = 6
+    with set_mesh(MESH):
+        serve = jax.jit(build_serve_step(CFG, MESH, hx))
+        ms = jax.jit(build_serve_multistep(CFG, MESH, hx, window=w))
+        want_out, _, _ = _single_steps(eng, serve, w)
+        eos0 = int(want_out[0, 2])             # row 0's third sampled token
+        t0 = np.asarray(eng.state["total_len"]).copy()
+        out, cur, st = ms(eng.params, eng.state, eng.cur_tokens,
+                          *_ms_args(w, eos=(eos0, -1)))
+    out = np.asarray(out)
+    stop = int(np.argmax(want_out[0] == eos0))  # first occurrence freezes
+    assert np.array_equal(out[0, :stop + 1], want_out[0, :stop + 1])
+    assert (out[0, stop + 1:] == -1).all(), out[0]
+    assert np.array_equal(out[1], want_out[1])  # other row: unaffected
+    # frozen row appended exactly stop+1 positions, then stopped; its fed
+    # token pinned at the EOS sample
+    tl = np.asarray(st["total_len"])
+    assert tl[0] == t0[0] + stop + 1 and tl[1] == t0[1] + w, (t0, tl)
+    assert int(np.asarray(cur)[0]) == eos0
+
+
+def test_multistep_budget_freezes_row():
+    """A capacity-limited budget freezes a row exactly like EOS: emit up
+    to the budget, pad after, no further KV appends."""
+    hx = _hx()
+    eng = _mid_decode(hx)
+    w = 5
+    with set_mesh(MESH):
+        serve = jax.jit(build_serve_step(CFG, MESH, hx))
+        ms = jax.jit(build_serve_multistep(CFG, MESH, hx, window=w))
+        want_out, _, _ = _single_steps(eng, serve, w)
+        t0 = np.asarray(eng.state["total_len"]).copy()
+        out, _, st = ms(eng.params, eng.state, eng.cur_tokens,
+                        *_ms_args(w, budgets=[2, w]))
+    out = np.asarray(out)
+    assert np.array_equal(out[0, :2], want_out[0, :2])
+    assert (out[0, 2:] == -1).all()
+    assert np.array_equal(out[1], want_out[1])
+    tl = np.asarray(st["total_len"])
+    assert tl[0] == t0[0] + 2 and tl[1] == t0[1] + w
+
+
+def test_multistep_forced_tokens_emit_pad_and_keep_stream():
+    """Teacher-forced steps feed the known token, emit pad and consume no
+    PRNG sample — the post-catch-up stream rejoins the free-running one
+    exactly (the restore/session-KV replay contract)."""
+    hx = _hx()
+    eng = _mid_decode(hx)
+    w = 5
+    rng = np.random.default_rng(3)
+    forced = {0: rng.integers(0, CFG.vocab, 2).tolist()}
+    with set_mesh(MESH):
+        serve = jax.jit(build_serve_step(CFG, MESH, hx))
+        ms = jax.jit(build_serve_multistep(CFG, MESH, hx, window=w))
+        want_out, want_cur, want_st = _single_steps(eng, serve, w,
+                                                    forced=forced)
+        out, cur, st = ms(eng.params, eng.state, eng.cur_tokens,
+                          *_ms_args(w, forced=forced, nforced=(2, 0)))
+    assert (np.asarray(out)[0, :2] == -1).all()
+    assert np.array_equal(np.asarray(out), want_out)
+    assert np.array_equal(np.asarray(cur), want_cur)
+    assert np.array_equal(np.asarray(st["sample_idx"]),
+                          np.asarray(want_st["sample_idx"]))
+
+
+def test_multistep_builder_validation():
+    with pytest.raises(ValueError):
+        build_serve_multistep(CFG, MESH, _hx(), window=0)
+    import dataclasses
+    grouped = dataclasses.replace(_hx(paged=True), grouped_decode=True)
+    with pytest.raises(ValueError, match="grouped"):
+        build_serve_multistep(CFG, MESH, grouped, window=4)
+
+
+def test_engine_window_constructor_validation():
+    hx = _hx()
+    with set_mesh(MESH):
+        serve = build_serve_step(CFG, MESH, hx)
+        prefill = make_prefill_step(CFG, MESH, hx)
+        with pytest.raises(ValueError, match="serve_multistep"):
+            DecodeEngine(CFG, PARAMS, serve, prefill, max_batch=2,
+                         max_seq=64, hx=hx, tp_width=1, decode_window=4)
+
+
+# --------------------------------------------- engine-level stream parity
+def _run_workload(hx, *, window, chunk=0, preempt_rid=None, lengths=(9, 12),
+                  max_new=10, shared=0, **kw):
+    rng = np.random.default_rng(5)
+    common = rng.integers(0, CFG.vocab, shared).tolist() if shared else []
+    eng = _engine(hx, window=window, chunk=chunk, **kw)
+    reqs = [Request(rid=i,
+                    prompt=common + rng.integers(0, CFG.vocab, n).tolist(),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+    preempted = False
+    with set_mesh(MESH):
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(500):
+            if all(r.done for r in reqs):
+                break
+            eng.step()
+            if (preempt_rid is not None and not preempted
+                    and len(reqs[preempt_rid].out_tokens) >= 3
+                    and reqs[preempt_rid].state == DECODE):
+                eng.preempt(preempt_rid)   # between steps = window boundary
+                preempted = True
+    assert all(r.done for r in reqs)
+    assert preempt_rid is None or preempted
+    return [tuple(r.out_tokens) for r in reqs], eng
+
+
+CONFIGS = {
+    "fixed": dict(hx=_hx(), chunk=0),
+    "paged": dict(hx=_hx(paged=True), chunk=4),
+    "prefix-share": dict(hx=_hx(paged=True), chunk=4, shared=8,
+                         prefix_share=True),
+    "host-tier": dict(hx=_hx(paged=True), chunk=4, host_pages=16,
+                      preempt_rid=0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_engine_streams_identical_across_windows(name):
+    kw = dict(CONFIGS[name])
+    hx = kw.pop("hx")
+    single, _ = _run_workload(hx, window=1, **kw)
+    windowed, eng = _run_workload(hx, window=4, **kw)
+    assert windowed == single, (name, single, windowed)
+    stats = eng.sync_stats()
+    assert stats["decode_window"] == 4
+    assert stats["syncs_per_token"] < 0.5, stats   # really windowed
+    if name == "host-tier":
+        assert eng.metrics.summary()["preempts"] >= 1
+
+
+# ------------------------------------------------ metrics + governed replay
+def test_windowed_ttl_attribution_virtual_clock():
+    """Every in-window token gets its own modeled timestamp: N - 1 TTL
+    samples per request, all strictly positive (no N-1 zero-gaps + spike
+    pathology), matching the single-step run's sample count."""
+    hx = _hx()
+    _, eng = _run_workload(hx, window=4, max_new=9, clock=VirtualClock())
+    for m in eng.metrics.requests.values():
+        assert m.n_tokens == 9
+        assert len(m.ttl_samples) == 8
+        assert all(s > 0 for s in m.ttl_samples), m.ttl_samples
+
+
+def test_governed_replay_deterministic_under_window():
+    """Governor + tenants + virtual clock + decode_window=4: two replays
+    of the same trace produce bit-identical streams and summaries."""
+    from repro.launch.serve import serve_demo
+
+    def replay():
+        finished, summary = serve_demo(
+            "granite-3-2b", reduced=True, n_requests=8, prompt_len=10,
+            max_new=5, max_batch=4, chunk_tokens=4, paged_kv=True,
+            host_pages=64, traffic="poisson", arrival_rate=2.0,
+            tenants="chat:3:interactive,jobs:1:batch:3",
+            slo_ttl_ms=2.6, virtual_clock=True, decode_window=4,
+            sampling="temperature", temperature=0.8, seed=3,
+            log=lambda s: None)
+        return ({r.rid: tuple(r.out_tokens) for r in finished},
+                json.dumps(summary, sort_keys=True, default=float))
+
+    streams_a, summary_a = replay()
+    streams_b, summary_b = replay()
+    assert streams_a == streams_b
+    assert summary_a == summary_b
